@@ -1,0 +1,20 @@
+//! τ-ablation example (Figure 1 in miniature): how the stochasticity scale
+//! trades off against the NFE budget on one workload.
+//!
+//! ```bash
+//! cargo run --release --example ablation_tau            # full grid
+//! cargo run --release --example ablation_tau -- --quick # small grid
+//! ```
+
+use sadiff::exps::{fig1, Scale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = Scale::from_quick_flag(quick);
+    let table = fig1::run_one("cifar_analog", scale);
+    table.print();
+    println!(
+        "\nReading guide: each column is an NFE budget; rows are τ. The per-column\n\
+         minimum moves to larger τ as NFE grows — the paper's core Figure-1 shape."
+    );
+}

@@ -1,0 +1,182 @@
+"""AOT lowering (the only python entry point — build-time, never on the
+request path).
+
+Emits, into --out-dir (default ../artifacts):
+  gmm_denoiser.hlo.txt   exact GMM posterior-mean denoiser,
+                         inputs (x[B,D], alpha[1], sigma[1])
+  dit_denoiser.hlo.txt   trained tiny DiT (weights baked as constants),
+                         inputs (x[B,D], t[B])
+  sa_update.hlo.txt      fused Pallas SA update,
+                         inputs (x[B,D], buf[S,B,D], coeffs[S], scal[2], xi[B,D])
+  dit_reference.json     fresh samples of the DiT training distribution
+  train_log.json         DSM loss curve of the build-time training run
+  manifest.json          shapes + metadata for rust/src/runtime::Registry
+
+Interchange format is HLO **text**, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 (behind the `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. Lower with return_tuple=True and
+unwrap with `to_tuple()` on the rust side.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import gmm as gmm_mod
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import sa_update as sa_kernel
+
+GMM_BATCH, GMM_DIM = 64, 16
+DIT_BATCH = 32
+SA_S, SA_B, SA_D = 4, 32, 64
+
+
+def to_hlo_text(lowered):
+    """stablehlo → XlaComputation → HLO text (see module docstring).
+
+    `as_hlo_text()` elides non-scalar constants as `{...}`, which the 0.5.1
+    text parser silently reads as zeros — fatal for artifacts with baked
+    weights. Print through HloPrintOptions with print_large_constants.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attributes (source_end_line etc.) are unknown to the
+    # 0.5.1 text parser; strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constants survived HLO printing"
+    return text
+
+
+def lower_gmm(out_dir):
+    params = gmm_mod.make_gmm(dim=GMM_DIM, k=5, spread=2.0, seed=404)
+
+    def fn(x, alpha, sigma):
+        return (gmm_mod.posterior_mean(params, x, alpha, sigma),)
+
+    spec_x = jax.ShapeDtypeStruct((GMM_BATCH, GMM_DIM), jnp.float32)
+    spec_s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec_x, spec_s, spec_s))
+    path = os.path.join(out_dir, "gmm_denoiser.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": "gmm_denoiser",
+        "file": "gmm_denoiser.hlo.txt",
+        "inputs": [[GMM_BATCH, GMM_DIM], [1], [1]],
+        "outputs": [[GMM_BATCH, GMM_DIM]],
+        "meta": {
+            "time_convention": "alpha_sigma",
+            "dim": GMM_DIM,
+            "batch": GMM_BATCH,
+            "gmm": params.to_manifest(),
+        },
+    }
+    print(f"[aot] gmm_denoiser: {len(text)} chars")
+    return entry
+
+
+def lower_dit(out_dir, steps, reference_n=512):
+    params, cfg, data, history = train_mod.train(steps=steps, verbose=True)
+
+    def fn(x, t):
+        return (model_mod.forward(params, cfg, x, t, interpret=True),)
+
+    spec_x = jax.ShapeDtypeStruct((DIT_BATCH, cfg.dim), jnp.float32)
+    spec_t = jax.ShapeDtypeStruct((DIT_BATCH,), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec_x, spec_t))
+    with open(os.path.join(out_dir, "dit_denoiser.hlo.txt"), "w") as f:
+        f.write(text)
+
+    reference = gmm_mod.sample_prior(data, reference_n, seed=777)
+    with open(os.path.join(out_dir, "dit_reference.json"), "w") as f:
+        json.dump({"dim": cfg.dim, "samples": np.asarray(reference).ravel().tolist()}, f)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump({
+            "steps": len(history),
+            "loss": history,
+            "param_count": model_mod.param_count(params),
+        }, f)
+
+    entry = {
+        "name": "dit_denoiser",
+        "file": "dit_denoiser.hlo.txt",
+        "inputs": [[DIT_BATCH, cfg.dim], [DIT_BATCH]],
+        "outputs": [[DIT_BATCH, cfg.dim]],
+        "meta": {
+            "time_convention": "physical_t",
+            "dim": cfg.dim,
+            "batch": DIT_BATCH,
+            "schedule": "vp_linear",
+            "train_steps": steps,
+            "param_count": model_mod.param_count(params),
+            "gmm": data.to_manifest(),
+        },
+    }
+    print(f"[aot] dit_denoiser: {len(text)} chars, "
+          f"{model_mod.param_count(params)} params, final loss {history[-1]:.4f}")
+    return entry
+
+
+def lower_sa_update(out_dir):
+    def fn(x, buf, coeffs, scal, xi):
+        return (
+            sa_kernel.sa_update(x, buf, coeffs, scal[0], scal[1], xi, interpret=True),
+        )
+
+    specs = [
+        jax.ShapeDtypeStruct((SA_B, SA_D), jnp.float32),
+        jax.ShapeDtypeStruct((SA_S, SA_B, SA_D), jnp.float32),
+        jax.ShapeDtypeStruct((SA_S,), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+        jax.ShapeDtypeStruct((SA_B, SA_D), jnp.float32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(os.path.join(out_dir, "sa_update.hlo.txt"), "w") as f:
+        f.write(text)
+    entry = {
+        "name": "sa_update",
+        "file": "sa_update.hlo.txt",
+        "inputs": [[SA_B, SA_D], [SA_S, SA_B, SA_D], [SA_S], [2], [SA_B, SA_D]],
+        "outputs": [[SA_B, SA_D]],
+        "meta": {"s": SA_S, "batch": SA_B, "dim": SA_D, "kind": "fused_update"},
+    }
+    print(f"[aot] sa_update: {len(text)} chars")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--train-steps",
+        type=int,
+        default=int(os.environ.get("SADIFF_TRAIN_STEPS", "400")),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = [
+        lower_gmm(args.out_dir),
+        lower_sa_update(args.out_dir),
+        lower_dit(args.out_dir, steps=args.train_steps),
+    ]
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": entries}, f, indent=1)
+    print(f"[aot] wrote manifest with {len(entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

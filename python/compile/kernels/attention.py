@@ -1,0 +1,143 @@
+"""Pallas kernels: fused scaled-dot-product attention, forward AND
+backward (Layer 1).
+
+The DiT denoiser's hot spot. One grid step per (batch, head): the L×L
+score matrix is formed, soft-maxed and contracted against V entirely in
+VMEM — it never round-trips to HBM (the TPU analog of flash-attention's
+shared-memory tiling; see DESIGN.md §3). At this model's sizes
+(L ≤ 64, Dh ≤ 32) a whole head fits one block, so no online-softmax
+streaming is needed; the q/k/v tiles feed the MXU via jnp.dot.
+
+`pallas_call` has no automatic reverse-mode derivative, so training wires
+a `jax.custom_vjp`: the backward pass is a *second* Pallas kernel
+implementing the standard attention gradients
+
+    P  = softmax(QKᵀ·s)          dV = Pᵀ dO
+    dP = dO Vᵀ                   dS = P ∘ (dP − rowsum(dP ∘ P))
+    dQ = dS K · s                dK = dSᵀ Q · s
+
+validated against jax.grad of the jnp reference in python/tests.
+
+CPU note: interpret=True required throughout — the Mosaic custom-call
+emitted for real TPUs cannot execute on the CPU PJRT plugin.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]  # [L, Dh] — leading grid axis is (batch·head)
+    k = k_ref[0]
+    v = v_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.dot(q, k.T) * scale                     # MXU contraction
+    m = jnp.max(scores, axis=-1, keepdims=True)          # stable softmax
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v)                             # MXU contraction
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.dot(q, k.T) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)           # [L, L]
+    dv = jnp.dot(p.T, do)                                # [L, Dh]
+    dp = jnp.dot(do, v.T)                                # [L, L]
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[0] = jnp.dot(ds, k) * scale
+    dk_ref[0] = jnp.dot(ds.T, q) * scale
+    dv_ref[0] = dv
+
+
+def _flat_specs(l, dh):
+    return [
+        pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0)),
+    ]
+
+
+def _forward_flat(qf, kf, vf):
+    bh, l, dh = qf.shape
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((bh, l, dh), qf.dtype),
+        grid=(bh,),
+        in_specs=_flat_specs(l, dh),
+        out_specs=pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(qf, kf, vf)
+
+
+def _backward_flat(qf, kf, vf, dof):
+    bh, l, dh = qf.shape
+    shape = jax.ShapeDtypeStruct((bh, l, dh), qf.dtype)
+    spec = pl.BlockSpec((1, l, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _bwd_kernel,
+        out_shape=(shape, shape, shape),
+        grid=(bh,),
+        in_specs=_flat_specs(l, dh) + [spec],
+        out_specs=(spec, spec, spec),
+        interpret=True,
+    )(qf, kf, vf, dof)
+
+
+@jax.custom_vjp
+def _attention_core(qf, kf, vf):
+    return _forward_flat(qf, kf, vf)
+
+
+def _core_fwd(qf, kf, vf):
+    return _forward_flat(qf, kf, vf), (qf, kf, vf)
+
+
+def _core_bwd(res, dof):
+    qf, kf, vf = res
+    return _backward_flat(qf, kf, vf, dof)
+
+
+_attention_core.defvjp(_core_fwd, _core_bwd)
+
+
+def attention(q, k, v, *, interpret=True):
+    """Multi-head attention via Pallas (differentiable via custom VJP).
+
+    Args:
+      q, k, v: [B, H, L, Dh] float32.
+      interpret: must stay True on CPU (kept in the signature to document
+        the real-TPU switch point).
+    Returns:
+      [B, H, L, Dh] float32.
+    """
+    assert interpret, "real-TPU Mosaic lowering cannot run on the CPU PJRT plugin"
+    b, h, l, dh = q.shape
+    qf = q.reshape(b * h, l, dh)
+    kf = k.reshape(b * h, l, dh)
+    vf = v.reshape(b * h, l, dh)
+    return _attention_core(qf, kf, vf).reshape(b, h, l, dh)
+
+
+def vmem_bytes(l, dh, dtype_bytes=4):
+    """Per-step VMEM estimate: q, k, v, out tiles plus the L×L score matrix
+    (twice, for the exp buffer)."""
+    return 4 * l * dh * dtype_bytes + 2 * l * l * dtype_bytes
+
+
+def mxu_utilization_estimate(l, dh):
+    """Fraction of MXU-shaped work vs. padded 128×128 tiles — the lowering
+    pads L and Dh up to lane multiples; tiny heads underutilize the array.
+    Reported in DESIGN.md §Perf; interpret-mode wallclock is *not* a TPU
+    proxy."""
+    pad = lambda n, m: ((n + m - 1) // m) * m
+    real = 2 * l * l * dh
+    padded = 2 * pad(l, 128) * pad(l, 128) * pad(dh, 128)
+    return real / padded

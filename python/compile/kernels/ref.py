@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the shape/dtype sweeps in python/tests/ — this is the CORE
+correctness signal for the compile path.
+"""
+
+import jax.numpy as jnp
+
+
+def sa_update_ref(x, buf, coeffs, c0, sigma_tilde, xi):
+    """Reference for the fused SA-Solver update (Eq. (14)/(17)):
+
+        out = c0 * x + sum_s coeffs[s] * buf[s] + sigma_tilde * xi
+
+    Args:
+      x:           [B, D] current state.
+      buf:         [S, B, D] stacked model evaluations (zero-padded rows
+                   beyond the active order carry coeffs[s] = 0).
+      coeffs:      [S] Adams coefficients b_j.
+      c0:          scalar carry coefficient.
+      sigma_tilde: scalar injected-noise std.
+      xi:          [B, D] standard normal draws.
+    """
+    weighted = jnp.tensordot(coeffs, buf, axes=1)  # [B, D]
+    return c0 * x + weighted + sigma_tilde * xi
+
+
+def attention_ref(q, k, v):
+    """Reference single-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: [L, Dh].
+    Returns:
+      [L, Dh].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = (q @ k.T) * scale
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def mha_ref(q, k, v):
+    """Multi-head reference: q, k, v are [B, H, L, Dh]."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.einsum("bhld,bhmd->bhlm", q, k) * scale
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhlm,bhmd->bhld", p, v)

@@ -1,0 +1,93 @@
+"""Pallas kernel: fused SA-Solver state update (Layer 1).
+
+The per-step update of Eqs. (14)/(17),
+
+    out = c0 * x + sum_s b[s] * buf[s] + sigma_tilde * xi,
+
+is bandwidth-bound: naively composed it reads/writes state-sized tensors
+S + 3 times. The kernel fuses everything into a single pass: each grid
+step owns one (block_b, block_d) tile of the state; the S buffer slabs for
+that tile are resident in VMEM, so every HBM element is touched exactly
+once.
+
+TPU framing (DESIGN.md §3): tiles are padded to (8, 128) VPU lanes; the
+buffer axis S is the innermost reduction and stays register/VMEM-local.
+There is no contraction, so the MXU is idle by design — the roofline is
+HBM bandwidth; the fused pass is the optimum up to constant factors.
+
+CPU note: must run interpret=True — the Mosaic custom-call emitted for
+real TPUs cannot execute on the CPU PJRT plugin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, buf_ref, coef_ref, scal_ref, xi_ref, o_ref, *, n_buf):
+    """One tile: out = c0*x + Σ_s b_s·buf_s + σ̃·ξ, single fused pass."""
+    c0 = scal_ref[0]
+    sigma_tilde = scal_ref[1]
+    acc = c0 * x_ref[...] + sigma_tilde * xi_ref[...]
+    # Static unroll over the (small, fixed) buffer order.
+    for s in range(n_buf):
+        acc += coef_ref[s] * buf_ref[s]
+    o_ref[...] = acc
+
+
+def sa_update(x, buf, coeffs, c0, sigma_tilde, xi, *, block_d=128, interpret=True):
+    """Fused SA update via Pallas.
+
+    Args:
+      x:      [B, D] float32 current state.
+      buf:    [S, B, D] float32 stacked model evaluations.
+      coeffs: [S] float32 Adams coefficients.
+      c0, sigma_tilde: scalars (python float or 0-d array).
+      xi:     [B, D] float32 noise.
+      block_d: tile width along D (clipped to D).
+      interpret: run the interpreter (required on CPU).
+
+    Returns:
+      [B, D] float32.
+    """
+    b, d = x.shape
+    s = buf.shape[0]
+    assert buf.shape == (s, b, d), buf.shape
+    assert coeffs.shape == (s,), coeffs.shape
+    block_d = min(block_d, d)
+    # Pad D so the grid tiles exactly.
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        xi = jnp.pad(xi, ((0, 0), (0, pad)))
+        buf = jnp.pad(buf, ((0, 0), (0, 0), (0, pad)))
+    dp = d + pad
+    scal = jnp.stack([
+        jnp.asarray(c0, dtype=x.dtype),
+        jnp.asarray(sigma_tilde, dtype=x.dtype),
+    ])
+    grid = (dp // block_d,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_buf=s),
+        out_shape=jax.ShapeDtypeStruct((b, dp), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, block_d), lambda j: (0, j)),          # x tile
+            pl.BlockSpec((s, b, block_d), lambda j: (0, 0, j)),    # buffer slab
+            pl.BlockSpec((s,), lambda j: (0,)),                    # coefficients
+            pl.BlockSpec((2,), lambda j: (0,)),                    # c0, sigma
+            pl.BlockSpec((b, block_d), lambda j: (0, j)),          # xi tile
+        ],
+        out_specs=pl.BlockSpec((b, block_d), lambda j: (0, j)),
+        interpret=interpret,
+    )(x, buf, coeffs, scal, xi)
+    return out[:, :d]
+
+
+def vmem_bytes(b, d, s, block_d=128, dtype_bytes=4):
+    """Estimated VMEM footprint per grid step (DESIGN.md §Perf): the x, xi
+    and out tiles plus the S buffer slabs and scalars."""
+    tile = b * min(block_d, d) * dtype_bytes
+    return tile * (3 + s) + (s + 2) * dtype_bytes

@@ -1,0 +1,137 @@
+"""Layer 2: the DiT-style denoiser (fwd graph), calling the Layer-1 Pallas
+attention kernel.
+
+A small diffusion transformer over D = T·F flattened data:
+token embed → [AdaLN-modulated block: MHA (Pallas) + MLP] × depth →
+AdaLN final layer → data-prediction head. Time conditioning follows DiT:
+sinusoidal embedding → MLP → per-block (scale, shift, gate).
+
+Everything is pure functions over an explicit parameter pytree so the
+trained closure lowers cleanly to one HLO graph with weights baked in.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    dim: int = 64          # flattened data dimension
+    tokens: int = 16       # sequence length T
+    width: int = 64        # model width
+    heads: int = 4
+    depth: int = 2
+    mlp_ratio: int = 2
+    time_freqs: int = 16   # sinusoidal time features / 2
+
+    @property
+    def feat(self):
+        assert self.dim % self.tokens == 0
+        return self.dim // self.tokens
+
+    @property
+    def head_dim(self):
+        assert self.width % self.heads == 0
+        return self.width // self.heads
+
+
+def init_params(cfg: DiTConfig, seed=0):
+    """Xavier-ish init of the full parameter pytree (numpy for portability)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(din, dout, scale=None):
+        s = scale if scale is not None else (2.0 / (din + dout)) ** 0.5
+        return {
+            "w": rng.normal(0.0, s, size=(din, dout)).astype(np.float32),
+            "b": np.zeros(dout, dtype=np.float32),
+        }
+
+    w = cfg.width
+    params = {
+        "token_embed": dense(cfg.feat, w),
+        "pos_embed": (0.02 * rng.normal(size=(cfg.tokens, w))).astype(np.float32),
+        "time_mlp1": dense(2 * cfg.time_freqs, w),
+        "time_mlp2": dense(w, w),
+        "blocks": [],
+        # Final AdaLN + head.
+        "final_mod": dense(w, 2 * w, scale=1e-3),
+        "head": dense(w, cfg.feat, scale=1e-3),
+    }
+    for _ in range(cfg.depth):
+        params["blocks"].append({
+            "qkv": dense(w, 3 * w),
+            "proj": dense(w, w),
+            "mlp1": dense(w, cfg.mlp_ratio * w),
+            "mlp2": dense(cfg.mlp_ratio * w, w),
+            # AdaLN modulation: 6 chunks (shift/scale/gate × attn/mlp).
+            "mod": dense(w, 6 * w, scale=1e-3),
+        })
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _layer_norm(x, eps=1e-6):
+    m = x.mean(axis=-1, keepdims=True)
+    v = ((x - m) ** 2).mean(axis=-1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + eps)
+
+
+def time_embedding(t, cfg: DiTConfig):
+    """Sinusoidal features of physical time t: [B] → [B, 2·time_freqs]."""
+    freqs = jnp.exp(jnp.linspace(0.0, jnp.log(1000.0), cfg.time_freqs))
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def forward(params, cfg: DiTConfig, x, t, *, interpret=True):
+    """Data-prediction forward pass.
+
+    Args:
+      x: [B, dim] noisy state x_t.
+      t: [B] physical time.
+    Returns:
+      x0hat: [B, dim].
+    """
+    b = x.shape[0]
+    tokens = x.reshape(b, cfg.tokens, cfg.feat)
+    h = _dense(params["token_embed"], tokens) + params["pos_embed"][None]
+
+    temb = time_embedding(t, cfg)
+    c = jax.nn.silu(_dense(params["time_mlp1"], temb))
+    c = jax.nn.silu(_dense(params["time_mlp2"], c))  # [B, W]
+
+    for blk in params["blocks"]:
+        mod = _dense(blk["mod"], c)  # [B, 6W]
+        (sh_a, sc_a, g_a, sh_m, sc_m, g_m) = jnp.split(mod, 6, axis=-1)
+        # --- attention sub-block
+        hn = _layer_norm(h) * (1.0 + sc_a[:, None]) + sh_a[:, None]
+        qkv = _dense(blk["qkv"], hn)  # [B, T, 3W]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        def heads(z):
+            return z.reshape(b, cfg.tokens, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        a = attn_kernel.attention(heads(q), heads(k), heads(v), interpret=interpret)
+        a = a.transpose(0, 2, 1, 3).reshape(b, cfg.tokens, cfg.width)
+        h = h + g_a[:, None] * _dense(blk["proj"], a)
+        # --- MLP sub-block
+        hn = _layer_norm(h) * (1.0 + sc_m[:, None]) + sh_m[:, None]
+        z = jax.nn.gelu(_dense(blk["mlp1"], hn))
+        h = h + g_m[:, None] * _dense(blk["mlp2"], z)
+
+    mod = _dense(params["final_mod"], c)
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    h = _layer_norm(h) * (1.0 + sc[:, None]) + sh[:, None]
+    out = _dense(params["head"], h)  # [B, T, F]
+    return out.reshape(b, cfg.dim)
+
+
+def param_count(params):
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(np.prod(l.shape)) for l in leaves)

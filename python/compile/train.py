@@ -1,0 +1,92 @@
+"""Build-time training of the tiny DiT denoiser (Layer 2).
+
+Denoising score matching with the data-prediction target on the VP-linear
+schedule (matching `rust/src/schedule::NoiseSchedule::vp_linear`):
+
+    t ~ U(t_min, 1),  x_t = alpha_t x0 + sigma_t eps,
+    loss = E || model(x_t, t) − x0 ||²
+
+Training data: a fixed structured GMM (`gmm.make_gmm(dim=64, ...)`), so
+the trained network has a known ground-truth target distribution and the
+Rust side can score generated samples against fresh draws
+(`artifacts/dit_reference.json`).
+
+Optimizer: hand-rolled Adam (optax is not in the image). A few hundred
+steps on CPU is enough for a clearly-learned denoiser (loss ≪ variance of
+x0); this is the "small real model" of the E2E serving example.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gmm as gmm_mod
+from . import model as model_mod
+
+# VP-linear schedule constants (must match rust/src/schedule).
+BETA0, BETA1 = 0.1, 20.0
+T_MIN, T_MAX = 1e-3, 1.0
+
+
+def log_alpha(t):
+    return -0.25 * t * t * (BETA1 - BETA0) - 0.5 * t * BETA0
+
+
+def alpha_sigma(t):
+    a = jnp.exp(log_alpha(t))
+    return a, jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+
+def make_data_gmm(dim=64):
+    """The DiT training distribution (parameters exported via manifest)."""
+    return gmm_mod.make_gmm(dim=dim, k=6, spread=2.5, seed=2024)
+
+
+def dsm_loss(params, cfg, x0, t, eps, *, interpret=True):
+    a, s = alpha_sigma(t)
+    xt = a[:, None] * x0 + s[:, None] * eps
+    pred = model_mod.forward(params, cfg, xt, t, interpret=interpret)
+    return jnp.mean(jnp.sum((pred - x0) ** 2, axis=-1))
+
+
+def adam_update(params, grads, m, v, step, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params, m, v,
+    )
+    return params, m, v
+
+
+def train(cfg=None, steps=400, batch=128, seed=0, interpret=True, verbose=True):
+    """Train and return (params, cfg, data_gmm, loss_history)."""
+    cfg = cfg or model_mod.DiTConfig()
+    data = make_data_gmm(cfg.dim)
+    params = model_mod.init_params(cfg, seed=seed)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    m, v = zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    loss_grad = jax.jit(
+        jax.value_and_grad(
+            functools.partial(dsm_loss, interpret=interpret), argnums=0
+        ),
+        static_argnums=(1,),
+    )
+    rng = np.random.default_rng(seed + 1)
+    history = []
+    for step in range(1, steps + 1):
+        x0 = jnp.asarray(gmm_mod.sample_prior(data, batch, rng.integers(1 << 31)),
+                         dtype=jnp.float32)
+        t = jnp.asarray(rng.uniform(T_MIN, T_MAX, size=batch), dtype=jnp.float32)
+        eps = jnp.asarray(rng.normal(size=(batch, cfg.dim)), dtype=jnp.float32)
+        loss, grads = loss_grad(params, cfg, x0, t, eps)
+        params, m, v = adam_update(params, grads, m, v, step)
+        history.append(float(loss))
+        if verbose and (step % 50 == 0 or step == 1):
+            print(f"[train] step {step:4d}  dsm_loss {float(loss):9.4f}")
+    return params, cfg, data, history

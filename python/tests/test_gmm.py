@@ -1,0 +1,69 @@
+"""Layer-2 GMM oracle vs a direct numpy implementation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import gmm as gmm_mod
+
+
+def numpy_posterior_mean(p, x, alpha, sigma):
+    """Independent numpy reference (different code path from jnp)."""
+    var = alpha**2 * p.variances + sigma**2  # [K, D]
+    out = np.zeros_like(x)
+    for i, xi in enumerate(x):
+        diff = xi[None, :] - alpha * p.means  # [K, D]
+        logp = -0.5 * np.sum(np.log(2 * np.pi * var) + diff**2 / var, axis=1)
+        logp += np.log(p.weights)
+        g = np.exp(logp - logp.max())
+        g /= g.sum()
+        mk = p.means + (alpha * p.variances / var) * diff
+        out[i] = (g[:, None] * mk).sum(axis=0)
+    return out
+
+
+@pytest.fixture(scope="module")
+def params():
+    return gmm_mod.make_gmm(dim=6, k=4, spread=2.0, seed=11)
+
+
+def test_posterior_mean_matches_numpy(params):
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(12, 6)).astype(np.float32)
+    for alpha, sigma in [(0.99, 0.05), (0.7, 0.7), (0.05, 1.0)]:
+        got = gmm_mod.posterior_mean(
+            params, jnp.asarray(x), jnp.asarray([alpha]), jnp.asarray([sigma])
+        )
+        want = numpy_posterior_mean(params, x.astype(np.float64), alpha, sigma)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_posterior_collapses_at_low_noise(params):
+    # sigma→0, alpha→1: E[x0|x] → x when x is in-support.
+    x = params.means[:1].astype(np.float32)
+    got = gmm_mod.posterior_mean(
+        params, jnp.asarray(x), jnp.asarray([1.0]), jnp.asarray([1e-3])
+    )
+    np.testing.assert_allclose(np.asarray(got), x, rtol=1e-2, atol=1e-2)
+
+
+def test_posterior_goes_to_prior_mean_at_high_noise(params):
+    # sigma→∞: responsibilities → weights, gains → 0 ⇒ E[x0|x] → Σ w_k mu_k.
+    x = np.zeros((1, 6), dtype=np.float32)
+    got = gmm_mod.posterior_mean(
+        params, jnp.asarray(x), jnp.asarray([1e-4]), jnp.asarray([50.0])
+    )
+    want = (params.weights[:, None] * params.means).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(got)[0], want, rtol=1e-3, atol=1e-3)
+
+
+def test_sampler_moments(params):
+    xs = gmm_mod.sample_prior(params, 20000, seed=5)
+    want_mean = (params.weights[:, None] * params.means).sum(axis=0)
+    np.testing.assert_allclose(xs.mean(axis=0), want_mean, atol=0.06)
+
+
+def test_manifest_roundtrip(params):
+    m = params.to_manifest()
+    assert np.allclose(m["weights"], params.weights)
+    assert len(m["means"]) == 4 and len(m["means"][0]) == 6

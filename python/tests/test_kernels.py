@@ -1,0 +1,147 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps the shape space; fixed-seed numpy drives the values.
+This is the CORE correctness signal for the compile path (the same kernel
+code is lowered into the AOT artifacts).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_mod
+from compile.kernels import ref as ref_mod
+from compile.kernels import sa_update as sa_mod
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.normal(size=shape), dtype=jnp.float32)
+
+
+class TestSaUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 9),
+        d=st.integers(1, 200),
+        s=st.integers(1, 4),
+        block=st.sampled_from([8, 32, 128]),
+    )
+    def test_matches_ref_across_shapes(self, b, d, s, block):
+        x = _rand(b, d)
+        buf = _rand(s, b, d)
+        xi = _rand(b, d)
+        coeffs = _rand(s)
+        c0, sig = 0.73, 0.21
+        got = sa_mod.sa_update(x, buf, coeffs, c0, sig, xi, block_d=block)
+        want = ref_mod.sa_update_ref(x, buf, coeffs, c0, sig, xi)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_zero_coeffs_is_affine_in_x(self):
+        x = _rand(4, 32)
+        buf = jnp.zeros((2, 4, 32), dtype=jnp.float32)
+        xi = _rand(4, 32)
+        got = sa_mod.sa_update(x, buf, jnp.zeros(2), 2.0, 0.5, xi)
+        np.testing.assert_allclose(got, 2.0 * x + 0.5 * xi, rtol=1e-6, atol=1e-6)
+
+    def test_padding_path(self):
+        # d not a multiple of block_d exercises the pad/crop branch.
+        x = _rand(3, 130)
+        buf = _rand(2, 3, 130)
+        xi = _rand(3, 130)
+        coeffs = _rand(2)
+        got = sa_mod.sa_update(x, buf, coeffs, 1.0, 0.0, xi, block_d=128)
+        want = ref_mod.sa_update_ref(x, buf, coeffs, 1.0, 0.0, xi)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_linearity_property(self):
+        # out(a·coeffs) − out(0) is linear in a.
+        x = _rand(2, 16)
+        buf = _rand(3, 2, 16)
+        xi = jnp.zeros((2, 16), dtype=jnp.float32)
+        c = _rand(3)
+        base = sa_mod.sa_update(x, buf, 0.0 * c, 1.0, 0.0, xi)
+        one = sa_mod.sa_update(x, buf, c, 1.0, 0.0, xi)
+        two = sa_mod.sa_update(x, buf, 2.0 * c, 1.0, 0.0, xi)
+        np.testing.assert_allclose(two - base, 2.0 * (one - base), rtol=1e-4, atol=1e-5)
+
+    def test_vmem_estimate_positive(self):
+        assert sa_mod.vmem_bytes(32, 64, 4) > 0
+
+
+class TestAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        h=st.integers(1, 4),
+        l=st.sampled_from([1, 3, 16, 40]),
+        dh=st.sampled_from([4, 16, 32]),
+    )
+    def test_matches_ref_across_shapes(self, b, h, l, dh):
+        q, k, v = _rand(b, h, l, dh), _rand(b, h, l, dh), _rand(b, h, l, dh)
+        got = attn_mod.attention(q, k, v)
+        want = ref_mod.mha_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_softmax_rows_are_convex_combinations(self):
+        # With v = identity-ish rows, output rows stay within value hull:
+        # max(out) ≤ max(v), min(out) ≥ min(v).
+        q, k = _rand(1, 1, 8, 8), _rand(1, 1, 8, 8)
+        v = _rand(1, 1, 8, 8)
+        out = np.asarray(attn_mod.attention(q, k, v))
+        assert out.max() <= float(np.asarray(v).max()) + 1e-5
+        assert out.min() >= float(np.asarray(v).min()) - 1e-5
+
+    def test_permutation_equivariance(self):
+        # Permuting the key/value positions leaves the output unchanged.
+        q, k, v = _rand(1, 2, 6, 8), _rand(1, 2, 6, 8), _rand(1, 2, 6, 8)
+        perm = np.array([3, 1, 5, 0, 2, 4])
+        a = attn_mod.attention(q, k, v)
+        b = attn_mod.attention(q, k[:, :, perm], v[:, :, perm])
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_large_logits_stable(self):
+        q = 30.0 * _rand(1, 1, 4, 8)
+        k = 30.0 * _rand(1, 1, 4, 8)
+        v = _rand(1, 1, 4, 8)
+        out = np.asarray(attn_mod.attention(q, k, v))
+        assert np.isfinite(out).all()
+
+    def test_perf_estimates(self):
+        assert attn_mod.vmem_bytes(16, 16) > 0
+        u = attn_mod.mxu_utilization_estimate(16, 16)
+        assert 0.0 < u <= 1.0
+
+
+class TestAttentionBackward:
+    """The custom-VJP backward Pallas kernel vs jax.grad of the oracle."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 3),
+        l=st.sampled_from([2, 8, 17]),
+        dh=st.sampled_from([4, 16]),
+    )
+    def test_grads_match_ref(self, b, h, l, dh):
+        import jax
+
+        q, k, v = _rand(b, h, l, dh), _rand(b, h, l, dh), _rand(b, h, l, dh)
+        w = _rand(b, h, l, dh)  # random cotangent direction via weighted sum
+        f = lambda q, k, v: jnp.sum(w * attn_mod.attention(q, k, v))
+        g = lambda q, k, v: jnp.sum(w * ref_mod.mha_ref(q, k, v))
+        ga = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        gb = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+        for a_, b_ in zip(ga, gb):
+            np.testing.assert_allclose(a_, b_, rtol=5e-4, atol=5e-5)
+
+    def test_grad_through_jit(self):
+        import jax
+
+        q, k, v = _rand(1, 2, 8, 8), _rand(1, 2, 8, 8), _rand(1, 2, 8, 8)
+        f = jax.jit(lambda q, k, v: jnp.sum(attn_mod.attention(q, k, v) ** 2))
+        val, grads = jax.value_and_grad(f, argnums=(0, 1, 2))(q, k, v)
+        assert np.isfinite(float(val))
+        assert all(np.isfinite(np.asarray(g)).all() for g in grads)

@@ -1,0 +1,84 @@
+"""Layer-2 DiT model: shapes, conditioning, differentiability, training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile import train as train_mod
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = model_mod.DiTConfig(dim=32, tokens=8, width=32, heads=2, depth=1)
+    params = model_mod.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def test_forward_shapes(small):
+    cfg, params = small
+    x = jnp.zeros((5, cfg.dim), dtype=jnp.float32)
+    t = jnp.full((5,), 0.5, dtype=jnp.float32)
+    y = model_mod.forward(params, cfg, x, t)
+    assert y.shape == (5, cfg.dim)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_time_conditioning_matters(small):
+    cfg, params = small
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, cfg.dim)), dtype=jnp.float32)
+    y1 = model_mod.forward(params, cfg, x, jnp.full((3,), 0.1, jnp.float32))
+    y2 = model_mod.forward(params, cfg, x, jnp.full((3,), 0.9, jnp.float32))
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_batch_rows_independent(small):
+    cfg, params = small
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, cfg.dim)), dtype=jnp.float32)
+    t = jnp.full((4,), 0.3, jnp.float32)
+    full = model_mod.forward(params, cfg, x, t)
+    row = model_mod.forward(params, cfg, x[1:2], t[1:2])
+    np.testing.assert_allclose(np.asarray(full)[1], np.asarray(row)[0],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gradients_flow(small):
+    cfg, params = small
+    rng = np.random.default_rng(2)
+    x0 = jnp.asarray(rng.normal(size=(4, cfg.dim)), dtype=jnp.float32)
+    t = jnp.asarray(rng.uniform(0.01, 1.0, size=4), dtype=jnp.float32)
+    eps = jnp.asarray(rng.normal(size=(4, cfg.dim)), dtype=jnp.float32)
+    loss, grads = jax.value_and_grad(train_mod.dsm_loss)(params, cfg, x0, t, eps)
+    assert np.isfinite(float(loss))
+    norms = [float(jnp.abs(g).max()) for g in jax.tree_util.tree_leaves(grads)]
+    assert max(norms) > 0.0, "no gradient reached any parameter"
+
+
+def test_param_count_reasonable():
+    cfg = model_mod.DiTConfig()
+    params = model_mod.init_params(cfg)
+    n = model_mod.param_count(params)
+    assert 10_000 < n < 2_000_000, n
+
+
+def test_short_training_reduces_loss():
+    cfg = model_mod.DiTConfig(dim=32, tokens=8, width=32, heads=2, depth=1)
+    params, _cfg, _data, history = train_mod.train(
+        cfg=cfg, steps=30, batch=64, seed=3, verbose=False
+    )
+    head = np.mean(history[:5])
+    tail = np.mean(history[-5:])
+    assert tail < head * 0.9, f"loss did not decrease: {head} -> {tail}"
+
+
+def test_schedule_constants_match_rust():
+    # alpha² + sigma² = 1 and endpoint values of the VP-linear schedule.
+    for t in [1e-3, 0.3, 1.0]:
+        a, s = train_mod.alpha_sigma(jnp.asarray(t))
+        assert abs(float(a) ** 2 + float(s) ** 2 - 1.0) < 1e-6
+    a1, _ = train_mod.alpha_sigma(jnp.asarray(1.0))
+    # log alpha(1) = -0.25*(19.9) - 0.05 = -5.025
+    assert abs(float(jnp.log(a1)) + 5.025) < 1e-4

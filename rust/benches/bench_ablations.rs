@@ -1,0 +1,16 @@
+//! `cargo bench --bench bench_ablations` — design-choice ablations beyond
+//! the paper's tables: timestep selector, adaptive-SDE baseline [25],
+//! coefficient-path determinism.
+
+use sadiff::exps::{ablations, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    for t in ablations::run(scale) {
+        t.print();
+    }
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench bench_convergence` — measures the convergence
+//! orders of Theorems 5.1/5.2 (deterministic hˢ / h^{ŝ+1} component and
+//! the O(τh) stochastic component).
+
+use sadiff::exps::{convergence, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    for t in convergence::run(scale) {
+        t.print();
+    }
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench bench_equivalence` — numerically verifies the §5.3
+//! reductions (DDIM-η, DPM-Solver++(2M), UniPC-p as SA-Solver special
+//! cases).
+
+use sadiff::exps::equivalence;
+
+fn main() {
+    equivalence::run().print();
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_fig1` — regenerates Figure 1 (FID vs NFE × τ
+//! on all four workload analogs).
+
+use sadiff::exps::{fig1, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    for t in fig1::run(scale) {
+        t.print();
+    }
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_fig2` — regenerates Figure 2 (solver
+//! comparison vs NFE on CIFAR-VE / ImageNet64-cosine / latent analogs).
+
+use sadiff::exps::{fig2, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    for t in fig2::run(scale) {
+        t.print();
+    }
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench bench_fig4` — regenerates Figure 4 / Tables 8–9
+//! (stochasticity vs inaccurate score estimation).
+
+use sadiff::exps::{fig4, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    fig4::run(scale).print();
+}

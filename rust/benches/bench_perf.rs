@@ -1,0 +1,197 @@
+//! `cargo bench --bench bench_perf` — the §Perf hot-path profile
+//! (EXPERIMENTS.md §Perf): per-layer cost decomposition of the serving
+//! pipeline.
+//!
+//! L3 measurements:
+//!   * solver-step overhead (coefficients + fused update + RNG) per
+//!     sample·step, excluding the model;
+//!   * coefficient engine cost alone (exact vs quadrature path);
+//!   * batcher throughput;
+//!   * end-to-end sampling throughput on the GMM model.
+//! Runtime measurement (needs `make artifacts`):
+//!   * artifact execute round-trip (channel + PJRT) for the GMM denoiser
+//!     and the fused sa_update kernel vs the native Rust update.
+
+use sadiff::config::{Prediction, SamplerConfig};
+use sadiff::coordinator::batcher::Batcher;
+use sadiff::coordinator::SampleRequest;
+use sadiff::gmm::Gmm;
+use sadiff::models::{EvalCtx, GmmAnalytic, ModelEval};
+use sadiff::rng::normal::PhiloxNormal;
+use sadiff::schedule::{timesteps, NoiseSchedule, StepSelector};
+use sadiff::solvers::coeffs::{coefficients, StepEnds};
+use sadiff::solvers::sa::{SaSolver, SaSolverOpts};
+use sadiff::solvers::Grid;
+use sadiff::tau::TauFn;
+use sadiff::util::timing::time_it;
+
+/// A free model: measures pure coordinator overhead.
+struct NullModel {
+    dim: usize,
+}
+impl ModelEval for NullModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval_batch(&self, xs: &[f64], _ctx: &EvalCtx, out: &mut [f64]) {
+        out.copy_from_slice(xs);
+    }
+}
+
+fn main() {
+    println!("== bench_perf: L3 coordinator hot paths ==\n");
+    let sch = NoiseSchedule::vp_linear();
+
+    // --- 1. Solver-step overhead (model-free), SDE and ODE configs.
+    for (n, dim) in [(64usize, 16usize), (256, 64)] {
+        for tau in [1.0f64, 0.0] {
+            let m = 32;
+            let grid = Grid::new(&sch, timesteps(&sch, StepSelector::UniformLambda, m));
+            let model = NullModel { dim };
+            let opts = SaSolverOpts {
+                predictor_steps: 3,
+                corrector_steps: 3,
+                prediction: Prediction::Data,
+                tau: TauFn::Constant(tau),
+            };
+            let (mean, min) = time_it(8, || {
+                let mut noise = PhiloxNormal::new(1);
+                let mut x = vec![0.1; n * dim];
+                SaSolver::new(opts.clone()).solve(&model, &grid, &mut x, n, &mut noise);
+                std::hint::black_box(&x);
+            });
+            let per = mean / (m as f64 * n as f64);
+            println!(
+                "solver-step overhead  n={n:<4} dim={dim:<3} M={m} tau={tau}: {:.3} ms/solve (min {:.3}), {:.1} ns/(sample·step)",
+                mean * 1e3,
+                min * 1e3,
+                per * 1e9
+            );
+        }
+    }
+
+    // --- 2. Coefficient engine alone (exact vs quadrature path).
+    let ends = StepEnds {
+        lam_s: -1.0,
+        lam_t: -0.4,
+        alpha_s: 0.55,
+        alpha_t: 0.68,
+        sigma_s: 0.83,
+        sigma_t: 0.73,
+    };
+    let nodes = [-1.0, -1.6, -2.3];
+    for (name, tau) in [
+        ("constant(exact)", TauFn::Constant(1.0)),
+        ("interval(exact)", TauFn::interval_from_sigma(1.0, 0.05, 1.0)),
+        ("linear(quadrature)", TauFn::Linear { a: 0.5, b: 0.1 }),
+    ] {
+        let (mean, _min) = time_it(5, || {
+            for _ in 0..1000 {
+                std::hint::black_box(coefficients(&nodes, &ends, &tau, Prediction::Data));
+            }
+        });
+        println!("coefficients[{name:<18}]: {:.2} µs/call", mean * 1e6 / 1000.0);
+    }
+
+    // --- 3. Batcher throughput.
+    let mk = |id: u64| SampleRequest {
+        id,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: SamplerConfig::sa_default(),
+        n: 4,
+        seed: id,
+        return_samples: false,
+        want_metrics: false,
+    };
+    let (mean, _) = time_it(5, || {
+        let mut b = Batcher::new();
+        for id in 0..1000 {
+            b.push(mk(id));
+        }
+        while !b.is_empty() {
+            std::hint::black_box(b.pop_group(8));
+        }
+    });
+    println!("batcher: {:.0} ns/request (push+group of 1000)", mean * 1e9 / 1000.0);
+
+    // --- 4. End-to-end GMM sampling throughput.
+    let wl_gmm = Gmm::structured(16, 5, 2.0, 404);
+    let model = GmmAnalytic::new(wl_gmm);
+    let cfg = SamplerConfig { nfe: 20, tau: 1.0, ..SamplerConfig::sa_default() };
+    let (mean, _) = time_it(5, || {
+        std::hint::black_box(sadiff::solvers::run(&model, &sch, &cfg, 256, 3));
+    });
+    println!(
+        "e2e GMM sampling (n=256, dim=16, NFE=20): {:.1} ms  →  {:.0} samples/s",
+        mean * 1e3,
+        256.0 / mean
+    );
+
+    // --- 5. Artifact round-trips (skipped without `make artifacts`).
+    let dir = std::env::var("SADIFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let host = sadiff::runtime::RuntimeHost::open(&dir).unwrap();
+        // GMM artifact execute.
+        if let Some(e) = host.registry.entry("gmm_denoiser") {
+            let (b, d) = (e.inputs[0][0], e.inputs[0][1]);
+            let x = vec![0.1f32; b * d];
+            host.execute("gmm_denoiser", vec![x.clone(), vec![0.8], vec![0.6]]).unwrap();
+            let (mean, min) = time_it(20, || {
+                std::hint::black_box(
+                    host.execute("gmm_denoiser", vec![x.clone(), vec![0.8], vec![0.6]]).unwrap(),
+                );
+            });
+            println!(
+                "artifact gmm_denoiser execute (B={b}, D={d}): {:.2} ms (min {:.2})",
+                mean * 1e3,
+                min * 1e3
+            );
+        }
+        // Fused sa_update artifact vs native update.
+        if let Some(e) = host.registry.entry("sa_update") {
+            let (s, b, d) = (e.inputs[1][0], e.inputs[0][0], e.inputs[0][1]);
+            let x = vec![0.1f32; b * d];
+            let buf = vec![0.2f32; s * b * d];
+            let coeffs = vec![0.3f32; s];
+            let scal = vec![0.9f32, 0.1f32];
+            let xi = vec![0.0f32; b * d];
+            host.execute(
+                "sa_update",
+                vec![x.clone(), buf.clone(), coeffs.clone(), scal.clone(), xi.clone()],
+            )
+            .unwrap();
+            let (mean_a, _) = time_it(20, || {
+                std::hint::black_box(
+                    host.execute(
+                        "sa_update",
+                        vec![x.clone(), buf.clone(), coeffs.clone(), scal.clone(), xi.clone()],
+                    )
+                    .unwrap(),
+                );
+            });
+            // Native fused update at the same shape.
+            let xd: Vec<f64> = x.iter().map(|v| *v as f64).collect();
+            let bufd: Vec<f64> = buf.iter().map(|v| *v as f64).collect();
+            let xid: Vec<f64> = xi.iter().map(|v| *v as f64).collect();
+            let (mean_n, _) = time_it(20, || {
+                let mut out = vec![0.0f64; b * d];
+                for k in 0..b * d {
+                    let mut acc = 0.9 * xd[k] + 0.1 * xid[k];
+                    for j in 0..s {
+                        acc += 0.3 * bufd[j * b * d + k];
+                    }
+                    out[k] = acc;
+                }
+                std::hint::black_box(&out);
+            });
+            println!(
+                "fused update S={s} B={b} D={d}: artifact {:.1} µs vs native {:.1} µs (channel+PJRT overhead dominates at this size)",
+                mean_a * 1e6,
+                mean_n * 1e6
+            );
+        }
+    } else {
+        println!("(artifact benches skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_table1` — regenerates Table 1 (data- vs
+//! noise-prediction FID under the SDE solver) at full scale.
+//! In-repo harness (`harness = false`): criterion is not in the offline
+//! vendor set; see DESIGN.md §2.
+
+use sadiff::exps::{table1, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    table1::run(scale).print();
+}

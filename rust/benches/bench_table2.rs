@@ -1,0 +1,13 @@
+//! `cargo bench --bench bench_table2` — regenerates Table 2 (predictor/
+//! corrector ablation on the CIFAR10-VE analog).
+
+use sadiff::exps::{table2, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    table2::run(scale).print();
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench bench_table3` — regenerates Table 3 (DDPM at a
+//! large NFE budget vs SA-Solver at a small one, on the trained DiT
+//! artifact). Requires `make artifacts`.
+
+use sadiff::exps::{table3, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    table3::run(scale).print();
+}

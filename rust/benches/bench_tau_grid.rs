@@ -1,0 +1,15 @@
+//! `cargo bench --bench bench_tau_grid` — regenerates the appendix
+//! Tables 4–14 (τ × NFE FID grids per workload analog).
+
+use sadiff::exps::{tau_grid, Scale};
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "--quick") {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    for t in tau_grid::run(scale) {
+        t.print();
+    }
+}

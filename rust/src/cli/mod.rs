@@ -1,0 +1,196 @@
+//! Declarative CLI argument parsing (clap is not in the offline vendor
+//! set). Supports `--key value`, `--switch`, positionals and generated
+//! `--help` text; typed getters with defaults.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// One flag description, used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Whether the flag takes a value (`--nfe 20`) or is a switch (`--quick`).
+    pub takes_value: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw tokens against a spec. Unknown `--flags` are rejected so
+    /// typos surface instead of silently using defaults.
+    pub fn parse(tokens: &[String], spec: &[FlagSpec]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let fs = spec
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| Error::config(format!("unknown flag --{name}")))?;
+                if fs.takes_value {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| Error::config(format!("--{name} needs a value")))?;
+                    args.flags.insert(name.to_string(), val.clone());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` minus the binary name.
+    pub fn from_env(spec: &[FlagSpec]) -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens, spec)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::config(format!("--{name}: '{s}' is not a number"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::config(format!("--{name}: '{s}' is not an integer"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::config(format!("--{name}: '{s}' is not an integer"))),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of numbers, e.g. `--taus 0,0.4,1.0`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| Error::config(format!("--{name}: bad number '{p}'")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse a comma-separated list of integers.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| Error::config(format!("--{name}: bad integer '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render help text for a command.
+pub fn render_help(cmd: &str, about: &str, spec: &[FlagSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\nFlags:\n");
+    for f in spec {
+        let val = if f.takes_value { " <value>" } else { "" };
+        out.push_str(&format!("  --{}{:<14} {}\n", f.name, val, f.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "nfe", help: "evaluations", takes_value: true },
+            FlagSpec { name: "quick", help: "small run", takes_value: false },
+            FlagSpec { name: "taus", help: "list", takes_value: true },
+        ]
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let toks: Vec<String> = ["run", "--nfe", "20", "--quick", "extra"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&toks, &spec()).unwrap();
+        assert_eq!(a.positionals, vec!["run", "extra"]);
+        assert_eq!(a.get_usize("nfe", 0).unwrap(), 20);
+        assert!(a.has("quick"));
+        assert!(!a.has("slow"));
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let toks = vec!["--bogus".to_string()];
+        assert!(Args::parse(&toks, &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let toks = vec!["--nfe".to_string()];
+        assert!(Args::parse(&toks, &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let toks = vec!["--nfe".to_string(), "abc".to_string()];
+        let a = Args::parse(&toks, &spec()).unwrap();
+        assert!(a.get_usize("nfe", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let toks = vec!["--taus".to_string(), "0,0.4, 1.0".to_string()];
+        let a = Args::parse(&toks, &spec()).unwrap();
+        assert_eq!(a.get_f64_list("taus", &[]).unwrap(), vec![0.0, 0.4, 1.0]);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("sadiff", "sampler", &spec());
+        assert!(h.contains("--nfe"));
+        assert!(h.contains("--quick"));
+    }
+}

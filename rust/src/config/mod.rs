@@ -1,0 +1,413 @@
+//! Typed configuration for samplers, serving, and workloads, loadable from
+//! JSON files (`--config path`) with CLI overrides.
+
+use crate::jsonlite::{parse, Value};
+use crate::schedule::StepSelector;
+use crate::tau::TauFn;
+use crate::util::error::{Error, Result};
+
+/// Which sampling algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// The paper's SA-Solver (Alg. 1).
+    Sa,
+    /// DDIM with η (Song et al. 2021).
+    Ddim,
+    /// Ancestral DDPM sampling.
+    Ddpm,
+    /// Euler–Maruyama on the reverse SDE (τ from config).
+    EulerMaruyama,
+    /// DPM-Solver-2 (singlestep midpoint, noise prediction).
+    DpmSolver2,
+    /// DPM-Solver++(2M) (multistep, data prediction).
+    DpmSolverPp2m,
+    /// UniPC p-step predictor-corrector (ODE).
+    UniPc,
+    /// EDM deterministic Heun.
+    Heun,
+    /// EDM stochastic (churn) sampler.
+    EdmSde,
+}
+
+impl SolverKind {
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "sa" | "sa_solver" => SolverKind::Sa,
+            "ddim" => SolverKind::Ddim,
+            "ddpm" => SolverKind::Ddpm,
+            "euler_maruyama" | "em" => SolverKind::EulerMaruyama,
+            "dpm_solver2" => SolverKind::DpmSolver2,
+            "dpm_solver_pp_2m" | "dpm++2m" => SolverKind::DpmSolverPp2m,
+            "unipc" => SolverKind::UniPc,
+            "heun" => SolverKind::Heun,
+            "edm_sde" => SolverKind::EdmSde,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Sa => "sa",
+            SolverKind::Ddim => "ddim",
+            SolverKind::Ddpm => "ddpm",
+            SolverKind::EulerMaruyama => "euler_maruyama",
+            SolverKind::DpmSolver2 => "dpm_solver2",
+            SolverKind::DpmSolverPp2m => "dpm_solver_pp_2m",
+            SolverKind::UniPc => "unipc",
+            SolverKind::Heun => "heun",
+            SolverKind::EdmSde => "edm_sde",
+        }
+    }
+
+    /// Every solver, for zoo-style sweeps.
+    pub fn all() -> &'static [SolverKind] {
+        &[
+            SolverKind::Sa,
+            SolverKind::Ddim,
+            SolverKind::Ddpm,
+            SolverKind::EulerMaruyama,
+            SolverKind::DpmSolver2,
+            SolverKind::DpmSolverPp2m,
+            SolverKind::UniPc,
+            SolverKind::Heun,
+            SolverKind::EdmSde,
+        ]
+    }
+}
+
+/// Score-model reparameterization (paper §3 / Remark 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prediction {
+    /// x_θ(x, t) ≈ E[x₀|x_t] — the paper's recommended choice.
+    Data,
+    /// ε_θ(x, t) — shown inferior for SDE solving (Table 1, §A.2.4).
+    Noise,
+}
+
+/// Shape of τ(t).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TauKind {
+    Constant,
+    /// EDM-style band in σ^{EDM} units (paper §E.1).
+    IntervalSigma { sigma_lo: f64, sigma_hi: f64 },
+}
+
+/// Full sampler configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplerConfig {
+    pub solver: SolverKind,
+    /// Number of model evaluations (the paper's NFE).
+    pub nfe: usize,
+    /// τ magnitude (stochasticity scale).
+    pub tau: f64,
+    pub tau_kind: TauKind,
+    /// SA predictor steps s (Eq. 14).
+    pub predictor_steps: usize,
+    /// SA corrector steps ŝ (Eq. 17); 0 disables the corrector.
+    pub corrector_steps: usize,
+    pub prediction: Prediction,
+    pub selector: StepSelector,
+    /// DDIM η.
+    pub eta: f64,
+    /// EDM stochastic sampler hyperparameters {S_churn, S_noise, S_tmin, S_tmax}.
+    pub churn: f64,
+    pub s_noise: f64,
+    pub s_tmin: f64,
+    pub s_tmax: f64,
+}
+
+impl SamplerConfig {
+    /// SA-Solver defaults per the paper's §E.1: 3-step predictor, 3-step
+    /// corrector, uniform-λ steps, constant τ = 1.
+    pub fn sa_default() -> Self {
+        SamplerConfig {
+            solver: SolverKind::Sa,
+            nfe: 20,
+            tau: 1.0,
+            tau_kind: TauKind::Constant,
+            predictor_steps: 3,
+            corrector_steps: 3,
+            prediction: Prediction::Data,
+            selector: StepSelector::UniformLambda,
+            eta: 0.0,
+            churn: 0.0,
+            s_noise: 1.0,
+            s_tmin: 0.05,
+            s_tmax: 50.0,
+        }
+    }
+
+    /// Defaults for a given solver family.
+    pub fn for_solver(kind: SolverKind) -> Self {
+        let mut c = Self::sa_default();
+        c.solver = kind;
+        match kind {
+            SolverKind::Ddim => {
+                c.tau = 0.0;
+                c.eta = 0.0;
+            }
+            SolverKind::Heun | SolverKind::UniPc | SolverKind::DpmSolverPp2m
+            | SolverKind::DpmSolver2 => {
+                c.tau = 0.0;
+            }
+            SolverKind::EdmSde => {
+                c.churn = 40.0;
+                c.s_noise = 1.003;
+            }
+            _ => {}
+        }
+        c
+    }
+
+    /// The τ(λ) function this config denotes.
+    pub fn tau_fn(&self) -> TauFn {
+        match self.tau_kind {
+            TauKind::Constant => TauFn::Constant(self.tau),
+            TauKind::IntervalSigma { sigma_lo, sigma_hi } => {
+                TauFn::interval_from_sigma(self.tau, sigma_lo, sigma_hi)
+            }
+        }
+    }
+
+    /// Number of solver *steps* M for this NFE budget. SA-Solver (and the
+    /// other multistep methods here) spend one model evaluation per step
+    /// plus one to initialize the buffer at t₀, so M = NFE − 1.
+    /// DPM-Solver-2 spends two evaluations per step; Heun/EDM two per step
+    /// (minus the trailing Euler step).
+    pub fn steps_for_nfe(&self) -> usize {
+        match self.solver {
+            SolverKind::DpmSolver2 => (self.nfe / 2).max(1),
+            SolverKind::Heun | SolverKind::EdmSde => ((self.nfe + 1) / 2).max(1),
+            SolverKind::Sa | SolverKind::UniPc => self.nfe.saturating_sub(1).max(1),
+            // One eval per step, no warm-up eval needed.
+            _ => self.nfe.max(1),
+        }
+    }
+
+    /// Parse from a JSON object; missing fields take defaults.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = if let Some(name) = v.get("solver").and_then(Value::as_str) {
+            let kind = SolverKind::by_name(name)
+                .ok_or_else(|| Error::config(format!("unknown solver '{name}'")))?;
+            Self::for_solver(kind)
+        } else {
+            Self::sa_default()
+        };
+        c.nfe = v.opt_usize("nfe", c.nfe);
+        c.tau = v.opt_f64("tau", c.tau);
+        c.predictor_steps = v.opt_usize("predictor_steps", c.predictor_steps);
+        c.corrector_steps = v.opt_usize("corrector_steps", c.corrector_steps);
+        c.eta = v.opt_f64("eta", c.eta);
+        c.churn = v.opt_f64("churn", c.churn);
+        c.s_noise = v.opt_f64("s_noise", c.s_noise);
+        c.s_tmin = v.opt_f64("s_tmin", c.s_tmin);
+        c.s_tmax = v.opt_f64("s_tmax", c.s_tmax);
+        match v.opt_str("prediction", "data") {
+            "data" => c.prediction = Prediction::Data,
+            "noise" => c.prediction = Prediction::Noise,
+            other => return Err(Error::config(format!("unknown prediction '{other}'"))),
+        }
+        if let Some(sel) = v.get("selector").and_then(Value::as_str) {
+            c.selector = StepSelector::by_name(sel)
+                .ok_or_else(|| Error::config(format!("unknown selector '{sel}'")))?;
+        }
+        match v.opt_str("tau_kind", "constant") {
+            "constant" => c.tau_kind = TauKind::Constant,
+            "interval" => {
+                c.tau_kind = TauKind::IntervalSigma {
+                    sigma_lo: v.opt_f64("tau_sigma_lo", 0.05),
+                    sigma_hi: v.opt_f64("tau_sigma_hi", 1.0),
+                }
+            }
+            other => return Err(Error::config(format!("unknown tau_kind '{other}'"))),
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Serialize to JSON (inverse of `from_json`).
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("solver", Value::Str(self.solver.name().into())),
+            ("nfe", Value::Num(self.nfe as f64)),
+            ("tau", Value::Num(self.tau)),
+            ("predictor_steps", Value::Num(self.predictor_steps as f64)),
+            ("corrector_steps", Value::Num(self.corrector_steps as f64)),
+            (
+                "prediction",
+                Value::Str(
+                    match self.prediction {
+                        Prediction::Data => "data",
+                        Prediction::Noise => "noise",
+                    }
+                    .into(),
+                ),
+            ),
+            ("eta", Value::Num(self.eta)),
+            ("churn", Value::Num(self.churn)),
+            ("s_noise", Value::Num(self.s_noise)),
+            ("s_tmin", Value::Num(self.s_tmin)),
+            ("s_tmax", Value::Num(self.s_tmax)),
+        ];
+        match self.tau_kind {
+            TauKind::Constant => fields.push(("tau_kind", Value::Str("constant".into()))),
+            TauKind::IntervalSigma { sigma_lo, sigma_hi } => {
+                fields.push(("tau_kind", Value::Str("interval".into())));
+                fields.push(("tau_sigma_lo", Value::Num(sigma_lo)));
+                fields.push(("tau_sigma_hi", Value::Num(sigma_hi)));
+            }
+        }
+        Value::obj(fields)
+    }
+
+    /// Sanity checks; called by from_json and the server.
+    pub fn validate(&self) -> Result<()> {
+        if self.nfe == 0 || self.nfe > 10_000 {
+            return Err(Error::config(format!("nfe {} out of range", self.nfe)));
+        }
+        if !(0.0..=16.0).contains(&self.tau) || !self.tau.is_finite() {
+            return Err(Error::config(format!("tau {} out of range", self.tau)));
+        }
+        if self.solver == SolverKind::Sa {
+            if self.predictor_steps == 0 || self.predictor_steps > 6 {
+                return Err(Error::config("predictor_steps must be 1..=6"));
+            }
+            if self.corrector_steps > 6 {
+                return Err(Error::config("corrector_steps must be 0..=6"));
+            }
+        }
+        if !(0.0..=2.0).contains(&self.eta) {
+            return Err(Error::config("eta must be in [0,2]"));
+        }
+        Ok(())
+    }
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Max requests merged into one model batch.
+    pub max_batch: usize,
+    /// Flush deadline for a partially filled batch, milliseconds.
+    pub batch_deadline_ms: u64,
+    /// Worker threads executing solver loops.
+    pub workers: usize,
+    /// Upper bound on queued requests before shedding load.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_batch: 8,
+            batch_deadline_ms: 5,
+            workers: 2,
+            queue_cap: 256,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        Ok(ServerConfig {
+            addr: v.opt_str("addr", &d.addr).to_string(),
+            max_batch: v.opt_usize("max_batch", d.max_batch),
+            batch_deadline_ms: v.opt_usize("batch_deadline_ms", d.batch_deadline_ms as usize) as u64,
+            workers: v.opt_usize("workers", d.workers).max(1),
+            queue_cap: v.opt_usize("queue_cap", d.queue_cap),
+        })
+    }
+}
+
+/// Load any config JSON from a file path.
+pub fn load_json_file(path: &str) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::config(format!("cannot read {path}: {e}")))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite;
+
+    #[test]
+    fn defaults_valid() {
+        SamplerConfig::sa_default().validate().unwrap();
+        for k in SolverKind::all() {
+            SamplerConfig::for_solver(*k).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = SamplerConfig::sa_default();
+        c.nfe = 47;
+        c.tau = 1.4;
+        c.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
+        c.prediction = Prediction::Noise;
+        let j = c.to_json();
+        let c2 = SamplerConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn from_json_partial_defaults() {
+        let v = jsonlite::parse(r#"{"solver": "ddim", "eta": 1.0}"#).unwrap();
+        let c = SamplerConfig::from_json(&v).unwrap();
+        assert_eq!(c.solver, SolverKind::Ddim);
+        assert_eq!(c.eta, 1.0);
+        assert_eq!(c.nfe, 20);
+    }
+
+    #[test]
+    fn from_json_rejects_bad() {
+        for bad in [
+            r#"{"solver": "bogus"}"#,
+            r#"{"nfe": 0}"#,
+            r#"{"tau": -1}"#,
+            r#"{"prediction": "wat"}"#,
+            r#"{"predictor_steps": 9}"#,
+        ] {
+            let v = jsonlite::parse(bad).unwrap();
+            assert!(SamplerConfig::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn nfe_to_steps_accounting() {
+        let mut c = SamplerConfig::sa_default();
+        c.nfe = 20;
+        assert_eq!(c.steps_for_nfe(), 19); // warm-up eval + 1/step
+        c.solver = SolverKind::Ddim;
+        assert_eq!(c.steps_for_nfe(), 20);
+        c.solver = SolverKind::Heun;
+        assert_eq!(c.steps_for_nfe(), 10); // 2 evals/step, last step Euler
+        c.solver = SolverKind::DpmSolver2;
+        assert_eq!(c.steps_for_nfe(), 10);
+    }
+
+    #[test]
+    fn tau_fn_shapes() {
+        let mut c = SamplerConfig::sa_default();
+        c.tau = 0.8;
+        assert_eq!(c.tau_fn(), crate::tau::TauFn::Constant(0.8));
+        c.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
+        match c.tau_fn() {
+            crate::tau::TauFn::Interval { tau, .. } => assert_eq!(tau, 0.8),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn server_config_parse() {
+        let v = jsonlite::parse(r#"{"max_batch": 16, "workers": 0}"#).unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.workers, 1); // clamped
+        assert_eq!(c.addr, ServerConfig::default().addr);
+    }
+}

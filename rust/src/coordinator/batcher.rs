@@ -1,0 +1,179 @@
+//! Dynamic batcher: groups compatible pending requests into one solver
+//! loop. Compatibility = same (workload, model, solver-config) — those fix
+//! the timestep grid and per-step coefficients, so merged requests share
+//! every model evaluation.
+//!
+//! Pure data structure (no threads) so policy is unit-testable; the server
+//! owns the locking and the deadline clock.
+
+use crate::coordinator::request::SampleRequest;
+use crate::jsonlite::to_string;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Batch compatibility key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub workload: String,
+    pub model: String,
+    /// Canonical JSON of the solver config (cheap structural hash).
+    pub cfg_json: String,
+}
+
+impl BatchKey {
+    pub fn of(req: &SampleRequest) -> BatchKey {
+        BatchKey {
+            workload: req.workload.clone(),
+            model: req.model.clone(),
+            cfg_json: to_string(&req.cfg.to_json()),
+        }
+    }
+}
+
+/// A queued request with its arrival time and precomputed batch key
+/// (computing the key serializes the solver config — do it once at push,
+/// not per comparison during group extraction; see bench_perf).
+#[derive(Debug)]
+pub struct Pending {
+    pub request: SampleRequest,
+    pub arrived: Instant,
+    key: BatchKey,
+}
+
+/// FIFO queue with compatibility-grouped extraction.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queue: VecDeque<Pending>,
+    /// Total queued samples (for shedding decisions).
+    queued_samples: usize,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn queued_samples(&self) -> usize {
+        self.queued_samples
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, request: SampleRequest) {
+        self.queued_samples += request.n;
+        let key = BatchKey::of(&request);
+        self.queue.push_back(Pending { request, arrived: Instant::now(), key });
+    }
+
+    /// Age of the oldest pending request.
+    pub fn oldest_age(&self) -> Option<std::time::Duration> {
+        self.queue.front().map(|p| p.arrived.elapsed())
+    }
+
+    /// Pop the oldest request plus up to `max_batch − 1` *compatible*
+    /// requests (FIFO order preserved within the group; incompatible
+    /// requests keep their positions).
+    pub fn pop_group(&mut self, max_batch: usize) -> Vec<SampleRequest> {
+        let Some(first) = self.queue.pop_front() else {
+            return Vec::new();
+        };
+        self.queued_samples -= first.request.n;
+        let key = first.key;
+        let mut group = vec![first.request];
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        while let Some(p) = self.queue.pop_front() {
+            if group.len() < max_batch && p.key == key {
+                self.queued_samples -= p.request.n;
+                group.push(p.request);
+            } else {
+                kept.push_back(p);
+            }
+        }
+        self.queue = kept;
+        group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplerConfig;
+
+    fn req(id: u64, nfe: usize, workload: &str) -> SampleRequest {
+        SampleRequest {
+            id,
+            workload: workload.into(),
+            model: "gmm".into(),
+            cfg: SamplerConfig { nfe, ..SamplerConfig::sa_default() },
+            n: 2,
+            seed: id,
+            return_samples: false,
+            want_metrics: false,
+        }
+    }
+
+    #[test]
+    fn groups_compatible_requests() {
+        let mut b = Batcher::new();
+        b.push(req(1, 20, "latent_analog"));
+        b.push(req(2, 20, "latent_analog"));
+        b.push(req(3, 40, "latent_analog")); // different nfe → incompatible
+        b.push(req(4, 20, "latent_analog"));
+        assert_eq!(b.queued_samples(), 8);
+        let g = b.pop_group(8);
+        assert_eq!(g.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 4]);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.queued_samples(), 2);
+        let g2 = b.pop_group(8);
+        assert_eq!(g2[0].id, 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new();
+        for id in 0..5 {
+            b.push(req(id, 10, "cifar_analog"));
+        }
+        let g = b.pop_group(3);
+        assert_eq!(g.len(), 3);
+        assert_eq!(b.len(), 2);
+        // Order preserved for the remainder.
+        let g2 = b.pop_group(3);
+        assert_eq!(g2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn different_workloads_never_merge() {
+        let mut b = Batcher::new();
+        b.push(req(1, 20, "latent_analog"));
+        b.push(req(2, 20, "cifar_analog"));
+        let g = b.pop_group(8);
+        assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn pop_empty_is_empty() {
+        let mut b = Batcher::new();
+        assert!(b.pop_group(4).is_empty());
+        assert!(b.oldest_age().is_none());
+    }
+
+    #[test]
+    fn key_sensitive_to_solver_fields() {
+        let mut a = req(1, 20, "w");
+        let mut c = req(2, 20, "w");
+        assert_eq!(BatchKey::of(&a), BatchKey::of(&c));
+        c.cfg.tau = 0.5;
+        assert_ne!(BatchKey::of(&a), BatchKey::of(&c));
+        a.model = "artifact:dit".into();
+        assert_ne!(BatchKey::of(&a), BatchKey::of(&req(3, 20, "w")));
+    }
+}

@@ -1,0 +1,197 @@
+//! The sampling engine: executes solver loops for single requests and
+//! merged batches, with per-request Philox noise streams so batching never
+//! changes a request's samples.
+
+use crate::config::SamplerConfig;
+use crate::coordinator::request::{SampleRequest, SampleResponse};
+use crate::models::ModelEval;
+use crate::rng::normal::NormalSource;
+use crate::rng::Philox4x32;
+use crate::solvers::{run_with_noise, SolveOutput};
+use crate::util::timing::Stopwatch;
+use crate::workloads::Workload;
+
+/// Per-request noise streams inside a merged batch: global lane `l` maps to
+/// (request r, local lane) and draws from request r's own Philox key, so
+/// lane noise is identical to an unbatched run of that request.
+pub struct CompositeNormal {
+    gens: Vec<Philox4x32>,
+    /// (generator index, local lane) per global lane.
+    lane_map: Vec<(usize, u64)>,
+}
+
+impl CompositeNormal {
+    /// Build from the (seed, n) list of the batch members, in lane order.
+    pub fn new(members: &[(u64, usize)]) -> CompositeNormal {
+        let mut gens = Vec::with_capacity(members.len());
+        let mut lane_map = Vec::new();
+        for (gi, (seed, n)) in members.iter().enumerate() {
+            gens.push(Philox4x32::new(*seed));
+            for local in 0..*n {
+                lane_map.push((gi, local as u64));
+            }
+        }
+        CompositeNormal { gens, lane_map }
+    }
+}
+
+impl NormalSource for CompositeNormal {
+    fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]) {
+        let (gi, local) = self.lane_map[stream as usize % self.lane_map.len()];
+        self.gens[gi].normals_into(local, step, out);
+    }
+}
+
+/// Run one solve for a single request-equivalent (workload model or any
+/// other `ModelEval`).
+pub fn sample(
+    model: &dyn ModelEval,
+    wl: &Workload,
+    cfg: &SamplerConfig,
+    n: usize,
+    seed: u64,
+) -> SolveOutput {
+    let mut noise = CompositeNormal::new(&[(seed, n)]);
+    run_with_noise(model, &wl.schedule, cfg, n, &mut noise)
+}
+
+/// One row of an experiment table: solver quality at a configuration.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub sim_fid: f64,
+    pub sliced_w2: f64,
+    pub nfe: usize,
+    pub wall_s: f64,
+}
+
+/// Sample and score against the workload's reference distribution.
+pub fn evaluate(
+    model: &dyn ModelEval,
+    wl: &Workload,
+    cfg: &SamplerConfig,
+    n: usize,
+    seed: u64,
+) -> EvalRow {
+    let sw = Stopwatch::start();
+    let out = sample(model, wl, cfg, n, seed);
+    let wall_s = sw.secs();
+    let reference = wl.reference(n, seed ^ 0x5a5a);
+    let sim_fid = crate::metrics::sim_fid(&out.samples, &reference, wl.dim())
+        .unwrap_or(f64::NAN);
+    let sliced_w2 = crate::metrics::sliced_w2(&out.samples, &reference, wl.dim(), 32, seed);
+    EvalRow { sim_fid, sliced_w2, nfe: out.nfe, wall_s }
+}
+
+/// Execute a merged batch of compatible requests in one solver loop.
+/// All requests must share (workload, cfg) — the batcher guarantees this.
+pub fn run_batch(
+    model: &dyn ModelEval,
+    wl: &Workload,
+    cfg: &SamplerConfig,
+    requests: &[SampleRequest],
+) -> Vec<SampleResponse> {
+    debug_assert!(!requests.is_empty());
+    let sw = Stopwatch::start();
+    let members: Vec<(u64, usize)> = requests.iter().map(|r| (r.seed, r.n)).collect();
+    let total_n: usize = members.iter().map(|(_, n)| n).sum();
+    let mut noise = CompositeNormal::new(&members);
+    let out = run_with_noise(model, &wl.schedule, cfg, total_n, &mut noise);
+    let wall_ms = sw.millis();
+    let dim = out.dim;
+
+    let mut responses = Vec::with_capacity(requests.len());
+    let mut lane = 0usize;
+    for req in requests {
+        let lo = lane * dim;
+        let hi = (lane + req.n) * dim;
+        lane += req.n;
+        let slice = &out.samples[lo..hi];
+        let (sim_fid, sliced_w2) = if req.want_metrics && req.n >= 2 {
+            let reference = wl.reference(req.n, req.seed ^ 0x5a5a);
+            (
+                crate::metrics::sim_fid(slice, &reference, dim).ok(),
+                Some(crate::metrics::sliced_w2(slice, &reference, dim, 32, req.seed)),
+            )
+        } else {
+            (None, None)
+        };
+        responses.push(SampleResponse {
+            id: req.id,
+            ok: true,
+            error: None,
+            n: req.n,
+            dim,
+            nfe: out.nfe,
+            wall_ms,
+            sim_fid,
+            sliced_w2,
+            samples: if req.return_samples { Some(slice.to_vec()) } else { None },
+        });
+    }
+    responses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn req(id: u64, n: usize, seed: u64) -> SampleRequest {
+        SampleRequest {
+            id,
+            workload: "latent_analog".into(),
+            model: "gmm".into(),
+            cfg: SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() },
+            n,
+            seed,
+            return_samples: true,
+            want_metrics: false,
+        }
+    }
+
+    #[test]
+    fn batching_invariance() {
+        // A request's samples must be identical whether it runs alone or
+        // merged with others — the core serving reproducibility invariant.
+        let wl = workloads::latent_analog();
+        let model = wl.model();
+        let cfg = SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() };
+        let alone = run_batch(&*model, &wl, &cfg, &[req(1, 3, 111)]);
+        let merged = run_batch(
+            &*model,
+            &wl,
+            &cfg,
+            &[req(0, 5, 999), req(1, 3, 111), req(2, 2, 222)],
+        );
+        let alone_s = alone[0].samples.as_ref().unwrap();
+        let merged_s = merged[1].samples.as_ref().unwrap();
+        assert_eq!(alone_s, merged_s);
+    }
+
+    #[test]
+    fn evaluate_produces_sane_metrics() {
+        let wl = workloads::latent_analog();
+        let model = wl.model();
+        let cfg = SamplerConfig { nfe: 24, ..SamplerConfig::sa_default() };
+        let row = evaluate(&*model, &wl, &cfg, 256, 5);
+        assert!(row.sim_fid.is_finite() && row.sim_fid >= 0.0);
+        assert!(row.sliced_w2.is_finite() && row.sliced_w2 >= 0.0);
+        assert_eq!(row.nfe, 24);
+        // More NFE should not be dramatically worse.
+        let row_fine = evaluate(&*model, &wl, &cfg, 256, 5);
+        assert!(row_fine.sim_fid.is_finite());
+    }
+
+    #[test]
+    fn responses_align_with_requests() {
+        let wl = workloads::latent_analog();
+        let model = wl.model();
+        let cfg = SamplerConfig { nfe: 6, ..SamplerConfig::sa_default() };
+        let rs = run_batch(&*model, &wl, &cfg, &[req(7, 2, 1), req(8, 4, 2)]);
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].id, 7);
+        assert_eq!(rs[0].n, 2);
+        assert_eq!(rs[1].id, 8);
+        assert_eq!(rs[1].samples.as_ref().unwrap().len(), 4 * wl.dim());
+    }
+}

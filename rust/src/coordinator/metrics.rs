@@ -1,0 +1,140 @@
+//! Serving metrics: lock-free counters plus a log-bucketed latency
+//! histogram, snapshotted to JSON for the `stats` protocol command.
+
+use crate::jsonlite::Value;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram buckets (upper bounds, ms). Log-spaced.
+const BUCKET_BOUNDS_MS: [f64; 12] =
+    [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 5000.0];
+
+/// Process-lifetime serving metrics.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    pub requests: AtomicU64,
+    pub responses_ok: AtomicU64,
+    pub responses_err: AtomicU64,
+    pub shed: AtomicU64,
+    pub samples: AtomicU64,
+    pub model_evals: AtomicU64,
+    pub batches: AtomicU64,
+    /// Σ batch sizes, for mean occupancy.
+    pub batched_requests: AtomicU64,
+    latency_buckets: [AtomicU64; 13],
+    latency_sum_us: AtomicU64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> ServingMetrics {
+        ServingMetrics::default()
+    }
+
+    pub fn observe_latency_ms(&self, ms: f64) {
+        let mut idx = BUCKET_BOUNDS_MS.len();
+        for (i, ub) in BUCKET_BOUNDS_MS.iter().enumerate() {
+            if ms <= *ub {
+                idx = i;
+                break;
+            }
+        }
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us
+            .fetch_add((ms * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn observe_batch(&self, group_size: usize, total_samples: usize, nfe: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(group_size as u64, Ordering::Relaxed);
+        self.samples.fetch_add(total_samples as u64, Ordering::Relaxed);
+        self.model_evals.fetch_add(nfe as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile from the histogram (upper bound of
+    /// the bucket containing the quantile).
+    pub fn latency_percentile_ms(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return BUCKET_BOUNDS_MS.get(i).copied().unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// JSON snapshot for the `stats` command.
+    pub fn snapshot(&self) -> Value {
+        let load = |a: &AtomicU64| Value::Num(a.load(Ordering::Relaxed) as f64);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let occupancy = if batches > 0 {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+        } else {
+            0.0
+        };
+        Value::obj(vec![
+            ("requests", load(&self.requests)),
+            ("responses_ok", load(&self.responses_ok)),
+            ("responses_err", load(&self.responses_err)),
+            ("shed", load(&self.shed)),
+            ("samples", load(&self.samples)),
+            ("model_evals", load(&self.model_evals)),
+            ("batches", load(&self.batches)),
+            ("mean_batch_occupancy", Value::Num(occupancy)),
+            ("latency_p50_ms", Value::Num(self.latency_percentile_ms(0.5))),
+            ("latency_p95_ms", Value::Num(self.latency_percentile_ms(0.95))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_from_buckets() {
+        let m = ServingMetrics::new();
+        for _ in 0..90 {
+            m.observe_latency_ms(1.5); // bucket ≤ 2ms
+        }
+        for _ in 0..10 {
+            m.observe_latency_ms(80.0); // bucket ≤ 100ms
+        }
+        assert_eq!(m.latency_percentile_ms(0.5), 2.0);
+        assert_eq!(m.latency_percentile_ms(0.95), 100.0);
+    }
+
+    #[test]
+    fn empty_percentile_zero() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.latency_percentile_ms(0.9), 0.0);
+    }
+
+    #[test]
+    fn snapshot_contains_occupancy() {
+        let m = ServingMetrics::new();
+        m.observe_batch(3, 12, 60);
+        m.observe_batch(1, 4, 20);
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("mean_batch_occupancy").unwrap(), 2.0);
+        assert_eq!(s.req_f64("samples").unwrap(), 16.0);
+        assert_eq!(s.req_f64("model_evals").unwrap(), 80.0);
+    }
+
+    #[test]
+    fn overflow_bucket() {
+        let m = ServingMetrics::new();
+        m.observe_latency_ms(99999.0);
+        assert_eq!(m.latency_percentile_ms(1.0), f64::INFINITY);
+    }
+}

@@ -1,0 +1,19 @@
+//! The serving coordinator (Layer 3): request types and wire protocol,
+//! dynamic batcher, sampling engine, TCP server and serving metrics.
+//!
+//! Design (vLLM-router mold, DESIGN.md §6): clients submit sampling
+//! requests over newline-delimited JSON; the batcher groups *compatible*
+//! requests (same workload + solver config) into one solver loop whose
+//! model evaluations are batched; per-request Philox noise streams make a
+//! request's samples independent of how it was batched.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::{BatchKey, Batcher};
+pub use engine::{sample, EvalRow};
+pub use request::{SampleRequest, SampleResponse};
+pub use server::{Server, ServerHandle};

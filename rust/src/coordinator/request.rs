@@ -1,0 +1,206 @@
+//! Request/response types and their JSON wire forms.
+
+use crate::config::SamplerConfig;
+use crate::jsonlite::{to_string, Value};
+use crate::util::error::{Error, Result};
+
+/// A sampling request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleRequest {
+    pub id: u64,
+    /// Workload name (`workloads::by_name`) — fixes schedule + reference
+    /// distribution.
+    pub workload: String,
+    /// Model selector: "gmm" (exact analytic model) or "artifact:<name>"
+    /// (PJRT artifact from the registry).
+    pub model: String,
+    pub cfg: SamplerConfig,
+    /// Samples requested.
+    pub n: usize,
+    pub seed: u64,
+    /// Include raw samples in the response (large!).
+    pub return_samples: bool,
+    /// Compute distribution metrics vs. the workload reference.
+    pub want_metrics: bool,
+}
+
+impl SampleRequest {
+    pub fn from_json(v: &Value) -> Result<SampleRequest> {
+        let cfg = match v.get("solver") {
+            Some(sv) => SamplerConfig::from_json(sv)?,
+            None => SamplerConfig::sa_default(),
+        };
+        let n = v.opt_usize("n", 16);
+        if n == 0 || n > 100_000 {
+            return Err(Error::protocol(format!("n={n} out of range")));
+        }
+        Ok(SampleRequest {
+            id: v.opt_usize("id", 0) as u64,
+            workload: v.opt_str("workload", "latent_analog").to_string(),
+            model: v.opt_str("model", "gmm").to_string(),
+            cfg,
+            n,
+            seed: v.get("seed").and_then(Value::as_u64).unwrap_or(0),
+            return_samples: v.opt_bool("return_samples", false),
+            want_metrics: v.opt_bool("metrics", false),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::Num(self.id as f64)),
+            ("workload", Value::Str(self.workload.clone())),
+            ("model", Value::Str(self.model.clone())),
+            ("solver", self.cfg.to_json()),
+            ("n", Value::Num(self.n as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("return_samples", Value::Bool(self.return_samples)),
+            ("metrics", Value::Bool(self.want_metrics)),
+        ])
+    }
+
+    pub fn to_line(&self) -> String {
+        to_string(&self.to_json())
+    }
+}
+
+/// A sampling response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleResponse {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    pub n: usize,
+    pub dim: usize,
+    pub nfe: usize,
+    pub wall_ms: f64,
+    pub sim_fid: Option<f64>,
+    pub sliced_w2: Option<f64>,
+    pub samples: Option<Vec<f64>>,
+}
+
+impl SampleResponse {
+    pub fn err(id: u64, msg: impl Into<String>) -> SampleResponse {
+        SampleResponse {
+            id,
+            ok: false,
+            error: Some(msg.into()),
+            n: 0,
+            dim: 0,
+            nfe: 0,
+            wall_ms: 0.0,
+            sim_fid: None,
+            sliced_w2: None,
+            samples: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("id", Value::Num(self.id as f64)),
+            ("ok", Value::Bool(self.ok)),
+            ("n", Value::Num(self.n as f64)),
+            ("dim", Value::Num(self.dim as f64)),
+            ("nfe", Value::Num(self.nfe as f64)),
+            ("wall_ms", Value::Num(self.wall_ms)),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Value::Str(e.clone())));
+        }
+        if let Some(f) = self.sim_fid {
+            fields.push(("sim_fid", Value::Num(f)));
+        }
+        if let Some(w) = self.sliced_w2 {
+            fields.push(("sliced_w2", Value::Num(w)));
+        }
+        if let Some(s) = &self.samples {
+            fields.push(("samples", Value::arr_f64(s)));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<SampleResponse> {
+        Ok(SampleResponse {
+            id: v.opt_usize("id", 0) as u64,
+            ok: v.opt_bool("ok", false),
+            error: v.get("error").and_then(Value::as_str).map(String::from),
+            n: v.opt_usize("n", 0),
+            dim: v.opt_usize("dim", 0),
+            nfe: v.opt_usize("nfe", 0),
+            wall_ms: v.opt_f64("wall_ms", 0.0),
+            sim_fid: v.get("sim_fid").and_then(Value::as_f64),
+            sliced_w2: v.get("sliced_w2").and_then(Value::as_f64),
+            samples: v.get("samples").and_then(Value::as_array).map(|a| {
+                a.iter().filter_map(Value::as_f64).collect()
+            }),
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        to_string(&self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = SampleRequest {
+            id: 42,
+            workload: "cifar_analog".into(),
+            model: "gmm".into(),
+            cfg: SamplerConfig::sa_default(),
+            n: 8,
+            seed: 7,
+            return_samples: true,
+            want_metrics: true,
+        };
+        let parsed = SampleRequest::from_json(&jsonlite::parse(&r.to_line()).unwrap()).unwrap();
+        assert_eq!(r, parsed);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let v = jsonlite::parse(r#"{"id": 1, "n": 4}"#).unwrap();
+        let r = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(r.workload, "latent_analog");
+        assert_eq!(r.model, "gmm");
+        assert!(!r.return_samples);
+    }
+
+    #[test]
+    fn request_rejects_bad_n() {
+        for bad in [r#"{"n": 0}"#, r#"{"n": 1000000}"#] {
+            let v = jsonlite::parse(bad).unwrap();
+            assert!(SampleRequest::from_json(&v).is_err());
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = SampleResponse {
+            id: 3,
+            ok: true,
+            error: None,
+            n: 2,
+            dim: 2,
+            nfe: 20,
+            wall_ms: 1.5,
+            sim_fid: Some(3.3),
+            sliced_w2: None,
+            samples: Some(vec![1.0, 2.0, 3.0, 4.0]),
+        };
+        let parsed = SampleResponse::from_json(&jsonlite::parse(&r.to_line()).unwrap()).unwrap();
+        assert_eq!(r, parsed);
+    }
+
+    #[test]
+    fn error_response() {
+        let r = SampleResponse::err(9, "boom");
+        assert!(!r.ok);
+        assert!(r.to_line().contains("boom"));
+    }
+}

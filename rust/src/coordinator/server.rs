@@ -1,0 +1,353 @@
+//! The sampling server: newline-delimited JSON over TCP, a shared pending
+//! queue with deadline-based dynamic batching, and a worker pool executing
+//! solver loops. tokio is not in the offline vendor set; the design is a
+//! classic blocking-I/O thread-per-connection front with channel-backed
+//! response routing, which is appropriate at the connection counts a
+//! sampling service sees.
+//!
+//! Protocol (one JSON object per line):
+//! * sampling request — see [`SampleRequest::from_json`];
+//! * `{"cmd": "stats"}` → serving-metrics snapshot;
+//! * `{"cmd": "ping"}` → `{"ok": true}`;
+//! * `{"cmd": "shutdown"}` → stops accepting and drains workers.
+
+use crate::config::ServerConfig;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::run_batch;
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::request::{SampleRequest, SampleResponse};
+use crate::jsonlite::{parse, to_string, Value};
+use crate::models::ModelEval;
+use crate::runtime::{HloModel, RuntimeHost};
+use crate::util::error::{Error, Result};
+use crate::workloads;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Shared server state.
+struct Shared {
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+    metrics: ServingMetrics,
+    cfg: ServerConfig,
+    shutdown: AtomicBool,
+    /// Lazily started PJRT runtime host (only if a request needs it).
+    runtime: Mutex<Option<Arc<RuntimeHost>>>,
+}
+
+struct QueueState {
+    batcher: Batcher,
+    replies: HashMap<u64, Sender<SampleResponse>>,
+    /// Monotone internal ticket for reply routing (client ids may collide).
+    next_ticket: u64,
+}
+
+/// A running server.
+pub struct Server {
+    shared: Arc<Shared>,
+    listener: TcpListener,
+}
+
+/// Handle returned by `spawn`: address + shutdown control.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cond.notify_all();
+        // Poke the accept loop so it notices the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    pub fn metrics_snapshot(&self) -> Value {
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl Server {
+    /// Bind to `cfg.addr` (use port 0 for an ephemeral port).
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::runtime(format!("bind {}: {e}", cfg.addr)))?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                batcher: Batcher::new(),
+                replies: HashMap::new(),
+                next_ticket: 1,
+            }),
+            cond: Condvar::new(),
+            metrics: ServingMetrics::new(),
+            cfg,
+            shutdown: AtomicBool::new(false),
+            runtime: Mutex::new(None),
+        });
+        Ok(Server { shared, listener })
+    }
+
+    /// Start workers and the accept loop on background threads; returns a
+    /// handle with the bound address.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self
+            .listener
+            .local_addr()
+            .map_err(|e| Error::runtime(format!("local_addr: {e}")))?;
+        for w in 0..self.shared.cfg.workers {
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name(format!("sadiff-worker-{w}"))
+                .spawn(move || worker_loop(shared))
+                .map_err(|e| Error::runtime(format!("spawn worker: {e}")))?;
+        }
+        let shared = self.shared.clone();
+        let listener = self.listener;
+        let accept_thread = std::thread::Builder::new()
+            .name("sadiff-accept".into())
+            .spawn(move || accept_loop(listener, shared))
+            .map_err(|e| Error::runtime(format!("spawn accept: {e}")))?;
+        crate::log_info!("server", "listening on {addr}");
+        Ok(ServerHandle { addr, shared: self.shared, accept_thread: Some(accept_thread) })
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let shared = shared.clone();
+                let _ = std::thread::Builder::new()
+                    .name("sadiff-conn".into())
+                    .spawn(move || connection_loop(s, shared));
+            }
+            Err(e) => {
+                crate::log_warn!("server", "accept error: {e}");
+            }
+        }
+    }
+}
+
+fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = handle_line(&line, &shared);
+        if writer
+            .write_all(format!("{reply_line}\n").as_bytes())
+            .is_err()
+        {
+            break;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    crate::log_debug!("server", "connection {peer} closed");
+}
+
+/// Handle one protocol line, returning the response line.
+fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
+    let v = match parse(line) {
+        Ok(v) => v,
+        Err(e) => return SampleResponse::err(0, format!("bad json: {e}")).to_line(),
+    };
+    if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
+        return match cmd {
+            "stats" => to_string(&shared.metrics.snapshot()),
+            "ping" => r#"{"ok":true}"#.to_string(),
+            "shutdown" => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                shared.cond.notify_all();
+                r#"{"ok":true,"shutting_down":true}"#.to_string()
+            }
+            other => SampleResponse::err(0, format!("unknown cmd '{other}'")).to_line(),
+        };
+    }
+    let request = match SampleRequest::from_json(&v) {
+        Ok(r) => r,
+        Err(e) => return SampleResponse::err(0, e.to_string()).to_line(),
+    };
+    shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    // Shed load if the queue is over capacity.
+    let (tx, rx) = std::sync::mpsc::channel();
+    {
+        let mut q = shared.queue.lock().expect("queue lock");
+        if q.batcher.len() >= shared.cfg.queue_cap {
+            shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return SampleResponse::err(request.id, "overloaded: queue full").to_line();
+        }
+        let ticket = q.next_ticket;
+        q.next_ticket += 1;
+        // The ticket rides in the request id slot internally; the original
+        // id is restored when the response is routed back.
+        let mut internal = request.clone();
+        internal.id = ticket;
+        q.replies.insert(ticket, tx);
+        q.batcher.push(internal);
+    }
+    shared.cond.notify_one();
+    let timeout = Duration::from_secs(120);
+    match rx.recv_timeout(timeout) {
+        Ok(mut resp) => {
+            resp.id = request.id;
+            if resp.ok {
+                shared.metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+            } else {
+                shared.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+            }
+            shared.metrics.observe_latency_ms(resp.wall_ms);
+            resp.to_line()
+        }
+        Err(_) => SampleResponse::err(request.id, "timeout").to_line(),
+    }
+}
+
+/// Worker: wait for work, give the batcher a short deadline to fill a
+/// group, execute, route responses.
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let group = {
+            let mut q = shared.queue.lock().expect("queue lock");
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) && q.batcher.is_empty() {
+                    return;
+                }
+                if !q.batcher.is_empty() {
+                    // Deadline-based flush: wait until the oldest request
+                    // has aged past the batching window, or a full batch
+                    // is available.
+                    let deadline = Duration::from_millis(shared.cfg.batch_deadline_ms);
+                    let age = q.batcher.oldest_age().unwrap_or_default();
+                    if q.batcher.len() >= shared.cfg.max_batch || age >= deadline {
+                        break;
+                    }
+                    let wait = deadline - age;
+                    let (qq, _timeout) = shared
+                        .cond
+                        .wait_timeout(q, wait)
+                        .expect("queue lock poisoned");
+                    q = qq;
+                } else {
+                    let (qq, _res) = shared
+                        .cond
+                        .wait_timeout(q, Duration::from_millis(50))
+                        .expect("queue lock poisoned");
+                    q = qq;
+                }
+            }
+            q.batcher.pop_group(shared.cfg.max_batch)
+        };
+        if group.is_empty() {
+            continue;
+        }
+        let responses = execute_group(&shared, &group);
+        let mut q = shared.queue.lock().expect("queue lock");
+        for resp in responses {
+            if let Some(tx) = q.replies.remove(&resp.id) {
+                let _ = tx.send(resp);
+            }
+        }
+    }
+}
+
+/// Execute one compatible group end to end.
+fn execute_group(shared: &Arc<Shared>, group: &[SampleRequest]) -> Vec<SampleResponse> {
+    let first = &group[0];
+    let Some(wl) = workloads::by_name(&first.workload) else {
+        return group
+            .iter()
+            .map(|r| SampleResponse::err(r.id, format!("unknown workload '{}'", first.workload)))
+            .collect();
+    };
+    let model: Box<dyn ModelEval> = if let Some(name) = first.model.strip_prefix("artifact:") {
+        match artifact_model(shared, name) {
+            Ok(m) => m,
+            Err(e) => {
+                return group
+                    .iter()
+                    .map(|r| SampleResponse::err(r.id, e.to_string()))
+                    .collect()
+            }
+        }
+    } else {
+        wl.model()
+    };
+    let total: usize = group.iter().map(|r| r.n).sum();
+    let responses = run_batch(&*model, &wl, &first.cfg, group);
+    let nfe = responses.first().map(|r| r.nfe).unwrap_or(0);
+    shared.metrics.observe_batch(group.len(), total, nfe);
+    responses
+}
+
+/// Resolve an artifact-backed model through the lazily started runtime host.
+fn artifact_model(shared: &Arc<Shared>, name: &str) -> Result<Box<dyn ModelEval>> {
+    let mut guard = shared.runtime.lock().expect("runtime lock");
+    if guard.is_none() {
+        *guard = Some(RuntimeHost::open_default()?);
+    }
+    let host = guard.as_ref().unwrap().clone();
+    drop(guard);
+    Ok(Box::new(HloModel::from_manifest(host, name)?))
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::runtime(format!("connect {addr}: {e}")))?;
+        let writer = stream
+            .try_clone()
+            .map_err(|e| Error::runtime(format!("clone stream: {e}")))?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one line, read one line.
+    pub fn round_trip(&mut self, line: &str) -> Result<String> {
+        self.writer
+            .write_all(format!("{line}\n").as_bytes())
+            .map_err(Error::Io)?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf).map_err(Error::Io)?;
+        Ok(buf.trim_end().to_string())
+    }
+
+    pub fn request(&mut self, req: &SampleRequest) -> Result<SampleResponse> {
+        let line = self.round_trip(&req.to_line())?;
+        SampleResponse::from_json(&parse(&line)?)
+    }
+
+    pub fn stats(&mut self) -> Result<Value> {
+        let line = self.round_trip(r#"{"cmd":"stats"}"#)?;
+        parse(&line)
+    }
+}

@@ -1,0 +1,148 @@
+//! Shared experiment plumbing: run scales and aligned text tables.
+
+/// Experiment scale: `Quick` for CI/tests, `Full` for EXPERIMENTS.md runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    /// Samples per evaluation point (the paper uses 50K images; the GMM
+    /// metric stabilizes far sooner).
+    pub fn n_samples(&self) -> usize {
+        match self {
+            Scale::Quick => 512,
+            // 2048 keeps the sim-FID sampling noise well below the
+            // solver-effect sizes while the full 9×7 τ/NFE grids stay
+            // rebuildable in minutes on CPU (the paper's 50K-image FID
+            // serves the same purpose at its scale).
+            Scale::Full => 2048,
+        }
+    }
+
+    /// Independent seeds averaged per cell.
+    pub fn n_seeds(&self) -> usize {
+        match self {
+            Scale::Quick => 1,
+            Scale::Full => 2,
+        }
+    }
+
+    pub fn from_quick_flag(quick: bool) -> Scale {
+        if quick {
+            Scale::Quick
+        } else {
+            Scale::Full
+        }
+    }
+}
+
+/// An aligned text table with a title (mirrors the paper's table style).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form footnote (expected shape vs. the paper, caveats).
+    pub note: String,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            note: String::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        if !self.note.is_empty() {
+            out.push_str(&format!("note: {}\n", self.note));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float for table cells.
+pub fn f(x: f64) -> String {
+    if x.is_nan() {
+        "nan".into()
+    } else if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 0.01 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        let lines: Vec<&str> = r.lines().collect();
+        // Data rows have equal width.
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(f64::NAN), "nan");
+        assert_eq!(f(1234.6), "1235");
+        assert_eq!(f(12.34), "12.3");
+        assert_eq!(f(3.8765), "3.877");
+        assert_eq!(f(0.00012), "1.20e-4");
+    }
+
+    #[test]
+    fn scales() {
+        assert!(Scale::Full.n_samples() > Scale::Quick.n_samples());
+        assert_eq!(Scale::from_quick_flag(true), Scale::Quick);
+    }
+}

@@ -1,0 +1,59 @@
+//! Figure 1 (and appendix Tables 4–7, 10–14 in condensed form): FID vs NFE
+//! for τ ∈ {0, 0.2, …, 1.6} on all four workload analogs.
+//!
+//! Expected shape: at small NFE small τ wins; at moderate NFE (20–100)
+//! larger τ wins; τ=0 (ODE) plateaus above the best SDE setting.
+
+use super::common::{f, Scale, Table};
+use crate::config::SamplerConfig;
+use crate::coordinator::engine::evaluate;
+use crate::workloads;
+
+pub fn taus(scale: Scale) -> Vec<f64> {
+    match scale {
+        Scale::Quick => vec![0.0, 0.6, 1.2],
+        Scale::Full => vec![0.0, 0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6],
+    }
+}
+
+pub fn nfes(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![10, 30],
+        Scale::Full => vec![5, 10, 20, 40, 60, 80, 100],
+    }
+}
+
+pub fn run(scale: Scale) -> Vec<Table> {
+    workloads::all_names()
+        .iter()
+        .map(|name| run_one(name, scale))
+        .collect()
+}
+
+pub fn run_one(workload: &str, scale: Scale) -> Table {
+    let wl = workloads::by_name(workload).expect("workload");
+    let model = wl.model();
+    let nfes = nfes(scale);
+    let mut header = vec!["tau \\ NFE".to_string()];
+    header.extend(nfes.iter().map(|n| n.to_string()));
+    let mut table = Table::new(
+        format!("Figure 1 — FID(sim) vs NFE × tau, {workload}"),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for tau in taus(scale) {
+        let mut cells = vec![format!("{tau:.1}")];
+        for &nfe in &nfes {
+            let cfg = SamplerConfig { nfe, tau, ..SamplerConfig::sa_default() };
+            let mut acc = 0.0;
+            for seed in 0..scale.n_seeds() {
+                acc += evaluate(&*model, &wl, &cfg, scale.n_samples(), seed as u64).sim_fid;
+            }
+            cells.push(f(acc / scale.n_seeds() as f64));
+        }
+        table.row(cells);
+    }
+    table.note =
+        "paper shape: optimal tau grows with NFE; tau=0 dominated at NFE ≥ ~20 (Fig.1, Tab.4–14)"
+            .into();
+    table
+}

@@ -1,0 +1,70 @@
+//! Figure 2: solver comparison (DDIM, DPM-Solver, UniPC, EDM-ODE/Heun,
+//! EDM-SDE, SA-Solver) vs NFE on the CIFAR10-VE, ImageNet64-cosine and
+//! latent analogs.
+//!
+//! Expected shape: SA-Solver matches the best ODE solvers at small NFE and
+//! beats all of them from moderate NFE on; EDM-SDE needs many more steps.
+
+use super::common::{f, Scale, Table};
+use crate::config::{SamplerConfig, SolverKind};
+use crate::coordinator::engine::evaluate;
+use crate::workloads;
+
+pub fn solvers() -> Vec<(&'static str, SolverKind)> {
+    vec![
+        ("DDIM(eta=0)", SolverKind::Ddim),
+        ("DPM-Solver-2", SolverKind::DpmSolver2),
+        ("DPM-Solver++(2M)", SolverKind::DpmSolverPp2m),
+        ("UniPC", SolverKind::UniPc),
+        ("EDM(ODE/Heun)", SolverKind::Heun),
+        ("EDM(SDE)", SolverKind::EdmSde),
+        ("SA-Solver", SolverKind::Sa),
+    ]
+}
+
+pub fn nfes(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![11, 31],
+        Scale::Full => vec![11, 15, 23, 31, 47, 63, 95],
+    }
+}
+
+pub fn run(scale: Scale) -> Vec<Table> {
+    ["cifar_analog", "imagenet64_analog", "latent_analog"]
+        .iter()
+        .map(|w| run_one(w, scale))
+        .collect()
+}
+
+pub fn run_one(workload: &str, scale: Scale) -> Table {
+    let wl = workloads::by_name(workload).expect("workload");
+    let model = wl.model();
+    let nfes = nfes(scale);
+    let mut header = vec!["method \\ NFE".to_string()];
+    header.extend(nfes.iter().map(|n| n.to_string()));
+    let mut table = Table::new(
+        format!("Figure 2 — FID(sim) by solver vs NFE, {workload}"),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (name, kind) in solvers() {
+        let mut cells = vec![name.to_string()];
+        for &nfe in &nfes {
+            let mut cfg = SamplerConfig { nfe, ..SamplerConfig::for_solver(kind) };
+            if kind == SolverKind::Sa {
+                // Paper protocol: a proper τ per budget (§E.1); moderate
+                // stochasticity at medium NFE.
+                cfg.tau = if nfe < 20 { 0.4 } else { 1.0 };
+            }
+            let mut acc = 0.0;
+            for seed in 0..scale.n_seeds() {
+                acc += evaluate(&*model, &wl, &cfg, scale.n_samples(), seed as u64).sim_fid;
+            }
+            cells.push(f(acc / scale.n_seeds() as f64));
+        }
+        table.row(cells);
+    }
+    table.note =
+        "paper shape: SA-Solver best at moderate+ NFE; EDM(SDE) slow to converge (Fig.2/Tab.4,6,10)"
+            .into();
+    table
+}

@@ -1,0 +1,92 @@
+//! Figure 4 / Tables 8–9: effect of stochasticity under inaccurate score
+//! estimation. The paper retrains checkpoints to different epochs; we dial
+//! the exact GMM score with a controlled seeded perturbation of amplitude ε
+//! (larger ε ↔ earlier epoch) — same axis, no training confound.
+//!
+//! REPRODUCTION NOTE (EXPERIMENTS.md §Deviations): the ε-axis reproduces
+//! (every sampler degrades with score error), but with *exogenous* additive
+//! error the ODE-vs-SDE ordering REVERSES relative to the paper. This is a
+//! property of the substitution, not a bug: the stochastic update weights
+//! fresh model outputs by α(1−e^{−(1+τ²)h}) — a (1+τ²)-fold larger mass
+//! than the ODE — so injected exogenous error variance scales ≈ (1+τ²)/2·h
+//! vs h/2 for τ=0 (verified to first order by these measurements). The
+//! paper's advantage arises with *real undertrained networks* whose error
+//! is correlated with the sampler's own visited distribution, measured in
+//! Inception feature space; none of the four exogenous error structures we
+//! tested (persistent field, per-step-decorrelated field, mean regression,
+//! off-manifold-gated error) recreates that coupling.
+
+use super::common::{f, Scale, Table};
+use crate::config::{SamplerConfig, SolverKind, TauKind};
+use crate::coordinator::engine::evaluate;
+use crate::models::PerturbedModel;
+use crate::workloads;
+
+/// ε values standing in for training epochs (decreasing error ↔ later epoch).
+pub fn epsilons(scale: Scale) -> Vec<f64> {
+    match scale {
+        Scale::Quick => vec![0.6, 0.15, 0.0],
+        Scale::Full => vec![0.8, 0.6, 0.4, 0.2, 0.1, 0.0],
+    }
+}
+
+pub fn methods() -> Vec<(&'static str, SamplerConfig)> {
+    let nfe = 31;
+    vec![
+        ("DDIM", SamplerConfig { nfe, ..SamplerConfig::for_solver(SolverKind::Ddim) }),
+        (
+            "DPM-Solver++(2M)",
+            SamplerConfig { nfe, ..SamplerConfig::for_solver(SolverKind::DpmSolverPp2m) },
+        ),
+        ("EDM(ODE)", SamplerConfig { nfe, ..SamplerConfig::for_solver(SolverKind::Heun) }),
+        (
+            "SA-Solver tau=0.6",
+            SamplerConfig {
+                nfe,
+                tau: 0.6,
+                // The paper's §E.1 CIFAR setting: τ active on the EDM band
+                // σ^{EDM} ∈ [0.05, 1], deterministic outside it.
+                tau_kind: TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 },
+                ..SamplerConfig::sa_default()
+            },
+        ),
+        (
+            "SA-Solver tau=1.0",
+            SamplerConfig {
+                nfe,
+                tau: 1.0,
+                tau_kind: TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 },
+                ..SamplerConfig::sa_default()
+            },
+        ),
+    ]
+}
+
+pub fn run(scale: Scale) -> Table {
+    let wl = workloads::cifar_analog();
+    let eps = epsilons(scale);
+    let mut header = vec!["method \\ score err eps".to_string()];
+    header.extend(eps.iter().map(|e| format!("{e:.2}")));
+    let mut table = Table::new(
+        "Figure 4 — FID(sim) under inaccurate score (eps ↔ early epoch), cifar_analog, NFE=31",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for (name, cfg) in methods() {
+        let mut cells = vec![name.to_string()];
+        for &e in &eps {
+            let model = PerturbedModel::new(
+                crate::models::GmmAnalytic::new(wl.gmm.clone()),
+                e,
+                1234,
+            );
+            let mut acc = 0.0;
+            for seed in 0..scale.n_seeds() {
+                acc += evaluate(&model, &wl, &cfg, scale.n_samples(), seed as u64).sim_fid;
+            }
+            cells.push(f(acc / scale.n_seeds() as f64));
+        }
+        table.row(cells);
+    }
+    table.note = "epsilon-axis reproduces (all degrade with score error); ODE-vs-SDE ordering reverses under exogenous error — see module docs / EXPERIMENTS.md §Deviations".into();
+    table
+}

@@ -1,0 +1,72 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §5).
+//! Each driver returns structured rows and prints a paper-style text table;
+//! `rust/benches/*` and `sadiff exp <id>` are thin wrappers over these.
+
+pub mod ablations;
+pub mod common;
+pub mod convergence;
+pub mod equivalence;
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod tau_grid;
+
+pub use common::{Scale, Table};
+
+/// Run an experiment by id, printing its table(s). Returns false for an
+/// unknown id.
+pub fn run_by_name(id: &str, scale: Scale) -> bool {
+    match id {
+        "table1" => table1::run(scale).print(),
+        "table2" => table2::run(scale).print(),
+        "table3" => table3::run(scale).print(),
+        "fig1" => {
+            for t in fig1::run(scale) {
+                t.print();
+            }
+        }
+        "fig2" => {
+            for t in fig2::run(scale) {
+                t.print();
+            }
+        }
+        "fig4" => fig4::run(scale).print(),
+        "tau_grid" | "tables4_14" => {
+            for t in tau_grid::run(scale) {
+                t.print();
+            }
+        }
+        "convergence" => {
+            for t in convergence::run(scale) {
+                t.print();
+            }
+        }
+        "equivalence" => equivalence::run().print(),
+        "ablations" => {
+            for t in ablations::run(scale) {
+                t.print();
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
+/// All experiment ids.
+pub fn all_ids() -> &'static [&'static str] {
+    &[
+        "table1",
+        "table2",
+        "table3",
+        "fig1",
+        "fig2",
+        "fig4",
+        "tau_grid",
+        "convergence",
+        "equivalence",
+        "ablations",
+    ]
+}

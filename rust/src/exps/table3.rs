@@ -1,0 +1,91 @@
+//! Table 3: the trained-network experiment — DDPM at a large NFE budget vs
+//! SA-Solver at a small one, on the build-time-trained tiny DiT artifact
+//! (the analog of the paper's DiT-XL/2 rows: DDPM@250 = 2.27 vs
+//! SA-Solver@60 = 2.02 on ImageNet-256).
+//!
+//! Reference samples come from the DiT's training distribution, dumped by
+//! `python/compile/aot.py` into `artifacts/dit_reference.json`.
+
+use super::common::{f, Scale, Table};
+use crate::config::{SamplerConfig, SolverKind};
+use crate::coordinator::engine::sample;
+use crate::jsonlite::Value;
+use crate::runtime::{HloModel, RuntimeHost};
+use crate::util::error::{Error, Result};
+use crate::workloads::Workload;
+
+/// Load the DiT reference set (n × dim flattened) from the artifacts dir.
+pub fn load_reference(dir: &str) -> Result<(Vec<f64>, usize)> {
+    let path = format!("{dir}/dit_reference.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::runtime(format!("read {path} (run `make artifacts`): {e}")))?;
+    let v = crate::jsonlite::parse(&text)?;
+    let dim = v.req_usize("dim")?;
+    let data: Vec<f64> = v
+        .get("samples")
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::runtime("dit_reference: missing samples"))?
+        .iter()
+        .filter_map(Value::as_f64)
+        .collect();
+    Ok((data, dim))
+}
+
+/// The schedule the DiT was trained under (fixed by python/compile/train.py).
+pub fn dit_workload(dim: usize) -> Workload {
+    Workload {
+        name: "dit_trained",
+        schedule: crate::schedule::NoiseSchedule::vp_linear(),
+        gmm: crate::gmm::Gmm::standard(dim), // placeholder target; reference comes from file
+    }
+}
+
+pub fn run(scale: Scale) -> Table {
+    match run_inner(scale) {
+        Ok(t) => t,
+        Err(e) => {
+            let mut t = Table::new("Table 3 — DiT artifact (SKIPPED)", &["status"]);
+            t.row(vec![format!("skipped: {e}")]);
+            t
+        }
+    }
+}
+
+fn run_inner(scale: Scale) -> Result<Table> {
+    let dir = std::env::var("SADIFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let host = RuntimeHost::open(&dir)?;
+    let model = HloModel::from_manifest(host, "dit_denoiser")?;
+    let (reference, dim) = load_reference(&dir)?;
+    let wl = dit_workload(dim);
+
+    let (ddpm_nfe, sa_nfe, n) = match scale {
+        Scale::Quick => (50, 12, 128),
+        Scale::Full => (250, 60, 512),
+    };
+    let mut table = Table::new(
+        "Table 3 — FID(sim) on the trained DiT artifact",
+        &["method", "NFE", "FID(sim)"],
+    );
+    // τ = 0.6: the DiT is deliberately under-trained (build-time CPU
+    // budget), and per our Fig-4 analysis moderate stochasticity is the
+    // right operating point under residual model error.
+    let configs = [
+        ("DDPM", SamplerConfig { nfe: ddpm_nfe, ..SamplerConfig::for_solver(SolverKind::Ddpm) }),
+        (
+            "SA-Solver (ours)",
+            SamplerConfig { nfe: sa_nfe, tau: 0.6, ..SamplerConfig::sa_default() },
+        ),
+    ];
+    for (name, cfg) in configs {
+        let out = sample(&model, &wl, &cfg, n, 17);
+        let n_ref = reference.len() / dim;
+        let take = n.min(n_ref) * dim;
+        let fid = crate::metrics::sim_fid(&out.samples[..take], &reference[..take], dim)
+            .unwrap_or(f64::NAN);
+        table.row(vec![name.to_string(), cfg.nfe.to_string(), f(fid)]);
+    }
+    table.note = format!(
+        "paper shape: SA-Solver at {sa_nfe} NFE ≤ DDPM at {ddpm_nfe} NFE (Tab.3: 2.02@60 vs 2.27@250)"
+    );
+    Ok(table)
+}

@@ -1,0 +1,20 @@
+//! Appendix Tables 4–14 (condensed): the full τ × NFE FID grids per
+//! workload analog, i.e. the data behind Figure 1 at the paper's exact
+//! (τ, NFE) lattice.
+
+use super::common::Scale;
+use super::fig1;
+use crate::exps::Table;
+
+pub fn run(scale: Scale) -> Vec<Table> {
+    // Tables 4/5 (CIFAR VE), 6/7+12 (ImageNet64), 13 (latent), 14 (bedroom):
+    // one grid per workload, using each workload's NFE lattice.
+    crate::workloads::all_names()
+        .iter()
+        .map(|name| {
+            let mut t = fig1::run_one(name, scale);
+            t.title = format!("Tables 4–14 — tau × NFE grid, {name}");
+            t
+        })
+        .collect()
+}

@@ -1,0 +1,309 @@
+//! Gaussian-mixture substrate: the *exact-score* stand-in for pretrained
+//! denoisers (see DESIGN.md §2).
+//!
+//! For x₀ ~ Σ_k w_k N(μ_k, diag(s_k)) and the forward marginal
+//! x_t | x₀ ~ N(α x₀, σ² I), the time-t marginal is again a GMM
+//! (means α μ_k, vars α² s_k + σ²) and the data-prediction target
+//! x_θ*(x, t) = E[x₀ | x_t = x] is in closed form — a responsibility-weighted
+//! sum of per-component posterior means. This gives every solver an exact,
+//! smooth, Lipschitz model so ordering effects are measured without
+//! model-error confounds.
+
+use crate::rng::Xoshiro256pp;
+
+/// Diagonal-covariance Gaussian mixture over R^dim.
+#[derive(Debug, Clone)]
+pub struct Gmm {
+    pub dim: usize,
+    /// Mixture weights (normalized at construction).
+    pub weights: Vec<f64>,
+    /// Component means, `k × dim`.
+    pub means: Vec<Vec<f64>>,
+    /// Component per-dimension variances, `k × dim`.
+    pub vars: Vec<Vec<f64>>,
+}
+
+impl Gmm {
+    /// Construct (weights are normalized; all variances must be positive).
+    pub fn new(weights: Vec<f64>, means: Vec<Vec<f64>>, vars: Vec<Vec<f64>>) -> Self {
+        assert_eq!(weights.len(), means.len());
+        assert_eq!(weights.len(), vars.len());
+        assert!(!weights.is_empty());
+        let dim = means[0].len();
+        for (m, v) in means.iter().zip(&vars) {
+            assert_eq!(m.len(), dim);
+            assert_eq!(v.len(), dim);
+            assert!(v.iter().all(|x| *x > 0.0), "variances must be positive");
+        }
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0);
+        Gmm {
+            dim,
+            weights: weights.iter().map(|w| w / total).collect(),
+            means,
+            vars,
+        }
+    }
+
+    /// Single standard Gaussian.
+    pub fn standard(dim: usize) -> Self {
+        Gmm::new(vec![1.0], vec![vec![0.0; dim]], vec![vec![1.0; dim]])
+    }
+
+    /// A reproducible "structured" mixture: K components on a scaled
+    /// hypersphere shell with anisotropic variances. Used by the workload
+    /// analogs; the seed fixes the geometry.
+    pub fn structured(dim: usize, k: usize, spread: f64, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut means = Vec::with_capacity(k);
+        let mut vars = Vec::with_capacity(k);
+        let mut weights = Vec::with_capacity(k);
+        for _ in 0..k {
+            let raw: Vec<f64> = rng.normals(dim);
+            let norm = crate::linalg::norm2(&raw).max(1e-9);
+            means.push(raw.iter().map(|x| spread * x / norm).collect());
+            vars.push((0..dim).map(|_| rng.uniform_in(0.05, 0.35)).collect());
+            weights.push(rng.uniform_in(0.5, 1.5));
+        }
+        Gmm::new(weights, means, vars)
+    }
+
+    /// Number of components.
+    pub fn k(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Draw `n` samples from the prior (x₀); returns row-major `n × dim`.
+    pub fn sample(&self, rng: &mut Xoshiro256pp, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n * self.dim);
+        for _ in 0..n {
+            let k = rng.choose_weighted(&self.weights);
+            for d in 0..self.dim {
+                out.push(self.means[k][d] + self.vars[k][d].sqrt() * rng.normal());
+            }
+        }
+        out
+    }
+
+    /// Draw `n` samples from the *time-t marginal* given (α, σ) — exact
+    /// reference distribution for solver-output comparison.
+    pub fn sample_marginal(&self, rng: &mut Xoshiro256pp, n: usize, alpha: f64, sigma: f64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n * self.dim);
+        for _ in 0..n {
+            let k = rng.choose_weighted(&self.weights);
+            for d in 0..self.dim {
+                let var = alpha * alpha * self.vars[k][d] + sigma * sigma;
+                out.push(alpha * self.means[k][d] + var.sqrt() * rng.normal());
+            }
+        }
+        out
+    }
+
+    /// Log-responsibilities log γ_k(x) under the time-t marginal, written
+    /// into `log_resp` (length k). Returns the marginal log-density.
+    fn log_responsibilities(&self, x: &[f64], alpha: f64, sigma: f64, log_resp: &mut [f64]) -> f64 {
+        let s2 = sigma * sigma;
+        for k in 0..self.k() {
+            let mut lp = self.weights[k].ln();
+            for d in 0..self.dim {
+                let var = alpha * alpha * self.vars[k][d] + s2;
+                let diff = x[d] - alpha * self.means[k][d];
+                lp += -0.5 * (diff * diff / var + var.ln() + (2.0 * std::f64::consts::PI).ln());
+            }
+            log_resp[k] = lp;
+        }
+        // log-sum-exp
+        let m = log_resp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = m + log_resp.iter().map(|l| (l - m).exp()).sum::<f64>().ln();
+        for l in log_resp.iter_mut() {
+            *l -= lse;
+        }
+        lse
+    }
+
+    /// Exact posterior mean E[x₀ | x_t = x] (the data-prediction target).
+    /// `x` has length dim; result written into `out`.
+    pub fn posterior_mean(&self, x: &[f64], alpha: f64, sigma: f64, out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim);
+        let s2 = sigma * sigma;
+        let mut log_resp = vec![0.0; self.k()];
+        self.log_responsibilities(x, alpha, sigma, &mut log_resp);
+        out.fill(0.0);
+        for k in 0..self.k() {
+            let g = log_resp[k].exp();
+            if g < 1e-300 {
+                continue;
+            }
+            for d in 0..self.dim {
+                let var = alpha * alpha * self.vars[k][d] + s2;
+                // Posterior mean of component k (linear-Gaussian conditioning).
+                let mk = self.means[k][d]
+                    + alpha * self.vars[k][d] / var * (x[d] - alpha * self.means[k][d]);
+                out[d] += g * mk;
+            }
+        }
+    }
+
+    /// Batched posterior mean: `xs` is row-major n×dim, result n×dim.
+    pub fn posterior_mean_batch(&self, xs: &[f64], alpha: f64, sigma: f64) -> Vec<f64> {
+        let n = xs.len() / self.dim;
+        let mut out = vec![0.0; xs.len()];
+        for i in 0..n {
+            let row = &xs[i * self.dim..(i + 1) * self.dim];
+            let orow = &mut out[i * self.dim..(i + 1) * self.dim];
+            self.posterior_mean(row, alpha, sigma, orow);
+        }
+        out
+    }
+
+    /// Exact score ∇_x log p_t(x) = (α E[x₀|x] − x)/σ².
+    pub fn score(&self, x: &[f64], alpha: f64, sigma: f64, out: &mut [f64]) {
+        self.posterior_mean(x, alpha, sigma, out);
+        let s2 = sigma * sigma;
+        for d in 0..self.dim {
+            out[d] = (alpha * out[d] - x[d]) / s2;
+        }
+    }
+
+    /// Marginal log-density at time t.
+    pub fn log_density(&self, x: &[f64], alpha: f64, sigma: f64) -> f64 {
+        let mut scratch = vec![0.0; self.k()];
+        self.log_responsibilities(x, alpha, sigma, &mut scratch)
+    }
+
+    /// Exact mean of the prior.
+    pub fn prior_mean(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.dim];
+        for k in 0..self.k() {
+            for d in 0..self.dim {
+                m[d] += self.weights[k] * self.means[k][d];
+            }
+        }
+        m
+    }
+
+    /// Exact (diagonal of the) prior covariance plus the mean-spread term:
+    /// Var[x_d] = Σ_k w_k (s_kd + μ_kd²) − (Σ_k w_k μ_kd)².
+    pub fn prior_var_diag(&self) -> Vec<f64> {
+        let m = self.prior_mean();
+        let mut v = vec![0.0; self.dim];
+        for k in 0..self.k() {
+            for d in 0..self.dim {
+                v[d] += self.weights[k] * (self.vars[k][d] + self.means[k][d] * self.means[k][d]);
+            }
+        }
+        for d in 0..self.dim {
+            v[d] -= m[d] * m[d];
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{close, mean};
+
+    fn two_comp_1d() -> Gmm {
+        Gmm::new(
+            vec![0.5, 0.5],
+            vec![vec![-2.0], vec![2.0]],
+            vec![vec![0.25], vec![0.25]],
+        )
+    }
+
+    #[test]
+    fn weights_normalized() {
+        let g = Gmm::new(vec![2.0, 6.0], vec![vec![0.0], vec![1.0]], vec![vec![1.0], vec![1.0]]);
+        assert!(close(g.weights[0], 0.25, 1e-15, 0.0));
+        assert!(close(g.weights[1], 0.75, 1e-15, 0.0));
+    }
+
+    #[test]
+    fn single_gaussian_posterior_mean_exact() {
+        // For one component the posterior mean is the standard Gaussian
+        // denoiser: μ + ασ₀²/(α²σ₀²+σ²)(x − αμ).
+        let g = Gmm::new(vec![1.0], vec![vec![1.5]], vec![vec![4.0]]);
+        let (alpha, sigma) = (0.8, 0.6);
+        let x = [2.0];
+        let mut out = [0.0];
+        g.posterior_mean(&x, alpha, sigma, &mut out);
+        let var = alpha * alpha * 4.0 + sigma * sigma;
+        let want = 1.5 + alpha * 4.0 / var * (2.0 - alpha * 1.5);
+        assert!(close(out[0], want, 1e-12, 0.0), "{} vs {}", out[0], want);
+    }
+
+    #[test]
+    fn posterior_mean_symmetric_mixture() {
+        // Symmetric two-component mixture: E[x0|0] = 0 by symmetry; far in
+        // one mode the posterior collapses to that component.
+        let g = two_comp_1d();
+        let mut out = [0.0];
+        g.posterior_mean(&[0.0], 1.0, 0.5, &mut out);
+        assert!(out[0].abs() < 1e-12);
+        g.posterior_mean(&[2.0], 1.0, 0.1, &mut out);
+        assert!(close(out[0], 2.0, 0.02, 0.0), "got {}", out[0]);
+    }
+
+    #[test]
+    fn score_matches_log_density_gradient() {
+        let g = Gmm::structured(3, 4, 2.0, 11);
+        let (alpha, sigma) = (0.7, 0.9);
+        let x = [0.3, -0.8, 1.2];
+        let mut sc = vec![0.0; 3];
+        g.score(&x, alpha, sigma, &mut sc);
+        for d in 0..3 {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            let eps = 1e-5;
+            xp[d] += eps;
+            xm[d] -= eps;
+            let fd = (g.log_density(&xp, alpha, sigma) - g.log_density(&xm, alpha, sigma))
+                / (2.0 * eps);
+            assert!(close(sc[d], fd, 1e-4, 1e-6), "d={d}: {} vs fd {}", sc[d], fd);
+        }
+    }
+
+    #[test]
+    fn sampling_moments_match_exact() {
+        let g = two_comp_1d();
+        let mut rng = Xoshiro256pp::new(1);
+        let xs = g.sample(&mut rng, 40_000);
+        assert!(close(mean(&xs), 0.0, 0.0, 0.05), "mean {}", mean(&xs));
+        let var = xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64;
+        let want = g.prior_var_diag()[0];
+        assert!(close(var, want, 0.05, 0.0), "var {var} want {want}");
+    }
+
+    #[test]
+    fn marginal_sampling_interpolates() {
+        // At (α=1, σ→0) the marginal is the prior; at (α→0, σ=1) it is N(0,1).
+        let g = two_comp_1d();
+        let mut rng = Xoshiro256pp::new(2);
+        let xs = g.sample_marginal(&mut rng, 30_000, 0.0, 1.0);
+        let var = xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64;
+        assert!(close(var, 1.0, 0.05, 0.0), "var={var}");
+    }
+
+    #[test]
+    fn posterior_mean_batch_matches_single() {
+        let g = Gmm::structured(4, 3, 1.5, 5);
+        let mut rng = Xoshiro256pp::new(3);
+        let xs = g.sample_marginal(&mut rng, 8, 0.9, 0.4);
+        let batch = g.posterior_mean_batch(&xs, 0.9, 0.4);
+        for i in 0..8 {
+            let mut single = vec![0.0; 4];
+            g.posterior_mean(&xs[i * 4..(i + 1) * 4], 0.9, 0.4, &mut single);
+            assert_eq!(&batch[i * 4..(i + 1) * 4], &single[..]);
+        }
+    }
+
+    #[test]
+    fn structured_reproducible() {
+        let a = Gmm::structured(8, 5, 2.0, 42);
+        let b = Gmm::structured(8, 5, 2.0, 42);
+        assert_eq!(a.means, b.means);
+        let c = Gmm::structured(8, 5, 2.0, 43);
+        assert_ne!(a.means, c.means);
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal JSON implementation (parser + writer) for the config system and
+//! the sampling server's newline-delimited JSON protocol. serde is not in
+//! the offline vendor set; the subset here is full JSON minus `\u` surrogate
+//! pairs outside the BMP.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::to_string;
+
+use crate::util::error::{Error, Result};
+
+/// A JSON value. Object order is preserved (Vec of pairs) — cheap and keeps
+/// protocol output deterministic for tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|f| {
+            if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
+                Some(f as u64)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed field accessors with path-style error messages.
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::json(format!("missing/invalid number field '{key}'")))
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::json(format!("missing/invalid string field '{key}'")))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| Error::json(format!("missing/invalid integer field '{key}'")))
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Builder helpers.
+    pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+        Value::Object(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Value {
+        Value::Array(xs.iter().map(|x| Value::Num(*x)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let src = r#"{"a": 1.5, "b": [true, null, "x\"y"], "c": {"d": -2e3}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.req_f64("a").unwrap(), 1.5);
+        assert_eq!(v.get("b").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("c").unwrap().req_f64("d").unwrap(), -2000.0);
+        let s = to_string(&v);
+        let v2 = parse(&s).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn accessors_and_defaults() {
+        let v = parse(r#"{"n": 4, "s": "hi", "flag": true}"#).unwrap();
+        assert_eq!(v.req_usize("n").unwrap(), 4);
+        assert_eq!(v.req_str("s").unwrap(), "hi");
+        assert!(v.opt_bool("flag", false));
+        assert_eq!(v.opt_f64("missing", 9.5), 9.5);
+        assert_eq!(v.opt_str("missing", "d"), "d");
+        assert!(v.req_f64("s").is_err());
+    }
+
+    #[test]
+    fn builders() {
+        let v = Value::obj(vec![("x", Value::Num(1.0)), ("ys", Value::arr_f64(&[1.0, 2.0]))]);
+        let s = to_string(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+}

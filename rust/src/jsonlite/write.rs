@@ -1,0 +1,100 @@
+//! JSON serializer (compact form).
+
+use super::Value;
+
+/// Serialize compactly. f64s that are integral print without a fraction so
+/// ids survive round-trips through other JSON implementations.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_str(s, out),
+        Value::Array(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Value::Object(fields) => {
+            out.push('{');
+            for (i, (k, val)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if n.is_nan() || n.is_infinite() {
+        // JSON has no NaN/Inf; represent as null (documented protocol rule).
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.007199254740992e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn integral_floats_compact() {
+        assert_eq!(to_string(&Value::Num(4.0)), "4");
+        assert_eq!(to_string(&Value::Num(4.5)), "4.5");
+        assert_eq!(to_string(&Value::Num(f64::NAN)), "null");
+    }
+
+    #[test]
+    fn escapes() {
+        let s = to_string(&Value::Str("a\"b\\c\nd\u{1}".into()));
+        assert!(s.contains("\\u0001"), "control char must be escaped: {s}");
+        assert_eq!(parse(&s).unwrap(), Value::Str("a\"b\\c\nd\u{1}".into()));
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let v = Value::obj(vec![
+            ("xs", Value::arr_f64(&[1.0, -0.5])),
+            ("name", Value::Str("q".into())),
+            ("inner", Value::obj(vec![("flag", Value::Bool(false))])),
+        ]);
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+    }
+}

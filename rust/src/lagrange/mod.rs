@@ -1,0 +1,176 @@
+//! Lagrange interpolation utilities on the log-SNR (λ) grid, plus the
+//! stable exponential-polynomial moment integrals
+//!
+//!   I_k(a, h) = ∫_{-h}^{0} u^k e^{a u} du
+//!
+//! that make the SA-Solver coefficients b_{i-j} (Eqs. (15)/(18)) *exact*
+//! for constant-τ pieces: each Lagrange basis l_j(λ) is expanded into
+//! monomials of u = λ - λ_{i+1} and the b's become Σ_k c_{jk} I_k(a, h).
+
+/// Monomial coefficients (ascending powers) of the Lagrange basis
+/// polynomials for the given nodes, expressed in the nodes' own coordinate.
+/// `coeffs[j][k]` multiplies u^k in l_j(u); l_j(nodes[m]) = δ_{jm}.
+pub fn lagrange_basis_coeffs(nodes: &[f64]) -> Vec<Vec<f64>> {
+    let s = nodes.len();
+    let mut out = Vec::with_capacity(s);
+    for j in 0..s {
+        // Numerator polynomial Π_{m≠j} (u - nodes[m]), built incrementally.
+        let mut poly = vec![0.0; s];
+        poly[0] = 1.0;
+        let mut deg = 0usize;
+        let mut denom = 1.0;
+        for m in 0..s {
+            if m == j {
+                continue;
+            }
+            denom *= nodes[j] - nodes[m];
+            // poly <- poly * (u - nodes[m]); descending k keeps the update
+            // in-place correct (poly[k+1] reads the *old* poly[k]).
+            for k in (0..=deg).rev() {
+                let c = poly[k];
+                poly[k + 1] += c;
+                poly[k] = -nodes[m] * c;
+            }
+            deg += 1;
+        }
+        for c in poly.iter_mut() {
+            *c /= denom;
+        }
+        out.push(poly);
+    }
+    out
+}
+
+/// Evaluate a polynomial with ascending coefficients at `u` (Horner).
+pub fn poly_eval(coeffs: &[f64], u: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * u + c;
+    }
+    acc
+}
+
+/// Lagrange interpolation value at `u` from (nodes, values) directly
+/// (barycentric-free reference form; used as an oracle in tests).
+pub fn lagrange_interp(nodes: &[f64], values: &[f64], u: f64) -> f64 {
+    assert_eq!(nodes.len(), values.len());
+    let mut acc = 0.0;
+    for j in 0..nodes.len() {
+        let mut l = 1.0;
+        for m in 0..nodes.len() {
+            if m != j {
+                l *= (u - nodes[m]) / (nodes[j] - nodes[m]);
+            }
+        }
+        acc += l * values[j];
+    }
+    acc
+}
+
+/// Moments I_k(a, h) = ∫_{-h}^{0} u^k e^{a u} du for k = 0..=kmax.
+///
+/// Recursion (integration by parts, exact):
+///   I_0 = (1 - e^{-a h}) / a
+///   I_k = -e^{-a h} (-h)^k / a - (k / a) I_{k-1}
+/// with the a→0 limit I_k = -(-h)^{k+1} / (k+1) handled explicitly, and a
+/// series fallback for |a h| « 1 where the recursion loses digits.
+pub fn exp_moments(a: f64, h: f64, kmax: usize) -> Vec<f64> {
+    assert!(h >= 0.0);
+    let mut out = vec![0.0; kmax + 1];
+    if h == 0.0 {
+        return out;
+    }
+    if a.abs() * h < 1e-3 {
+        // Series: I_k = Σ_{m≥0} a^m / m! * ∫_{-h}^0 u^{k+m} du
+        //             = Σ_{m≥0} a^m / m! * ( -(-h)^{k+m+1} / (k+m+1) ).
+        for (k, slot) in out.iter_mut().enumerate() {
+            let mut term; // a^m / m!
+            let mut acc = 0.0;
+            let mut am = 1.0;
+            let mut mfact = 1.0;
+            for m in 0..30 {
+                term = am / mfact;
+                let p = k + m + 1;
+                let base = -(-h).powi(p as i32) / p as f64;
+                acc += term * base;
+                am *= a;
+                mfact *= (m + 1) as f64;
+                if term.abs() * h.powi(p as i32) < 1e-300 {
+                    break;
+                }
+            }
+            *slot = acc;
+        }
+        return out;
+    }
+    let emah = (-a * h).exp();
+    out[0] = (1.0 - emah) / a;
+    for k in 1..=kmax {
+        out[k] = -emah * (-h).powi(k as i32) / a - (k as f64 / a) * out[k - 1];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quad::GaussLegendre;
+    use crate::util::close;
+
+    #[test]
+    fn basis_kronecker_property() {
+        let nodes = [-3.0, -1.5, -0.4, 0.0];
+        let cs = lagrange_basis_coeffs(&nodes);
+        for (j, c) in cs.iter().enumerate() {
+            for (m, nm) in nodes.iter().enumerate() {
+                let v = poly_eval(c, *nm);
+                let want = if j == m { 1.0 } else { 0.0 };
+                assert!(close(v, want, 1e-10, 1e-10), "l_{j}({nm}) = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn basis_partition_of_unity() {
+        let nodes = [-2.0, -1.0, -0.25];
+        let cs = lagrange_basis_coeffs(&nodes);
+        for u in [-2.5, -1.7, -0.1, 0.3] {
+            let s: f64 = cs.iter().map(|c| poly_eval(c, u)).sum();
+            assert!(close(s, 1.0, 1e-12, 0.0), "sum at {u} = {s}");
+        }
+    }
+
+    #[test]
+    fn interp_reproduces_polynomial() {
+        // Degree-2 polynomial through 3 points is exact.
+        let f = |x: f64| 2.0 * x * x - x + 0.5;
+        let nodes = [-1.0, 0.0, 2.0];
+        let vals: Vec<f64> = nodes.iter().map(|x| f(*x)).collect();
+        for u in [-0.5, 1.0, 3.0] {
+            assert!(close(lagrange_interp(&nodes, &vals, u), f(u), 1e-12, 0.0));
+        }
+    }
+
+    #[test]
+    fn exp_moments_vs_quadrature() {
+        let gl = GaussLegendre::new(48);
+        for &a in &[2.0, 0.5, -1.0, 1e-6, 0.0] {
+            for &h in &[0.7, 0.05, 2.0] {
+                let ms = exp_moments(a, h, 4);
+                for (k, m) in ms.iter().enumerate() {
+                    let q = gl.integrate(-h, 0.0, |u| u.powi(k as i32) * (a * u).exp());
+                    assert!(
+                        close(*m, q, 1e-10, 1e-12),
+                        "a={a} h={h} k={k}: exact={m} quad={q}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exp_moments_zero_h() {
+        let ms = exp_moments(1.5, 0.0, 3);
+        assert!(ms.iter().all(|m| *m == 0.0));
+    }
+}

@@ -1,0 +1,58 @@
+//! # sadiff — SA-Solver diffusion sampling framework
+//!
+//! Reproduction of *SA-Solver: Stochastic Adams Solver for Fast Sampling of
+//! Diffusion Models* (Xue et al., NeurIPS 2023) as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the solver machinery (stochastic Adams
+//!   predictor/corrector, the full baseline-solver zoo, noise schedules,
+//!   τ-functions, exponentially weighted coefficient engine) plus a
+//!   production sampling server (request router, dynamic batcher, worker
+//!   pool, metrics).
+//! * **Layer 2 (python/compile, build-time)** — JAX denoiser models (tiny
+//!   DiT, analytic GMM posterior mean) lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
+//!   the per-step hot spots (fused attention, fused SA update).
+//!
+//! Python never runs on the request path: `runtime` loads the
+//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).
+//!
+//! Quickstart:
+//! ```no_run
+//! use sadiff::prelude::*;
+//! let wl = sadiff::workloads::by_name("cifar_analog").unwrap();
+//! let model = wl.model();
+//! let cfg = SamplerConfig { nfe: 31, tau: 1.0, ..SamplerConfig::sa_default() };
+//! let out = sadiff::coordinator::engine::sample(&*model, &wl, &cfg, 256, 7);
+//! println!("generated {} samples of dim {}", out.n, out.dim);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exps;
+pub mod gmm;
+pub mod jsonlite;
+pub mod lagrange;
+pub mod linalg;
+pub mod metrics;
+pub mod models;
+pub mod quad;
+pub mod rng;
+pub mod runtime;
+pub mod schedule;
+pub mod solvers;
+pub mod tau;
+pub mod testsupport;
+pub mod util;
+pub mod workloads;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{SamplerConfig, SolverKind};
+    pub use crate::models::ModelEval;
+    pub use crate::rng::Philox4x32;
+    pub use crate::schedule::{NoiseSchedule, ScheduleKind, StepSelector};
+    pub use crate::solvers::sa::{SaSolver, SaSolverOpts};
+    pub use crate::tau::TauFn;
+    pub use crate::util::error::{Error, Result};
+}

@@ -1,0 +1,272 @@
+//! Row-major dense matrix with the decompositions the metric layer needs.
+
+use crate::util::error::{Error, Result};
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Diagonal matrix from entries.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, v) in d.iter().enumerate() {
+            m[(i, i)] = *v;
+        }
+        m
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Elementwise sum of two matrices.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat::from_rows(self.rows, self.cols, data)
+    }
+
+    /// Scale by a constant.
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat::from_rows(self.rows, self.cols, self.data.iter().map(|v| v * s).collect())
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| super::dot(&self.data[i * self.cols..(i + 1) * self.cols], x))
+            .collect()
+    }
+
+    /// Cholesky factor L with `self = L L^T` (lower-triangular). Errors if
+    /// the matrix is not (numerically) positive definite.
+    pub fn cholesky(&self) -> Result<Mat> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(Error::numerics(format!(
+                            "cholesky: non-PD pivot {s:.3e} at {i}"
+                        )));
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Symmetric eigendecomposition by cyclic Jacobi rotations.
+    /// Returns `(eigenvalues, V)` with `self = V diag(w) V^T`, eigenvectors
+    /// in the *columns* of V. Input must be symmetric.
+    pub fn sym_eig(&self) -> (Vec<f64>, Mat) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut v = Mat::eye(n);
+        // Up to 64 sweeps; tiny matrices converge in < 10.
+        for _sweep in 0..64 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a[(i, j)] * a[(i, j)];
+                }
+            }
+            if off.sqrt() < 1e-14 * (1.0 + a.trace().abs()) {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = a[(p, q)];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    // A <- J^T A J applied to rows/cols p, q.
+                    for k in 0..n {
+                        let akp = a[(k, p)];
+                        let akq = a[(k, q)];
+                        a[(k, p)] = c * akp - s * akq;
+                        a[(k, q)] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[(p, k)];
+                        let aqk = a[(q, k)];
+                        a[(p, k)] = c * apk - s * aqk;
+                        a[(q, k)] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let vkp = v[(k, p)];
+                        let vkq = v[(k, q)];
+                        v[(k, p)] = c * vkp - s * vkq;
+                        v[(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        let w = (0..n).map(|i| a[(i, i)]).collect();
+        (w, v)
+    }
+
+    /// PSD square root via eigendecomposition; negative eigenvalues (from
+    /// floating-point noise on a PSD input) are clamped to zero.
+    pub fn psd_sqrt(&self) -> Mat {
+        let (w, v) = self.sym_eig();
+        let sq = Mat::diag(&w.iter().map(|x| x.max(0.0).sqrt()).collect::<Vec<_>>());
+        v.matmul(&sq).matmul(&v.transpose())
+    }
+
+    /// Frobenius norm of `self - other`.
+    pub fn frob_dist(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn matmul_and_transpose() {
+        let a = Mat::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+        assert_eq!(a.transpose().data, vec![1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = Mat::from_rows(3, 3, vec![4.0, 2.0, 0.6, 2.0, 5.0, 1.0, 0.6, 1.0, 3.0]);
+        let l = a.cholesky().unwrap();
+        let re = l.matmul(&l.transpose());
+        assert!(a.frob_dist(&re) < 1e-12);
+        // Non-PD must error.
+        let bad = Mat::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(bad.cholesky().is_err());
+    }
+
+    #[test]
+    fn jacobi_eigen_diag() {
+        let a = Mat::diag(&[3.0, 1.0, 2.0]);
+        let (mut w, _v) = a.sym_eig();
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!(close(w[0], 1.0, 1e-12, 0.0));
+        assert!(close(w[1], 2.0, 1e-12, 0.0));
+        assert!(close(w[2], 3.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn jacobi_eigen_reconstructs() {
+        let a = Mat::from_rows(3, 3, vec![2.0, 1.0, 0.0, 1.0, 3.0, 0.5, 0.0, 0.5, 1.5]);
+        let (w, v) = a.sym_eig();
+        let re = v.matmul(&Mat::diag(&w)).matmul(&v.transpose());
+        assert!(a.frob_dist(&re) < 1e-10, "dist={}", a.frob_dist(&re));
+        // Orthogonality of V.
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.frob_dist(&Mat::eye(3)) < 1e-10);
+    }
+
+    #[test]
+    fn psd_sqrt_squares_back() {
+        let b = Mat::from_rows(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let s = b.psd_sqrt();
+        assert!(s.matmul(&s).frob_dist(&b) < 1e-10);
+    }
+
+    #[test]
+    fn psd_sqrt_of_identity_times() {
+        let a = Mat::eye(4).scale(9.0);
+        let s = a.psd_sqrt();
+        assert!(s.frob_dist(&Mat::eye(4).scale(3.0)) < 1e-10);
+    }
+}

@@ -1,0 +1,57 @@
+//! Dense linear algebra substrate: small symmetric problems only (metric
+//! computation needs Fréchet distances over d ≤ ~128 covariance matrices).
+//!
+//! Row-major `Mat` with Cholesky, a cyclic Jacobi symmetric eigensolver and
+//! the PSD matrix square root built from it. No external BLAS — sizes are
+//! tiny and exactness of tests matters more than throughput here.
+
+pub mod mat;
+
+pub use mat::Mat;
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Squared Euclidean norm.
+pub fn norm2_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    norm2_sq(a).sqrt()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Elementwise `out = a - b`.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn vector_ops() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert!(close(dot(&a, &b), 32.0, 1e-15, 0.0));
+        assert!(close(norm2(&a), 14f64.sqrt(), 1e-15, 0.0));
+        let mut y = b.to_vec();
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![6.0, 9.0, 12.0]);
+        assert_eq!(sub(&b, &a), vec![3.0, 3.0, 3.0]);
+    }
+}

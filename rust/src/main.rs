@@ -1,0 +1,209 @@
+//! `sadiff` CLI — the Layer-3 entry point.
+//!
+//! Subcommands:
+//!   serve        start the sampling server
+//!   sample       run one sampling job locally and report metrics
+//!   client       send a request to a running server
+//!   exp <id>     regenerate a paper table/figure (see `exp list`)
+//!   artifacts    list compiled artifacts from the manifest
+//!   info         print build/workload/solver inventory
+
+use sadiff::cli::{render_help, Args, FlagSpec};
+use sadiff::config::{SamplerConfig, ServerConfig};
+use sadiff::coordinator::server::{Client, Server};
+use sadiff::coordinator::SampleRequest;
+use sadiff::exps::{self, Scale};
+use sadiff::jsonlite::{self, Value};
+use sadiff::util::error::{Error, Result};
+use sadiff::workloads;
+
+fn flag_spec() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "help", help: "show help", takes_value: false },
+        FlagSpec { name: "config", help: "JSON config file", takes_value: true },
+        FlagSpec { name: "addr", help: "server address (serve/client)", takes_value: true },
+        FlagSpec { name: "workers", help: "worker threads", takes_value: true },
+        FlagSpec { name: "max-batch", help: "max requests per batch", takes_value: true },
+        FlagSpec { name: "workload", help: "workload name", takes_value: true },
+        FlagSpec { name: "model", help: "gmm | artifact:<name>", takes_value: true },
+        FlagSpec { name: "solver", help: "solver name", takes_value: true },
+        FlagSpec { name: "nfe", help: "model evaluations", takes_value: true },
+        FlagSpec { name: "tau", help: "stochasticity scale", takes_value: true },
+        FlagSpec { name: "n", help: "samples", takes_value: true },
+        FlagSpec { name: "seed", help: "rng seed", takes_value: true },
+        FlagSpec { name: "quick", help: "small quick run", takes_value: false },
+        FlagSpec { name: "log", help: "log level", takes_value: true },
+    ]
+}
+
+fn main() {
+    let spec = flag_spec();
+    let args = match Args::from_env(&spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    sadiff::util::log::set_level_by_name(args.get_str("log", "info"));
+    if args.has("help") || args.positionals.is_empty() {
+        print!(
+            "{}",
+            render_help("sadiff", "SA-Solver diffusion sampling framework", &spec)
+        );
+        println!("\nSubcommands: serve | sample | client | exp <id|list> | artifacts | info");
+        return;
+    }
+    let cmd = args.positionals[0].clone();
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "sample" => cmd_sample(&args),
+        "client" => cmd_client(&args),
+        "exp" => cmd_exp(&args),
+        "artifacts" => cmd_artifacts(),
+        "info" => cmd_info(),
+        other => Err(Error::config(format!("unknown subcommand '{other}'"))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn sampler_config(args: &Args) -> Result<SamplerConfig> {
+    let mut base = if let Some(path) = args.get("config") {
+        let v = sadiff::config::load_json_file(path)?;
+        SamplerConfig::from_json(&v)?
+    } else {
+        SamplerConfig::sa_default()
+    };
+    if let Some(name) = args.get("solver") {
+        let kind = sadiff::config::SolverKind::by_name(name)
+            .ok_or_else(|| Error::config(format!("unknown solver '{name}'")))?;
+        base = SamplerConfig { solver: kind, ..SamplerConfig::for_solver(kind) };
+    }
+    base.nfe = args.get_usize("nfe", base.nfe)?;
+    base.tau = args.get_f64("tau", base.tau)?;
+    base.validate()?;
+    Ok(base)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ServerConfig::from_json(&sadiff::config::load_json_file(path)?)?
+    } else {
+        ServerConfig::default()
+    };
+    if let Some(addr) = args.get("addr") {
+        cfg.addr = addr.to_string();
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    let handle = Server::bind(cfg)?.spawn()?;
+    println!("sadiff server on {} — Ctrl-C to stop", handle.addr);
+    // Block forever; the handle's workers do the serving.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let wl_name = args.get_str("workload", "latent_analog");
+    let wl = workloads::by_name(wl_name)
+        .ok_or_else(|| Error::config(format!("unknown workload '{wl_name}'")))?;
+    let cfg = sampler_config(args)?;
+    let n = args.get_usize("n", 512)?;
+    let seed = args.get_u64("seed", 0)?;
+    let model = wl.model();
+    let row = sadiff::coordinator::engine::evaluate(&*model, &wl, &cfg, n, seed);
+    println!(
+        "workload={wl_name} solver={} nfe={} tau={} n={n}",
+        cfg.solver.name(),
+        cfg.nfe,
+        cfg.tau
+    );
+    println!(
+        "sim_fid={:.4} sliced_w2={:.4} nfe_used={} wall_s={:.3}",
+        row.sim_fid, row.sliced_w2, row.nfe, row.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(addr)?;
+    let req = SampleRequest {
+        id: 1,
+        workload: args.get_str("workload", "latent_analog").to_string(),
+        model: args.get_str("model", "gmm").to_string(),
+        cfg: sampler_config(args)?,
+        n: args.get_usize("n", 16)?,
+        seed: args.get_u64("seed", 0)?,
+        return_samples: false,
+        want_metrics: true,
+    };
+    let resp = client.request(&req)?;
+    println!("{}", resp.to_line());
+    let stats = client.stats()?;
+    println!("stats: {}", jsonlite::to_string(&stats));
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| Error::config("usage: sadiff exp <id|list|all>"))?;
+    let scale = Scale::from_quick_flag(args.has("quick"));
+    match id.as_str() {
+        "list" => {
+            for id in exps::all_ids() {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        "all" => {
+            for id in exps::all_ids() {
+                exps::run_by_name(id, scale);
+            }
+            Ok(())
+        }
+        other => {
+            if exps::run_by_name(other, scale) {
+                Ok(())
+            } else {
+                Err(Error::config(format!(
+                    "unknown experiment '{other}' (try `sadiff exp list`)"
+                )))
+            }
+        }
+    }
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let reg = sadiff::runtime::Registry::open_default()?;
+    for name in reg.names() {
+        let e = reg.entry(&name).unwrap();
+        println!(
+            "{name}: file={} inputs={:?} outputs={:?} meta={}",
+            e.file,
+            e.inputs,
+            e.outputs,
+            jsonlite::to_string(&e.meta)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("sadiff {} — SA-Solver (NeurIPS 2023) reproduction", env!("CARGO_PKG_VERSION"));
+    println!("workloads: {}", workloads::all_names().join(", "));
+    let solvers: Vec<&str> = sadiff::config::SolverKind::all()
+        .iter()
+        .map(|k| k.name())
+        .collect();
+    println!("solvers:   {}", solvers.join(", "));
+    println!("exps:      {}", exps::all_ids().join(", "));
+    let _ = Value::Null; // keep jsonlite linked in info builds
+    Ok(())
+}

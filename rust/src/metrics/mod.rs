@@ -1,0 +1,306 @@
+//! Statistical distances between sample sets — the evaluation layer that
+//! stands in for FID (DESIGN.md §2).
+//!
+//! * `sim_fid` — Fréchet distance between Gaussian fits of the two sets
+//!   (identical functional form to FID; the "feature space" is the ambient
+//!   space for GMM workloads, random projections for image-like ones).
+//! * `sliced_w2` — sliced Wasserstein-2 via random 1-D projections.
+//! * `w2_1d` — exact 1-D Wasserstein-2 (sorted quantile coupling).
+//! * `mmd_rbf` — RBF-kernel MMD² (unbiased) with a median heuristic.
+//! * `energy_distance` — Székely's energy distance.
+
+use crate::linalg::Mat;
+use crate::rng::Xoshiro256pp;
+use crate::util::error::{Error, Result};
+
+/// Mean vector and covariance matrix of row-major `n × dim` samples.
+pub fn mean_cov(samples: &[f64], dim: usize) -> Result<(Vec<f64>, Mat)> {
+    if dim == 0 || samples.is_empty() || samples.len() % dim != 0 {
+        return Err(Error::numerics("mean_cov: bad sample layout"));
+    }
+    let n = samples.len() / dim;
+    if n < 2 {
+        return Err(Error::numerics("mean_cov: need at least 2 samples"));
+    }
+    let mut mu = vec![0.0; dim];
+    for i in 0..n {
+        for d in 0..dim {
+            mu[d] += samples[i * dim + d];
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut cov = Mat::zeros(dim, dim);
+    for i in 0..n {
+        let row = &samples[i * dim..(i + 1) * dim];
+        for a in 0..dim {
+            let da = row[a] - mu[a];
+            for b in a..dim {
+                cov[(a, b)] += da * (row[b] - mu[b]);
+            }
+        }
+    }
+    let denom = (n - 1) as f64;
+    for a in 0..dim {
+        for b in a..dim {
+            let v = cov[(a, b)] / denom;
+            cov[(a, b)] = v;
+            cov[(b, a)] = v;
+        }
+    }
+    Ok((mu, cov))
+}
+
+/// Fréchet distance² between two Gaussians:
+/// |μ₁−μ₂|² + tr(Σ₁ + Σ₂ − 2 (Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2}).
+pub fn frechet_gaussian(mu1: &[f64], cov1: &Mat, mu2: &[f64], cov2: &Mat) -> f64 {
+    let d2: f64 = mu1
+        .iter()
+        .zip(mu2)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let s1h = cov1.psd_sqrt();
+    let inner = s1h.matmul(cov2).matmul(&s1h);
+    let cross = inner.psd_sqrt();
+    (d2 + cov1.trace() + cov2.trace() - 2.0 * cross.trace()).max(0.0)
+}
+
+/// sim-FID between two row-major sample sets.
+pub fn sim_fid(a: &[f64], b: &[f64], dim: usize) -> Result<f64> {
+    let (mu_a, cov_a) = mean_cov(a, dim)?;
+    let (mu_b, cov_b) = mean_cov(b, dim)?;
+    Ok(frechet_gaussian(&mu_a, &cov_a, &mu_b, &cov_b))
+}
+
+/// Exact 1-D Wasserstein-2 distance between equal-size samples.
+pub fn w2_1d(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut x = a.to_vec();
+    let mut y = b.to_vec();
+    x.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    y.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    let n = x.len() as f64;
+    (x.iter().zip(&y).map(|(p, q)| (p - q) * (p - q)).sum::<f64>() / n).sqrt()
+}
+
+/// Sliced Wasserstein-2: average of 1-D W2 over `n_proj` random directions.
+pub fn sliced_w2(a: &[f64], b: &[f64], dim: usize, n_proj: usize, seed: u64) -> f64 {
+    assert_eq!(a.len() % dim, 0);
+    assert_eq!(b.len() % dim, 0);
+    let na = a.len() / dim;
+    let nb = b.len() / dim;
+    let n = na.min(nb);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut total = 0.0;
+    let mut pa = vec![0.0; n];
+    let mut pb = vec![0.0; n];
+    for _ in 0..n_proj {
+        let dir = {
+            let raw = rng.normals(dim);
+            let nz = crate::linalg::norm2(&raw).max(1e-12);
+            raw.into_iter().map(|x| x / nz).collect::<Vec<_>>()
+        };
+        for i in 0..n {
+            pa[i] = crate::linalg::dot(&a[i * dim..(i + 1) * dim], &dir);
+            pb[i] = crate::linalg::dot(&b[i * dim..(i + 1) * dim], &dir);
+        }
+        let w = w2_1d(&pa, &pb);
+        total += w * w;
+    }
+    (total / n_proj as f64).sqrt()
+}
+
+/// Unbiased RBF-MMD² with bandwidth = median pairwise distance of the
+/// pooled set (subsampled for cost). Can be slightly negative by design
+/// of the unbiased estimator.
+pub fn mmd_rbf(a: &[f64], b: &[f64], dim: usize) -> f64 {
+    let na = a.len() / dim;
+    let nb = b.len() / dim;
+    assert!(na > 1 && nb > 1);
+    let bw2 = median_sq_dist(a, b, dim).max(1e-12);
+    let k = |x: &[f64], y: &[f64]| {
+        let d2: f64 = x.iter().zip(y).map(|(p, q)| (p - q) * (p - q)).sum();
+        (-d2 / (2.0 * bw2)).exp()
+    };
+    fn row(s: &[f64], i: usize, dim: usize) -> &[f64] { &s[i * dim..(i + 1) * dim] }
+    let mut kaa = 0.0;
+    for i in 0..na {
+        for j in 0..na {
+            if i != j {
+                kaa += k(row(a, i, dim), row(a, j, dim));
+            }
+        }
+    }
+    kaa /= (na * (na - 1)) as f64;
+    let mut kbb = 0.0;
+    for i in 0..nb {
+        for j in 0..nb {
+            if i != j {
+                kbb += k(row(b, i, dim), row(b, j, dim));
+            }
+        }
+    }
+    kbb /= (nb * (nb - 1)) as f64;
+    let mut kab = 0.0;
+    for i in 0..na {
+        for j in 0..nb {
+            kab += k(row(a, i, dim), row(b, j, dim));
+        }
+    }
+    kab /= (na * nb) as f64;
+    kaa + kbb - 2.0 * kab
+}
+
+/// Median of squared pairwise distances (subsampled to ≤256 points/side).
+fn median_sq_dist(a: &[f64], b: &[f64], dim: usize) -> f64 {
+    let na = (a.len() / dim).min(256);
+    let nb = (b.len() / dim).min(256);
+    let mut d2s = Vec::with_capacity(na * nb);
+    for i in 0..na {
+        for j in 0..nb {
+            let d2: f64 = a[i * dim..(i + 1) * dim]
+                .iter()
+                .zip(&b[j * dim..(j + 1) * dim])
+                .map(|(p, q)| (p - q) * (p - q))
+                .sum();
+            d2s.push(d2);
+        }
+    }
+    d2s.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    d2s[d2s.len() / 2]
+}
+
+/// Energy distance: 2 E|X−Y| − E|X−X'| − E|Y−Y'|.
+pub fn energy_distance(a: &[f64], b: &[f64], dim: usize) -> f64 {
+    let na = a.len() / dim;
+    let nb = b.len() / dim;
+    assert!(na > 1 && nb > 1);
+    fn row(s: &[f64], i: usize, dim: usize) -> &[f64] { &s[i * dim..(i + 1) * dim] }
+    let dist = |x: &[f64], y: &[f64]| {
+        x.iter()
+            .zip(y)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let mut exy = 0.0;
+    for i in 0..na {
+        for j in 0..nb {
+            exy += dist(row(a, i, dim), row(b, j, dim));
+        }
+    }
+    exy /= (na * nb) as f64;
+    let mut exx = 0.0;
+    for i in 0..na {
+        for j in 0..na {
+            exx += dist(row(a, i, dim), row(a, j, dim));
+        }
+    }
+    exx /= (na * na) as f64;
+    let mut eyy = 0.0;
+    for i in 0..nb {
+        for j in 0..nb {
+            eyy += dist(row(b, i, dim), row(b, j, dim));
+        }
+    }
+    eyy /= (nb * nb) as f64;
+    2.0 * exy - exx - eyy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    fn gaussian_samples(n: usize, dim: usize, mu: f64, sd: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n * dim).map(|_| mu + sd * rng.normal()).collect()
+    }
+
+    #[test]
+    fn mean_cov_basic() {
+        // Two points: mean is midpoint, covariance from the spread.
+        let s = vec![0.0, 0.0, 2.0, 2.0];
+        let (mu, cov) = mean_cov(&s, 2).unwrap();
+        assert_eq!(mu, vec![1.0, 1.0]);
+        assert!(close(cov[(0, 0)], 2.0, 1e-12, 0.0));
+        assert!(close(cov[(0, 1)], 2.0, 1e-12, 0.0));
+        assert!(mean_cov(&s, 3).is_err());
+        assert!(mean_cov(&s[..2], 2).is_err());
+    }
+
+    #[test]
+    fn frechet_identical_zero() {
+        let a = gaussian_samples(2000, 3, 0.5, 1.2, 1);
+        let f = sim_fid(&a, &a, 3).unwrap();
+        assert!(f < 1e-9, "f={f}");
+    }
+
+    #[test]
+    fn frechet_mean_shift_exact() {
+        // Equal covariances ⇒ FD² = |Δμ|² exactly (analytic check).
+        let mu1 = vec![0.0, 0.0];
+        let mu2 = vec![3.0, 4.0];
+        let cov = Mat::eye(2);
+        let f = frechet_gaussian(&mu1, &cov, &mu2, &cov);
+        assert!(close(f, 25.0, 1e-10, 0.0), "f={f}");
+    }
+
+    #[test]
+    fn frechet_variance_shift_exact() {
+        // 1-D: FD² = (σ1−σ2)².
+        let cov1 = Mat::diag(&[4.0]);
+        let cov2 = Mat::diag(&[1.0]);
+        let f = frechet_gaussian(&[0.0], &cov1, &[0.0], &cov2);
+        assert!(close(f, 1.0, 1e-10, 0.0), "f={f}");
+    }
+
+    #[test]
+    fn sim_fid_detects_shift() {
+        let a = gaussian_samples(4000, 4, 0.0, 1.0, 1);
+        let b = gaussian_samples(4000, 4, 1.0, 1.0, 2);
+        let same = sim_fid(&a, &gaussian_samples(4000, 4, 0.0, 1.0, 3), 4).unwrap();
+        let diff = sim_fid(&a, &b, 4).unwrap();
+        assert!(diff > 10.0 * same.max(1e-3), "same={same} diff={diff}");
+        assert!(close(diff, 4.0, 0.15, 0.0), "diff={diff} (≈|Δμ|²=4)");
+    }
+
+    #[test]
+    fn w2_1d_analytic() {
+        // Point masses: W2 between {0} and {1} (constant shift) is 1.
+        let a = vec![0.0; 64];
+        let b = vec![1.0; 64];
+        assert!(close(w2_1d(&a, &b), 1.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn sliced_w2_shift() {
+        let a = gaussian_samples(3000, 3, 0.0, 1.0, 4);
+        let b = gaussian_samples(3000, 3, 2.0, 1.0, 5);
+        let w = sliced_w2(&a, &b, 3, 32, 0);
+        // E[(u·Δμ)²] over unit u = |Δμ|²/d = 4 ⇒ sliced-W2 ≈ 2.
+        assert!(close(w, 2.0, 0.2, 0.0), "w={w}");
+    }
+
+    #[test]
+    fn mmd_discriminates() {
+        let a = gaussian_samples(200, 2, 0.0, 1.0, 6);
+        let b = gaussian_samples(200, 2, 0.0, 1.0, 7);
+        let c = gaussian_samples(200, 2, 3.0, 1.0, 8);
+        let same = mmd_rbf(&a, &b, 2);
+        let diff = mmd_rbf(&a, &c, 2);
+        assert!(same.abs() < 0.05, "same={same}");
+        assert!(diff > 0.2, "diff={diff}");
+    }
+
+    #[test]
+    fn energy_distance_properties() {
+        let a = gaussian_samples(300, 2, 0.0, 1.0, 9);
+        let b = gaussian_samples(300, 2, 1.5, 1.0, 10);
+        let same = energy_distance(&a, &gaussian_samples(300, 2, 0.0, 1.0, 11), 2);
+        let diff = energy_distance(&a, &b, 2);
+        assert!(diff > same, "same={same} diff={diff}");
+        assert!(diff > 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Numerical quadrature substrate for the SA-Solver coefficient integrals
+//! with general τ(t): Gauss–Legendre rules (nodes by Newton iteration on the
+//! Legendre recurrence) and adaptive Simpson as a cross-check.
+
+/// A quadrature rule on [-1, 1]: paired nodes and weights.
+#[derive(Debug, Clone)]
+pub struct GaussLegendre {
+    pub nodes: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl GaussLegendre {
+    /// Build the n-point rule. Nodes are roots of P_n found by Newton from
+    /// the Chebyshev-based initial guess; weights w = 2 / ((1-x²) P'_n(x)²).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let mut nodes = vec![0.0; n];
+        let mut weights = vec![0.0; n];
+        for i in 0..n.div_ceil(2) {
+            // Initial guess (Abramowitz & Stegun 25.4.30 neighborhood).
+            let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+            let mut dp = 0.0;
+            for _ in 0..100 {
+                let (p, d) = legendre_and_deriv(n, x);
+                dp = d;
+                let dx = p / d;
+                x -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            let w = 2.0 / ((1.0 - x * x) * dp * dp);
+            nodes[i] = -x;
+            nodes[n - 1 - i] = x;
+            weights[i] = w;
+            weights[n - 1 - i] = w;
+        }
+        GaussLegendre { nodes, weights }
+    }
+
+    /// Integrate `f` on [a, b].
+    pub fn integrate<F: Fn(f64) -> f64>(&self, a: f64, b: f64, f: F) -> f64 {
+        let c = 0.5 * (b - a);
+        let m = 0.5 * (a + b);
+        let mut s = 0.0;
+        for (x, w) in self.nodes.iter().zip(&self.weights) {
+            s += w * f(m + c * x);
+        }
+        c * s
+    }
+}
+
+/// Evaluate (P_n(x), P_n'(x)) via the three-term recurrence.
+fn legendre_and_deriv(n: usize, x: f64) -> (f64, f64) {
+    let mut p0 = 1.0;
+    let mut p1 = x;
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    for k in 2..=n {
+        let kf = k as f64;
+        let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+        p0 = p1;
+        p1 = p2;
+    }
+    let d = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, d)
+}
+
+/// Adaptive Simpson quadrature to absolute tolerance `tol`.
+pub fn adaptive_simpson<F: Fn(f64) -> f64 + Copy>(f: F, a: f64, b: f64, tol: f64) -> f64 {
+    fn simpson<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64) -> f64 {
+        let m = 0.5 * (a + b);
+        (b - a) / 6.0 * (f(a) + 4.0 * f(m) + f(b))
+    }
+    fn rec<F: Fn(f64) -> f64>(f: &F, a: f64, b: f64, whole: f64, tol: f64, depth: u32) -> f64 {
+        let m = 0.5 * (a + b);
+        let left = simpson(f, a, m);
+        let right = simpson(f, m, b);
+        if depth == 0 || (left + right - whole).abs() <= 15.0 * tol {
+            return left + right + (left + right - whole) / 15.0;
+        }
+        rec(f, a, m, left, tol / 2.0, depth - 1) + rec(f, m, b, right, tol / 2.0, depth - 1)
+    }
+    let whole = simpson(&f, a, b);
+    rec(&f, a, b, whole, tol, 40)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn gl_exact_on_polynomials() {
+        // n-point GL is exact up to degree 2n-1.
+        let gl = GaussLegendre::new(4);
+        let got = gl.integrate(0.0, 1.0, |x| x.powi(7));
+        assert!(close(got, 1.0 / 8.0, 1e-13, 0.0), "got {got}");
+        let got = gl.integrate(-2.0, 3.0, |x| 3.0 * x * x);
+        assert!(close(got, 35.0, 1e-12, 0.0), "got {got}");
+    }
+
+    #[test]
+    fn gl_weights_sum_to_two() {
+        for n in [1, 2, 5, 16, 32, 64] {
+            let gl = GaussLegendre::new(n);
+            let s: f64 = gl.weights.iter().sum();
+            assert!(close(s, 2.0, 1e-12, 0.0), "n={n} sum={s}");
+            // Nodes sorted and inside (-1, 1).
+            for w in gl.nodes.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(gl.nodes[0] > -1.0 && gl.nodes[n - 1] < 1.0);
+        }
+    }
+
+    #[test]
+    fn gl_exponential_accuracy() {
+        let gl = GaussLegendre::new(16);
+        let got = gl.integrate(0.0, 1.0, f64::exp);
+        assert!(close(got, std::f64::consts::E - 1.0, 1e-14, 0.0));
+    }
+
+    #[test]
+    fn simpson_matches_gl() {
+        let f = |x: f64| (3.0 * x).sin() * (-x).exp();
+        let gl = GaussLegendre::new(48).integrate(0.0, 2.0, f);
+        let si = adaptive_simpson(f, 0.0, 2.0, 1e-12);
+        assert!(close(gl, si, 1e-9, 1e-12), "gl={gl} si={si}");
+    }
+}

@@ -1,0 +1,66 @@
+//! Random number generation substrate.
+//!
+//! Reproducibility is a serving invariant here: a request's samples must not
+//! depend on how it was batched or which worker ran it. We therefore use a
+//! *counter-based* generator (Philox4x32-10, Salmon et al. 2011 — the same
+//! family JAX uses) keyed by `(seed, request_id)` and indexed by
+//! `(step, lane)`, so any (request, step) noise block can be generated
+//! independently, in any order, on any thread.
+//!
+//! `SplitMix64` seeds things; `Xoshiro256++` is the cheap sequential PRNG for
+//! workload generation and tests.
+
+pub mod normal;
+pub mod philox;
+pub mod xoshiro;
+
+pub use normal::NormalSource;
+pub use philox::Philox4x32;
+pub use xoshiro::Xoshiro256pp;
+
+/// SplitMix64 step — the standard seed expander (Steele et al.).
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Convert a u32 to a uniform f64 in [0, 1) with 32 bits of resolution.
+pub fn u32_to_unit_f64(x: u32) -> f64 {
+    (x as f64) * (1.0 / 4294967296.0)
+}
+
+/// Convert a u64 to a uniform f64 in [0, 1) with 53 bits of resolution.
+pub fn u64_to_unit_f64(x: u64) -> f64 {
+    ((x >> 11) as f64) * (1.0 / 9007199254740992.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic_and_distinct() {
+        let mut s1 = 42u64;
+        let mut s2 = 42u64;
+        let a = splitmix64(&mut s1);
+        let b = splitmix64(&mut s2);
+        assert_eq!(a, b);
+        let c = splitmix64(&mut s1);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn unit_floats_in_range() {
+        for x in [0u64, 1, u64::MAX, 0xDEADBEEF] {
+            let f = u64_to_unit_f64(x);
+            assert!((0.0..1.0).contains(&f));
+        }
+        for x in [0u32, 1, u32::MAX] {
+            let f = u32_to_unit_f64(x);
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+}

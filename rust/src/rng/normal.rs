@@ -1,0 +1,86 @@
+//! A trait-object-friendly source of Gaussian noise, so solvers can take
+//! either the Philox counter stream (production) or a recorded/shared path
+//! (tests that need coupled Brownian increments across solvers).
+
+use super::Philox4x32;
+
+/// Source of per-step standard-normal vectors.
+pub trait NormalSource {
+    /// Fill `out` with N(0, I) noise for `(stream, step)`.
+    fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]);
+}
+
+/// Production source: Philox counter RNG (stateless, order-independent).
+pub struct PhiloxNormal {
+    gen: Philox4x32,
+}
+
+impl PhiloxNormal {
+    pub fn new(seed: u64) -> Self {
+        PhiloxNormal { gen: Philox4x32::new(seed) }
+    }
+}
+
+impl NormalSource for PhiloxNormal {
+    fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]) {
+        self.gen.normals_into(stream, step, out);
+    }
+}
+
+/// Test source: replays a fixed table of noise vectors keyed by step
+/// (stream ignored), so two different solvers can share one Brownian path.
+pub struct RecordedNormal {
+    pub table: Vec<Vec<f64>>,
+}
+
+impl NormalSource for RecordedNormal {
+    fn fill(&mut self, _stream: u64, step: u64, out: &mut [f64]) {
+        let row = &self.table[step as usize % self.table.len()];
+        for (o, v) in out.iter_mut().zip(row.iter()) {
+            *o = *v;
+        }
+    }
+}
+
+/// Zero noise — turns any stochastic solver into its deterministic mean path.
+pub struct ZeroNormal;
+
+impl NormalSource for ZeroNormal {
+    fn fill(&mut self, _stream: u64, _step: u64, out: &mut [f64]) {
+        out.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn philox_source_reproducible() {
+        let mut a = PhiloxNormal::new(9);
+        let mut b = PhiloxNormal::new(9);
+        let mut x = vec![0.0; 16];
+        let mut y = vec![0.0; 16];
+        a.fill(2, 5, &mut x);
+        b.fill(2, 5, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn recorded_replays() {
+        let mut r = RecordedNormal { table: vec![vec![1.0, 2.0], vec![3.0, 4.0]] };
+        let mut out = vec![0.0; 2];
+        r.fill(0, 0, &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+        r.fill(7, 3, &mut out);
+        assert_eq!(out, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_zeroes() {
+        let mut z = ZeroNormal;
+        let mut out = vec![5.0; 4];
+        z.fill(0, 0, &mut out);
+        assert!(out.iter().all(|v| *v == 0.0));
+    }
+}

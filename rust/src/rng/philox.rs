@@ -1,0 +1,161 @@
+//! Philox4x32-10 counter-based RNG (Salmon, Moraes, Dror, Shaw, SC'11).
+//!
+//! Stateless: `block(counter)` maps a 128-bit counter + 64-bit key to four
+//! independent uniform u32s through 10 rounds of multiply-bijections. Used
+//! for per-(request, step) noise so batching order cannot change samples.
+
+const PHILOX_M0: u32 = 0xD2511F53;
+const PHILOX_M1: u32 = 0xCD9E8D57;
+const PHILOX_W0: u32 = 0x9E3779B9; // golden-ratio Weyl constants
+const PHILOX_W1: u32 = 0xBB67AE85;
+
+/// Philox4x32-10 keyed generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Philox4x32 {
+    key: [u32; 2],
+}
+
+#[inline]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+impl Philox4x32 {
+    /// Construct from a 64-bit key (e.g. a request seed).
+    pub fn new(key: u64) -> Self {
+        Philox4x32 { key: [key as u32, (key >> 32) as u32] }
+    }
+
+    /// One 10-round Philox block: counter -> 4 random u32.
+    pub fn block(&self, counter: [u32; 4]) -> [u32; 4] {
+        let mut c = counter;
+        let mut k = self.key;
+        for _ in 0..10 {
+            let (hi0, lo0) = mulhilo(PHILOX_M0, c[0]);
+            let (hi1, lo1) = mulhilo(PHILOX_M1, c[2]);
+            c = [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0];
+            k[0] = k[0].wrapping_add(PHILOX_W0);
+            k[1] = k[1].wrapping_add(PHILOX_W1);
+        }
+        c
+    }
+
+    /// Fill `out` with standard normals for logical stream coordinates
+    /// `(stream, step)`. Pairs are produced by Box–Muller over two uniforms;
+    /// element `i` of the block is addressed by counter word 0 so arbitrary
+    /// slices are reproducible regardless of call pattern.
+    pub fn normals_into(&self, stream: u64, step: u64, out: &mut [f64]) {
+        let mut i = 0usize;
+        let mut blk = 0u32;
+        while i < out.len() {
+            let ctr = [
+                blk,
+                (step as u32) ^ ((stream >> 32) as u32).rotate_left(16),
+                step.wrapping_shr(32) as u32,
+                stream as u32,
+            ];
+            let r = self.block(ctr);
+            // 4 u32 -> 2 f64 uniforms -> 2 normals
+            let u1 = to_open_unit(((r[0] as u64) << 32) | r[1] as u64);
+            let u2 = super::u64_to_unit_f64(((r[2] as u64) << 32) | r[3] as u64);
+            let mag = (-2.0 * u1.ln()).sqrt();
+            // Box–Muller with one transcendental saved: sin derived from
+            // cos via √(1−c²) with the sign read off the angle's half-turn
+            // (bench_perf: the noise path is transcendental-bound).
+            let ang = 2.0 * std::f64::consts::PI * u2;
+            let c = ang.cos();
+            out[i] = mag * c;
+            i += 1;
+            if i < out.len() {
+                let s_abs = (1.0 - c * c).max(0.0).sqrt();
+                let s = if u2 < 0.5 { s_abs } else { -s_abs };
+                out[i] = mag * s;
+                i += 1;
+            }
+            blk = blk.wrapping_add(1);
+        }
+    }
+
+    /// Vector of standard normals (see [`Self::normals_into`]).
+    pub fn normals(&self, stream: u64, step: u64, n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n];
+        self.normals_into(stream, step, &mut v);
+        v
+    }
+
+    /// One uniform u64 for coordinates (stream, step, idx).
+    pub fn uniform_u64(&self, stream: u64, step: u64, idx: u32) -> u64 {
+        let ctr = [idx, step as u32, (step >> 32) as u32, stream as u32];
+        let r = self.block(ctr);
+        ((r[0] as u64) << 32) | r[1] as u64
+    }
+}
+
+/// u64 -> f64 in (0, 1] so `ln` is always finite.
+fn to_open_unit(x: u64) -> f64 {
+    let f = super::u64_to_unit_f64(x);
+    if f <= 0.0 {
+        f64::MIN_POSITIVE
+    } else {
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{close, mean, std_dev};
+
+    #[test]
+    fn block_deterministic() {
+        let p = Philox4x32::new(123);
+        assert_eq!(p.block([0, 0, 0, 0]), p.block([0, 0, 0, 0]));
+        assert_ne!(p.block([0, 0, 0, 0]), p.block([1, 0, 0, 0]));
+        assert_ne!(
+            Philox4x32::new(1).block([0; 4]),
+            Philox4x32::new(2).block([0; 4])
+        );
+    }
+
+    #[test]
+    fn known_avalanche() {
+        // Flipping one counter bit should flip roughly half the output bits.
+        let p = Philox4x32::new(0xABCDEF);
+        let a = p.block([5, 6, 7, 8]);
+        let b = p.block([4, 6, 7, 8]);
+        let flipped: u32 = (0..4).map(|i| (a[i] ^ b[i]).count_ones()).sum();
+        assert!((40..=88).contains(&flipped), "flipped={flipped}");
+    }
+
+    #[test]
+    fn normals_moments() {
+        let p = Philox4x32::new(7);
+        let xs = p.normals(0, 0, 20_000);
+        assert!(close(mean(&xs), 0.0, 0.0, 0.03), "mean={}", mean(&xs));
+        assert!(close(std_dev(&xs), 1.0, 0.03, 0.0), "std={}", std_dev(&xs));
+    }
+
+    #[test]
+    fn normals_independent_of_chunking() {
+        // Same (stream, step) must give the same prefix regardless of length.
+        let p = Philox4x32::new(99);
+        let a = p.normals(3, 11, 17);
+        let b = p.normals(3, 11, 64);
+        assert_eq!(&a[..], &b[..17]);
+    }
+
+    #[test]
+    fn streams_and_steps_decorrelated() {
+        let p = Philox4x32::new(5);
+        let a = p.normals(0, 0, 1000);
+        let b = p.normals(1, 0, 1000);
+        let c = p.normals(0, 1, 1000);
+        let corr = |x: &[f64], y: &[f64]| {
+            let n = x.len() as f64;
+            x.iter().zip(y).map(|(a, b)| a * b).sum::<f64>() / n
+        };
+        assert!(corr(&a, &b).abs() < 0.05);
+        assert!(corr(&a, &c).abs() < 0.05);
+    }
+}

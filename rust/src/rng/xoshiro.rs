@@ -1,0 +1,154 @@
+//! Xoshiro256++ — fast sequential PRNG (Blackman & Vigna 2019) for workload
+//! generation, tests and the property harness. Not used for request noise
+//! (that is Philox, see module docs).
+
+use super::splitmix64;
+
+/// Xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (never all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256pp { s }
+    }
+
+    /// Next u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn uniform(&mut self) -> f64 {
+        super::u64_to_unit_f64(self.next_u64())
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Uses rejection to avoid modulo bias.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value; the pair's twin is dropped
+    /// for simplicity — this generator is not on any hot path).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(f64::MIN_POSITIVE);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Vector of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Exponential with rate `lambda` (for Poisson arrival traces).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Choose an index according to (unnormalized, non-negative) weights.
+    pub fn choose_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must have positive mass");
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{close, mean, std_dev};
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Xoshiro256pp::new(1);
+        let mut b = Xoshiro256pp::new(1);
+        let mut c = Xoshiro256pp::new(2);
+        let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let cv: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(av, bv);
+        assert_ne!(av, cv);
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Xoshiro256pp::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((9_000..11_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::new(4);
+        let xs = r.normals(20_000);
+        assert!(close(mean(&xs), 0.0, 0.0, 0.03));
+        assert!(close(std_dev(&xs), 1.0, 0.03, 0.0));
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Xoshiro256pp::new(5);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.exponential(2.0)).collect();
+        assert!(close(mean(&xs), 0.5, 0.05, 0.0), "mean={}", mean(&xs));
+    }
+
+    #[test]
+    fn choose_weighted_props() {
+        let mut r = Xoshiro256pp::new(6);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.choose_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!(close(ratio, 3.0, 0.1, 0.0), "ratio={ratio}");
+    }
+}

@@ -1,0 +1,110 @@
+//! One compiled HLO artifact: load text → compile → execute f32 buffers.
+//!
+//! NOT Send/Sync (the `xla` crate wrappers are `Rc`-based): construct and
+//! use only on the runtime thread (`host::RuntimeHost`) or in
+//! single-threaded tools/benches.
+
+use crate::util::error::{Error, Result};
+
+/// A compiled PJRT executable plus its I/O metadata.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes, row-major dims per argument (from the manifest).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes per tuple element.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+thread_local! {
+    /// One PJRT CPU client per thread that compiles artifacts (in practice
+    /// only the runtime thread and single-threaded tests).
+    static CLIENT: std::result::Result<xla::PjRtClient, String> =
+        xla::PjRtClient::cpu().map_err(|e| e.to_string());
+}
+
+impl Artifact {
+    /// Load an HLO-text file and compile it.
+    pub fn load(
+        name: &str,
+        hlo_path: &str,
+        input_shapes: Vec<Vec<usize>>,
+        output_shapes: Vec<Vec<usize>>,
+    ) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .map_err(|e| Error::runtime(format!("parse {hlo_path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = CLIENT.with(|c| match c {
+            Ok(client) => client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile {name}: {e}"))),
+            Err(e) => Err(Error::runtime(format!("PJRT CPU client: {e}"))),
+        })?;
+        Ok(Artifact { name: name.to_string(), exe, input_shapes, output_shapes })
+    }
+
+    /// Execute with f32 inputs (row-major, matching `input_shapes`);
+    /// returns the flattened f32 outputs per tuple element.
+    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(Error::runtime(format!(
+                "{}: got {} inputs, artifact wants {}",
+                self.name,
+                inputs.len(),
+                self.input_shapes.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.input_shapes) {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                return Err(Error::runtime(format!(
+                    "{}: input size {} != shape {:?}",
+                    self.name,
+                    data.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::runtime(format!("{}: reshape: {e}", self.name)))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("{}: execute: {e}", self.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("{}: fetch: {e}", self.name)))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| Error::runtime(format!("{}: tuple: {e}", self.name)))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| Error::runtime(format!("{}: output {i}: {e}", self.name)))?;
+            if let Some(shape) = self.output_shapes.get(i) {
+                let want: usize = shape.iter().product();
+                if v.len() != want {
+                    return Err(Error::runtime(format!(
+                        "{}: output {i} size {} != manifest shape {:?}",
+                        self.name,
+                        v.len(),
+                        shape
+                    )));
+                }
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Declared batch size (first dim of the first input).
+    pub fn batch_size(&self) -> usize {
+        self.input_shapes.first().and_then(|s| s.first()).copied().unwrap_or(1)
+    }
+}

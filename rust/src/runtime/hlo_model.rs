@@ -1,0 +1,128 @@
+//! `ModelEval` over an AOT artifact, via the runtime-host thread.
+//!
+//! Artifact calling conventions (fixed by `python/compile/aot.py`):
+//!
+//! * GMM denoiser:  inputs `(x[B,D] f32, alpha[1] f32, sigma[1] f32)`,
+//!   output `(x0hat[B,D] f32,)` — schedule-agnostic, the solver passes
+//!   (α, σ) each call.
+//! * DiT denoiser:  inputs `(x[B,D] f32, t[B] f32)`, output `(x0hat[B,D],)`
+//!   — schedule baked at training time (VP-linear), t is physical time.
+//!
+//! Batch padding: artifacts have a fixed batch B; smaller batches are
+//! zero-padded, larger ones chunked. Per-row models make this exact.
+
+use super::RuntimeHost;
+use crate::models::{EvalCtx, ModelEval};
+use crate::util::error::{Error, Result};
+use std::sync::Arc;
+
+/// How the artifact wants its conditioning inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeConvention {
+    /// (x, alpha, sigma) — the GMM artifact.
+    AlphaSigma,
+    /// (x, t) — the DiT artifact.
+    PhysicalT,
+}
+
+/// A denoiser served from a PJRT artifact (Send+Sync handle).
+pub struct HloModel {
+    host: Arc<RuntimeHost>,
+    artifact: String,
+    dim: usize,
+    batch: usize,
+    convention: TimeConvention,
+    label: String,
+}
+
+impl HloModel {
+    /// Build from a manifest entry; the artifact compiles lazily on first
+    /// use (on the runtime thread).
+    pub fn new(
+        host: Arc<RuntimeHost>,
+        artifact: &str,
+        convention: TimeConvention,
+    ) -> Result<HloModel> {
+        let entry = host
+            .registry
+            .entry(artifact)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact '{artifact}'")))?;
+        let shape = entry.inputs.first().cloned().unwrap_or_default();
+        let (batch, dim) = match shape.as_slice() {
+            [b, d] => (*b, *d),
+            other => {
+                return Err(Error::runtime(format!(
+                    "{artifact}: expected rank-2 x input, got {other:?}"
+                )))
+            }
+        };
+        let label = format!("hlo:{artifact}");
+        Ok(HloModel { host, artifact: artifact.to_string(), dim, batch, convention, label })
+    }
+
+    /// Build with the convention recorded in the manifest's meta block.
+    pub fn from_manifest(host: Arc<RuntimeHost>, artifact: &str) -> Result<HloModel> {
+        let entry = host
+            .registry
+            .entry(artifact)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact '{artifact}'")))?;
+        let convention = match entry.meta.opt_str("time_convention", "alpha_sigma") {
+            "physical_t" => TimeConvention::PhysicalT,
+            _ => TimeConvention::AlphaSigma,
+        };
+        Self::new(host, artifact, convention)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Run one padded artifact call over `rows` (≤ batch) samples.
+    fn run_chunk(&self, xs: &[f64], ctx: &EvalCtx, out: &mut [f64]) -> Result<()> {
+        let rows = xs.len() / self.dim;
+        debug_assert!(rows <= self.batch);
+        let mut xf = vec![0.0f32; self.batch * self.dim];
+        for (i, v) in xs.iter().enumerate() {
+            xf[i] = *v as f32;
+        }
+        let inputs = match self.convention {
+            TimeConvention::AlphaSigma => {
+                vec![xf, vec![ctx.alpha as f32], vec![ctx.sigma as f32]]
+            }
+            TimeConvention::PhysicalT => vec![xf, vec![ctx.t as f32; self.batch]],
+        };
+        let outputs = self.host.execute(&self.artifact, inputs)?;
+        let y = &outputs[0];
+        for i in 0..rows * self.dim {
+            out[i] = y[i] as f64;
+        }
+        Ok(())
+    }
+}
+
+impl ModelEval for HloModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval_batch(&self, xs: &[f64], ctx: &EvalCtx, out: &mut [f64]) {
+        let n = xs.len() / self.dim;
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(self.batch);
+            let lo = start * self.dim;
+            let hi = (start + rows) * self.dim;
+            if let Err(e) = self.run_chunk(&xs[lo..hi], ctx, &mut out[lo..hi]) {
+                // ModelEval is infallible by design (solvers are math, not
+                // I/O); artifact failure is a deployment error worth dying
+                // loudly for rather than silently corrupting samples.
+                panic!("HLO model '{}' failed: {e}", self.label);
+            }
+            start += rows;
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}

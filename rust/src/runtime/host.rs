@@ -1,0 +1,103 @@
+//! The runtime host thread: owns the PJRT client and all compiled
+//! executables (the `xla` crate's wrappers are `Rc`-based and must not
+//! cross threads); serves execute requests over an mpsc channel.
+//!
+//! Latency note (§Perf): the channel round-trip adds ~1µs per call, which
+//! is noise against any real model evaluation; in exchange every layer
+//! above is free to be multi-threaded.
+
+use super::registry::Registry;
+use super::Artifact;
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+enum HostMsg {
+    Exec {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: Sender<std::result::Result<Vec<Vec<f32>>, String>>,
+    },
+    Shutdown,
+}
+
+/// Send+Sync handle to the runtime thread. Cheap to clone.
+pub struct RuntimeHost {
+    tx: Mutex<Sender<HostMsg>>,
+    /// Manifest metadata (shapes etc.) — plain data, readable anywhere.
+    pub registry: Arc<Registry>,
+}
+
+impl RuntimeHost {
+    /// Open the artifacts dir and start the runtime thread.
+    pub fn open(dir: &str) -> Result<Arc<RuntimeHost>> {
+        let registry = Arc::new(Registry::open(dir)?);
+        let (tx, rx) = channel::<HostMsg>();
+        let reg = registry.clone();
+        let dir = dir.to_string();
+        std::thread::Builder::new()
+            .name("sadiff-pjrt".into())
+            .spawn(move || {
+                // All PJRT state lives and dies on this thread.
+                let mut cache: HashMap<String, Artifact> = HashMap::new();
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        HostMsg::Shutdown => break,
+                        HostMsg::Exec { name, inputs, reply } => {
+                            let result = exec_on_thread(&reg, &dir, &mut cache, &name, &inputs);
+                            let _ = reply.send(result.map_err(|e| e.to_string()));
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::runtime(format!("spawn runtime thread: {e}")))?;
+        Ok(Arc::new(RuntimeHost { tx: Mutex::new(tx), registry }))
+    }
+
+    /// Open the default artifacts dir (`SADIFF_ARTIFACTS` or `artifacts`).
+    pub fn open_default() -> Result<Arc<RuntimeHost>> {
+        let dir = std::env::var("SADIFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(&dir)
+    }
+
+    /// Execute artifact `name` with the given inputs (blocking).
+    pub fn execute(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .expect("host tx lock")
+            .send(HostMsg::Exec { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| Error::runtime("runtime thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::runtime("runtime thread dropped the reply"))?
+            .map_err(Error::Runtime)
+    }
+
+    /// Ask the runtime thread to exit (used by tests; dropping the host
+    /// also works once all senders are gone).
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().expect("host tx lock").send(HostMsg::Shutdown);
+    }
+}
+
+fn exec_on_thread(
+    registry: &Registry,
+    dir: &str,
+    cache: &mut HashMap<String, Artifact>,
+    name: &str,
+    inputs: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>> {
+    if !cache.contains_key(name) {
+        let entry = registry
+            .entry(name)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact '{name}'")))?;
+        let path = format!("{dir}/{}", entry.file);
+        let art = Artifact::load(name, &path, entry.inputs.clone(), entry.outputs.clone())?;
+        cache.insert(name.to_string(), art);
+    }
+    let art = cache.get(name).expect("just inserted");
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    art.execute_f32(&refs)
+}

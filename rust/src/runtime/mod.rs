@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py` → HLO *text*) and executes them on the PJRT
+//! CPU client via the `xla` crate. This is the only module that touches
+//! XLA; everything above it sees `ModelEval`.
+//!
+//! Two constraints shape the design:
+//! * HLO **text** — not serialized HloModuleProto — is the interchange
+//!   format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+//!   crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! * The crate's PJRT wrappers are `Rc`-based (neither `Send` nor `Sync`),
+//!   so all client/executable state is confined to one dedicated runtime
+//!   thread ([`host::RuntimeHost`]); the rest of the system talks to it
+//!   over channels. `HloModel` (a `ModelEval`) is a thin Send+Sync handle.
+
+pub mod artifact;
+pub mod hlo_model;
+pub mod host;
+pub mod registry;
+
+pub use artifact::Artifact;
+pub use hlo_model::HloModel;
+pub use host::RuntimeHost;
+pub use registry::{ManifestEntry, Registry};

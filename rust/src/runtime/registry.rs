@@ -1,0 +1,147 @@
+//! Artifact manifest: reads `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`). Pure metadata — Send+Sync; compilation and
+//! execution happen on the runtime-host thread.
+//!
+//! Manifest schema:
+//! ```json
+//! {"artifacts": [
+//!   {"name": "gmm_denoiser", "file": "gmm_denoiser.hlo.txt",
+//!    "inputs": [[64, 16], [1], [1]], "outputs": [[64, 16]],
+//!    "meta": {"dim": 16, "batch": 64, "time_convention": "alpha_sigma"}}
+//! ]}
+//! ```
+
+use crate::jsonlite::{parse, Value};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Declared artifact entry.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub meta: Value,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl Registry {
+    /// Open `dir` containing `manifest.json`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let v = parse(&text)?;
+        let mut entries = HashMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::runtime("manifest: missing 'artifacts' array"))?;
+        for a in arts {
+            let entry = ManifestEntry {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                inputs: parse_shapes(a.get("inputs"))?,
+                outputs: parse_shapes(a.get("outputs"))?,
+                meta: a.get("meta").cloned().unwrap_or(Value::Object(vec![])),
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Registry { dir, entries })
+    }
+
+    /// Default artifacts directory (repo-root `artifacts/`), overridable
+    /// via `SADIFF_ARTIFACTS`.
+    pub fn open_default() -> Result<Registry> {
+        let dir = std::env::var("SADIFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Registry::open(dir)
+    }
+
+    /// Names declared in the manifest, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Manifest entry by name.
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+}
+
+fn parse_shapes(v: Option<&Value>) -> Result<Vec<Vec<usize>>> {
+    let arr = v
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::runtime("manifest: missing shape array"))?;
+    arr.iter()
+        .map(|shape| {
+            shape
+                .as_array()
+                .ok_or_else(|| Error::runtime("manifest: shape must be an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::runtime("manifest: non-integer dim"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let err = Registry::open("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("sadiff_reg_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "m", "file": "m.hlo.txt",
+                "inputs": [[4, 2]], "outputs": [[4, 2]],
+                "meta": {"dim": 2}}]}"#,
+        )
+        .unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["m"]);
+        let e = reg.entry("m").unwrap();
+        assert_eq!(e.inputs, vec![vec![4, 2]]);
+        assert_eq!(e.meta.req_usize("dim").unwrap(), 2);
+        assert!(reg.entry("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_manifest_shapes_rejected() {
+        let dir = std::env::temp_dir().join(format!("sadiff_reg_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "m", "file": "f", "inputs": [["x"]], "outputs": []}]}"#,
+        )
+        .unwrap();
+        assert!(Registry::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

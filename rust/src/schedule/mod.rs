@@ -1,0 +1,303 @@
+//! Noise schedules (forward process parameterizations) and timestep
+//! selectors.
+//!
+//! A schedule defines α_t, σ_t with x_t | x_0 ~ N(α_t x_0, σ_t² I) and the
+//! log-SNR λ_t = log(α_t/σ_t) (Kingma et al. 2021 notation, as used by the
+//! paper's §3). All solvers work on the λ grid; Euler–Maruyama additionally
+//! needs the drift/diffusion coefficients f(t) = d log α_t/dt and
+//! g²(t) = dσ²/dt − 2 f σ² (Eq. (2)).
+//!
+//! Implemented schedules mirror the paper's evaluation set:
+//! * `VpLinear`  — DDPM linear-β (LSUN / LDM experiments)
+//! * `VpCosine`  — iDDPM cosine (ADM ImageNet-64)
+//! * `Ve`        — SMLD geometric σ (EDM baseline-VE CIFAR10)
+//! * `Edm`       — σ(t) = t, α = 1 (EDM preconditioning time)
+
+pub mod steps;
+
+pub use steps::{timesteps, StepSelector};
+
+/// Which analytic schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleKind {
+    /// β(t) = β0 + (β1−β0) t on t ∈ (0, 1].
+    VpLinear { beta0: f64, beta1: f64 },
+    /// α_t = cos(π/2 · (t+s)/(1+s)) / cos(π/2 · s/(1+s)) on t ∈ (0, 1].
+    VpCosine { s: f64 },
+    /// σ_t = σ_min (σ_max/σ_min)^t, α = 1, on t ∈ [0, 1].
+    Ve { sigma_min: f64, sigma_max: f64 },
+    /// σ_t = t, α = 1, t ∈ [σ_min, σ_max].
+    Edm { sigma_min: f64, sigma_max: f64 },
+}
+
+/// A concrete noise schedule with its sampling time range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseSchedule {
+    pub kind: ScheduleKind,
+    /// Smallest time we integrate down to (avoids the λ→∞ endpoint).
+    pub t_min: f64,
+    /// Largest time (the prior end).
+    pub t_max: f64,
+}
+
+impl NoiseSchedule {
+    /// DDPM linear-β defaults (β0=0.1, β1=20 in continuous time).
+    pub fn vp_linear() -> Self {
+        NoiseSchedule {
+            kind: ScheduleKind::VpLinear { beta0: 0.1, beta1: 20.0 },
+            t_min: 1e-3,
+            t_max: 1.0,
+        }
+    }
+
+    /// iDDPM cosine defaults (s = 0.008).
+    pub fn vp_cosine() -> Self {
+        NoiseSchedule {
+            kind: ScheduleKind::VpCosine { s: 0.008 },
+            t_min: 1e-3,
+            t_max: 1.0 - 1e-3,
+        }
+    }
+
+    /// EDM baseline-VE defaults (σ ∈ [0.02, 80] as in the paper's §E.2).
+    pub fn ve() -> Self {
+        NoiseSchedule {
+            kind: ScheduleKind::Ve { sigma_min: 0.02, sigma_max: 80.0 },
+            t_min: 0.0,
+            t_max: 1.0,
+        }
+    }
+
+    /// EDM time = σ ∈ [0.002, 80].
+    pub fn edm() -> Self {
+        NoiseSchedule {
+            kind: ScheduleKind::Edm { sigma_min: 0.002, sigma_max: 80.0 },
+            t_min: 0.002,
+            t_max: 80.0,
+        }
+    }
+
+    /// Build from a config name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "vp_linear" => Some(Self::vp_linear()),
+            "vp_cosine" => Some(Self::vp_cosine()),
+            "ve" => Some(Self::ve()),
+            "edm" => Some(Self::edm()),
+            _ => None,
+        }
+    }
+
+    /// log α_t.
+    pub fn log_alpha(&self, t: f64) -> f64 {
+        match self.kind {
+            ScheduleKind::VpLinear { beta0, beta1 } => {
+                -0.25 * t * t * (beta1 - beta0) - 0.5 * t * beta0
+            }
+            ScheduleKind::VpCosine { s } => {
+                let f = |u: f64| ((u + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos();
+                (f(t) / f(0.0)).ln()
+            }
+            ScheduleKind::Ve { .. } | ScheduleKind::Edm { .. } => 0.0,
+        }
+    }
+
+    /// α_t.
+    pub fn alpha(&self, t: f64) -> f64 {
+        self.log_alpha(t).exp()
+    }
+
+    /// σ_t.
+    pub fn sigma(&self, t: f64) -> f64 {
+        match self.kind {
+            ScheduleKind::VpLinear { .. } | ScheduleKind::VpCosine { .. } => {
+                // σ² = 1 − α² (VP); stable via expm1 for small t.
+                (-(2.0 * self.log_alpha(t)).exp_m1()).max(1e-300).sqrt()
+            }
+            ScheduleKind::Ve { sigma_min, sigma_max } => {
+                sigma_min * (sigma_max / sigma_min).powf(t)
+            }
+            ScheduleKind::Edm { .. } => t,
+        }
+    }
+
+    /// λ_t = log(α_t/σ_t), strictly decreasing in t.
+    pub fn lambda(&self, t: f64) -> f64 {
+        self.log_alpha(t) - self.sigma(t).ln()
+    }
+
+    /// Invert λ → t (closed form per schedule).
+    pub fn t_of_lambda(&self, lam: f64) -> f64 {
+        match self.kind {
+            ScheduleKind::VpLinear { beta0, beta1 } => {
+                // α² = sigmoid(2λ) ⇒ logα = −½ log(1 + e^{−2λ})
+                let log_alpha = -0.5 * ln_1p_exp(-2.0 * lam);
+                // Solve (β1−β0)/4 t² + β0/2 t + logα = 0 for t ≥ 0.
+                let a = 0.25 * (beta1 - beta0);
+                let b = 0.5 * beta0;
+                let c = log_alpha;
+                (-b + (b * b - 4.0 * a * c).sqrt()) / (2.0 * a)
+            }
+            ScheduleKind::VpCosine { s } => {
+                let log_alpha = -0.5 * ln_1p_exp(-2.0 * lam);
+                let f0 = (s / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos();
+                let arg = (log_alpha + f0.ln()).exp().clamp(-1.0, 1.0);
+                let t = arg.acos() * 2.0 * (1.0 + s) / std::f64::consts::PI - s;
+                t.clamp(0.0, 1.0)
+            }
+            ScheduleKind::Ve { sigma_min, sigma_max } => {
+                let sigma = (-lam).exp();
+                (sigma / sigma_min).ln() / (sigma_max / sigma_min).ln()
+            }
+            ScheduleKind::Edm { .. } => (-lam).exp(),
+        }
+    }
+
+    /// f(t) = d log α_t / dt (drift coefficient, Eq. (2)).
+    pub fn dlog_alpha_dt(&self, t: f64) -> f64 {
+        match self.kind {
+            ScheduleKind::VpLinear { beta0, beta1 } => -0.5 * (beta0 + (beta1 - beta0) * t),
+            ScheduleKind::VpCosine { s } => {
+                let c = std::f64::consts::FRAC_PI_2 / (1.0 + s);
+                -c * ((t + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).tan()
+            }
+            ScheduleKind::Ve { .. } | ScheduleKind::Edm { .. } => 0.0,
+        }
+    }
+
+    /// dλ/dt (negative: SNR decreases with t).
+    pub fn dlambda_dt(&self, t: f64) -> f64 {
+        match self.kind {
+            ScheduleKind::VpLinear { .. } | ScheduleKind::VpCosine { .. } => {
+                // λ = logα − ½ log(1−α²) ⇒ dλ/dt = f · (1 + α²/σ²) = f/σ².
+                self.dlog_alpha_dt(t) / self.sigma(t).powi(2)
+            }
+            ScheduleKind::Ve { sigma_min, sigma_max } => -(sigma_max / sigma_min).ln(),
+            ScheduleKind::Edm { .. } => -1.0 / t,
+        }
+    }
+
+    /// g²(t) = dσ²/dt − 2 f σ² = −2 σ² dλ/dt (Eq. (8)).
+    pub fn g2(&self, t: f64) -> f64 {
+        -2.0 * self.sigma(t).powi(2) * self.dlambda_dt(t)
+    }
+
+    /// λ range over the sampling interval: (λ(t_max), λ(t_min)) = (low, high).
+    pub fn lambda_range(&self) -> (f64, f64) {
+        (self.lambda(self.t_max), self.lambda(self.t_min))
+    }
+}
+
+/// Numerically stable log(1 + e^x).
+fn ln_1p_exp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    fn all_schedules() -> Vec<NoiseSchedule> {
+        vec![
+            NoiseSchedule::vp_linear(),
+            NoiseSchedule::vp_cosine(),
+            NoiseSchedule::ve(),
+            NoiseSchedule::edm(),
+        ]
+    }
+
+    #[test]
+    fn lambda_monotone_decreasing_in_t() {
+        for sch in all_schedules() {
+            let mut prev = f64::INFINITY;
+            for i in 0..=50 {
+                let t = sch.t_min + (sch.t_max - sch.t_min) * i as f64 / 50.0;
+                let lam = sch.lambda(t);
+                assert!(lam < prev, "{:?}: λ({t}) = {lam} !< {prev}", sch.kind);
+                prev = lam;
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_inversion_roundtrip() {
+        for sch in all_schedules() {
+            for i in 1..20 {
+                let t = sch.t_min + (sch.t_max - sch.t_min) * i as f64 / 20.0;
+                let lam = sch.lambda(t);
+                let t2 = sch.t_of_lambda(lam);
+                assert!(
+                    close(t2, t, 1e-6, 1e-8),
+                    "{:?}: t={t} -> λ={lam} -> t'={t2}",
+                    sch.kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vp_alpha_sigma_pythagorean() {
+        for sch in [NoiseSchedule::vp_linear(), NoiseSchedule::vp_cosine()] {
+            for i in 0..=10 {
+                let t = sch.t_min + (sch.t_max - sch.t_min) * i as f64 / 10.0;
+                let a = sch.alpha(t);
+                let s = sch.sigma(t);
+                assert!(close(a * a + s * s, 1.0, 1e-10, 0.0), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        for sch in all_schedules() {
+            for i in 1..10 {
+                let t = sch.t_min + (sch.t_max - sch.t_min) * i as f64 / 10.0;
+                let eps = 1e-6 * (sch.t_max - sch.t_min).max(1.0);
+                let fd_la = (sch.log_alpha(t + eps) - sch.log_alpha(t - eps)) / (2.0 * eps);
+                assert!(
+                    close(sch.dlog_alpha_dt(t), fd_la, 1e-4, 1e-7),
+                    "{:?} dlogα t={t}: {} vs fd {}",
+                    sch.kind,
+                    sch.dlog_alpha_dt(t),
+                    fd_la
+                );
+                let fd_lam = (sch.lambda(t + eps) - sch.lambda(t - eps)) / (2.0 * eps);
+                assert!(
+                    close(sch.dlambda_dt(t), fd_lam, 1e-4, 1e-6),
+                    "{:?} dλ t={t}: {} vs fd {}",
+                    sch.kind,
+                    sch.dlambda_dt(t),
+                    fd_lam
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn g2_positive() {
+        for sch in all_schedules() {
+            for i in 1..10 {
+                let t = sch.t_min + (sch.t_max - sch.t_min) * i as f64 / 10.0;
+                assert!(sch.g2(t) > 0.0, "{:?} g²({t}) = {}", sch.kind, sch.g2(t));
+            }
+        }
+    }
+
+    #[test]
+    fn ve_matches_edm_sigma_convention() {
+        let ve = NoiseSchedule::ve();
+        assert!(close(ve.sigma(0.0), 0.02, 1e-12, 0.0));
+        assert!(close(ve.sigma(1.0), 80.0, 1e-9, 0.0));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(NoiseSchedule::by_name("vp_linear").is_some());
+        assert!(NoiseSchedule::by_name("nope").is_none());
+    }
+}

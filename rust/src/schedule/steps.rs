@@ -1,0 +1,133 @@
+//! Timestep selectors: map (schedule, M) to the decreasing grid
+//! t_0 = t_max > t_1 > … > t_M = t_min the solvers integrate over.
+
+use super::NoiseSchedule;
+
+/// How to place the M+1 timesteps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepSelector {
+    /// Uniform in t.
+    UniformT,
+    /// Uniform in λ (log-SNR) — DPM-Solver's default.
+    UniformLambda,
+    /// EDM's ρ-schedule over σ^{EDM} = σ/α: σ_i = (σmax^{1/ρ} + i/M (σmin^{1/ρ} − σmax^{1/ρ}))^ρ.
+    EdmRho { rho: f64 },
+    /// Quadratic in t (denser near t_min).
+    QuadraticT,
+}
+
+impl StepSelector {
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "uniform_t" => Some(StepSelector::UniformT),
+            "uniform_lambda" => Some(StepSelector::UniformLambda),
+            "edm_rho" => Some(StepSelector::EdmRho { rho: 7.0 }),
+            "quadratic_t" => Some(StepSelector::QuadraticT),
+            _ => None,
+        }
+    }
+}
+
+/// Produce the M+1 decreasing timesteps for `m` solver steps.
+pub fn timesteps(sch: &NoiseSchedule, sel: StepSelector, m: usize) -> Vec<f64> {
+    assert!(m >= 1);
+    let n = m + 1;
+    match sel {
+        StepSelector::UniformT => (0..n)
+            .map(|i| sch.t_max + (sch.t_min - sch.t_max) * i as f64 / m as f64)
+            .collect(),
+        StepSelector::UniformLambda => {
+            let (lam_lo, lam_hi) = sch.lambda_range();
+            (0..n)
+                .map(|i| {
+                    let lam = lam_lo + (lam_hi - lam_lo) * i as f64 / m as f64;
+                    sch.t_of_lambda(lam)
+                })
+                .collect()
+        }
+        StepSelector::EdmRho { rho } => {
+            // σ^{EDM}(t) = σ_t/α_t = e^{−λ_t}; endpoints from the schedule.
+            let (lam_lo, lam_hi) = sch.lambda_range();
+            let smax = (-lam_lo).exp();
+            let smin = (-lam_hi).exp();
+            (0..n)
+                .map(|i| {
+                    let u = i as f64 / m as f64;
+                    let s = (smax.powf(1.0 / rho) + u * (smin.powf(1.0 / rho) - smax.powf(1.0 / rho)))
+                        .powf(rho);
+                    sch.t_of_lambda(-s.ln())
+                })
+                .collect()
+        }
+        StepSelector::QuadraticT => (0..n)
+            .map(|i| {
+                let u = i as f64 / m as f64;
+                // Quadratic ramp from t_max down to t_min.
+                sch.t_max + (sch.t_min - sch.t_max) * (2.0 * u - u * u)
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    fn check_grid(ts: &[f64], sch: &NoiseSchedule, m: usize) {
+        assert_eq!(ts.len(), m + 1);
+        assert!(close(ts[0], sch.t_max, 1e-9, 1e-12), "t0={} want {}", ts[0], sch.t_max);
+        assert!(close(ts[m], sch.t_min, 1e-6, 1e-9), "tM={} want {}", ts[m], sch.t_min);
+        for w in ts.windows(2) {
+            assert!(w[1] < w[0], "not strictly decreasing: {w:?}");
+        }
+    }
+
+    #[test]
+    fn all_selectors_produce_valid_grids() {
+        for sch in [
+            NoiseSchedule::vp_linear(),
+            NoiseSchedule::vp_cosine(),
+            NoiseSchedule::ve(),
+            NoiseSchedule::edm(),
+        ] {
+            for sel in [
+                StepSelector::UniformT,
+                StepSelector::UniformLambda,
+                StepSelector::EdmRho { rho: 7.0 },
+                StepSelector::QuadraticT,
+            ] {
+                for m in [1usize, 4, 20] {
+                    let ts = timesteps(&sch, sel, m);
+                    check_grid(&ts, &sch, m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_lambda_is_uniform_in_lambda() {
+        let sch = NoiseSchedule::vp_linear();
+        let ts = timesteps(&sch, StepSelector::UniformLambda, 8);
+        let lams: Vec<f64> = ts.iter().map(|t| sch.lambda(*t)).collect();
+        let h0 = lams[1] - lams[0];
+        for w in lams.windows(2) {
+            assert!(close(w[1] - w[0], h0, 1e-4, 1e-7), "steps: {lams:?}");
+        }
+    }
+
+    #[test]
+    fn edm_rho_matches_edm_formula_on_ve() {
+        // On the VE schedule σ^{EDM} = σ, so the grid must hit the EDM σ_i.
+        let sch = NoiseSchedule::ve();
+        let m = 10;
+        let rho = 7.0;
+        let ts = timesteps(&sch, StepSelector::EdmRho { rho }, m);
+        for (i, t) in ts.iter().enumerate() {
+            let u = i as f64 / m as f64;
+            let want = (80f64.powf(1.0 / rho) + u * (0.02f64.powf(1.0 / rho) - 80f64.powf(1.0 / rho)))
+                .powf(rho);
+            assert!(close(sch.sigma(*t), want, 1e-6, 1e-9), "i={i}");
+        }
+    }
+}

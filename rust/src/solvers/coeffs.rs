@@ -1,0 +1,366 @@
+//! The exponentially weighted Adams coefficient engine — Eqs. (15)/(18) of
+//! the paper, for both reparameterizations:
+//!
+//! **Data prediction** (Prop. 4.2): over a step [λ_s, λ_t] (λ_t > λ_s),
+//!
+//!   x_t = c₀ x_s + Σ_j b_j x₀̂_j + σ̃ ξ
+//!   c₀  = (σ_t/σ_s) e^{−W}                     W = ∫_{λ_s}^{λ_t} τ²(λ) dλ
+//!   b_j = α_t ∫ e^{−W(λ)} e^{λ−λ_t} (1+τ²) l_j(λ) dλ,  W(λ)=∫_λ^{λ_t} τ²
+//!   σ̃  = σ_t √(1 − e^{−2W})
+//!
+//! **Noise prediction** (Prop. A.1, with the sign fixed — see the note in
+//! `noise_param_sign`): x_t = (α_t/α_s) x_s + Σ_j b̃_j ε̂_j + σ̃' ξ with
+//!
+//!   b̃_j = −α_t ∫ e^{−λ} (1+τ²) l_j(λ) dλ
+//!   σ̃'² = α_t² ∫ 2 e^{−2λ} τ²(λ) dλ
+//!
+//! For piecewise-constant τ the integrals are *exact*: each Lagrange basis
+//! is expanded into monomials of u = λ − p₁ (piece end) and the integrals
+//! reduce to the stable moments I_k(a,h) = ∫_{−h}^0 uᵏ e^{au} du
+//! (`lagrange::exp_moments`). A Gauss–Legendre path covers general τ.
+
+use crate::config::Prediction;
+use crate::lagrange::{exp_moments, lagrange_basis_coeffs, poly_eval};
+use crate::quad::GaussLegendre;
+use crate::tau::TauFn;
+
+/// Coefficients of one exponential-integrator step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepCoeffs {
+    /// Multiplier on the carried state x_s.
+    pub c0: f64,
+    /// Multiplier per interpolation node, same order as the `nodes` input.
+    pub b: Vec<f64>,
+    /// Std-dev of the injected Gaussian noise.
+    pub sigma_tilde: f64,
+}
+
+/// Scalar schedule values at the two endpoints of a step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepEnds {
+    pub lam_s: f64,
+    pub lam_t: f64,
+    pub alpha_s: f64,
+    pub alpha_t: f64,
+    pub sigma_s: f64,
+    pub sigma_t: f64,
+}
+
+/// Quadrature nodes used by the general-τ path (cheap vs. any model eval).
+const QUAD_POINTS: usize = 32;
+
+/// Compute the step coefficients for interpolation nodes `nodes` (λ values
+/// of the buffered model evaluations; may include λ_t itself for the
+/// corrector) over the step `ends`, stochasticity `tau`, in the given
+/// parameterization.
+pub fn coefficients(
+    nodes: &[f64],
+    ends: &StepEnds,
+    tau: &TauFn,
+    pred: Prediction,
+) -> StepCoeffs {
+    assert!(!nodes.is_empty());
+    assert!(ends.lam_t > ends.lam_s, "step must increase λ");
+    let w_total = tau.int_tau2(ends.lam_s, ends.lam_t);
+    match pred {
+        Prediction::Data => {
+            let c0 = ends.sigma_t / ends.sigma_s * (-w_total).exp();
+            let sigma_tilde =
+                ends.sigma_t * crate::util::one_minus_exp_neg(2.0 * w_total).max(0.0).sqrt();
+            let b = match tau.const_pieces(ends.lam_s, ends.lam_t) {
+                Some(pieces) => data_b_exact(nodes, ends, tau, &pieces),
+                None => data_b_quadrature(nodes, ends, tau),
+            };
+            StepCoeffs { c0, b, sigma_tilde }
+        }
+        Prediction::Noise => {
+            let c0 = ends.alpha_t / ends.alpha_s;
+            let (b, var) = match tau.const_pieces(ends.lam_s, ends.lam_t) {
+                Some(pieces) => noise_b_exact(nodes, ends, &pieces),
+                None => noise_b_quadrature(nodes, ends, tau),
+            };
+            StepCoeffs { c0, b, sigma_tilde: var.max(0.0).sqrt() }
+        }
+    }
+}
+
+/// Exact data-prediction b's over piecewise-constant τ.
+fn data_b_exact(
+    nodes: &[f64],
+    ends: &StepEnds,
+    tau: &TauFn,
+    pieces: &[(f64, f64, f64)],
+) -> Vec<f64> {
+    let s = nodes.len();
+    let mut b = vec![0.0; s];
+    for &(p0, p1, tp) in pieces {
+        let hp = p1 - p0;
+        if hp <= 0.0 {
+            continue;
+        }
+        let a = 1.0 + tp * tp;
+        // e^{−W(p1)} damping from the piece end to λ_t, times e^{p1−λ_t}.
+        let scale = ends.alpha_t * (-tau.int_tau2(p1, ends.lam_t)).exp() * (p1 - ends.lam_t).exp() * a;
+        let shifted: Vec<f64> = nodes.iter().map(|x| x - p1).collect();
+        let cs = lagrange_basis_coeffs(&shifted);
+        let ms = exp_moments(a, hp, s - 1);
+        for j in 0..s {
+            let contribution: f64 = cs[j].iter().zip(&ms).map(|(c, m)| c * m).sum();
+            b[j] += scale * contribution;
+        }
+    }
+    b
+}
+
+/// Quadrature data-prediction b's for general τ.
+fn data_b_quadrature(nodes: &[f64], ends: &StepEnds, tau: &TauFn) -> Vec<f64> {
+    let gl = GaussLegendre::new(QUAD_POINTS);
+    let shifted: Vec<f64> = nodes.iter().map(|x| x - ends.lam_t).collect();
+    let cs = lagrange_basis_coeffs(&shifted);
+    cs.iter()
+        .map(|cj| {
+            ends.alpha_t
+                * gl.integrate(ends.lam_s, ends.lam_t, |lam| {
+                    let tv = tau.value(lam);
+                    (-tau.int_tau2(lam, ends.lam_t)).exp()
+                        * (lam - ends.lam_t).exp()
+                        * (1.0 + tv * tv)
+                        * poly_eval(cj, lam - ends.lam_t)
+                })
+        })
+        .collect()
+}
+
+/// Exact noise-prediction (b̃, noise variance) over piecewise-constant τ.
+fn noise_b_exact(nodes: &[f64], ends: &StepEnds, pieces: &[(f64, f64, f64)]) -> (Vec<f64>, f64) {
+    let s = nodes.len();
+    let mut b = vec![0.0; s];
+    let mut var = 0.0;
+    for &(p0, p1, tp) in pieces {
+        let hp = p1 - p0;
+        if hp <= 0.0 {
+            continue;
+        }
+        let a2 = 1.0 + tp * tp;
+        // α_t e^{−p1} = σ_t e^{λ_t − p1}; λ_t ≥ p1 keeps the factor ≥ 1 but
+        // bounded by e^{h}, so no overflow for sane step sizes.
+        let scale = -ends.sigma_t * (ends.lam_t - p1).exp() * a2;
+        let shifted: Vec<f64> = nodes.iter().map(|x| x - p1).collect();
+        let cs = lagrange_basis_coeffs(&shifted);
+        // ∫_{p0}^{p1} e^{−λ} u^k dλ = e^{−p1} ∫_{−hp}^0 e^{−u} u^k du.
+        let ms = exp_moments(-1.0, hp, s - 1);
+        for j in 0..s {
+            let contribution: f64 = cs[j].iter().zip(&ms).map(|(c, m)| c * m).sum();
+            b[j] += scale * contribution;
+        }
+        // α_t² ∫ 2 e^{−2λ} τ² dλ = τ² σ_t² (e^{2(λ_t−p0)} − e^{2(λ_t−p1)}).
+        var += tp
+            * tp
+            * ends.sigma_t
+            * ends.sigma_t
+            * ((2.0 * (ends.lam_t - p0)).exp() - (2.0 * (ends.lam_t - p1)).exp());
+    }
+    (b, var)
+}
+
+/// Quadrature noise-prediction path for general τ.
+fn noise_b_quadrature(nodes: &[f64], ends: &StepEnds, tau: &TauFn) -> (Vec<f64>, f64) {
+    let gl = GaussLegendre::new(QUAD_POINTS);
+    let shifted: Vec<f64> = nodes.iter().map(|x| x - ends.lam_t).collect();
+    let cs = lagrange_basis_coeffs(&shifted);
+    let b = cs
+        .iter()
+        .map(|cj| {
+            -ends.sigma_t
+                * gl.integrate(ends.lam_s, ends.lam_t, |lam| {
+                    let tv = tau.value(lam);
+                    (ends.lam_t - lam).exp() * (1.0 + tv * tv) * poly_eval(cj, lam - ends.lam_t)
+                })
+        })
+        .collect();
+    let var = ends.sigma_t
+        * ends.sigma_t
+        * gl.integrate(ends.lam_s, ends.lam_t, |lam| {
+            let tv = tau.value(lam);
+            2.0 * (2.0 * (ends.lam_t - lam)).exp() * tv * tv
+        });
+    (b, var)
+}
+
+/// Documentation anchor for the Prop. A.1 sign convention (see module docs):
+/// integrating d(x/α) = −(σ/α) (1+τ²) ε dλ gives the minus sign on b̃; the
+/// paper's appendix drops it between Eq. (41) and Eq. (42). With the minus,
+/// the 1-step τ=0 case reduces to DPM-Solver-1: b̃ = −σ_t (e^h − 1).
+pub const fn noise_param_sign() -> f64 {
+    -1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    fn ends_vp(lam_s: f64, lam_t: f64) -> StepEnds {
+        // Consistent VP-style endpoints: α = sigmoid-ish from λ.
+        let alpha = |l: f64| (1.0 / (1.0 + (-2.0 * l).exp())).sqrt();
+        let sigma = |l: f64| (1.0 - alpha(l) * alpha(l)).sqrt();
+        StepEnds {
+            lam_s,
+            lam_t,
+            alpha_s: alpha(lam_s),
+            alpha_t: alpha(lam_t),
+            sigma_s: sigma(lam_s),
+            sigma_t: sigma(lam_t),
+        }
+    }
+
+    #[test]
+    fn one_step_data_matches_closed_form() {
+        // s = 1 (l ≡ 1): b = α_t (1 − e^{−(1+τ²)h}) — the Corollary 5.3 form.
+        let ends = ends_vp(-1.0, -0.3);
+        let h = ends.lam_t - ends.lam_s;
+        for tau_v in [0.0, 0.7, 1.4] {
+            let tau = TauFn::Constant(tau_v);
+            let c = coefficients(&[ends.lam_s], &ends, &tau, Prediction::Data);
+            let a = 1.0 + tau_v * tau_v;
+            let want_b = ends.alpha_t * (1.0 - (-a * h).exp());
+            assert!(close(c.b[0], want_b, 1e-12, 0.0), "τ={tau_v}: {} vs {want_b}", c.b[0]);
+            let want_c0 = ends.sigma_t / ends.sigma_s * (-tau_v * tau_v * h).exp();
+            assert!(close(c.c0, want_c0, 1e-12, 0.0));
+            let want_sig = ends.sigma_t * (1.0 - (-2.0 * tau_v * tau_v * h).exp()).sqrt();
+            assert!(close(c.sigma_tilde, want_sig, 1e-12, 1e-15));
+        }
+    }
+
+    #[test]
+    fn one_step_noise_matches_dpm_solver1() {
+        // τ=0, s=1: b̃ = −σ_t (e^h − 1), c0 = α_t/α_s, σ̃ = 0.
+        let ends = ends_vp(-1.2, -0.4);
+        let h = ends.lam_t - ends.lam_s;
+        let c = coefficients(&[ends.lam_s], &ends, &TauFn::Constant(0.0), Prediction::Noise);
+        assert!(close(c.b[0], -ends.sigma_t * (h.exp() - 1.0), 1e-12, 0.0));
+        assert!(close(c.c0, ends.alpha_t / ends.alpha_s, 1e-14, 0.0));
+        assert!(c.sigma_tilde.abs() < 1e-14);
+    }
+
+    #[test]
+    fn exact_matches_quadrature_data() {
+        // Force the quadrature path by comparing against hand-driven
+        // quadrature on the same constant τ.
+        let ends = ends_vp(-2.0, -1.1);
+        for tau_v in [0.0, 0.9] {
+            let tau = TauFn::Constant(tau_v);
+            let nodes = [ends.lam_s, ends.lam_s - 0.5, ends.lam_s - 1.1];
+            let exact = coefficients(&nodes, &ends, &tau, Prediction::Data);
+            let quad_b = data_b_quadrature(&nodes, &ends, &tau);
+            for (e, q) in exact.b.iter().zip(&quad_b) {
+                assert!(close(*e, *q, 1e-9, 1e-12), "τ={tau_v}: {e} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_matches_quadrature_noise() {
+        let ends = ends_vp(-2.0, -1.3);
+        let tau = TauFn::Constant(1.2);
+        let nodes = [ends.lam_s, ends.lam_s - 0.7];
+        let exact = coefficients(&nodes, &ends, &tau, Prediction::Noise);
+        let (quad_b, quad_var) = noise_b_quadrature(&nodes, &ends, &tau);
+        for (e, q) in exact.b.iter().zip(&quad_b) {
+            assert!(close(*e, *q, 1e-9, 1e-12), "{e} vs {q}");
+        }
+        assert!(close(exact.sigma_tilde, quad_var.sqrt(), 1e-9, 1e-12));
+    }
+
+    #[test]
+    fn interval_tau_pieces_consistent() {
+        // A band boundary inside the step must agree with quadrature.
+        let ends = ends_vp(-0.5, 1.5);
+        let tau = TauFn::interval_from_sigma(1.0, 0.05, 1.0); // active λ ∈ [0, ln 20]
+        let nodes = [ends.lam_s, ends.lam_s - 0.8];
+        let exact = coefficients(&nodes, &ends, &tau, Prediction::Data);
+        // Compare against fine piece-split quadrature.
+        let gl = GaussLegendre::new(64);
+        let shifted: Vec<f64> = nodes.iter().map(|x| x - ends.lam_t).collect();
+        let cs = lagrange_basis_coeffs(&shifted);
+        for j in 0..nodes.len() {
+            let f = |lam: f64| {
+                let tv = tau.value(lam);
+                (-tau.int_tau2(lam, ends.lam_t)).exp()
+                    * (lam - ends.lam_t).exp()
+                    * (1.0 + tv * tv)
+                    * poly_eval(&cs[j], lam - ends.lam_t)
+            };
+            // Split at the band boundary λ=0 for quadrature accuracy.
+            let want = ends.alpha_t * (gl.integrate(ends.lam_s, 0.0, f) + gl.integrate(0.0, ends.lam_t, f));
+            assert!(
+                close(exact.b[j], want, 1e-8, 1e-10),
+                "j={j}: {} vs {want}",
+                exact.b[j]
+            );
+        }
+    }
+
+    #[test]
+    fn partition_of_unity_limit() {
+        // Σ_j b_j must equal the s=1 coefficient (interpolating the constant
+        // function 1 reproduces the total mass) — any node set.
+        let ends = ends_vp(-1.5, -0.6);
+        let tau = TauFn::Constant(0.8);
+        let one = coefficients(&[ends.lam_s], &ends, &tau, Prediction::Data);
+        for nodes in [
+            vec![ends.lam_s, ends.lam_s - 0.4],
+            vec![ends.lam_s, ends.lam_s - 0.4, ends.lam_s - 0.9],
+            vec![ends.lam_t, ends.lam_s, ends.lam_s - 0.4], // corrector-style
+        ] {
+            let c = coefficients(&nodes, &ends, &tau, Prediction::Data);
+            let total: f64 = c.b.iter().sum();
+            assert!(
+                close(total, one.b[0], 1e-10, 1e-13),
+                "nodes={nodes:?}: Σb={total} vs {}",
+                one.b[0]
+            );
+        }
+    }
+
+    #[test]
+    fn noise_variance_dominates_data_variance() {
+        // Corollary A.2: noise-param injected variance ≥ data-param variance.
+        let ends = ends_vp(-1.0, 0.2);
+        for tau_v in [0.3, 1.0, 1.6] {
+            let tau = TauFn::Constant(tau_v);
+            let d = coefficients(&[ends.lam_s], &ends, &tau, Prediction::Data);
+            let n = coefficients(&[ends.lam_s], &ends, &tau, Prediction::Noise);
+            assert!(
+                n.sigma_tilde >= d.sigma_tilde - 1e-12,
+                "τ={tau_v}: noise {} < data {}",
+                n.sigma_tilde,
+                d.sigma_tilde
+            );
+        }
+    }
+
+    #[test]
+    fn appendix_d_2step_expansion() {
+        // Appendix D: for the 2-step predictor with constant τ,
+        // b_i + b_{i-1} = α_{t+1}(1 − e^{−(1+τ²)h}) and b_{i-1} ≈
+        // α_{t+1}/(λ_i−λ_{i-1}) · ½(1+τ²)h² + O(h³).
+        let h = 0.05;
+        let ends = ends_vp(-1.0, -1.0 + h);
+        let prev_gap: f64 = 0.04;
+        let tau_v: f64 = 0.8;
+        let tau = TauFn::Constant(tau_v);
+        let nodes = [ends.lam_s, ends.lam_s - prev_gap];
+        let c = coefficients(&nodes, &ends, &tau, Prediction::Data);
+        let a = 1.0 + tau_v * tau_v;
+        let sum_want = ends.alpha_t * (1.0 - (-a * h).exp());
+        assert!(close(c.b[0] + c.b[1], sum_want, 1e-12, 0.0));
+        let b1_leading = ends.alpha_t / prev_gap * 0.5 * a * h * h;
+        // b_{i-1} is negative (extrapolation) with magnitude ≈ leading term.
+        assert!(
+            close(-c.b[1], b1_leading, 0.05, 1e-9),
+            "-b1={} leading={b1_leading}",
+            -c.b[1]
+        );
+    }
+}

@@ -1,0 +1,161 @@
+//! DPM-Solver baselines:
+//!
+//! * `solve_dpm2` — DPM-Solver-2 (Lu et al. 2022): singlestep midpoint
+//!   scheme in λ on the noise-prediction ODE; 2 NFE per step.
+//! * `solve_pp2m` — DPM-Solver++(2M) (Lu et al. 2023): 2-step multistep on
+//!   the data-prediction ODE; 1 NFE per step. Per the paper's §5.3 it is
+//!   exactly the 2-step SA-Predictor at τ ≡ 0 — `integration_equivalence`
+//!   checks our SA implementation against this independent one.
+
+use crate::models::{EvalCtx, ModelEval};
+use crate::schedule::NoiseSchedule;
+use crate::solvers::Grid;
+
+/// DPM-Solver-2 (singlestep, midpoint in λ, noise prediction).
+pub fn solve_dpm2(
+    model: &dyn ModelEval,
+    sch: &NoiseSchedule,
+    grid: &Grid,
+    x: &mut [f64],
+    n: usize,
+) {
+    let dim = model.dim();
+    let m = grid.m();
+    let mut x0 = vec![0.0; n * dim];
+    let mut u = vec![0.0; n * dim];
+    let mut x0_mid = vec![0.0; n * dim];
+    for i in 0..m {
+        let (lam_s, lam_t) = (grid.lams[i], grid.lams[i + 1]);
+        let h = lam_t - lam_s;
+        let lam_mid = 0.5 * (lam_s + lam_t);
+        let t_mid = sch.t_of_lambda(lam_mid);
+        let (a_mid, s_mid) = (sch.alpha(t_mid), sch.sigma(t_mid));
+        let (a_s, s_s) = (grid.alphas[i], grid.sigmas[i]);
+        let (a_t, s_t) = (grid.alphas[i + 1], grid.sigmas[i + 1]);
+
+        model.eval_batch(x, &grid.ctx(i), &mut x0);
+        // u = (α_mid/α_s) x − σ_mid (e^{h/2} − 1) ε̂(x, t_i)
+        let c_mid = s_mid * ((0.5 * h).exp() - 1.0);
+        for k in 0..n * dim {
+            let eps = (x[k] - a_s * x0[k]) / s_s;
+            u[k] = a_mid / a_s * x[k] - c_mid * eps;
+        }
+        let mid_ctx = EvalCtx { t: t_mid, alpha: a_mid, sigma: s_mid };
+        model.eval_batch(&u, &mid_ctx, &mut x0_mid);
+        // x ← (α_t/α_s) x − σ_t (e^{h} − 1) ε̂(u, t_mid)
+        let c_t = s_t * (h.exp() - 1.0);
+        for k in 0..n * dim {
+            let eps_mid = (u[k] - a_mid * x0_mid[k]) / s_mid;
+            x[k] = a_t / a_s * x[k] - c_t * eps_mid;
+        }
+    }
+}
+
+/// DPM-Solver++(2M): multistep data-prediction scheme.
+pub fn solve_pp2m(model: &dyn ModelEval, grid: &Grid, x: &mut [f64], n: usize) {
+    let dim = model.dim();
+    let m = grid.m();
+    let mut x0_prev: Option<Vec<f64>> = None;
+    let mut h_prev = 0.0f64;
+    let mut x0 = vec![0.0; n * dim];
+    for i in 0..m {
+        model.eval_batch(x, &grid.ctx(i), &mut x0);
+        let h = grid.lams[i + 1] - grid.lams[i];
+        let (s_s, s_t) = (grid.sigmas[i], grid.sigmas[i + 1]);
+        let a_t = grid.alphas[i + 1];
+        let ratio = s_t / s_s;
+        let phi = 1.0 - (-h).exp();
+        match &x0_prev {
+            None => {
+                // First step: DPM-Solver++(1) == deterministic DDIM.
+                for k in 0..n * dim {
+                    x[k] = ratio * x[k] + a_t * phi * x0[k];
+                }
+            }
+            Some(prev) => {
+                let r = h_prev / h;
+                let c_cur = 1.0 + 1.0 / (2.0 * r);
+                let c_prev = -1.0 / (2.0 * r);
+                for k in 0..n * dim {
+                    let d = c_cur * x0[k] + c_prev * prev[k];
+                    x[k] = ratio * x[k] + a_t * phi * d;
+                }
+            }
+        }
+        h_prev = h;
+        x0_prev = Some(std::mem::replace(&mut x0, vec![0.0; n * dim]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::models::{CountingModel, GmmAnalytic};
+    use crate::schedule::{timesteps, StepSelector};
+
+    fn setup(m: usize) -> (GmmAnalytic, NoiseSchedule, Grid) {
+        let sch = NoiseSchedule::vp_linear();
+        let grid = Grid::new(&sch, timesteps(&sch, StepSelector::UniformLambda, m));
+        (GmmAnalytic::new(Gmm::structured(2, 3, 1.5, 8)), sch, grid)
+    }
+
+    #[test]
+    fn dpm2_two_evals_per_step() {
+        let (model, sch, grid) = setup(5);
+        let counting = CountingModel::new(&model);
+        let mut x = vec![0.2, 0.4];
+        solve_dpm2(&counting, &sch, &grid, &mut x, 1);
+        assert_eq!(counting.count(), 10);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pp2m_one_eval_per_step() {
+        let (model, _sch, grid) = setup(7);
+        let counting = CountingModel::new(&model);
+        let mut x = vec![0.2, 0.4];
+        solve_pp2m(&counting, &grid, &mut x, 1);
+        assert_eq!(counting.count(), 7);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn both_deterministic() {
+        let (model, sch, grid) = setup(6);
+        let mut a = vec![0.3, -0.1];
+        let mut b = a.clone();
+        solve_dpm2(&model, &sch, &grid, &mut a, 1);
+        solve_dpm2(&model, &sch, &grid, &mut b, 1);
+        assert_eq!(a, b);
+        let mut c = vec![0.3, -0.1];
+        let mut d = c.clone();
+        solve_pp2m(&model, &grid, &mut c, 1);
+        solve_pp2m(&model, &grid, &mut d, 1);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn dpm2_more_accurate_than_one_step_per_eval() {
+        // On a linear (single-Gaussian) model, compare both solvers at the
+        // same NFE against a fine reference; dpm2 should be closer than a
+        // 1-step-only scheme run at matching NFE via pp2m-first-step-style.
+        let gmm = Gmm::new(vec![1.0], vec![vec![0.7]], vec![vec![1.1]]);
+        let model = GmmAnalytic::new(gmm);
+        let sch = NoiseSchedule::vp_linear();
+        let fine = Grid::new(&sch, timesteps(&sch, StepSelector::UniformLambda, 512));
+        let mut x_ref = vec![1.0];
+        solve_pp2m(&model, &fine, &mut x_ref, 1);
+
+        let mut errs = Vec::new();
+        for m in [5usize, 10, 20] {
+            let coarse = Grid::new(&sch, timesteps(&sch, StepSelector::UniformLambda, m));
+            let mut x2 = vec![1.0];
+            solve_dpm2(&model, &sch, &coarse, &mut x2, 1);
+            errs.push((x2[0] - x_ref[0]).abs());
+        }
+        // Second-order scheme: error drops superlinearly with the grid.
+        assert!(errs[2] < errs[0] * 0.25, "errs={errs:?}");
+        assert!(errs[2] < 0.02, "errs={errs:?}");
+    }
+}

@@ -1,0 +1,216 @@
+//! τ(t) — the stochasticity-scale function of the variance-controlled
+//! diffusion SDEs (Prop. 4.1). τ ≡ 0 recovers the probability-flow ODE,
+//! τ ≡ 1 the vanilla reverse SDE; the paper's §E uses constants and an
+//! EDM-style *interval* function (τ on a σ^{EDM} band, 0 outside).
+//!
+//! All solver integrals live on the λ = log-SNR axis, so the trait is
+//! expressed in λ. Exact ∫τ²dλ is provided for every built-in; solvers use
+//! `const_pieces` to get piecewise-constant decompositions for the exact
+//! coefficient path and fall back to quadrature otherwise.
+
+/// τ as a function of λ.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TauFn {
+    /// τ(λ) ≡ c.
+    Constant(f64),
+    /// τ(λ) = c on [lam_lo, lam_hi], 0 elsewhere (EDM-style band; the paper
+    /// activates τ for σ^{EDM} ∈ [0.05, 1] on CIFAR10, §E.1).
+    Interval { tau: f64, lam_lo: f64, lam_hi: f64 },
+    /// τ(λ) = (a + b·λ) clamped to ≥ 0 — exercises the quadrature path.
+    Linear { a: f64, b: f64 },
+}
+
+impl TauFn {
+    /// Deterministic (ODE) limit.
+    pub fn ode() -> Self {
+        TauFn::Constant(0.0)
+    }
+
+    /// The paper's EDM-style band given in σ^{EDM} units: active where
+    /// σ^{EDM} = e^{−λ} ∈ [sigma_lo, sigma_hi].
+    pub fn interval_from_sigma(tau: f64, sigma_lo: f64, sigma_hi: f64) -> Self {
+        assert!(sigma_lo > 0.0 && sigma_hi > sigma_lo);
+        TauFn::Interval { tau, lam_lo: -sigma_hi.ln(), lam_hi: -sigma_lo.ln() }
+    }
+
+    /// τ(λ).
+    pub fn value(&self, lam: f64) -> f64 {
+        match *self {
+            TauFn::Constant(c) => c,
+            TauFn::Interval { tau, lam_lo, lam_hi } => {
+                if (lam_lo..=lam_hi).contains(&lam) {
+                    tau
+                } else {
+                    0.0
+                }
+            }
+            TauFn::Linear { a, b } => (a + b * lam).max(0.0),
+        }
+    }
+
+    /// Largest τ over [l0, l1] (used by error-bound diagnostics).
+    pub fn max_on(&self, l0: f64, l1: f64) -> f64 {
+        match *self {
+            TauFn::Constant(c) => c,
+            TauFn::Interval { tau, lam_lo, lam_hi } => {
+                if l1 >= lam_lo && l0 <= lam_hi {
+                    tau
+                } else {
+                    0.0
+                }
+            }
+            TauFn::Linear { .. } => self.value(l0).max(self.value(l1)),
+        }
+    }
+
+    /// Exact ∫_{l0}^{l1} τ²(λ) dλ, l0 ≤ l1.
+    pub fn int_tau2(&self, l0: f64, l1: f64) -> f64 {
+        debug_assert!(l1 >= l0);
+        match *self {
+            TauFn::Constant(c) => c * c * (l1 - l0),
+            TauFn::Interval { tau, lam_lo, lam_hi } => {
+                let a = l0.max(lam_lo);
+                let b = l1.min(lam_hi);
+                if b > a {
+                    tau * tau * (b - a)
+                } else {
+                    0.0
+                }
+            }
+            TauFn::Linear { a, b } => {
+                if b == 0.0 {
+                    return (a.max(0.0)).powi(2) * (l1 - l0);
+                }
+                // τ = max(a+bλ, 0): integrate (a+bλ)² over the sub-interval
+                // where it is positive.
+                let root = -a / b;
+                let (lo, hi) = if b > 0.0 {
+                    (l0.max(root), l1)
+                } else {
+                    (l0, l1.min(root))
+                };
+                if hi <= lo {
+                    return 0.0;
+                }
+                let g = |x: f64| (a + b * x).powi(3) / (3.0 * b);
+                g(hi) - g(lo)
+            }
+        }
+    }
+
+    /// Piecewise-constant decomposition of τ on [l0, l1] if one exists:
+    /// list of (start, end, τ) covering the interval in order. `None` for
+    /// genuinely non-constant shapes (quadrature path).
+    pub fn const_pieces(&self, l0: f64, l1: f64) -> Option<Vec<(f64, f64, f64)>> {
+        match *self {
+            TauFn::Constant(c) => Some(vec![(l0, l1, c)]),
+            TauFn::Interval { tau, lam_lo, lam_hi } => {
+                let mut pieces = Vec::new();
+                let mut cursor = l0;
+                if lam_lo > cursor && lam_lo < l1 {
+                    pieces.push((cursor, lam_lo, 0.0));
+                    cursor = lam_lo;
+                }
+                let band_end = l1.min(lam_hi);
+                if band_end > cursor {
+                    let inside = cursor >= lam_lo && cursor <= lam_hi;
+                    pieces.push((cursor, band_end, if inside { tau } else { 0.0 }));
+                    cursor = band_end;
+                }
+                if cursor < l1 {
+                    pieces.push((cursor, l1, 0.0));
+                }
+                if pieces.is_empty() {
+                    pieces.push((l0, l1, self.value(l0)));
+                }
+                Some(pieces)
+            }
+            TauFn::Linear { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quad::GaussLegendre;
+    use crate::util::close;
+
+    #[test]
+    fn constant_integral() {
+        let t = TauFn::Constant(0.8);
+        assert!(close(t.int_tau2(-2.0, 3.0), 0.64 * 5.0, 1e-14, 0.0));
+        assert_eq!(t.value(0.0), 0.8);
+    }
+
+    #[test]
+    fn interval_from_sigma_band() {
+        // Active for σ ∈ [0.05, 1] ⇒ λ ∈ [0, ln 20].
+        let t = TauFn::interval_from_sigma(1.0, 0.05, 1.0);
+        assert_eq!(t.value(-0.5), 0.0);
+        assert_eq!(t.value(0.5), 1.0);
+        assert_eq!(t.value(20f64.ln() + 0.1), 0.0);
+    }
+
+    #[test]
+    fn integrals_match_quadrature() {
+        let gl = GaussLegendre::new(64);
+        let fns = [
+            TauFn::Constant(1.3),
+            TauFn::interval_from_sigma(0.9, 0.05, 1.0),
+            TauFn::Linear { a: 0.5, b: 0.25 },
+            TauFn::Linear { a: 0.2, b: -0.4 },
+        ];
+        for f in &fns {
+            for (l0, l1) in [(-3.0, -1.0), (-1.0, 0.5), (0.0, 4.0), (-5.0, 5.0)] {
+                let exact = f.int_tau2(l0, l1);
+                // Fine panel quadrature so kinks inside panels are benign.
+                let panels = 512;
+                let mut q = 0.0;
+                for p in 0..panels {
+                    let a = l0 + (l1 - l0) * p as f64 / panels as f64;
+                    let b = l0 + (l1 - l0) * (p + 1) as f64 / panels as f64;
+                    q += gl.integrate(a, b, |x| f.value(x).powi(2));
+                }
+                assert!(
+                    close(exact, q, 1e-3, 1e-4),
+                    "{f:?} on [{l0},{l1}]: exact={exact} quad={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn const_pieces_cover_and_match() {
+        let f = TauFn::interval_from_sigma(0.7, 0.05, 1.0);
+        let (l0, l1) = (-2.0, 5.0);
+        let pieces = f.const_pieces(l0, l1).unwrap();
+        // Cover the interval exactly, in order.
+        assert!(close(pieces[0].0, l0, 1e-14, 0.0));
+        assert!(close(pieces.last().unwrap().1, l1, 1e-14, 0.0));
+        for w in pieces.windows(2) {
+            assert!(close(w[0].1, w[1].0, 1e-14, 0.0));
+        }
+        // Values agree with `value` at piece midpoints.
+        for (a, b, tau) in &pieces {
+            let mid = 0.5 * (a + b);
+            assert_eq!(*tau, f.value(mid), "piece [{a},{b}]");
+        }
+        // Summed integral matches.
+        let s: f64 = pieces.iter().map(|(a, b, t)| t * t * (b - a)).sum();
+        assert!(close(s, f.int_tau2(l0, l1), 1e-12, 0.0));
+    }
+
+    #[test]
+    fn linear_has_no_const_pieces() {
+        assert!(TauFn::Linear { a: 1.0, b: 0.1 }.const_pieces(0.0, 1.0).is_none());
+    }
+
+    #[test]
+    fn linear_clamped_integral() {
+        // b < 0, root inside: only [l0, root] contributes.
+        let f = TauFn::Linear { a: 1.0, b: -1.0 }; // τ = 1-λ for λ<1
+        let got = f.int_tau2(0.0, 2.0);
+        assert!(close(got, 1.0 / 3.0, 1e-12, 0.0), "got {got}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Crate error type. We deliberately keep a single flat enum: the failure
+//! domains (config, runtime/PJRT, protocol, numerics) are few and the
+//! coordinator wants cheap `?` propagation across all of them.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration / CLI problems (bad flag, missing field, bad value).
+    Config(String),
+    /// JSON parse or encode failures.
+    Json(String),
+    /// PJRT / artifact loading and execution failures.
+    Runtime(String),
+    /// Wire-protocol violations on the sampling server.
+    Protocol(String),
+    /// Numerical preconditions violated (non-PSD matrix, empty sample set...).
+    Numerics(String),
+    /// I/O wrapper.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Numerics(m) => write!(f, "numerics error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    pub fn config(m: impl Into<String>) -> Self {
+        Error::Config(m.into())
+    }
+    pub fn json(m: impl Into<String>) -> Self {
+        Error::Json(m.into())
+    }
+    pub fn runtime(m: impl Into<String>) -> Self {
+        Error::Runtime(m.into())
+    }
+    pub fn protocol(m: impl Into<String>) -> Self {
+        Error::Protocol(m.into())
+    }
+    pub fn numerics(m: impl Into<String>) -> Self {
+        Error::Numerics(m.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrip() {
+        let e = Error::config("bad nfe");
+        assert_eq!(e.to_string(), "config error: bad nfe");
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
+        assert!(e.to_string().contains("io error"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal leveled logger. The serving hot path logs nothing by default;
+//! level is process-global and read with a relaxed atomic so a disabled
+//! log line costs one load.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Parse a level name ("error".."trace"); unknown names leave Info.
+pub fn set_level_by_name(name: &str) {
+    let lvl = match name.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    };
+    set_level(lvl);
+}
+
+/// Whether `level` is currently enabled.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one log line to stderr. Use through the `log_*!` macros.
+pub fn emit(level: Level, module: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis())
+        .unwrap_or(0);
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{now} {tag} {module}] {msg}");
+}
+
+/// `log_info!(module, fmt, args...)` and friends.
+#[macro_export]
+macro_rules! log_error {
+    ($m:expr, $($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, $m, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($m:expr, $($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, $m, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($m:expr, $($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, $m, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($m:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::emit($crate::util::log::Level::Debug, $m, &format!($($arg)*))
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn name_parse() {
+        set_level_by_name("debug");
+        assert!(enabled(Level::Debug));
+        set_level_by_name("nonsense");
+        assert!(enabled(Level::Info) && !enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,86 @@
+//! Small shared utilities: error type, logging, timing, float helpers.
+
+pub mod error;
+pub mod log;
+pub mod timing;
+
+/// Relative-or-absolute closeness check used throughout tests and numerics.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// `expm1`-stable evaluation of `(1 - e^{-x})` for `x >= 0`.
+pub fn one_minus_exp_neg(x: f64) -> f64 {
+    -(-x).exp_m1()
+}
+
+/// Linear interpolation.
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (0.0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile with linear interpolation over a *sorted* slice; `q` in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    lerp(sorted[lo], sorted[hi], pos - lo as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_basic() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!close(1.0, 1.1, 1e-3, 0.0));
+        assert!(close(0.0, 1e-12, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn one_minus_exp_neg_small_x_stable() {
+        let x = 1e-12;
+        let v = one_minus_exp_neg(x);
+        assert!(close(v, x, 1e-6, 0.0), "got {v}");
+        assert!(close(one_minus_exp_neg(2.0), 1.0 - (-2.0f64).exp(), 1e-14, 0.0));
+    }
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!(close(mean(&xs), 2.5, 1e-15, 0.0));
+        assert!(close(std_dev(&xs), (5.0f64 / 3.0).sqrt(), 1e-12, 0.0));
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 5.0);
+        assert!(close(percentile_sorted(&xs, 0.5), 3.0, 1e-15, 0.0));
+        assert!(close(percentile_sorted(&xs, 0.25), 2.0, 1e-15, 0.0));
+    }
+}

@@ -1,0 +1,72 @@
+//! Wall-clock timing helpers for benches and serving metrics.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Restart and return the elapsed seconds of the previous lap.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Run `f` `iters` times and return (mean, min) seconds per iteration.
+/// Used by the in-repo bench harness (criterion is unavailable offline).
+pub fn time_it<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64) {
+    assert!(iters > 0);
+    let mut min = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        total += dt;
+        if dt < min {
+            min = dt;
+        }
+    }
+    (total / iters as f64, min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+        let lap = sw.lap();
+        assert!(lap >= 0.0);
+    }
+
+    #[test]
+    fn time_it_counts() {
+        let mut n = 0;
+        let (mean, min) = time_it(5, || n += 1);
+        assert_eq!(n, 5);
+        assert!(mean >= min);
+    }
+}

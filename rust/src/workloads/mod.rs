@@ -1,0 +1,175 @@
+//! Workload analogs of the paper's evaluation datasets (DESIGN.md §2) and
+//! the request-trace generator for serving benchmarks.
+//!
+//! Each workload pins (noise schedule, dimension, target distribution) so
+//! that the solver-relevant structure of the paper's dataset/model pair is
+//! preserved: CIFAR10+EDM-VE ↦ VE schedule; ImageNet64+ADM ↦ VP-cosine;
+//! LSUN-Bedroom+ADM ↦ VP-linear; ImageNet256-latent ↦ low-dim VP-linear.
+
+use crate::gmm::Gmm;
+use crate::models::{GmmAnalytic, ModelEval};
+use crate::rng::Xoshiro256pp;
+use crate::schedule::NoiseSchedule;
+
+/// A named workload: schedule + target distribution + metric dimension.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    pub schedule: NoiseSchedule,
+    pub gmm: Gmm,
+}
+
+impl Workload {
+    /// The exact-score model for this workload.
+    pub fn model(&self) -> Box<dyn ModelEval> {
+        Box::new(GmmAnalytic::new(self.gmm.clone()))
+    }
+
+    pub fn dim(&self) -> usize {
+        self.gmm.dim
+    }
+
+    /// Ground-truth reference samples (from the prior).
+    pub fn reference(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::new(seed ^ 0xfeed_beef);
+        self.gmm.sample(&mut rng, n)
+    }
+}
+
+/// CIFAR10 32×32 analog: EDM baseline-VE regime (paper Fig. 1a/2a, Tab. 2/4/5/11).
+pub fn cifar_analog() -> Workload {
+    Workload {
+        name: "cifar_analog",
+        schedule: NoiseSchedule::ve(),
+        gmm: Gmm::structured(32, 8, 3.0, 101),
+    }
+}
+
+/// ImageNet 64×64 analog: ADM VP-cosine regime (Fig. 1b/2b, Tab. 6/7/12).
+pub fn imagenet64_analog() -> Workload {
+    Workload {
+        name: "imagenet64_analog",
+        schedule: NoiseSchedule::vp_cosine(),
+        gmm: Gmm::structured(64, 10, 3.5, 202),
+    }
+}
+
+/// LSUN Bedroom 256×256 analog: ADM VP-linear pixel regime (Fig. 1d, Tab. 14).
+pub fn bedroom_analog() -> Workload {
+    Workload {
+        name: "bedroom_analog",
+        schedule: NoiseSchedule::vp_linear(),
+        gmm: Gmm::structured(48, 6, 2.5, 303),
+    }
+}
+
+/// ImageNet 256×256 *latent*-diffusion analog: low-dim VP-linear
+/// (Fig. 1c/2c, Tab. 1/10/13). Latent spaces are low-dimensional and
+/// smoother — fewer, broader modes.
+pub fn latent_analog() -> Workload {
+    Workload {
+        name: "latent_analog",
+        schedule: NoiseSchedule::vp_linear(),
+        gmm: Gmm::structured(16, 5, 2.0, 404),
+    }
+}
+
+/// Look up a workload by name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    match name {
+        "cifar_analog" => Some(cifar_analog()),
+        "imagenet64_analog" => Some(imagenet64_analog()),
+        "bedroom_analog" => Some(bedroom_analog()),
+        "latent_analog" => Some(latent_analog()),
+        _ => None,
+    }
+}
+
+/// All workload names.
+pub fn all_names() -> &'static [&'static str] {
+    &["cifar_analog", "imagenet64_analog", "bedroom_analog", "latent_analog"]
+}
+
+/// One request in a serving trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Samples requested.
+    pub n: usize,
+    /// NFE requested.
+    pub nfe: usize,
+    pub seed: u64,
+}
+
+/// Poisson-arrival request trace with mixed request sizes, for the serving
+/// benchmarks (batch-occupancy and latency experiments).
+pub fn poisson_trace(
+    rate_per_s: f64,
+    duration_s: f64,
+    n_choices: &[usize],
+    nfe_choices: &[usize],
+    seed: u64,
+) -> Vec<TraceRequest> {
+    assert!(rate_per_s > 0.0 && !n_choices.is_empty() && !nfe_choices.is_empty());
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    loop {
+        t += rng.exponential(rate_per_s);
+        if t >= duration_s {
+            break;
+        }
+        out.push(TraceRequest {
+            arrival_s: t,
+            n: n_choices[rng.below(n_choices.len() as u64) as usize],
+            nfe: nfe_choices[rng.below(nfe_choices.len() as u64) as usize],
+            seed: rng.next_u64(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::close;
+
+    #[test]
+    fn lookup_roundtrip() {
+        for name in all_names() {
+            let wl = by_name(name).unwrap();
+            assert_eq!(wl.name, *name);
+            assert!(wl.dim() >= 16);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn reference_reproducible() {
+        let wl = latent_analog();
+        assert_eq!(wl.reference(8, 1), wl.reference(8, 1));
+        assert_ne!(wl.reference(8, 1), wl.reference(8, 2));
+    }
+
+    #[test]
+    fn workload_model_dim_matches() {
+        let wl = cifar_analog();
+        assert_eq!(wl.model().dim(), wl.dim());
+    }
+
+    #[test]
+    fn trace_statistics() {
+        let tr = poisson_trace(50.0, 10.0, &[1, 4], &[10, 20], 7);
+        // ~500 expected arrivals.
+        assert!((300..700).contains(&tr.len()), "len={}", tr.len());
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(tr.iter().all(|r| r.arrival_s < 10.0));
+        let mean_gap = tr.last().unwrap().arrival_s / tr.len() as f64;
+        assert!(close(mean_gap, 0.02, 0.3, 0.0), "gap={mean_gap}");
+        // Reproducible.
+        assert_eq!(tr, poisson_trace(50.0, 10.0, &[1, 4], &[10, 20], 7));
+    }
+}

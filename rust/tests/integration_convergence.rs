@@ -1,0 +1,62 @@
+//! Theorem 5.1/5.2 convergence-order checks (deterministic component) and
+//! the stochastic-component sanity from Appendix B.
+
+use sadiff::exps::convergence::{fit_order, ode_orders, sde_w2};
+
+#[test]
+fn predictor_orders_match_theorem_5_1() {
+    // τ=0: global error O(hˢ). Fitted slopes should be near s (generous
+    // windows: constants and the fine-reference floor perturb the fit).
+    let ms = [8usize, 16, 32, 64];
+    for (s, lo, hi) in [(1usize, 0.7, 1.6), (2, 1.6, 2.8), (3, 2.3, 4.2)] {
+        let (hs, errs) = ode_orders(s, 0, &ms);
+        let order = fit_order(&hs, &errs);
+        assert!(
+            (lo..=hi).contains(&order),
+            "predictor s={s}: fitted order {order} not in [{lo}, {hi}]; errs={errs:?}"
+        );
+    }
+}
+
+#[test]
+fn corrector_raises_order_per_theorem_5_2() {
+    // ŝ-step corrector: O(h^{ŝ+1}) — the corrected scheme at (s, ŝ=s)
+    // must carry a higher fitted order than the predictor-only scheme,
+    // and the (1,1) scheme should be ≈ 2nd order.
+    let ms = [8usize, 16, 32, 64];
+    let (hs, errs_pred) = ode_orders(1, 0, &ms);
+    let (_, errs_corr) = ode_orders(1, 1, &ms);
+    let o_pred = fit_order(&hs, &errs_pred);
+    let o_corr = fit_order(&hs, &errs_corr);
+    assert!(
+        o_corr > o_pred + 0.5,
+        "corrector gained no order: {o_pred} -> {o_corr}"
+    );
+    assert!((1.6..=3.0).contains(&o_corr), "o_corr={o_corr}");
+}
+
+#[test]
+fn errors_decrease_monotonically_with_refinement() {
+    let ms = [8usize, 16, 32, 64];
+    for (s, c) in [(1usize, 0usize), (2, 0), (3, 3)] {
+        let (_, errs) = ode_orders(s, c, &ms);
+        for w in errs.windows(2) {
+            assert!(
+                w[1] < w[0] * 1.05,
+                "(s={s}, c={c}): error grew under refinement: {errs:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn stochastic_distributional_error_shrinks() {
+    // O(τh) component: terminal exact-W2 (1-D GMM) must drop markedly
+    // from 8 to 64 steps at τ=1.
+    let coarse = sde_w2(1.0, 8, 4000);
+    let fine = sde_w2(1.0, 64, 4000);
+    assert!(
+        fine < coarse * 0.6,
+        "W2 did not shrink with h: coarse={coarse} fine={fine}"
+    );
+}

@@ -1,0 +1,40 @@
+//! §5.3 reduction tests: SA-Solver special cases against independent
+//! implementations (Corollary 5.3, §B.5.2, §B.5.3).
+
+use sadiff::exps::equivalence;
+
+#[test]
+fn ddim_eta_equals_one_step_sa_predictor() {
+    // Exact reduction (Corollary 5.3): per-step τ_η reproduces DDIM-η to
+    // floating point for deterministic AND stochastic η.
+    for eta in [0.0, 0.3, 0.7, 1.0] {
+        let delta = equivalence::ddim_vs_sa(eta, 12);
+        assert!(delta < 1e-9, "eta={eta}: delta={delta}");
+    }
+}
+
+#[test]
+fn pp2m_is_two_step_sa_predictor_to_scheme_order() {
+    // DPM-Solver++(2M) uses the Taylor-truncated 2-step coefficients
+    // (the paper's own Appendix-D implementation does the same); the gap
+    // to the exact-integral SA-Predictor is O(h²) per step and must
+    // shrink fast under refinement.
+    // The per-step coefficient gap is O(h²) relative, so the accumulated
+    // trajectory gap shrinks ~linearly in h.
+    let d8 = equivalence::pp2m_vs_sa(8);
+    let d32 = equivalence::pp2m_vs_sa(32);
+    let d128 = equivalence::pp2m_vs_sa(128);
+    assert!(d32 < d8 * 0.6, "no refinement: {d8} -> {d32}");
+    assert!(d128 < d32, "no refinement: {d32} -> {d128}");
+    assert!(d128 < 3e-3, "d128={d128}");
+}
+
+#[test]
+fn unipc_p_equals_sa_solver_p_p() {
+    // Same math, independent coefficient numerics (adaptive Simpson vs
+    // exact moment recursion): must agree to quadrature tolerance.
+    for p in [1usize, 2, 3] {
+        let delta = equivalence::unipc_vs_sa(p, 12);
+        assert!(delta < 1e-7, "p={p}: delta={delta}");
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT runtime integration: load the AOT artifacts and validate their
+//! numerics against the native Rust implementations.
+//!
+//! Requires `make artifacts`; every test skips (with a loud message) when
+//! the artifacts directory is absent so `cargo test` stays usable before
+//! the first build.
+
+use sadiff::gmm::Gmm;
+use sadiff::jsonlite::Value;
+use sadiff::models::{EvalCtx, ModelEval};
+use sadiff::runtime::{HloModel, RuntimeHost};
+use sadiff::util::close;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SADIFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at '{dir}' (run `make artifacts`)");
+        None
+    }
+}
+
+/// Reconstruct the python-side GMM from the manifest metadata.
+fn gmm_from_manifest(meta: &Value) -> Gmm {
+    let g = meta.get("gmm").expect("manifest meta.gmm");
+    let weights: Vec<f64> = g
+        .get("weights")
+        .and_then(Value::as_array)
+        .unwrap()
+        .iter()
+        .filter_map(Value::as_f64)
+        .collect();
+    let grab2d = |key: &str| -> Vec<Vec<f64>> {
+        g.get(key)
+            .and_then(Value::as_array)
+            .unwrap()
+            .iter()
+            .map(|row| row.as_array().unwrap().iter().filter_map(Value::as_f64).collect())
+            .collect()
+    };
+    Gmm::new(weights, grab2d("means"), grab2d("vars"))
+}
+
+#[test]
+fn gmm_artifact_matches_native_gmm() {
+    let Some(dir) = artifacts_dir() else { return };
+    let host = RuntimeHost::open(&dir).unwrap();
+    let entry = host.registry.entry("gmm_denoiser").expect("manifest entry");
+    let gmm = gmm_from_manifest(&entry.meta);
+    let model = HloModel::from_manifest(host.clone(), "gmm_denoiser").unwrap();
+    assert_eq!(model.dim(), gmm.dim);
+
+    let mut rng = sadiff::rng::Xoshiro256pp::new(5);
+    for (alpha, sigma) in [(0.95, 0.3), (0.6, 0.8), (0.1, 1.0)] {
+        let xs = gmm.sample_marginal(&mut rng, 10, alpha, sigma);
+        let ctx = EvalCtx { t: 0.5, alpha, sigma };
+        let mut got = vec![0.0; xs.len()];
+        model.eval_batch(&xs, &ctx, &mut got);
+        let want = gmm.posterior_mean_batch(&xs, alpha, sigma);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                close(*g, *w, 5e-4, 5e-4),
+                "(α={alpha}, σ={sigma}): artifact {g} vs native {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gmm_artifact_handles_odd_batches() {
+    // Padding/chunking: n < B and n > B must both match the native model.
+    let Some(dir) = artifacts_dir() else { return };
+    let host = RuntimeHost::open(&dir).unwrap();
+    let entry = host.registry.entry("gmm_denoiser").unwrap();
+    let gmm = gmm_from_manifest(&entry.meta);
+    let batch = entry.inputs[0][0];
+    let model = HloModel::from_manifest(host, "gmm_denoiser").unwrap();
+    let mut rng = sadiff::rng::Xoshiro256pp::new(6);
+    for n in [1usize, batch - 1, batch + 3] {
+        let xs = gmm.sample_marginal(&mut rng, n, 0.7, 0.7);
+        let ctx = EvalCtx { t: 0.5, alpha: 0.7, sigma: 0.7 };
+        let mut got = vec![0.0; xs.len()];
+        model.eval_batch(&xs, &ctx, &mut got);
+        let want = gmm.posterior_mean_batch(&xs, 0.7, 0.7);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(close(*g, *w, 5e-4, 5e-4), "n={n}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn sa_update_artifact_matches_native_update() {
+    // The Pallas fused update must agree with the Rust-side fused update
+    // (same formula both sides; this validates the whole compile path).
+    let Some(dir) = artifacts_dir() else { return };
+    let host = RuntimeHost::open(&dir).unwrap();
+    let entry = host.registry.entry("sa_update").expect("sa_update entry").clone();
+    let (s, b, d) = (
+        entry.meta.req_usize("s").unwrap(),
+        entry.meta.req_usize("batch").unwrap(),
+        entry.meta.req_usize("dim").unwrap(),
+    );
+    let mut rng = sadiff::rng::Xoshiro256pp::new(7);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let buf: Vec<f32> = (0..s * b * d).map(|_| rng.normal() as f32).collect();
+    let coeffs: Vec<f32> = (0..s).map(|_| rng.normal() as f32).collect();
+    let xi: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let scal = vec![0.87f32, 0.31f32];
+
+    let out = host
+        .execute(
+            "sa_update",
+            vec![x.clone(), buf.clone(), coeffs.clone(), scal.clone(), xi.clone()],
+        )
+        .unwrap();
+    // Native reference (f32 accumulation to match).
+    for k in 0..b * d {
+        let mut want = scal[0] * x[k] + scal[1] * xi[k];
+        for j in 0..s {
+            want += coeffs[j] * buf[j * b * d + k];
+        }
+        assert!(
+            (out[0][k] - want).abs() < 2e-4 * (1.0 + want.abs()),
+            "k={k}: artifact {} vs native {want}",
+            out[0][k]
+        );
+    }
+}
+
+#[test]
+fn dit_artifact_is_a_plausible_denoiser() {
+    // The trained DiT, at low noise, should roughly preserve in-support
+    // inputs (data prediction ≈ identity as σ→0 for trained regions) and
+    // must produce finite outputs of the right shape everywhere.
+    let Some(dir) = artifacts_dir() else { return };
+    let host = RuntimeHost::open(&dir).unwrap();
+    let entry = host.registry.entry("dit_denoiser").expect("entry").clone();
+    let gmm = gmm_from_manifest(&entry.meta);
+    let model = HloModel::from_manifest(host, "dit_denoiser").unwrap();
+    let dim = model.dim();
+    assert_eq!(dim, gmm.dim);
+
+    let sch = sadiff::schedule::NoiseSchedule::vp_linear();
+    let mut rng = sadiff::rng::Xoshiro256pp::new(8);
+    let x0 = gmm.sample(&mut rng, 8);
+    // Low-noise check.
+    let t = 0.05;
+    let (alpha, sigma) = (sch.alpha(t), sch.sigma(t));
+    let xt: Vec<f64> = x0
+        .iter()
+        .map(|v| alpha * v + sigma * rng.normal())
+        .collect();
+    let ctx = EvalCtx { t, alpha, sigma };
+    let mut got = vec![0.0; xt.len()];
+    model.eval_batch(&xt, &ctx, &mut got);
+    assert!(got.iter().all(|v| v.is_finite()));
+    let err: f64 = got
+        .iter()
+        .zip(&x0)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt()
+        / (x0.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-9));
+    assert!(err < 0.6, "trained DiT far from identity at low noise: rel err {err}");
+}
+
+#[test]
+fn unknown_artifact_fails_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let host = RuntimeHost::open(&dir).unwrap();
+    let err = host.execute("no_such_artifact", vec![]).unwrap_err();
+    assert!(err.to_string().contains("unknown artifact"), "{err}");
+    // Bad input count also errors, not panics.
+    let err = host.execute("gmm_denoiser", vec![]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+}

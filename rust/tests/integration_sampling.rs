@@ -1,0 +1,166 @@
+//! End-to-end sampling behaviour on the exact GMM workloads: the
+//! paper-shape assertions that the experiment tables rely on.
+
+use sadiff::config::{Prediction, SamplerConfig, SolverKind};
+use sadiff::coordinator::engine::evaluate;
+use sadiff::workloads;
+
+#[test]
+fn sa_solver_converges_with_nfe() {
+    let wl = workloads::latent_analog();
+    let model = wl.model();
+    let fid = |nfe: usize| {
+        let cfg = SamplerConfig { nfe, tau: 1.0, ..SamplerConfig::sa_default() };
+        evaluate(&*model, &wl, &cfg, 2048, 3).sim_fid
+    };
+    let coarse = fid(6);
+    let fine = fid(40);
+    assert!(fine < coarse, "no improvement with NFE: {coarse} -> {fine}");
+    assert!(fine < 0.5, "fine-NFE sim-FID too large: {fine}");
+}
+
+#[test]
+fn data_prediction_beats_noise_prediction_at_low_nfe() {
+    // Table 1's shape, mechanically guaranteed by Corollary A.2.
+    let wl = workloads::latent_analog();
+    let model = wl.model();
+    let run = |pred| {
+        let cfg = SamplerConfig {
+            nfe: 12,
+            tau: 1.0,
+            prediction: pred,
+            ..SamplerConfig::sa_default()
+        };
+        evaluate(&*model, &wl, &cfg, 2048, 1).sim_fid
+    };
+    let data = run(Prediction::Data);
+    let noise = run(Prediction::Noise);
+    assert!(
+        data < noise,
+        "data-prediction ({data}) should beat noise-prediction ({noise}) at low NFE"
+    );
+}
+
+#[test]
+fn corrector_improves_low_nfe_quality() {
+    // Table 2's shape.
+    let wl = workloads::cifar_analog();
+    let model = wl.model();
+    let run = |sp: usize, sc: usize| {
+        let cfg = SamplerConfig {
+            nfe: 15,
+            tau: 0.4,
+            predictor_steps: sp,
+            corrector_steps: sc,
+            ..SamplerConfig::sa_default()
+        };
+        evaluate(&*model, &wl, &cfg, 2048, 2).sim_fid
+    };
+    let p1 = run(1, 0);
+    let p3c3 = run(3, 3);
+    assert!(
+        p3c3 < p1,
+        "3-step P/C ({p3c3}) should beat 1-step predictor-only ({p1})"
+    );
+}
+
+#[test]
+fn moderate_nfe_sde_beats_ode() {
+    // Figure 1's headline shape: at a moderate budget, τ≈1 beats τ=0.
+    let wl = workloads::latent_analog();
+    let model = wl.model();
+    let run = |tau: f64| {
+        let cfg = SamplerConfig { nfe: 40, tau, ..SamplerConfig::sa_default() };
+        // Average over seeds to tame metric noise.
+        (0..3)
+            .map(|s| evaluate(&*model, &wl, &cfg, 2048, s).sim_fid)
+            .sum::<f64>()
+            / 3.0
+    };
+    let ode = run(0.0);
+    let sde = run(1.0);
+    assert!(
+        sde < ode * 1.3,
+        "SDE (tau=1, fid={sde}) should be at least comparable to ODE (fid={ode}) at NFE=40"
+    );
+}
+
+#[test]
+fn score_error_degrades_all_samplers_monotonically() {
+    // Figure 4's ε axis: quality degrades with score error for every τ.
+    use sadiff::models::{GmmAnalytic, PerturbedModel};
+    let wl = workloads::cifar_analog();
+    let run = |tau: f64, eps: f64| {
+        let model = PerturbedModel::new(GmmAnalytic::new(wl.gmm.clone()), eps, 42);
+        let cfg = SamplerConfig { nfe: 31, tau, ..SamplerConfig::sa_default() };
+        (0..2)
+            .map(|s| evaluate(&model, &wl, &cfg, 1024, s).sim_fid)
+            .sum::<f64>()
+            / 2.0
+    };
+    for tau in [0.0, 1.0] {
+        let clean = run(tau, 0.0);
+        let dirty = run(tau, 0.8);
+        assert!(
+            dirty > clean,
+            "tau={tau}: score error should degrade quality ({clean} -> {dirty})"
+        );
+    }
+}
+
+#[test]
+fn exogenous_error_amplification_scales_with_tau() {
+    // The documented substrate deviation (fig4 module docs): with
+    // exogenous additive model error, the SDE's larger per-step model
+    // mass amplifies error — degradation grows with τ. This pins the
+    // analysis so any future change in behaviour is surfaced.
+    use sadiff::models::{GmmAnalytic, PerturbedModel};
+    let wl = workloads::cifar_analog();
+    let run = |tau: f64, eps: f64| {
+        let model = PerturbedModel::new(GmmAnalytic::new(wl.gmm.clone()), eps, 42);
+        let cfg = SamplerConfig { nfe: 31, tau, ..SamplerConfig::sa_default() };
+        (0..2)
+            .map(|s| evaluate(&model, &wl, &cfg, 1024, s).sim_fid)
+            .sum::<f64>()
+            / 2.0
+    };
+    let deg = |tau: f64| run(tau, 0.8) - run(tau, 0.0);
+    let d0 = deg(0.0);
+    let d1 = deg(1.0);
+    assert!(
+        d1 > d0,
+        "SDE degradation ({d1}) should exceed ODE degradation ({d0}) under exogenous error"
+    );
+}
+
+#[test]
+fn all_solvers_reasonable_at_high_nfe() {
+    // Every baseline must actually work: generous quality bar at NFE=63.
+    let wl = workloads::latent_analog();
+    let model = wl.model();
+    for kind in SolverKind::all() {
+        let cfg = SamplerConfig { nfe: 63, ..SamplerConfig::for_solver(*kind) };
+        let row = evaluate(&*model, &wl, &cfg, 1024, 5);
+        assert!(
+            row.sim_fid.is_finite() && row.sim_fid < 5.0,
+            "{kind:?}: sim_fid={} at NFE=63",
+            row.sim_fid
+        );
+    }
+}
+
+#[test]
+fn interval_tau_runs_on_ve_workload() {
+    // The paper's piecewise-constant τ on the VE schedule (§E.1).
+    use sadiff::config::TauKind;
+    let wl = workloads::cifar_analog();
+    let model = wl.model();
+    let cfg = SamplerConfig {
+        nfe: 23,
+        tau: 0.8,
+        tau_kind: TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 },
+        ..SamplerConfig::sa_default()
+    };
+    let row = evaluate(&*model, &wl, &cfg, 1024, 9);
+    assert!(row.sim_fid.is_finite() && row.sim_fid < 3.0, "fid={}", row.sim_fid);
+}

@@ -1,0 +1,256 @@
+//! Property tests over the solver machinery (in-repo harness,
+//! `testsupport`): randomized grids, τ shapes, orders and schedules.
+
+use sadiff::config::Prediction;
+use sadiff::gmm::Gmm;
+use sadiff::lagrange::{exp_moments, lagrange_basis_coeffs, poly_eval};
+use sadiff::models::GmmAnalytic;
+use sadiff::rng::normal::PhiloxNormal;
+use sadiff::schedule::{timesteps, NoiseSchedule, StepSelector};
+use sadiff::solvers::coeffs::{coefficients, StepEnds};
+use sadiff::solvers::sa::{SaSolver, SaSolverOpts};
+use sadiff::solvers::Grid;
+use sadiff::tau::TauFn;
+use sadiff::testsupport::{check, PropConfig};
+use sadiff::prop_assert;
+
+fn random_ends(g: &mut sadiff::testsupport::Gen) -> StepEnds {
+    let lam_s = g.f64_in(-3.0, 2.0);
+    let lam_t = lam_s + g.f64_in(0.02, 1.5);
+    let alpha = |l: f64| (1.0 / (1.0 + (-2.0 * l).exp())).sqrt();
+    StepEnds {
+        lam_s,
+        lam_t,
+        alpha_s: alpha(lam_s),
+        alpha_t: alpha(lam_t),
+        sigma_s: (1.0 - alpha(lam_s).powi(2)).sqrt(),
+        sigma_t: (1.0 - alpha(lam_t).powi(2)).sqrt(),
+    }
+}
+
+fn random_tau(g: &mut sadiff::testsupport::Gen) -> TauFn {
+    match g.usize_in(0, 2) {
+        0 => TauFn::Constant(g.f64_in(0.0, 1.8)),
+        1 => TauFn::interval_from_sigma(g.f64_in(0.1, 1.5), 0.05, 1.0),
+        _ => TauFn::Linear { a: g.f64_in(0.0, 1.0), b: g.f64_in(-0.3, 0.3) },
+    }
+}
+
+#[test]
+fn prop_coefficient_mass_conservation() {
+    // Σ_j b_j equals the one-node coefficient for ANY node layout — the
+    // interpolation of a constant recovers the total integral mass.
+    check(PropConfig { cases: 120, seed: 11 }, |g| {
+        let ends = random_ends(g);
+        let tau = random_tau(g);
+        let s = g.usize_in(1, 4);
+        let mut nodes = vec![ends.lam_s];
+        for _ in 1..s {
+            nodes.push(ends.lam_s - g.f64_in(0.05, 1.0) * g.usize_in(1, 3) as f64);
+        }
+        nodes.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+        let pred = if g.bool() { Prediction::Data } else { Prediction::Noise };
+        let full = coefficients(&nodes, &ends, &tau, pred);
+        let one = coefficients(&[nodes[0]], &ends, &tau, pred);
+        let total: f64 = full.b.iter().sum();
+        prop_assert!(
+            (total - one.b[0]).abs() < 1e-8 * (1.0 + one.b[0].abs()),
+            "mass mismatch: Σb={total} vs {} (nodes {nodes:?}, tau {tau:?}, {pred:?})",
+            one.b[0]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_noise_std_nonnegative_and_bounded() {
+    // σ̃ ≥ 0 always; for data prediction σ̃ ≤ σ_t (Prop 4.2); Corollary A.2:
+    // noise-prediction σ̃ dominates data-prediction σ̃.
+    check(PropConfig { cases: 150, seed: 12 }, |g| {
+        let ends = random_ends(g);
+        let tau = random_tau(g);
+        let d = coefficients(&[ends.lam_s], &ends, &tau, Prediction::Data);
+        let n = coefficients(&[ends.lam_s], &ends, &tau, Prediction::Noise);
+        prop_assert!(d.sigma_tilde >= 0.0 && n.sigma_tilde >= 0.0, "negative σ̃");
+        prop_assert!(
+            d.sigma_tilde <= ends.sigma_t * (1.0 + 1e-12),
+            "data σ̃ {} > σ_t {}",
+            d.sigma_tilde,
+            ends.sigma_t
+        );
+        prop_assert!(
+            n.sigma_tilde >= d.sigma_tilde - 1e-12,
+            "Cor A.2 violated: noise {} < data {} (tau {tau:?})",
+            n.sigma_tilde,
+            d.sigma_tilde
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lagrange_partition_of_unity() {
+    check(PropConfig { cases: 100, seed: 13 }, |g| {
+        let s = g.usize_in(1, 5);
+        let nodes = g.increasing(s, -4.0, 0.0);
+        let cs = lagrange_basis_coeffs(&nodes);
+        let u = g.f64_in(-4.5, 0.5);
+        let total: f64 = cs.iter().map(|c| poly_eval(c, u)).sum();
+        prop_assert!((total - 1.0).abs() < 1e-7, "Σ l_j({u}) = {total}, nodes {nodes:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exp_moments_sign_and_magnitude() {
+    // I_k(a, h) has sign (−1)^k (integrand over negative u) and
+    // |I_k| ≤ h^k · |I_0-ish envelope|.
+    check(PropConfig { cases: 120, seed: 14 }, |g| {
+        let a = g.f64_in(-3.0, 3.0);
+        let h = g.f64_in(1e-4, 2.0);
+        let ms = exp_moments(a, h, 4);
+        for (k, m) in ms.iter().enumerate() {
+            let sign_ok = if k % 2 == 0 { *m >= 0.0 } else { *m <= 0.0 };
+            prop_assert!(sign_ok, "I_{k}(a={a}, h={h}) = {m} has wrong sign");
+            prop_assert!(
+                m.abs() <= h.powi(k as i32) * h * (a.abs() * h).exp() + 1e-12,
+                "I_{k}(a={a}, h={h}) = {m} too large"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_finite_on_random_configs() {
+    // Any (schedule, selector, order, τ, M) combination must produce
+    // finite samples — no NaN/Inf escape hatches.
+    check(PropConfig { cases: 40, seed: 15 }, |g| {
+        let sch = *g.choice(&[
+            NoiseSchedule::vp_linear(),
+            NoiseSchedule::vp_cosine(),
+            NoiseSchedule::ve(),
+            NoiseSchedule::edm(),
+        ]);
+        let sel = *g.choice(&[
+            StepSelector::UniformT,
+            StepSelector::UniformLambda,
+            StepSelector::EdmRho { rho: 7.0 },
+        ]);
+        let m = g.usize_in(2, 24);
+        let grid = Grid::new(&sch, timesteps(&sch, sel, m));
+        let opts = SaSolverOpts {
+            predictor_steps: g.usize_in(1, 4),
+            corrector_steps: g.usize_in(0, 4),
+            prediction: if g.bool() { Prediction::Data } else { Prediction::Noise },
+            tau: random_tau(g),
+        };
+        let model = GmmAnalytic::new(Gmm::structured(3, 2, 1.5, g.case as u64));
+        let mut noise = PhiloxNormal::new(g.case as u64);
+        let mut x = sadiff::solvers::prior_sample(&grid, 3, 4, &mut noise);
+        SaSolver::new(opts.clone()).solve(&model, &grid, &mut x, 4, &mut noise);
+        prop_assert!(
+            x.iter().all(|v| v.is_finite()),
+            "non-finite output: sch {:?} sel {sel:?} m {m} opts {opts:?}",
+            sch.kind
+        );
+        // Data-prediction updates are convex-ish combinations of bounded
+        // quantities — terminal states stay in a generous data envelope.
+        // Noise prediction at coarse grids legitimately explodes (that IS
+        // Table 1's phenomenon), so only finiteness is required there.
+        if opts.prediction == Prediction::Data {
+            let max = x.iter().fold(0.0f64, |acc, v| acc.max(v.abs()));
+            prop_assert!(max < 100.0, "exploding samples: max |x| = {max} (opts {opts:?})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_lambda_inversion() {
+    check(PropConfig { cases: 100, seed: 16 }, |g| {
+        let sch = *g.choice(&[
+            NoiseSchedule::vp_linear(),
+            NoiseSchedule::vp_cosine(),
+            NoiseSchedule::ve(),
+            NoiseSchedule::edm(),
+        ]);
+        let t = g.f64_in(sch.t_min.max(1e-3), sch.t_max);
+        let lam = sch.lambda(t);
+        let t2 = sch.t_of_lambda(lam);
+        prop_assert!(
+            (t - t2).abs() < 1e-5 * (1.0 + t.abs()),
+            "{:?}: t={t} → λ={lam} → t'={t2}",
+            sch.kind
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    // Random JSON value trees survive serialize → parse unchanged.
+    use sadiff::jsonlite::{parse, to_string, Value};
+    fn gen_value(g: &mut sadiff::testsupport::Gen, depth: usize) -> Value {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.f64_in(-1e6, 1e6) * 64.0).round() / 64.0),
+            3 => Value::Str(
+                (0..g.usize_in(0, 8))
+                    .map(|_| *g.choice(&['a', 'Ω', '"', '\\', '\n', 'z']))
+                    .collect(),
+            ),
+            4 => Value::Array((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Value::Object(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(PropConfig { cases: 200, seed: 77 }, |g| {
+        let v = gen_value(g, 3);
+        let s = to_string(&v);
+        let back = parse(&s).map_err(|e| format!("parse failed on {s}: {e}"))?;
+        prop_assert!(back == v, "roundtrip mismatch: {v:?} -> {s} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_config_json_roundtrip() {
+    use sadiff::config::{Prediction, SamplerConfig, SolverKind, TauKind};
+    check(PropConfig { cases: 120, seed: 78 }, |g| {
+        let mut cfg = SamplerConfig::for_solver(*g.choice(SolverKind::all()));
+        cfg.nfe = g.usize_in(1, 200);
+        cfg.tau = g.f64_in(0.0, 1.6);
+        cfg.predictor_steps = g.usize_in(1, 6);
+        cfg.corrector_steps = g.usize_in(0, 6);
+        cfg.prediction = if g.bool() { Prediction::Data } else { Prediction::Noise };
+        if g.bool() {
+            cfg.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
+        }
+        let back = SamplerConfig::from_json(&cfg.to_json())
+            .map_err(|e| format!("rejected own serialization: {e}"))?;
+        prop_assert!(back == cfg, "roundtrip mismatch: {cfg:?} vs {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_philox_batch_invariance() {
+    // Per-lane noise never depends on how many lanes are drawn.
+    use sadiff::rng::Philox4x32;
+    check(PropConfig { cases: 60, seed: 79 }, |g| {
+        let gen = Philox4x32::new(g.case as u64 * 7919);
+        let lane = g.usize_in(0, 7) as u64;
+        let step = g.usize_in(0, 100) as u64;
+        let len_a = g.usize_in(1, 65);
+        let len_b = g.usize_in(len_a, 130);
+        let a = gen.normals(lane, step, len_a);
+        let b = gen.normals(lane, step, len_b);
+        prop_assert!(a[..] == b[..len_a], "prefix mismatch at lane {lane} step {step}");
+        Ok(())
+    });
+}
