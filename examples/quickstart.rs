@@ -29,7 +29,10 @@ fn main() {
     //    moderate NFE the SDE setting should win (paper Fig. 1).
     let ode = SamplerConfig { tau: 0.0, ..cfg.clone() };
     let row0 = evaluate(&*model, &wl, &ode, 1024, 0);
-    println!("ODE limit (tau=0): sim-FID = {:.4}   sliced-W2 = {:.4}", row0.sim_fid, row0.sliced_w2);
+    println!(
+        "ODE limit (tau=0): sim-FID = {:.4}   sliced-W2 = {:.4}",
+        row0.sim_fid, row0.sliced_w2
+    );
 
     // 5. NFE sweep: quality improves with budget.
     println!("\nNFE sweep (tau=1):");

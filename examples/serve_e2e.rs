@@ -39,6 +39,7 @@ fn main() {
         batch_deadline_ms: 25,
         workers: 2,
         queue_cap: 512,
+        threads: 0, // lane-parallel executor: auto-size to the cores
     };
     let handle = Server::bind(server_cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();

@@ -1,0 +1,85 @@
+//! `cargo bench --bench bench_exec_smoke` — deterministic perf smoke for
+//! the lane-parallel executor: times a 256-lane SA-Solver solve
+//! sequentially and on the auto-sized worker pool, asserts the outputs are
+//! bit-identical, and writes a `BENCH_exec_smoke.json` artifact for the
+//! perf trajectory (CI uploads it per run).
+//!
+//! Flags: `--quick` (smaller solve), `--out <path>` (default
+//! `BENCH_exec_smoke.json`). Exits non-zero if parallel output diverges
+//! from sequential — the determinism invariant is the bench's correctness
+//! gate, while the speedup number is reported, not asserted (CI runners
+//! have noisy neighbours).
+
+use sadiff::config::SamplerConfig;
+use sadiff::exec::Executor;
+use sadiff::gmm::Gmm;
+use sadiff::jsonlite::{to_string, Value};
+use sadiff::models::GmmAnalytic;
+use sadiff::schedule::NoiseSchedule;
+use sadiff::solvers::{run, run_parallel};
+use sadiff::util::timing::time_it;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_exec_smoke.json")
+        .to_string();
+
+    let (lanes, dim, nfe, iters) =
+        if quick { (64usize, 16usize, 8usize, 3usize) } else { (256, 16, 20, 5) };
+    let model = GmmAnalytic::new(Gmm::structured(dim, 5, 2.0, 404));
+    let sch = NoiseSchedule::vp_linear();
+    let cfg = SamplerConfig { nfe, tau: 1.0, ..SamplerConfig::sa_default() };
+    let par_exec = Executor::auto();
+    let threads = par_exec.threads();
+
+    // Determinism gate first (also warms both paths).
+    let seq_out = run(&model, &sch, &cfg, lanes, 7);
+    let par_out = run_parallel(&model, &sch, &cfg, lanes, 7, &par_exec);
+    let identical = seq_out.samples == par_out.samples;
+
+    let (seq_mean, seq_min) = time_it(iters, || {
+        std::hint::black_box(run(&model, &sch, &cfg, lanes, 7));
+    });
+    let (par_mean, par_min) = time_it(iters, || {
+        std::hint::black_box(run_parallel(&model, &sch, &cfg, lanes, 7, &par_exec));
+    });
+    let speedup = seq_min / par_min.max(1e-12);
+
+    println!(
+        "exec smoke: {lanes} lanes, dim {dim}, NFE {nfe}, {threads} threads: \
+         seq {:.2} ms, par {:.2} ms → {:.2}x (identical: {identical})",
+        seq_mean * 1e3,
+        par_mean * 1e3,
+        speedup
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::Str("exec_smoke".into())),
+        ("lanes", Value::Num(lanes as f64)),
+        ("dim", Value::Num(dim as f64)),
+        ("nfe", Value::Num(nfe as f64)),
+        ("threads", Value::Num(threads as f64)),
+        ("seq_mean_ms", Value::Num(seq_mean * 1e3)),
+        ("seq_min_ms", Value::Num(seq_min * 1e3)),
+        ("par_mean_ms", Value::Num(par_mean * 1e3)),
+        ("par_min_ms", Value::Num(par_min * 1e3)),
+        ("speedup_min", Value::Num(speedup)),
+        ("identical", Value::Bool(identical)),
+    ]);
+    if let Err(e) = std::fs::write(&out_path, format!("{}\n", to_string(&report))) {
+        eprintln!("cannot write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out_path}");
+
+    if !identical {
+        eprintln!("FAIL: parallel output is not bit-identical to sequential");
+        std::process::exit(1);
+    }
+}

@@ -295,6 +295,13 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Upper bound on queued requests before shedding load.
     pub queue_cap: usize,
+    /// Lane-parallel executor threads *within* one batch's solver loop
+    /// (`exec::Executor`); `0` = auto (one per available core). Output is
+    /// bit-identical for any value. Distinct from `workers`, which
+    /// parallelizes across independent batches — the default stays `1`
+    /// (sequential per batch) so `workers × threads` cannot oversubscribe
+    /// the host unless explicitly requested.
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -305,6 +312,7 @@ impl Default for ServerConfig {
             batch_deadline_ms: 5,
             workers: 2,
             queue_cap: 256,
+            threads: 1,
         }
     }
 }
@@ -312,12 +320,14 @@ impl Default for ServerConfig {
 impl ServerConfig {
     pub fn from_json(v: &Value) -> Result<Self> {
         let d = Self::default();
+        let deadline_ms = v.opt_usize("batch_deadline_ms", d.batch_deadline_ms as usize);
         Ok(ServerConfig {
             addr: v.opt_str("addr", &d.addr).to_string(),
             max_batch: v.opt_usize("max_batch", d.max_batch),
-            batch_deadline_ms: v.opt_usize("batch_deadline_ms", d.batch_deadline_ms as usize) as u64,
+            batch_deadline_ms: deadline_ms as u64,
             workers: v.opt_usize("workers", d.workers).max(1),
             queue_cap: v.opt_usize("queue_cap", d.queue_cap),
+            threads: v.opt_usize("threads", d.threads),
         })
     }
 }
@@ -409,5 +419,9 @@ mod tests {
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.workers, 1); // clamped
         assert_eq!(c.addr, ServerConfig::default().addr);
+        assert_eq!(c.threads, 1); // default: sequential within a batch
+
+        let v = jsonlite::parse(r#"{"threads": 3}"#).unwrap();
+        assert_eq!(ServerConfig::from_json(&v).unwrap().threads, 3);
     }
 }

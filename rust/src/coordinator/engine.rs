@@ -4,20 +4,27 @@
 
 use crate::config::SamplerConfig;
 use crate::coordinator::request::{SampleRequest, SampleResponse};
+use crate::exec::Executor;
 use crate::models::ModelEval;
-use crate::rng::normal::NormalSource;
+use crate::rng::normal::{NormalSource, SplitNoise};
 use crate::rng::Philox4x32;
-use crate::solvers::{run_with_noise, SolveOutput};
+use crate::solvers::{run_chunked, SolveOutput};
 use crate::util::timing::Stopwatch;
 use crate::workloads::Workload;
+use std::sync::Arc;
 
 /// Per-request noise streams inside a merged batch: global lane `l` maps to
 /// (request r, local lane) and draws from request r's own Philox key, so
-/// lane noise is identical to an unbatched run of that request.
+/// lane noise is identical to an unbatched run of that request. The tables
+/// live behind `Arc` so [`SplitNoise::split_lanes`] is O(1) per worker
+/// chunk (no per-batch copies on the serving hot path).
 pub struct CompositeNormal {
-    gens: Vec<Philox4x32>,
+    gens: Arc<Vec<Philox4x32>>,
     /// (generator index, local lane) per global lane.
-    lane_map: Vec<(usize, u64)>,
+    lane_map: Arc<Vec<(usize, u64)>>,
+    /// Global lane this instance's local stream 0 refers to (worker shards
+    /// of a chunked solve; 0 for the parent).
+    lane0: usize,
 }
 
 impl CompositeNormal {
@@ -31,14 +38,27 @@ impl CompositeNormal {
                 lane_map.push((gi, local as u64));
             }
         }
-        CompositeNormal { gens, lane_map }
+        CompositeNormal { gens: Arc::new(gens), lane_map: Arc::new(lane_map), lane0: 0 }
     }
 }
 
 impl NormalSource for CompositeNormal {
     fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]) {
-        let (gi, local) = self.lane_map[stream as usize % self.lane_map.len()];
+        let lane = (self.lane0 + stream as usize) % self.lane_map.len();
+        let (gi, local) = self.lane_map[lane];
         self.gens[gi].normals_into(local, step, out);
+    }
+}
+
+impl SplitNoise for CompositeNormal {
+    fn split_lanes(&self, lane0: usize) -> Box<dyn NormalSource + Send> {
+        // Shared tables + an offset: each worker draws exactly the streams
+        // the sequential run draws for its lanes (Philox is counter-keyed).
+        Box::new(CompositeNormal {
+            gens: self.gens.clone(),
+            lane_map: self.lane_map.clone(),
+            lane0: self.lane0 + lane0,
+        })
     }
 }
 
@@ -51,8 +71,21 @@ pub fn sample(
     n: usize,
     seed: u64,
 ) -> SolveOutput {
-    let mut noise = CompositeNormal::new(&[(seed, n)]);
-    run_with_noise(model, &wl.schedule, cfg, n, &mut noise)
+    sample_with(model, wl, cfg, n, seed, &Executor::sequential())
+}
+
+/// [`sample`] with an explicit lane-parallel executor (bit-identical output
+/// for any thread count).
+pub fn sample_with(
+    model: &dyn ModelEval,
+    wl: &Workload,
+    cfg: &SamplerConfig,
+    n: usize,
+    seed: u64,
+    exec: &Executor,
+) -> SolveOutput {
+    let noise = CompositeNormal::new(&[(seed, n)]);
+    run_chunked(model, &wl.schedule, cfg, n, &noise, exec)
 }
 
 /// One row of an experiment table: solver quality at a configuration.
@@ -72,8 +105,20 @@ pub fn evaluate(
     n: usize,
     seed: u64,
 ) -> EvalRow {
+    evaluate_with(model, wl, cfg, n, seed, &Executor::sequential())
+}
+
+/// [`evaluate`] with an explicit lane-parallel executor.
+pub fn evaluate_with(
+    model: &dyn ModelEval,
+    wl: &Workload,
+    cfg: &SamplerConfig,
+    n: usize,
+    seed: u64,
+    exec: &Executor,
+) -> EvalRow {
     let sw = Stopwatch::start();
-    let out = sample(model, wl, cfg, n, seed);
+    let out = sample_with(model, wl, cfg, n, seed, exec);
     let wall_s = sw.secs();
     let reference = wl.reference(n, seed ^ 0x5a5a);
     let sim_fid = crate::metrics::sim_fid(&out.samples, &reference, wl.dim())
@@ -90,12 +135,25 @@ pub fn run_batch(
     cfg: &SamplerConfig,
     requests: &[SampleRequest],
 ) -> Vec<SampleResponse> {
+    run_batch_with(model, wl, cfg, requests, &Executor::sequential())
+}
+
+/// [`run_batch`] with an explicit lane-parallel executor: the merged batch's
+/// lanes are chunked across worker threads, and per-request Philox streams
+/// keep every request's samples identical to an unbatched sequential run.
+pub fn run_batch_with(
+    model: &dyn ModelEval,
+    wl: &Workload,
+    cfg: &SamplerConfig,
+    requests: &[SampleRequest],
+    exec: &Executor,
+) -> Vec<SampleResponse> {
     debug_assert!(!requests.is_empty());
     let sw = Stopwatch::start();
     let members: Vec<(u64, usize)> = requests.iter().map(|r| (r.seed, r.n)).collect();
     let total_n: usize = members.iter().map(|(_, n)| n).sum();
-    let mut noise = CompositeNormal::new(&members);
-    let out = run_with_noise(model, &wl.schedule, cfg, total_n, &mut noise);
+    let noise = CompositeNormal::new(&members);
+    let out = run_chunked(model, &wl.schedule, cfg, total_n, &noise, exec);
     let wall_ms = sw.millis();
     let dim = out.dim;
 
@@ -166,6 +224,24 @@ mod tests {
         let alone_s = alone[0].samples.as_ref().unwrap();
         let merged_s = merged[1].samples.as_ref().unwrap();
         assert_eq!(alone_s, merged_s);
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential_batch() {
+        // Lane-chunked batch execution must not change any request's
+        // samples or NFE accounting, for uneven request sizes.
+        let wl = workloads::latent_analog();
+        let model = wl.model();
+        let cfg = SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() };
+        let reqs = [req(0, 5, 999), req(1, 3, 111), req(2, 2, 222)];
+        let seq = run_batch(&*model, &wl, &cfg, &reqs);
+        for threads in [2usize, 3, 16] {
+            let par = run_batch_with(&*model, &wl, &cfg, &reqs, &Executor::new(threads));
+            for (a, b) in seq.iter().zip(&par) {
+                assert_eq!(a.samples, b.samples, "threads={threads}");
+                assert_eq!(a.nfe, b.nfe);
+            }
+        }
     }
 
     #[test]

@@ -13,9 +13,10 @@
 
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::engine::run_batch;
+use crate::coordinator::engine::run_batch_with;
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::request::{SampleRequest, SampleResponse};
+use crate::exec::Executor;
 use crate::jsonlite::{parse, to_string, Value};
 use crate::models::ModelEval;
 use crate::runtime::{HloModel, RuntimeHost};
@@ -36,6 +37,9 @@ struct Shared {
     metrics: ServingMetrics,
     cfg: ServerConfig,
     shutdown: AtomicBool,
+    /// Lane-parallel executor used inside each batch's solver loop
+    /// (`cfg.threads`; bit-identical output for any thread count).
+    exec: Executor,
     /// Lazily started PJRT runtime host (only if a request needs it).
     runtime: Mutex<Option<Arc<RuntimeHost>>>,
 }
@@ -90,6 +94,7 @@ impl Server {
             }),
             cond: Condvar::new(),
             metrics: ServingMetrics::new(),
+            exec: Executor::new(cfg.threads),
             cfg,
             shutdown: AtomicBool::new(false),
             runtime: Mutex::new(None),
@@ -298,7 +303,7 @@ fn execute_group(shared: &Arc<Shared>, group: &[SampleRequest]) -> Vec<SampleRes
         wl.model()
     };
     let total: usize = group.iter().map(|r| r.n).sum();
-    let responses = run_batch(&*model, &wl, &first.cfg, group);
+    let responses = run_batch_with(&*model, &wl, &first.cfg, group, &shared.exec);
     let nfe = responses.first().map(|r| r.nfe).unwrap_or(0);
     shared.metrics.observe_batch(group.len(), total, nfe);
     responses

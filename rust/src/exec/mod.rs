@@ -1,0 +1,198 @@
+//! Deterministic lane-parallel executor: a std-thread chunked worker pool
+//! (tokio/rayon are not in the offline vendor set — see
+//! `coordinator::server`) that splits the `n` independent lanes of a solve
+//! into per-thread contiguous chunks.
+//!
+//! Determinism contract: every per-lane computation in this codebase is
+//! keyed by the lane's *global* index — Philox noise streams use
+//! `(stream = lane, step)` counters and model evaluations are row-wise —
+//! so executing lanes `[lo, hi)` on a worker with a lane-offset noise
+//! source produces bit-identical results to the same lanes inside a
+//! sequential full-batch run. `solvers::run_chunked` relies on exactly
+//! this invariant (asserted for every `SolverKind` in `solvers::tests`),
+//! which is the same invariant `coordinator::engine` already maintains for
+//! request batching.
+//!
+//! Scheduling is static (equal-size contiguous chunks) rather than
+//! work-stealing: lanes of one solve are homogeneous, so static chunks
+//! avoid any cross-thread queue traffic on the hot path.
+
+use std::num::NonZeroUsize;
+use std::ops::Range;
+
+/// Number of worker threads the `0 = auto` knob resolves to: the
+/// `SADIFF_THREADS` env var when set to a positive integer (global
+/// override for benches/experiments without a CLI knob), else one per
+/// available core.
+pub fn auto_threads() -> usize {
+    if let Some(n) = std::env::var("SADIFF_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        if n > 0 {
+            return n;
+        }
+    }
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Split `0..n` into at most `parts` contiguous, non-empty, balanced
+/// ranges (sizes differ by at most one; earlier chunks are larger).
+pub fn chunks(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// A fixed-width worker pool. Threads are scoped per call (no idle pool to
+/// manage or shut down); the thread count is the only state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Executor {
+    /// `threads = 0` means auto (one per available core).
+    pub fn new(threads: usize) -> Executor {
+        let threads = if threads == 0 { auto_threads() } else { threads };
+        Executor { threads }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Executor {
+        Executor::new(0)
+    }
+
+    /// Single-threaded executor (runs everything inline on the caller).
+    pub fn sequential() -> Executor {
+        Executor { threads: 1 }
+    }
+
+    /// Resolved worker count (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` once per chunk of `0..n` (at most [`Self::threads`] chunks,
+    /// one scoped thread each) and return the per-chunk results in chunk
+    /// order. With one chunk, `f` runs inline on the caller thread.
+    pub fn run_chunks<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        let ranges = chunks(n, self.threads);
+        if ranges.len() <= 1 {
+            return ranges.into_iter().map(f).collect();
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .into_iter()
+                .map(|r| {
+                    std::thread::Builder::new()
+                        .name(format!("sadiff-exec-{}", r.start))
+                        .spawn_scoped(s, move || f(r))
+                        .expect("spawn exec worker")
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("exec worker panicked")).collect()
+        })
+    }
+
+    /// Parallel map over independent items, preserving item order. Each
+    /// worker handles one contiguous chunk of the item list.
+    pub fn map<I, T, F>(&self, items: &[I], f: F) -> Vec<T>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(usize, &I) -> T + Sync,
+    {
+        self.run_chunks(items.len(), |r| r.map(|i| f(i, &items[i])).collect::<Vec<T>>())
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_and_balance() {
+        // n % threads != 0: sizes differ by at most one, cover 0..n in order.
+        let cs = chunks(10, 4);
+        assert_eq!(cs, vec![0..3, 3..6, 6..8, 8..10]);
+        // n < threads: one lane per chunk, no empty chunks.
+        let cs = chunks(3, 8);
+        assert_eq!(cs, vec![0..1, 1..2, 2..3]);
+        // threads = 1: a single full-width chunk.
+        assert_eq!(chunks(7, 1), vec![0..7]);
+        // n = 0: nothing to do.
+        assert!(chunks(0, 4).is_empty());
+        // Exact division.
+        assert_eq!(chunks(8, 4), vec![0..2, 2..4, 4..6, 6..8]);
+    }
+
+    #[test]
+    fn executor_resolves_thread_count() {
+        assert!(Executor::new(0).threads() >= 1);
+        assert_eq!(Executor::new(3).threads(), 3);
+        assert_eq!(Executor::sequential().threads(), 1);
+        assert_eq!(Executor::default().threads(), Executor::auto().threads());
+    }
+
+    #[test]
+    fn run_chunks_matches_sequential_order() {
+        for (n, threads) in [(10usize, 4usize), (3, 8), (7, 1), (16, 4), (1, 4), (0, 2)] {
+            let exec = Executor::new(threads);
+            let got: Vec<usize> = exec
+                .run_chunks(n, |r| r.collect::<Vec<_>>())
+                .into_iter()
+                .flatten()
+                .collect();
+            let want: Vec<usize> = (0..n).collect();
+            assert_eq!(got, want, "n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_preserves_order_and_indices() {
+        let items: Vec<u64> = (0..23).collect();
+        for threads in [1usize, 2, 5, 64] {
+            let exec = Executor::new(threads);
+            let got = exec.map(&items, |i, v| (i, v * 2));
+            for (i, (gi, gv)) in got.iter().enumerate() {
+                assert_eq!(*gi, i);
+                assert_eq!(*gv, items[i] * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_reduction() {
+        let seq: Vec<u64> = Executor::sequential()
+            .run_chunks(100, |r| r.map(|i| (i as u64) * (i as u64)).sum::<u64>());
+        let par: u64 = Executor::new(7)
+            .run_chunks(100, |r| r.map(|i| (i as u64) * (i as u64)).sum::<u64>())
+            .into_iter()
+            .sum();
+        assert_eq!(seq.into_iter().sum::<u64>(), par);
+    }
+}

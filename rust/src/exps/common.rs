@@ -1,4 +1,7 @@
-//! Shared experiment plumbing: run scales and aligned text tables.
+//! Shared experiment plumbing: run scales, aligned text tables, and
+//! row-parallel table construction over the `exec` worker pool.
+
+use crate::exec::Executor;
 
 /// Experiment scale: `Quick` for CI/tests, `Full` for EXPERIMENTS.md runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,6 +101,28 @@ impl Table {
     }
 }
 
+/// Compute independent table rows in parallel (one row per grid point),
+/// preserving row order. Each row's cells are computed by `f(item)`; rows
+/// are deterministic per item, so the parallel table equals the sequential
+/// one cell for cell. Sizes to the cores; set `SADIFF_THREADS=1` (or use
+/// [`par_rows_with`]) to force sequential rows for clean measurements.
+pub fn par_rows<I, F>(items: &[I], f: F) -> Vec<Vec<String>>
+where
+    I: Sync,
+    F: Fn(&I) -> Vec<String> + Sync,
+{
+    par_rows_with(&Executor::auto(), items, f)
+}
+
+/// [`par_rows`] on an explicit executor.
+pub fn par_rows_with<I, F>(exec: &Executor, items: &[I], f: F) -> Vec<Vec<String>>
+where
+    I: Sync,
+    F: Fn(&I) -> Vec<String> + Sync,
+{
+    exec.map(items, |_, item| f(item))
+}
+
 /// Format a float for table cells.
 pub fn f(x: f64) -> String {
     if x.is_nan() {
@@ -144,5 +169,15 @@ mod tests {
     fn scales() {
         assert!(Scale::Full.n_samples() > Scale::Quick.n_samples());
         assert_eq!(Scale::from_quick_flag(true), Scale::Quick);
+    }
+
+    #[test]
+    fn par_rows_preserves_order() {
+        let items: Vec<usize> = (0..17).collect();
+        let rows = par_rows(&items, |i| vec![i.to_string(), (i * i).to_string()]);
+        assert_eq!(rows.len(), 17);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row, &vec![i.to_string(), (i * i).to_string()]);
+        }
     }
 }

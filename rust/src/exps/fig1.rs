@@ -40,7 +40,8 @@ pub fn run_one(workload: &str, scale: Scale) -> Table {
         format!("Figure 1 — FID(sim) vs NFE × tau, {workload}"),
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
-    for tau in taus(scale) {
+    // τ rows are independent — compute them on the worker pool.
+    for cells in super::common::par_rows(&taus(scale), |&tau| {
         let mut cells = vec![format!("{tau:.1}")];
         for &nfe in &nfes {
             let cfg = SamplerConfig { nfe, tau, ..SamplerConfig::sa_default() };
@@ -50,6 +51,8 @@ pub fn run_one(workload: &str, scale: Scale) -> Table {
             }
             cells.push(f(acc / scale.n_seeds() as f64));
         }
+        cells
+    }) {
         table.row(cells);
     }
     table.note =

@@ -87,7 +87,13 @@ impl Gmm {
 
     /// Draw `n` samples from the *time-t marginal* given (α, σ) — exact
     /// reference distribution for solver-output comparison.
-    pub fn sample_marginal(&self, rng: &mut Xoshiro256pp, n: usize, alpha: f64, sigma: f64) -> Vec<f64> {
+    pub fn sample_marginal(
+        &self,
+        rng: &mut Xoshiro256pp,
+        n: usize,
+        alpha: f64,
+        sigma: f64,
+    ) -> Vec<f64> {
         let mut out = Vec::with_capacity(n * self.dim);
         for _ in 0..n {
             let k = rng.choose_weighted(&self.weights);

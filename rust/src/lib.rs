@@ -14,7 +14,10 @@
 //!   the per-step hot spots (fused attention, fused SA update).
 //!
 //! Python never runs on the request path: `runtime` loads the
-//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate).
+//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate, behind
+//! the `pjrt` feature — the default build uses a hermetic stub; see
+//! `runtime`). The `exec` module provides the deterministic lane-parallel
+//! executor every solver loop runs on.
 //!
 //! Quickstart:
 //! ```no_run
@@ -26,9 +29,22 @@
 //! println!("generated {} samples of dim {}", out.n, out.dim);
 //! ```
 
+// Crate-wide lint posture for `clippy -- -D warnings` in CI: indexed loops
+// over multiple parallel slices are the clearest form for the fused numeric
+// kernels here, and a few lints only exist on newer clippy versions (hence
+// `unknown_lints` first so the allow list itself stays portable).
+#![allow(unknown_lints)]
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_div_ceil,
+    clippy::io_other_error,
+    clippy::uninlined_format_args
+)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod exps;
 pub mod gmm;
 pub mod jsonlite;
@@ -49,6 +65,7 @@ pub mod workloads;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::config::{SamplerConfig, SolverKind};
+    pub use crate::exec::Executor;
     pub use crate::models::ModelEval;
     pub use crate::rng::Philox4x32;
     pub use crate::schedule::{NoiseSchedule, ScheduleKind, StepSelector};

@@ -23,6 +23,7 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "config", help: "JSON config file", takes_value: true },
         FlagSpec { name: "addr", help: "server address (serve/client)", takes_value: true },
         FlagSpec { name: "workers", help: "worker threads", takes_value: true },
+        FlagSpec { name: "threads", help: "lane-parallel threads (0 = auto)", takes_value: true },
         FlagSpec { name: "max-batch", help: "max requests per batch", takes_value: true },
         FlagSpec { name: "workload", help: "workload name", takes_value: true },
         FlagSpec { name: "model", help: "gmm | artifact:<name>", takes_value: true },
@@ -99,6 +100,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
     let handle = Server::bind(cfg)?.spawn()?;
     println!("sadiff server on {} — Ctrl-C to stop", handle.addr);
     // Block forever; the handle's workers do the serving.
@@ -114,13 +116,15 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let cfg = sampler_config(args)?;
     let n = args.get_usize("n", 512)?;
     let seed = args.get_u64("seed", 0)?;
+    let exec = sadiff::exec::Executor::new(args.get_usize("threads", 0)?);
     let model = wl.model();
-    let row = sadiff::coordinator::engine::evaluate(&*model, &wl, &cfg, n, seed);
+    let row = sadiff::coordinator::engine::evaluate_with(&*model, &wl, &cfg, n, seed, &exec);
     println!(
-        "workload={wl_name} solver={} nfe={} tau={} n={n}",
+        "workload={wl_name} solver={} nfe={} tau={} n={n} threads={}",
         cfg.solver.name(),
         cfg.nfe,
-        cfg.tau
+        cfg.tau,
+        exec.threads()
     );
     println!(
         "sim_fid={:.4} sliced_w2={:.4} nfe_used={} wall_s={:.3}",

@@ -14,7 +14,7 @@ pub mod normal;
 pub mod philox;
 pub mod xoshiro;
 
-pub use normal::NormalSource;
+pub use normal::{NormalSource, SplitNoise};
 pub use philox::Philox4x32;
 pub use xoshiro::Xoshiro256pp;
 

@@ -10,6 +10,28 @@ pub trait NormalSource {
     fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]);
 }
 
+/// A noise source that the lane-chunked executor (`exec`) can split by
+/// lane range: `split_lanes(lane0)` yields an owned source whose *local*
+/// stream `l` draws exactly what the parent draws for *global* stream
+/// `lane0 + l`. Counter-based generators satisfy this for free, which is
+/// what makes parallel solves bit-identical to sequential ones.
+pub trait SplitNoise: Sync {
+    /// An owned per-worker source offset to global lane `lane0`.
+    fn split_lanes(&self, lane0: usize) -> Box<dyn NormalSource + Send>;
+}
+
+/// Wraps a source so local stream `l` maps to global stream `lane0 + l`.
+pub struct LaneOffsetNormal<S> {
+    pub inner: S,
+    pub lane0: u64,
+}
+
+impl<S: NormalSource> NormalSource for LaneOffsetNormal<S> {
+    fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]) {
+        self.inner.fill(self.lane0 + stream, step, out);
+    }
+}
+
 /// Production source: Philox counter RNG (stateless, order-independent).
 pub struct PhiloxNormal {
     gen: Philox4x32,
@@ -24,6 +46,14 @@ impl PhiloxNormal {
 impl NormalSource for PhiloxNormal {
     fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]) {
         self.gen.normals_into(stream, step, out);
+    }
+}
+
+impl SplitNoise for PhiloxNormal {
+    fn split_lanes(&self, lane0: usize) -> Box<dyn NormalSource + Send> {
+        // Philox4x32 is Copy: the worker gets the same keyed generator,
+        // addressed at offset streams.
+        Box::new(LaneOffsetNormal { inner: PhiloxNormal { gen: self.gen }, lane0: lane0 as u64 })
     }
 }
 
@@ -42,12 +72,25 @@ impl NormalSource for RecordedNormal {
     }
 }
 
+impl SplitNoise for RecordedNormal {
+    fn split_lanes(&self, _lane0: usize) -> Box<dyn NormalSource + Send> {
+        // Streams are ignored by replay, so the offset is irrelevant.
+        Box::new(RecordedNormal { table: self.table.clone() })
+    }
+}
+
 /// Zero noise — turns any stochastic solver into its deterministic mean path.
 pub struct ZeroNormal;
 
 impl NormalSource for ZeroNormal {
     fn fill(&mut self, _stream: u64, _step: u64, out: &mut [f64]) {
         out.fill(0.0);
+    }
+}
+
+impl SplitNoise for ZeroNormal {
+    fn split_lanes(&self, _lane0: usize) -> Box<dyn NormalSource + Send> {
+        Box::new(ZeroNormal)
     }
 }
 
@@ -74,6 +117,21 @@ mod tests {
         assert_eq!(out, vec![1.0, 2.0]);
         r.fill(7, 3, &mut out);
         assert_eq!(out, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn split_lanes_matches_offset_streams() {
+        // Worker-local stream l must reproduce global stream lane0 + l.
+        let parent = PhiloxNormal::new(42);
+        let mut split = parent.split_lanes(5);
+        let mut direct = PhiloxNormal::new(42);
+        let mut a = vec![0.0; 12];
+        let mut b = vec![0.0; 12];
+        for (local, step) in [(0u64, 0u64), (2, 3), (7, u64::MAX)] {
+            split.fill(local, step, &mut a);
+            direct.fill(5 + local, step, &mut b);
+            assert_eq!(a, b, "local={local} step={step}");
+        }
     }
 
     #[test]

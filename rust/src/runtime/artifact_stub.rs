@@ -1,0 +1,58 @@
+//! Hermetic stand-in for [`artifact`](self) when the `pjrt` feature is off.
+//!
+//! Same public API as the real module (the rest of `runtime` is compiled
+//! unchanged against either), but `load` fails immediately: without the
+//! feature there is no PJRT client to compile HLO with. Tests and servers
+//! that never touch an `artifact:*` model are unaffected.
+
+use crate::util::error::{Error, Result};
+
+/// A compiled PJRT executable plus its I/O metadata (stub: never loads).
+pub struct Artifact {
+    pub name: String,
+    /// Input shapes, row-major dims per argument (from the manifest).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes per tuple element.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+fn feature_err(name: &str) -> Error {
+    Error::runtime(format!(
+        "artifact '{name}': sadiff was built without the `pjrt` feature; \
+         rebuild with `cargo build --features pjrt` (and real XLA bindings) \
+         to execute AOT artifacts"
+    ))
+}
+
+impl Artifact {
+    /// Always fails: artifact execution needs `--features pjrt`.
+    pub fn load(
+        name: &str,
+        _hlo_path: &str,
+        _input_shapes: Vec<Vec<usize>>,
+        _output_shapes: Vec<Vec<usize>>,
+    ) -> Result<Artifact> {
+        Err(feature_err(name))
+    }
+
+    /// Unreachable in practice (`load` never returns an `Artifact`).
+    pub fn execute_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        Err(feature_err(&self.name))
+    }
+
+    /// Declared batch size (first dim of the first input).
+    pub fn batch_size(&self) -> usize {
+        self.input_shapes.first().and_then(|s| s.first()).copied().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Artifact::load("gmm_denoiser", "x.hlo.txt", vec![], vec![]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -3,6 +3,14 @@
 //! CPU client via the `xla` crate. This is the only module that touches
 //! XLA; everything above it sees `ModelEval`.
 //!
+//! **Feature gate:** real artifact execution requires building with
+//! `--features pjrt`. The default build is hermetic — it compiles a stub
+//! [`artifact`] module with the same API whose `Artifact::load` fails with
+//! a clear runtime error, so the registry, host thread, and everything
+//! above them build and test without any XLA/PJRT shared libraries. The
+//! `pjrt` feature itself links the `xla` dependency (vendored API stub at
+//! `rust/vendor/xla-stub`; deployments patch in the real bindings).
+//!
 //! Two constraints shape the design:
 //! * HLO **text** — not serialized HloModuleProto — is the interchange
 //!   format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
@@ -12,6 +20,10 @@
 //!   thread ([`host::RuntimeHost`]); the rest of the system talks to it
 //!   over channels. `HloModel` (a `ModelEval`) is a thin Send+Sync handle.
 
+#[cfg(feature = "pjrt")]
+pub mod artifact;
+#[cfg(not(feature = "pjrt"))]
+#[path = "artifact_stub.rs"]
 pub mod artifact;
 pub mod hlo_model;
 pub mod host;

@@ -53,8 +53,9 @@ pub fn timesteps(sch: &NoiseSchedule, sel: StepSelector, m: usize) -> Vec<f64> {
             (0..n)
                 .map(|i| {
                     let u = i as f64 / m as f64;
-                    let s = (smax.powf(1.0 / rho) + u * (smin.powf(1.0 / rho) - smax.powf(1.0 / rho)))
-                        .powf(rho);
+                    let lo = smin.powf(1.0 / rho);
+                    let hi = smax.powf(1.0 / rho);
+                    let s = (hi + u * (lo - hi)).powf(rho);
                     sch.t_of_lambda(-s.ln())
                 })
                 .collect()
@@ -125,8 +126,8 @@ mod tests {
         let ts = timesteps(&sch, StepSelector::EdmRho { rho }, m);
         for (i, t) in ts.iter().enumerate() {
             let u = i as f64 / m as f64;
-            let want = (80f64.powf(1.0 / rho) + u * (0.02f64.powf(1.0 / rho) - 80f64.powf(1.0 / rho)))
-                .powf(rho);
+            let (lo, hi) = (0.02f64.powf(1.0 / rho), 80f64.powf(1.0 / rho));
+            let want = (hi + u * (lo - hi)).powf(rho);
             assert!(close(sch.sigma(*t), want, 1e-6, 1e-9), "i={i}");
         }
     }

@@ -100,7 +100,8 @@ fn data_b_exact(
         }
         let a = 1.0 + tp * tp;
         // e^{−W(p1)} damping from the piece end to λ_t, times e^{p1−λ_t}.
-        let scale = ends.alpha_t * (-tau.int_tau2(p1, ends.lam_t)).exp() * (p1 - ends.lam_t).exp() * a;
+        let damp = (-tau.int_tau2(p1, ends.lam_t)).exp() * (p1 - ends.lam_t).exp();
+        let scale = ends.alpha_t * damp * a;
         let shifted: Vec<f64> = nodes.iter().map(|x| x - p1).collect();
         let cs = lagrange_basis_coeffs(&shifted);
         let ms = exp_moments(a, hp, s - 1);
@@ -292,7 +293,8 @@ mod tests {
                     * poly_eval(&cs[j], lam - ends.lam_t)
             };
             // Split at the band boundary λ=0 for quadrature accuracy.
-            let want = ends.alpha_t * (gl.integrate(ends.lam_s, 0.0, f) + gl.integrate(0.0, ends.lam_t, f));
+            let pieces = gl.integrate(ends.lam_s, 0.0, f) + gl.integrate(0.0, ends.lam_t, f);
+            let want = ends.alpha_t * pieces;
             assert!(
                 close(exact.b[j], want, 1e-8, 1e-10),
                 "j={j}: {} vs {want}",

@@ -22,8 +22,9 @@ pub mod sa;
 pub mod unipc;
 
 use crate::config::{SamplerConfig, SolverKind};
+use crate::exec::Executor;
 use crate::models::{CountingModel, EvalCtx, ModelEval};
-use crate::rng::normal::{NormalSource, PhiloxNormal};
+use crate::rng::normal::{NormalSource, PhiloxNormal, SplitNoise};
 use crate::schedule::{timesteps, NoiseSchedule};
 
 /// Result of one solve.
@@ -80,7 +81,13 @@ pub fn prior_sample(grid: &Grid, dim: usize, n: usize, noise: &mut dyn NormalSou
 }
 
 /// Fill per-lane step noise (keeps samples independent of batching).
-pub fn step_noise(noise: &mut dyn NormalSource, step: usize, dim: usize, n: usize, out: &mut [f64]) {
+pub fn step_noise(
+    noise: &mut dyn NormalSource,
+    step: usize,
+    dim: usize,
+    n: usize,
+    out: &mut [f64],
+) {
     for lane in 0..n {
         noise.fill(lane as u64, step as u64, &mut out[lane * dim..(lane + 1) * dim]);
     }
@@ -96,6 +103,52 @@ pub fn run(
 ) -> SolveOutput {
     let mut noise = PhiloxNormal::new(seed);
     run_with_noise(model, sch, cfg, n, &mut noise)
+}
+
+/// Like [`run`], but lane-chunked across `exec`'s worker pool. Bit-identical
+/// to [`run`] for every solver (per-lane Philox streams + row-wise models).
+pub fn run_parallel(
+    model: &dyn ModelEval,
+    sch: &NoiseSchedule,
+    cfg: &SamplerConfig,
+    n: usize,
+    seed: u64,
+    exec: &Executor,
+) -> SolveOutput {
+    run_chunked(model, sch, cfg, n, &PhiloxNormal::new(seed), exec)
+}
+
+/// Lane-chunked execution path shared by the whole solver zoo: split the
+/// `n` lanes into contiguous chunks, run [`run_with_noise`] per chunk with
+/// a lane-offset slice of `noise`'s Philox streams, and concatenate. The
+/// per-lane stream keying makes the result bit-identical to the sequential
+/// run regardless of thread count (asserted in tests for every
+/// [`SolverKind`]).
+pub fn run_chunked(
+    model: &dyn ModelEval,
+    sch: &NoiseSchedule,
+    cfg: &SamplerConfig,
+    n: usize,
+    noise: &dyn SplitNoise,
+    exec: &Executor,
+) -> SolveOutput {
+    if exec.threads() <= 1 || n <= 1 {
+        let mut local = noise.split_lanes(0);
+        return run_with_noise(model, sch, cfg, n, &mut *local);
+    }
+    let dim = model.dim();
+    let outs = exec.run_chunks(n, |lanes| {
+        let mut local = noise.split_lanes(lanes.start);
+        run_with_noise(model, sch, cfg, lanes.len(), &mut *local)
+    });
+    // NFE is per-step model calls, identical in every chunk; report one
+    // chunk's count so batched-vs-parallel accounting matches sequential.
+    let nfe = outs.first().map_or(0, |o| o.nfe);
+    let mut samples = Vec::with_capacity(n * dim);
+    for o in &outs {
+        samples.extend_from_slice(&o.samples);
+    }
+    SolveOutput { samples, n, dim, nfe }
 }
 
 /// Same as [`run`] but with a caller-supplied noise source (tests use this
@@ -214,6 +267,39 @@ mod tests {
         let c = run(&model, &sch, &cfg, 4, 8);
         assert_eq!(a.samples, b.samples);
         assert_ne!(a.samples, c.samples);
+    }
+
+    #[test]
+    fn parallel_executor_bit_identical_for_every_solver() {
+        // The executor determinism contract: for every solver in the zoo,
+        // a lane-chunked parallel run equals the sequential run bitwise,
+        // across chunk-boundary shapes (n % threads != 0, n < threads).
+        let model = tiny_model();
+        let sch = NoiseSchedule::vp_linear();
+        for kind in SolverKind::all() {
+            let mut cfg = SamplerConfig::for_solver(*kind);
+            cfg.nfe = 10;
+            for (n, threads) in [(13usize, 4usize), (3, 8), (8, 2), (5, 1)] {
+                let seq = run(&model, &sch, &cfg, n, 77);
+                let par = run_parallel(&model, &sch, &cfg, n, 77, &Executor::new(threads));
+                assert_eq!(
+                    seq.samples, par.samples,
+                    "{kind:?}: parallel (n={n}, threads={threads}) diverged from sequential"
+                );
+                assert_eq!(seq.nfe, par.nfe, "{kind:?}: NFE accounting diverged");
+                assert_eq!((par.n, par.dim), (seq.n, seq.dim));
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunked_single_thread_is_sequential() {
+        let model = tiny_model();
+        let sch = NoiseSchedule::vp_linear();
+        let cfg = SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() };
+        let seq = run(&model, &sch, &cfg, 6, 3);
+        let one = run_parallel(&model, &sch, &cfg, 6, 3, &Executor::sequential());
+        assert_eq!(seq.samples, one.samples);
     }
 
     #[test]

@@ -104,7 +104,8 @@ impl SaSolver {
             let s_eff = buffer.len().min(self.opts.predictor_steps);
             let nodes: Vec<f64> = buffer.iter().take(s_eff).map(|e| grid.lams[e.idx]).collect();
             let pc = coefficients(&nodes, &ends, &self.opts.tau, self.opts.prediction);
-            apply_update(&pc, x, buffer.iter().take(s_eff).map(|e| e.f.as_slice()), &xi, &mut x_pred);
+            let fs = buffer.iter().take(s_eff).map(|e| e.f.as_slice());
+            apply_update(&pc, x, fs, &xi, &mut x_pred);
 
             // --- Evaluate the model at the prediction (line 6/11).
             model.eval_batch(&x_pred, &grid.ctx(i + 1), &mut f_new);
@@ -203,7 +204,13 @@ fn apply_update<'a>(
 
 /// Monomorphized fused pass for the common small orders (lets the
 /// compiler unroll the buffer loop).
-fn fused_pass<const S: usize>(c: &StepCoeffs, x: &[f64], fs: &[&[f64]], xi: &[f64], out: &mut [f64]) {
+fn fused_pass<const S: usize>(
+    c: &StepCoeffs,
+    x: &[f64],
+    fs: &[&[f64]],
+    xi: &[f64],
+    out: &mut [f64],
+) {
     let mut b = [0.0f64; S];
     b.copy_from_slice(&c.b[..S]);
     for k in 0..out.len() {

@@ -7,13 +7,20 @@ use sadiff::coordinator::server::{Client, Server};
 use sadiff::coordinator::SampleRequest;
 use sadiff::jsonlite;
 
-fn spawn_server(max_batch: usize, workers: usize) -> (sadiff::coordinator::server::ServerHandle, String) {
+type SpawnedServer = (sadiff::coordinator::server::ServerHandle, String);
+
+fn spawn_server(max_batch: usize, workers: usize) -> SpawnedServer {
+    spawn_server_threads(max_batch, workers, 1)
+}
+
+fn spawn_server_threads(max_batch: usize, workers: usize, threads: usize) -> SpawnedServer {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         max_batch,
         batch_deadline_ms: 3,
         workers,
         queue_cap: 64,
+        threads,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -56,7 +63,9 @@ fn ping_stats_and_sample_roundtrip() {
 fn malformed_lines_get_error_responses() {
     let (handle, addr) = spawn_server(4, 1);
     let mut client = Client::connect(&addr).unwrap();
-    for bad in ["not json", r#"{"n": 0}"#, r#"{"cmd": "wat"}"#, r#"{"solver": {"solver": "bogus"}}"#] {
+    let bads =
+        ["not json", r#"{"n": 0}"#, r#"{"cmd": "wat"}"#, r#"{"solver": {"solver": "bogus"}}"#];
+    for bad in bads {
         let line = client.round_trip(bad).unwrap();
         let v = jsonlite::parse(&line).unwrap();
         assert_eq!(v.opt_bool("ok", true), false, "input {bad} -> {line}");
@@ -99,6 +108,53 @@ fn batched_result_equals_solo_result() {
     let stats = client.stats().unwrap();
     assert!(stats.req_f64("requests").unwrap() >= 5.0);
     handle.shutdown();
+}
+
+#[test]
+fn batcher_group_through_parallel_executor_matches_sequential() {
+    // Batcher + executor integration: pop a merged group off the batcher
+    // and execute it on a multi-threaded executor — every request's
+    // samples must equal the sequential single-threaded run of the same
+    // group (the serving determinism invariant, below the TCP layer).
+    use sadiff::coordinator::engine::{run_batch, run_batch_with};
+    use sadiff::coordinator::Batcher;
+    use sadiff::exec::Executor;
+    use sadiff::workloads;
+
+    let mut batcher = Batcher::new();
+    for (seed, n) in [(10u64, 5usize), (11, 3), (12, 7)] {
+        batcher.push(request(n, seed, 8));
+    }
+    let group = batcher.pop_group(8);
+    assert_eq!(group.len(), 3, "compatible requests must merge");
+
+    let wl = workloads::by_name(&group[0].workload).unwrap();
+    let model = wl.model();
+    let seq = run_batch(&*model, &wl, &group[0].cfg, &group);
+    for threads in [2usize, 4] {
+        let par = run_batch_with(&*model, &wl, &group[0].cfg, &group, &Executor::new(threads));
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.samples, b.samples, "threads={threads}, request id={}", a.id);
+        }
+    }
+}
+
+#[test]
+fn lane_parallel_server_matches_sequential_server() {
+    // Same request against a threads=1 server and a lane-parallel server:
+    // identical samples over the full TCP + batcher + worker + executor
+    // path.
+    let (seq_handle, seq_addr) = spawn_server_threads(4, 1, 1);
+    let (par_handle, par_addr) = spawn_server_threads(4, 2, 4);
+
+    let seq = Client::connect(&seq_addr).unwrap().request(&request(6, 2024, 10)).unwrap();
+    let par = Client::connect(&par_addr).unwrap().request(&request(6, 2024, 10)).unwrap();
+    assert!(seq.ok && par.ok);
+    assert_eq!(seq.samples, par.samples, "lane-parallel server changed samples");
+    assert_eq!(seq.nfe, par.nfe);
+
+    seq_handle.shutdown();
+    par_handle.shutdown();
 }
 
 #[test]
@@ -148,6 +204,7 @@ fn load_shedding_under_queue_cap() {
         batch_deadline_ms: 1,
         workers: 1,
         queue_cap: 2,
+        threads: 1,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();

@@ -1,0 +1,148 @@
+//! API stub for the `xla` PJRT bindings used by `sadiff`'s `pjrt` feature.
+//!
+//! The offline build environment does not carry the real XLA/PJRT shared
+//! libraries, but `sadiff --features pjrt` must still *compile* so CI can
+//! gate the feature-enabled code path. This crate mirrors exactly the API
+//! surface `sadiff::runtime::artifact` consumes; every operation that would
+//! need a real PJRT client returns [`Error::Unavailable`] at runtime.
+//!
+//! Deployments that do have the real bindings swap this crate out by
+//! re-pointing the `xla` *path dependency* in the root `Cargo.toml`
+//! (`[patch]` does not apply to path dependencies):
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { path = "third_party/xla-rs", optional = true }   # real bindings
+//! ```
+
+use std::fmt;
+
+/// Stub error: any PJRT operation is unavailable without the real bindings.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(op) => write!(
+                f,
+                "xla stub: '{op}' requires the real XLA/PJRT bindings \
+                 (this build vendors rust/vendor/xla-stub; see README \"PJRT feature\")"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(op: &str) -> Result<T> {
+    Err(Error::Unavailable(op.to_string()))
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal.
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("real XLA/PJRT bindings"), "{err}");
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
