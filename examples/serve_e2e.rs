@@ -40,6 +40,7 @@ fn main() {
         workers: 2,
         queue_cap: 512,
         threads: 0, // lane-parallel executor: auto-size to the cores
+        presets_path: None,
     };
     let handle = Server::bind(server_cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -82,6 +83,7 @@ fn main() {
                     seed: tr.seed,
                     return_samples: samples_done < 512,
                     want_metrics: false,
+                    preset: None,
                 };
                 let sw_req = Stopwatch::start();
                 let resp = client.request(&req).expect("request");
@@ -123,6 +125,7 @@ fn main() {
         seed: 7,
         return_samples: true,
         want_metrics: false,
+        preset: None,
     };
     let resp = client.request(&req).unwrap();
     let samples = resp.samples.expect("samples");

@@ -103,6 +103,7 @@ fn main() {
         seed: id,
         return_samples: false,
         want_metrics: false,
+        preset: None,
     };
     let (mean, _) = time_it(5, || {
         let mut b = Batcher::new();

@@ -1,0 +1,82 @@
+//! `cargo bench --bench bench_tuner_smoke` — deterministic smoke for the
+//! autotuner: runs a tiny budget-aware search twice and across executor
+//! widths, asserts the emitted registries are byte-identical (the tuner's
+//! reproducibility contract), and writes a `BENCH_tuner_smoke.json`
+//! artifact with timing + search stats for the perf trajectory (CI uploads
+//! it per run and fails the job on nondeterministic output).
+//!
+//! Flags: `--quick` (fewer samples per evaluation), `--out <path>`
+//! (default `BENCH_tuner_smoke.json`).
+
+use sadiff::exec::Executor;
+use sadiff::jsonlite::{to_string, Value};
+use sadiff::tuner::{tune, TuneOptions};
+use sadiff::util::timing::Stopwatch;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_tuner_smoke.json")
+        .to_string();
+
+    let opts = TuneOptions { n: if quick { 48 } else { 96 }, ..TuneOptions::quick() };
+    let workloads = ["latent_analog".to_string()];
+    let budgets = [5usize, 8];
+
+    // Determinism gate 1: same options, two runs, sequential executor.
+    let sw = Stopwatch::start();
+    let seq_a = tune(&workloads, &budgets, &opts, &Executor::sequential()).expect("tune");
+    let seq_secs = sw.secs();
+    let seq_b = tune(&workloads, &budgets, &opts, &Executor::sequential()).expect("tune");
+    let rerun_identical = seq_a.to_line() == seq_b.to_line();
+
+    // Determinism gate 2: candidate fan-out across threads must not change
+    // the emitted registry byte for byte.
+    let par_exec = Executor::auto();
+    let sw = Stopwatch::start();
+    let par = tune(&workloads, &budgets, &opts, &par_exec).expect("tune");
+    let par_secs = sw.secs();
+    let threads_identical = par.to_line() == seq_a.to_line();
+
+    let speedup = seq_secs / par_secs.max(1e-12);
+    println!(
+        "tuner smoke: {} presets, {} evals, {} threads: seq {:.0} ms, par {:.0} ms → {:.2}x \
+         (rerun identical: {rerun_identical}, threads identical: {threads_identical})",
+        seq_a.presets.len(),
+        seq_a.search.evals,
+        par_exec.threads(),
+        seq_secs * 1e3,
+        par_secs * 1e3,
+        speedup
+    );
+    for p in &seq_a.presets {
+        println!("  {} → {} (sim_fid {:.4})", p.name, p.cfg.solver.name(), p.sim_fid);
+    }
+
+    let report = Value::obj(vec![
+        ("bench", Value::Str("tuner_smoke".into())),
+        ("presets", Value::Num(seq_a.presets.len() as f64)),
+        ("evals", Value::Num(seq_a.search.evals as f64)),
+        ("threads", Value::Num(par_exec.threads() as f64)),
+        ("seq_secs", Value::Num(seq_secs)),
+        ("par_secs", Value::Num(par_secs)),
+        ("speedup", Value::Num(speedup)),
+        ("rerun_identical", Value::Bool(rerun_identical)),
+        ("threads_identical", Value::Bool(threads_identical)),
+    ]);
+    if let Err(e) = std::fs::write(&out_path, format!("{}\n", to_string(&report))) {
+        eprintln!("cannot write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out_path}");
+
+    if !rerun_identical || !threads_identical {
+        eprintln!("FAIL: tuner search output is nondeterministic");
+        std::process::exit(1);
+    }
+}

@@ -187,6 +187,45 @@ mod tests {
         assert_eq!(a.get_f64_list("taus", &[]).unwrap(), vec![0.0, 0.4, 1.0]);
     }
 
+    fn args_with(value: &str) -> Args {
+        let toks = vec!["--taus".to_string(), value.to_string()];
+        Args::parse(&toks, &spec()).unwrap()
+    }
+
+    #[test]
+    fn list_parsing_rejects_empty_string() {
+        // `--taus ""` is an error (no silent empty list), for both types.
+        assert!(args_with("").get_f64_list("taus", &[]).is_err());
+        assert!(args_with("").get_usize_list("taus", &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing_rejects_trailing_comma() {
+        assert!(args_with("1,2,").get_f64_list("taus", &[]).is_err());
+        assert!(args_with("5,10,").get_usize_list("taus", &[]).is_err());
+        assert!(args_with(",5").get_usize_list("taus", &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing_rejects_malformed_entries() {
+        for bad in ["a,b", "1,x,3", "1.5,2", "--3", "1;2"] {
+            let err = args_with(bad).get_usize_list("taus", &[]);
+            assert!(err.is_err(), "usize list accepted {bad:?}");
+        }
+        for bad in ["a,b", "0.5,,1", "1,2,three"] {
+            let err = args_with(bad).get_f64_list("taus", &[]);
+            assert!(err.is_err(), "f64 list accepted {bad:?}");
+        }
+        // Errors name the flag and the offending entry.
+        let msg = args_with("1,x").get_usize_list("taus", &[]).unwrap_err().to_string();
+        assert!(msg.contains("taus") && msg.contains('x'), "{msg}");
+    }
+
+    #[test]
+    fn list_parsing_whitespace_tolerant() {
+        assert_eq!(args_with(" 5 , 10 ").get_usize_list("taus", &[]).unwrap(), vec![5, 10]);
+    }
+
     #[test]
     fn help_renders() {
         let h = render_help("sadiff", "sampler", &spec());

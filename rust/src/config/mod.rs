@@ -210,6 +210,9 @@ impl SamplerConfig {
         if let Some(sel) = v.get("selector").and_then(Value::as_str) {
             c.selector = StepSelector::by_name(sel)
                 .ok_or_else(|| Error::config(format!("unknown selector '{sel}'")))?;
+            if let StepSelector::EdmRho { .. } = c.selector {
+                c.selector = StepSelector::EdmRho { rho: v.opt_f64("selector_rho", 7.0) };
+            }
         }
         match v.opt_str("tau_kind", "constant") {
             "constant" => c.tau_kind = TauKind::Constant,
@@ -248,7 +251,11 @@ impl SamplerConfig {
             ("s_noise", Value::Num(self.s_noise)),
             ("s_tmin", Value::Num(self.s_tmin)),
             ("s_tmax", Value::Num(self.s_tmax)),
+            ("selector", Value::Str(self.selector.name().into())),
         ];
+        if let StepSelector::EdmRho { rho } = self.selector {
+            fields.push(("selector_rho", Value::Num(rho)));
+        }
         match self.tau_kind {
             TauKind::Constant => fields.push(("tau_kind", Value::Str("constant".into()))),
             TauKind::IntervalSigma { sigma_lo, sigma_hi } => {
@@ -279,6 +286,17 @@ impl SamplerConfig {
         if !(0.0..=2.0).contains(&self.eta) {
             return Err(Error::config("eta must be in [0,2]"));
         }
+        // ρ shapes the EDM grid as σ^{1/ρ}: ρ ≤ 0 (or non-finite) collapses
+        // the grid to a point and the solver steps divide by h = 0. This
+        // surface takes untrusted values since `selector_rho` joined the
+        // wire format.
+        if let StepSelector::EdmRho { rho } = self.selector {
+            if !rho.is_finite() || !(0.1..=100.0).contains(&rho) {
+                return Err(Error::config(format!(
+                    "selector_rho {rho} out of range (0.1..=100)"
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -302,6 +320,10 @@ pub struct ServerConfig {
     /// (sequential per batch) so `workers × threads` cannot oversubscribe
     /// the host unless explicitly requested.
     pub threads: usize,
+    /// Path to a tuner preset registry (`sadiff tune` output) to load at
+    /// bind time; enables the request `"preset"` field and the `presets`
+    /// protocol command.
+    pub presets_path: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -313,6 +335,7 @@ impl Default for ServerConfig {
             workers: 2,
             queue_cap: 256,
             threads: 1,
+            presets_path: None,
         }
     }
 }
@@ -328,6 +351,7 @@ impl ServerConfig {
             workers: v.opt_usize("workers", d.workers).max(1),
             queue_cap: v.opt_usize("queue_cap", d.queue_cap),
             threads: v.opt_usize("threads", d.threads),
+            presets_path: v.get("presets").and_then(Value::as_str).map(String::from),
         })
     }
 }
@@ -359,9 +383,21 @@ mod tests {
         c.tau = 1.4;
         c.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
         c.prediction = Prediction::Noise;
+        c.selector = StepSelector::EdmRho { rho: 5.0 };
         let j = c.to_json();
         let c2 = SamplerConfig::from_json(&j).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn json_roundtrip_every_selector() {
+        // The tuner persists configs with tuned grid kinds; serialization
+        // must not lose the selector (or its ρ) for any of them.
+        for sel in StepSelector::all() {
+            let c = SamplerConfig { selector: *sel, ..SamplerConfig::sa_default() };
+            let c2 = SamplerConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(c, c2, "selector {sel:?} lost in round-trip");
+        }
     }
 
     #[test]
@@ -381,6 +417,9 @@ mod tests {
             r#"{"tau": -1}"#,
             r#"{"prediction": "wat"}"#,
             r#"{"predictor_steps": 9}"#,
+            r#"{"selector": "edm_rho", "selector_rho": 0}"#,
+            r#"{"selector": "edm_rho", "selector_rho": -7}"#,
+            r#"{"selector": "edm_rho", "selector_rho": 1e9}"#,
         ] {
             let v = jsonlite::parse(bad).unwrap();
             assert!(SamplerConfig::from_json(&v).is_err(), "accepted {bad}");
@@ -423,5 +462,12 @@ mod tests {
 
         let v = jsonlite::parse(r#"{"threads": 3}"#).unwrap();
         assert_eq!(ServerConfig::from_json(&v).unwrap().threads, 3);
+
+        assert_eq!(c.presets_path, None);
+        let v = jsonlite::parse(r#"{"presets": "presets.json"}"#).unwrap();
+        assert_eq!(
+            ServerConfig::from_json(&v).unwrap().presets_path,
+            Some("presets.json".to_string())
+        );
     }
 }

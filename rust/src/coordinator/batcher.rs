@@ -116,6 +116,7 @@ mod tests {
             seed: id,
             return_samples: false,
             want_metrics: false,
+            preset: None,
         }
     }
 
@@ -164,6 +165,22 @@ mod tests {
         let mut b = Batcher::new();
         assert!(b.pop_group(4).is_empty());
         assert!(b.oldest_age().is_none());
+    }
+
+    #[test]
+    fn preset_requests_merge_with_manual_requests() {
+        // The server resolves `"preset"` to a concrete config at ingress,
+        // so by the time requests reach the batcher only the resolved
+        // config matters: a resolved-preset request and a manual request
+        // with the same config must share a key (and a batch).
+        let manual = req(1, 20, "cifar_analog");
+        let via_preset =
+            SampleRequest { preset: Some("auto".into()), ..req(2, 20, "cifar_analog") };
+        assert_eq!(BatchKey::of(&manual), BatchKey::of(&via_preset));
+        let mut b = Batcher::new();
+        b.push(manual);
+        b.push(via_preset);
+        assert_eq!(b.pop_group(8).len(), 2);
     }
 
     #[test]

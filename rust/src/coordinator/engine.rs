@@ -204,6 +204,7 @@ mod tests {
             seed,
             return_samples: true,
             want_metrics: false,
+            preset: None,
         }
     }
 

@@ -20,6 +20,9 @@ pub struct ServingMetrics {
     pub batches: AtomicU64,
     /// Σ batch sizes, for mean occupancy.
     pub batched_requests: AtomicU64,
+    /// Gauge: samples currently queued in the batcher (set by the server
+    /// after every push/pop under the queue lock).
+    queued_samples: AtomicU64,
     latency_buckets: [AtomicU64; 13],
     latency_sum_us: AtomicU64,
 }
@@ -40,6 +43,11 @@ impl ServingMetrics {
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.latency_sum_us
             .fetch_add((ms * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Record the batcher's current queue depth (in samples).
+    pub fn set_queued_samples(&self, n: usize) {
+        self.queued_samples.store(n as u64, Ordering::Relaxed);
     }
 
     pub fn observe_batch(&self, group_size: usize, total_samples: usize, nfe: usize) {
@@ -90,6 +98,7 @@ impl ServingMetrics {
             ("samples", load(&self.samples)),
             ("model_evals", load(&self.model_evals)),
             ("batches", load(&self.batches)),
+            ("queued_samples", load(&self.queued_samples)),
             ("mean_batch_occupancy", Value::Num(occupancy)),
             ("latency_p50_ms", Value::Num(self.latency_percentile_ms(0.5))),
             ("latency_p95_ms", Value::Num(self.latency_percentile_ms(0.95))),
@@ -129,6 +138,16 @@ mod tests {
         assert_eq!(s.req_f64("mean_batch_occupancy").unwrap(), 2.0);
         assert_eq!(s.req_f64("samples").unwrap(), 16.0);
         assert_eq!(s.req_f64("model_evals").unwrap(), 80.0);
+    }
+
+    #[test]
+    fn queued_samples_gauge() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.snapshot().req_f64("queued_samples").unwrap(), 0.0);
+        m.set_queued_samples(17);
+        assert_eq!(m.snapshot().req_f64("queued_samples").unwrap(), 17.0);
+        m.set_queued_samples(0); // gauge, not a counter
+        assert_eq!(m.snapshot().req_f64("queued_samples").unwrap(), 0.0);
     }
 
     #[test]

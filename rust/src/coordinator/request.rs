@@ -22,6 +22,11 @@ pub struct SampleRequest {
     pub return_samples: bool,
     /// Compute distribution metrics vs. the workload reference.
     pub want_metrics: bool,
+    /// Tuner preset to run instead of `cfg`: `"auto"` (resolve by workload
+    /// + nearest NFE budget) or an exact preset name. Resolved at server
+    /// ingress against the loaded registry — the resolved concrete config
+    /// replaces `cfg`, so preset and manual requests batch together.
+    pub preset: Option<String>,
 }
 
 impl SampleRequest {
@@ -43,11 +48,12 @@ impl SampleRequest {
             seed: v.get("seed").and_then(Value::as_u64).unwrap_or(0),
             return_samples: v.opt_bool("return_samples", false),
             want_metrics: v.opt_bool("metrics", false),
+            preset: v.get("preset").and_then(Value::as_str).map(String::from),
         })
     }
 
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("id", Value::Num(self.id as f64)),
             ("workload", Value::Str(self.workload.clone())),
             ("model", Value::Str(self.model.clone())),
@@ -56,7 +62,11 @@ impl SampleRequest {
             ("seed", Value::Num(self.seed as f64)),
             ("return_samples", Value::Bool(self.return_samples)),
             ("metrics", Value::Bool(self.want_metrics)),
-        ])
+        ];
+        if let Some(p) = &self.preset {
+            fields.push(("preset", Value::Str(p.clone())));
+        }
+        Value::obj(fields)
     }
 
     pub fn to_line(&self) -> String {
@@ -157,9 +167,22 @@ mod tests {
             seed: 7,
             return_samples: true,
             want_metrics: true,
+            preset: None,
         };
         let parsed = SampleRequest::from_json(&jsonlite::parse(&r.to_line()).unwrap()).unwrap();
         assert_eq!(r, parsed);
+    }
+
+    #[test]
+    fn request_preset_roundtrip() {
+        let v = jsonlite::parse(r#"{"n": 4, "preset": "auto"}"#).unwrap();
+        let r = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(r.preset.as_deref(), Some("auto"));
+        let reparsed = SampleRequest::from_json(&jsonlite::parse(&r.to_line()).unwrap()).unwrap();
+        assert_eq!(r, reparsed);
+        // Absent field stays absent on the wire.
+        let r2 = SampleRequest { preset: None, ..r };
+        assert!(!r2.to_line().contains("preset"));
     }
 
     #[test]
@@ -169,6 +192,7 @@ mod tests {
         assert_eq!(r.workload, "latent_analog");
         assert_eq!(r.model, "gmm");
         assert!(!r.return_samples);
+        assert_eq!(r.preset, None);
     }
 
     #[test]

@@ -6,10 +6,19 @@
 //! sampling service sees.
 //!
 //! Protocol (one JSON object per line):
-//! * sampling request — see [`SampleRequest::from_json`];
-//! * `{"cmd": "stats"}` → serving-metrics snapshot;
+//! * sampling request — see [`SampleRequest::from_json`]; an optional
+//!   `"preset"` field (`"auto"` or a preset name) resolves against the
+//!   loaded tuner registry *at ingress*, so preset and manual requests
+//!   with the same concrete config share a batch;
+//! * `{"cmd": "stats"}` → serving-metrics snapshot (includes the current
+//!   `queued_samples` gauge);
+//! * `{"cmd": "presets"}` → summary of the loaded preset registry;
 //! * `{"cmd": "ping"}` → `{"ok": true}`;
 //! * `{"cmd": "shutdown"}` → stops accepting and drains workers.
+//!
+//! Every malformed line — bad JSON, invalid UTF-8, unknown command — gets
+//! a reply with an `"error"` field; the connection is never silently
+//! dropped on bad input.
 
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::Batcher;
@@ -20,11 +29,12 @@ use crate::exec::Executor;
 use crate::jsonlite::{parse, to_string, Value};
 use crate::models::ModelEval;
 use crate::runtime::{HloModel, RuntimeHost};
+use crate::tuner::PresetRegistry;
 use crate::util::error::{Error, Result};
 use crate::workloads;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -37,9 +47,13 @@ struct Shared {
     metrics: ServingMetrics,
     cfg: ServerConfig,
     shutdown: AtomicBool,
+    /// Bound address, for self-pokes that unblock the accept loop.
+    addr: SocketAddr,
     /// Lane-parallel executor used inside each batch's solver loop
     /// (`cfg.threads`; bit-identical output for any thread count).
     exec: Executor,
+    /// Tuner preset registry serving the request `"preset"` field.
+    presets: Option<PresetRegistry>,
     /// Lazily started PJRT runtime host (only if a request needs it).
     runtime: Mutex<Option<Arc<RuntimeHost>>>,
 }
@@ -65,15 +79,26 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Request shutdown and join the accept loop.
+    /// Request shutdown and join the accept loop. Safe when the accept
+    /// thread already exited (e.g. after a protocol `shutdown` command):
+    /// the poke-connect may fail, but the join happens regardless, and a
+    /// handle that was already shut down is a no-op (`Drop` relies on
+    /// this).
     pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        let Some(t) = self.accept_thread.take() else {
+            return; // already shut down
+        };
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cond.notify_all();
-        // Poke the accept loop so it notices the flag.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        // Poke the accept loop so it notices the flag. The connect can
+        // fail (listener already closed) — that must not skip the join
+        // below, which is what actually reclaims the thread.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        let _ = t.join();
     }
 
     pub fn metrics_snapshot(&self) -> Value {
@@ -81,11 +106,27 @@ impl ServerHandle {
     }
 }
 
+impl Drop for ServerHandle {
+    /// A dropped handle still stops the server — tests that panic (or
+    /// forget to call `shutdown`) must not leak the accept thread.
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
 impl Server {
-    /// Bind to `cfg.addr` (use port 0 for an ephemeral port).
+    /// Bind to `cfg.addr` (use port 0 for an ephemeral port), loading the
+    /// preset registry from `cfg.presets_path` when set.
     pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let presets = cfg.presets_path.as_deref().map(PresetRegistry::load).transpose()?;
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| Error::runtime(format!("bind {}: {e}", cfg.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::runtime(format!("local_addr: {e}")))?;
+        if let Some(reg) = &presets {
+            crate::log_info!("server", "loaded {} presets", reg.presets.len());
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState {
                 batcher: Batcher::new(),
@@ -97,6 +138,8 @@ impl Server {
             exec: Executor::new(cfg.threads),
             cfg,
             shutdown: AtomicBool::new(false),
+            addr,
+            presets,
             runtime: Mutex::new(None),
         });
         Ok(Server { shared, listener })
@@ -105,10 +148,7 @@ impl Server {
     /// Start workers and the accept loop on background threads; returns a
     /// handle with the bound address.
     pub fn spawn(self) -> Result<ServerHandle> {
-        let addr = self
-            .listener
-            .local_addr()
-            .map_err(|e| Error::runtime(format!("local_addr: {e}")))?;
+        let addr = self.shared.addr;
         for w in 0..self.shared.cfg.workers {
             let shared = self.shared.clone();
             std::thread::Builder::new()
@@ -152,16 +192,24 @@ fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    // Read raw lines (not `BufRead::lines`): a line that is not valid
+    // UTF-8 must produce an `"error"` reply, not a silently dropped
+    // connection. Only hard I/O errors (where no reply can be written
+    // anyway) end the loop early.
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
             Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
         }
-        let reply_line = handle_line(&line, &shared);
+        let reply_line = match std::str::from_utf8(&buf) {
+            Ok(line) if line.trim().is_empty() => continue,
+            Ok(line) => handle_line(line.trim_end_matches(&['\r', '\n'][..]), &shared),
+            Err(_) => SampleResponse::err(0, "request line is not valid utf-8").to_line(),
+        };
         if writer
             .write_all(format!("{reply_line}\n").as_bytes())
             .is_err()
@@ -184,19 +232,44 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
     if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
         return match cmd {
             "stats" => to_string(&shared.metrics.snapshot()),
+            "presets" => match &shared.presets {
+                Some(reg) => to_string(&reg.summary()),
+                None => r#"{"ok":false,"error":"no preset registry loaded"}"#.to_string(),
+            },
             "ping" => r#"{"ok":true}"#.to_string(),
             "shutdown" => {
                 shared.shutdown.store(true, Ordering::SeqCst);
                 shared.cond.notify_all();
+                // Unblock the accept loop so the thread actually exits
+                // (nothing else may ever connect again).
+                let _ = TcpStream::connect_timeout(&shared.addr, Duration::from_millis(250));
                 r#"{"ok":true,"shutting_down":true}"#.to_string()
             }
             other => SampleResponse::err(0, format!("unknown cmd '{other}'")).to_line(),
         };
     }
-    let request = match SampleRequest::from_json(&v) {
+    let mut request = match SampleRequest::from_json(&v) {
         Ok(r) => r,
         Err(e) => return SampleResponse::err(0, e.to_string()).to_line(),
     };
+    // Resolve a preset to its concrete config *before* enqueueing: the
+    // batcher then keys on the resolved config, so preset and manual
+    // requests merge into the same group.
+    if let Some(spec) = &request.preset {
+        match &shared.presets {
+            None => {
+                return SampleResponse::err(
+                    request.id,
+                    format!("preset '{spec}' requested but no registry loaded (serve --presets)"),
+                )
+                .to_line()
+            }
+            Some(reg) => match reg.resolve(spec, &request.workload, request.cfg.nfe) {
+                Ok(p) => request.cfg = p.cfg.clone(),
+                Err(e) => return SampleResponse::err(request.id, e.to_string()).to_line(),
+            },
+        }
+    }
     shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
     // Shed load if the queue is over capacity.
     let (tx, rx) = std::sync::mpsc::channel();
@@ -214,6 +287,7 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
         internal.id = ticket;
         q.replies.insert(ticket, tx);
         q.batcher.push(internal);
+        shared.metrics.set_queued_samples(q.batcher.queued_samples());
     }
     shared.cond.notify_one();
     let timeout = Duration::from_secs(120);
@@ -265,7 +339,9 @@ fn worker_loop(shared: Arc<Shared>) {
                     q = qq;
                 }
             }
-            q.batcher.pop_group(shared.cfg.max_batch)
+            let group = q.batcher.pop_group(shared.cfg.max_batch);
+            shared.metrics.set_queued_samples(q.batcher.queued_samples());
+            group
         };
         if group.is_empty() {
             continue;

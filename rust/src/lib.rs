@@ -59,6 +59,7 @@ pub mod schedule;
 pub mod solvers;
 pub mod tau;
 pub mod testsupport;
+pub mod tuner;
 pub mod util;
 pub mod workloads;
 
@@ -71,5 +72,6 @@ pub mod prelude {
     pub use crate::schedule::{NoiseSchedule, ScheduleKind, StepSelector};
     pub use crate::solvers::sa::{SaSolver, SaSolverOpts};
     pub use crate::tau::TauFn;
+    pub use crate::tuner::{PresetRegistry, SearchSpace, TuneOptions};
     pub use crate::util::error::{Error, Result};
 }

@@ -1,9 +1,11 @@
 //! `sadiff` CLI — the Layer-3 entry point.
 //!
 //! Subcommands:
-//!   serve        start the sampling server
+//!   serve        start the sampling server (`--presets` loads a registry)
 //!   sample       run one sampling job locally and report metrics
 //!   client       send a request to a running server
+//!   tune         search solver configs per (workload, NFE budget) and
+//!                write a preset registry
 //!   exp <id>     regenerate a paper table/figure (see `exp list`)
 //!   artifacts    list compiled artifacts from the manifest
 //!   info         print build/workload/solver inventory
@@ -12,8 +14,10 @@ use sadiff::cli::{render_help, Args, FlagSpec};
 use sadiff::config::{SamplerConfig, ServerConfig};
 use sadiff::coordinator::server::{Client, Server};
 use sadiff::coordinator::SampleRequest;
-use sadiff::exps::{self, Scale};
+use sadiff::exps::common::f as fmt_f;
+use sadiff::exps::{self, Scale, Table};
 use sadiff::jsonlite::{self, Value};
+use sadiff::tuner::{self, TuneOptions};
 use sadiff::util::error::{Error, Result};
 use sadiff::workloads;
 
@@ -34,6 +38,11 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "seed", help: "rng seed", takes_value: true },
         FlagSpec { name: "quick", help: "small quick run", takes_value: false },
         FlagSpec { name: "log", help: "log level", takes_value: true },
+        FlagSpec { name: "budgets", help: "NFE budgets to tune, e.g. 5,10,20", takes_value: true },
+        FlagSpec { name: "out", help: "output path (tune registry)", takes_value: true },
+        FlagSpec { name: "refine", help: "tuner refinement rounds", takes_value: true },
+        FlagSpec { name: "presets", help: "preset registry path (serve)", takes_value: true },
+        FlagSpec { name: "preset", help: "preset name or 'auto' (client)", takes_value: true },
     ]
 }
 
@@ -52,7 +61,7 @@ fn main() {
             "{}",
             render_help("sadiff", "SA-Solver diffusion sampling framework", &spec)
         );
-        println!("\nSubcommands: serve | sample | client | exp <id|list> | artifacts | info");
+        println!("\nSubcommands: serve | sample | client | tune | exp <id|list> | artifacts | info");
         return;
     }
     let cmd = args.positionals[0].clone();
@@ -60,6 +69,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
+        "tune" => cmd_tune(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
         "info" => cmd_info(),
@@ -101,6 +111,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if let Some(path) = args.get("presets") {
+        cfg.presets_path = Some(path.to_string());
+    }
     let handle = Server::bind(cfg)?.spawn()?;
     println!("sadiff server on {} — Ctrl-C to stop", handle.addr);
     // Block forever; the handle's workers do the serving.
@@ -145,11 +158,53 @@ fn cmd_client(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0)?,
         return_samples: false,
         want_metrics: true,
+        preset: args.get("preset").map(String::from),
     };
     let resp = client.request(&req)?;
     println!("{}", resp.to_line());
     let stats = client.stats()?;
     println!("stats: {}", jsonlite::to_string(&stats));
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let wl_arg = args.get_str("workload", "all");
+    let names: Vec<String> = if wl_arg == "all" {
+        workloads::all_names().iter().map(|s| s.to_string()).collect()
+    } else {
+        wl_arg.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    let budgets = args.get_usize_list("budgets", &[5, 10, 20])?;
+    let out = args.get_str("out", "presets.json");
+    let mut opts = if args.has("quick") { TuneOptions::quick() } else { TuneOptions::default() };
+    opts.n = args.get_usize("n", opts.n)?;
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    opts.refine_rounds = args.get_usize("refine", opts.refine_rounds)?;
+    let exec = sadiff::exec::Executor::new(args.get_usize("threads", 0)?);
+
+    let registry = tuner::tune(&names, &budgets, &opts, &exec)?;
+    let mut table = Table::new(
+        format!(
+            "tuned presets (n={}, seed={}, {} evals)",
+            opts.n, opts.seed, registry.search.evals
+        ),
+        &["preset", "solver", "pred", "corr", "tau", "selector", "sim_fid", "sliced_w2"],
+    );
+    for p in &registry.presets {
+        table.row(vec![
+            p.name.clone(),
+            p.cfg.solver.name().to_string(),
+            p.cfg.predictor_steps.to_string(),
+            p.cfg.corrector_steps.to_string(),
+            fmt_f(p.cfg.tau),
+            p.cfg.selector.name().to_string(),
+            fmt_f(p.sim_fid),
+            fmt_f(p.sliced_w2),
+        ]);
+    }
+    table.print();
+    registry.save(out)?;
+    println!("\nwrote {} presets to {out}", registry.presets.len());
     Ok(())
 }
 

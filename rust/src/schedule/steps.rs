@@ -26,6 +26,27 @@ impl StepSelector {
             _ => None,
         }
     }
+
+    /// Canonical name (inverse of [`Self::by_name`] up to the ρ parameter,
+    /// which `SamplerConfig` serializes separately).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepSelector::UniformT => "uniform_t",
+            StepSelector::UniformLambda => "uniform_lambda",
+            StepSelector::EdmRho { .. } => "edm_rho",
+            StepSelector::QuadraticT => "quadratic_t",
+        }
+    }
+
+    /// Every selector, for grid-kind sweeps (ρ at its EDM default).
+    pub fn all() -> &'static [StepSelector] {
+        &[
+            StepSelector::UniformT,
+            StepSelector::UniformLambda,
+            StepSelector::EdmRho { rho: 7.0 },
+            StepSelector::QuadraticT,
+        ]
+    }
 }
 
 /// Produce the M+1 decreasing timesteps for `m` solver steps.
@@ -104,6 +125,14 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn selector_name_roundtrip() {
+        for sel in StepSelector::all() {
+            assert_eq!(StepSelector::by_name(sel.name()), Some(*sel));
+        }
+        assert!(StepSelector::by_name("nope").is_none());
     }
 
     #[test]

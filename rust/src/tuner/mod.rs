@@ -1,0 +1,31 @@
+//! Autotuner: budget-aware search over the solver zoo, producing a
+//! persisted preset registry the server can serve from.
+//!
+//! SA-Solver's quality hinges on choices the paper ablates by hand —
+//! predictor/corrector orders, the τ(t) stochasticity schedule, and the
+//! timestep grid per NFE budget. Following the solver-searching line of
+//! work (Liu et al.'s unified sampling framework; Wang et al.'s adaptive
+//! stochastic coefficients), this subsystem searches that space per
+//! `(workload, NFE budget)` cell instead of fixing one recipe:
+//!
+//! * [`space`] — the candidate grid (coarse sweep) and the local
+//!   neighborhood an incumbent is refined within;
+//! * [`search`] — coarse-then-refine search, scored against
+//!   `Workload::reference` via `metrics::{sim_fid, sliced_w2}`, fanned out
+//!   across candidates on `exec::Executor` (deterministic for any thread
+//!   count — the same lane-keying contract the serving path relies on);
+//! * [`registry`] — the versioned JSON registry (`schema_version`,
+//!   provenance) written by `sadiff tune`, loaded by `sadiff serve
+//!   --presets`, and resolved per request via the `"preset"` field
+//!   (`"auto"` = workload + nearest budget).
+//!
+//! Resolution happens at server ingress, so a preset request and a manual
+//! request with the same concrete config land in the same dynamic batch.
+
+pub mod registry;
+pub mod search;
+pub mod space;
+
+pub use registry::{Preset, PresetRegistry, Provenance, SCHEMA_VERSION};
+pub use search::{tune, tune_cell, CellResult, Scored, TuneOptions};
+pub use space::SearchSpace;

@@ -1,0 +1,338 @@
+//! The persisted preset registry: the tuner's output, versioned JSON on
+//! disk, loaded by the server to answer `"preset"` requests.
+//!
+//! Wire shape (schema_version 1):
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "created_by": "sadiff 0.1.0",
+//!   "search": {"seed": 7, "n": 512, "refine_rounds": 1, "evals": 452},
+//!   "presets": [
+//!     {"name": "cifar_analog@10", "workload": "cifar_analog", "budget": 10,
+//!      "sim_fid": 0.41, "sliced_w2": 0.12, "solver": { ...SamplerConfig... }}
+//!   ]
+//! }
+//! ```
+
+use crate::config::SamplerConfig;
+use crate::jsonlite::{to_string, Value};
+use crate::util::error::{Error, Result};
+
+/// Newest registry schema this build reads and writes. Older files load
+/// (missing fields default); newer files are rejected loudly.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One tuned `(workload, NFE budget)` cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Preset {
+    /// Canonical name, `<workload>@<budget>`.
+    pub name: String,
+    pub workload: String,
+    /// The NFE budget this cell was tuned for.
+    pub budget: usize,
+    /// The winning configuration (its `nfe` equals `budget`).
+    pub cfg: SamplerConfig,
+    /// Winning scores against the workload reference at tuning time.
+    pub sim_fid: f64,
+    pub sliced_w2: f64,
+}
+
+impl Preset {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("workload", Value::Str(self.workload.clone())),
+            ("budget", Value::Num(self.budget as f64)),
+            ("sim_fid", Value::Num(self.sim_fid)),
+            ("sliced_w2", Value::Num(self.sliced_w2)),
+            ("solver", self.cfg.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Preset> {
+        let solver = v
+            .get("solver")
+            .ok_or_else(|| Error::config("preset missing 'solver' object"))?;
+        let p = Preset {
+            name: v.req_str("name")?.to_string(),
+            workload: v.req_str("workload")?.to_string(),
+            budget: v.req_usize("budget")?,
+            cfg: SamplerConfig::from_json(solver)?,
+            sim_fid: v.opt_f64("sim_fid", f64::NAN),
+            sliced_w2: v.opt_f64("sliced_w2", f64::NAN),
+        };
+        // Auto-resolution matches on `budget`; serving then runs `cfg` — a
+        // hand-edited registry where the two disagree would silently spend
+        // a different NFE than the client asked for.
+        if p.cfg.nfe != p.budget {
+            return Err(Error::config(format!(
+                "preset '{}': solver nfe {} != budget {}",
+                p.name, p.cfg.nfe, p.budget
+            )));
+        }
+        Ok(p)
+    }
+}
+
+/// Search provenance recorded alongside the presets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Scoring seed of the search.
+    pub seed: u64,
+    /// Samples per candidate evaluation.
+    pub n: usize,
+    /// Local-refinement rounds.
+    pub refine_rounds: usize,
+    /// Total candidate evaluations performed.
+    pub evals: usize,
+}
+
+/// A versioned, persisted set of presets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PresetRegistry {
+    pub schema_version: u64,
+    /// Producing binary + version, e.g. `sadiff 0.1.0`.
+    pub created_by: String,
+    pub search: Provenance,
+    pub presets: Vec<Preset>,
+}
+
+impl PresetRegistry {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("schema_version", Value::Num(self.schema_version as f64)),
+            ("created_by", Value::Str(self.created_by.clone())),
+            (
+                "search",
+                Value::obj(vec![
+                    ("seed", Value::Num(self.search.seed as f64)),
+                    ("n", Value::Num(self.search.n as f64)),
+                    ("refine_rounds", Value::Num(self.search.refine_rounds as f64)),
+                    ("evals", Value::Num(self.search.evals as f64)),
+                ]),
+            ),
+            ("presets", Value::Array(self.presets.iter().map(Preset::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<PresetRegistry> {
+        let version = v
+            .get("schema_version")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| Error::config("preset registry missing 'schema_version'"))?;
+        if version > SCHEMA_VERSION {
+            return Err(Error::config(format!(
+                "preset registry schema_version {version} is newer than supported {SCHEMA_VERSION}"
+            )));
+        }
+        let search = v.get("search");
+        let presets = v
+            .get("presets")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::config("preset registry missing 'presets' array"))?
+            .iter()
+            .map(Preset::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let g = |key: &str, d: usize| search.map_or(d, |s| s.opt_usize(key, d));
+        Ok(PresetRegistry {
+            schema_version: version,
+            created_by: v.opt_str("created_by", "unknown").to_string(),
+            search: Provenance {
+                seed: search.and_then(|s| s.get("seed")).and_then(Value::as_u64).unwrap_or(0),
+                n: g("n", 0),
+                refine_rounds: g("refine_rounds", 0),
+                evals: g("evals", 0),
+            },
+            presets,
+        })
+    }
+
+    /// Serialize to the canonical one-line JSON (what `save` writes).
+    pub fn to_line(&self) -> String {
+        to_string(&self.to_json())
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_line()))
+            .map_err(|e| Error::config(format!("cannot write {path}: {e}")))
+    }
+
+    pub fn load(path: &str) -> Result<PresetRegistry> {
+        Self::from_json(&crate::config::load_json_file(path)?)
+    }
+
+    /// Resolve a request's `"preset"` field to a concrete preset.
+    ///
+    /// * `"auto"` — presets for `workload`, nearest `budget` to the
+    ///   requested NFE (ties break toward the smaller budget).
+    /// * anything else — exact preset-name match; the preset must be tuned
+    ///   for the request's workload (configs do not transfer across
+    ///   workloads, so a mismatch is an error, not a silent apply).
+    pub fn resolve(&self, spec: &str, workload: &str, nfe: usize) -> Result<&Preset> {
+        if spec == "auto" {
+            return self
+                .presets
+                .iter()
+                .filter(|p| p.workload == workload)
+                .min_by_key(|p| (p.budget.abs_diff(nfe), p.budget))
+                .ok_or_else(|| {
+                    Error::protocol(format!("no presets for workload '{workload}' in registry"))
+                });
+        }
+        let p = self.presets.iter().find(|p| p.name == spec).ok_or_else(|| {
+            let names: Vec<&str> = self.presets.iter().map(|p| p.name.as_str()).collect();
+            Error::protocol(format!(
+                "unknown preset '{spec}' (available: {})",
+                names.join(", ")
+            ))
+        })?;
+        if p.workload != workload {
+            return Err(Error::protocol(format!(
+                "preset '{spec}' is tuned for workload '{}', not '{workload}'",
+                p.workload
+            )));
+        }
+        Ok(p)
+    }
+
+    /// Compact summary for the server's `presets` protocol command: no full
+    /// solver configs, just enough to see what is loaded.
+    pub fn summary(&self) -> Value {
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("schema_version", Value::Num(self.schema_version as f64)),
+            ("created_by", Value::Str(self.created_by.clone())),
+            ("count", Value::Num(self.presets.len() as f64)),
+            (
+                "presets",
+                Value::Array(
+                    self.presets
+                        .iter()
+                        .map(|p| {
+                            Value::obj(vec![
+                                ("name", Value::Str(p.name.clone())),
+                                ("workload", Value::Str(p.workload.clone())),
+                                ("budget", Value::Num(p.budget as f64)),
+                                ("solver", Value::Str(p.cfg.solver.name().into())),
+                                ("sim_fid", Value::Num(p.sim_fid)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SolverKind;
+    use crate::jsonlite::parse;
+
+    fn preset(workload: &str, budget: usize) -> Preset {
+        Preset {
+            name: format!("{workload}@{budget}"),
+            workload: workload.into(),
+            budget,
+            cfg: SamplerConfig { nfe: budget, ..SamplerConfig::sa_default() },
+            sim_fid: 0.5,
+            sliced_w2: 0.25,
+        }
+    }
+
+    fn registry() -> PresetRegistry {
+        PresetRegistry {
+            schema_version: SCHEMA_VERSION,
+            created_by: "sadiff test".into(),
+            search: Provenance { seed: 7, n: 128, refine_rounds: 1, evals: 42 },
+            presets: vec![
+                preset("cifar_analog", 5),
+                preset("cifar_analog", 10),
+                preset("cifar_analog", 20),
+                preset("latent_analog", 10),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let reg = registry();
+        let parsed = PresetRegistry::from_json(&parse(&reg.to_line()).unwrap()).unwrap();
+        assert_eq!(reg, parsed);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let reg = registry();
+        let dir = std::env::temp_dir().join(format!("sadiff_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("presets.json");
+        reg.save(path.to_str().unwrap()).unwrap();
+        let loaded = PresetRegistry::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(reg, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn newer_schema_rejected() {
+        let mut reg = registry();
+        reg.schema_version = SCHEMA_VERSION + 1;
+        let err = PresetRegistry::from_json(&parse(&reg.to_line()).unwrap());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("newer"));
+    }
+
+    #[test]
+    fn missing_version_rejected() {
+        let v = parse(r#"{"presets": []}"#).unwrap();
+        assert!(PresetRegistry::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn nfe_budget_mismatch_rejected() {
+        let mut reg = registry();
+        reg.presets[0].cfg.nfe = 25; // budget stays 5
+        let err = PresetRegistry::from_json(&parse(&reg.to_line()).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("!= budget"), "{err}");
+    }
+
+    #[test]
+    fn resolve_auto_picks_nearest_budget() {
+        let reg = registry();
+        assert_eq!(reg.resolve("auto", "cifar_analog", 11).unwrap().budget, 10);
+        assert_eq!(reg.resolve("auto", "cifar_analog", 4).unwrap().budget, 5);
+        assert_eq!(reg.resolve("auto", "cifar_analog", 100).unwrap().budget, 20);
+        assert_eq!(reg.resolve("auto", "cifar_analog", 7).unwrap().budget, 5);
+        // Tie: 15 is equidistant from 10 and 20 → smaller budget wins.
+        assert_eq!(reg.resolve("auto", "cifar_analog", 15).unwrap().budget, 10);
+        assert!(reg.resolve("auto", "bedroom_analog", 10).is_err());
+    }
+
+    #[test]
+    fn resolve_by_name() {
+        let reg = registry();
+        assert_eq!(reg.resolve("latent_analog@10", "latent_analog", 0).unwrap().budget, 10);
+        let err = reg.resolve("nope@1", "cifar_analog", 10).unwrap_err();
+        assert!(err.to_string().contains("cifar_analog@5"), "{err}");
+    }
+
+    #[test]
+    fn resolve_by_name_rejects_workload_mismatch() {
+        // A named preset applied to the wrong workload is an error, not a
+        // silent cross-workload config transplant.
+        let reg = registry();
+        let err = reg.resolve("latent_analog@10", "cifar_analog", 10).unwrap_err();
+        assert!(err.to_string().contains("tuned for workload"), "{err}");
+    }
+
+    #[test]
+    fn summary_shape() {
+        let s = registry().summary();
+        assert!(s.opt_bool("ok", false));
+        assert_eq!(s.req_usize("count").unwrap(), 4);
+        let first = &s.get("presets").unwrap().as_array().unwrap()[0];
+        assert_eq!(first.req_str("name").unwrap(), "cifar_analog@5");
+        assert_eq!(first.req_str("solver").unwrap(), SolverKind::Sa.name());
+    }
+}

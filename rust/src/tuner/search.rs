@@ -1,0 +1,314 @@
+//! Budget-aware search: coarse grid sweep + local refinement per
+//! `(workload, NFE budget)` cell, scored against the workload reference.
+//!
+//! Candidates fan out across [`Executor`] workers (`exec.map` preserves
+//! item order and each candidate is scored with a sequential inner
+//! executor), so tuning throughput scales with threads while the selected
+//! winner — and the emitted registry — is bit-identical for any thread
+//! count and a fixed seed. Ranking is a total order (NaN-hostile score,
+//! then the canonical config JSON) so ties cannot flap between runs.
+
+use super::registry::{Preset, PresetRegistry, Provenance, SCHEMA_VERSION};
+use super::space::{cfg_key, SearchSpace};
+use crate::config::SamplerConfig;
+use crate::coordinator::engine::sample_with;
+use crate::exec::Executor;
+use crate::util::error::{Error, Result};
+use crate::workloads::{self, Workload};
+use std::collections::BTreeSet;
+
+/// Tuning knobs (everything that affects the result is provenance).
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    /// Samples drawn per candidate evaluation.
+    pub n: usize,
+    /// Scoring seed (prior/noise draws and the reference set).
+    pub seed: u64,
+    /// Local-refinement rounds after the coarse sweep.
+    pub refine_rounds: usize,
+    /// Incumbents whose neighborhoods each refinement round explores.
+    pub top_k: usize,
+    pub space: SearchSpace,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions { n: 512, seed: 7, refine_rounds: 1, top_k: 3, space: SearchSpace::default() }
+    }
+}
+
+impl TuneOptions {
+    /// Small-but-real settings for tests and the CI smoke bench.
+    pub fn quick() -> Self {
+        TuneOptions { n: 96, space: SearchSpace::tiny(), ..TuneOptions::default() }
+    }
+}
+
+/// A scored candidate.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub cfg: SamplerConfig,
+    pub sim_fid: f64,
+    pub sliced_w2: f64,
+}
+
+impl Scored {
+    /// NaN sorts last: a config that blows up must never win on a NaN
+    /// comparison quirk.
+    fn rank(&self) -> (f64, f64) {
+        let nn = |x: f64| if x.is_nan() { f64::INFINITY } else { x };
+        (nn(self.sim_fid), nn(self.sliced_w2))
+    }
+}
+
+/// Deterministic total order: sim-FID, then sliced-W2, then config JSON.
+fn cmp_scored(a: &Scored, b: &Scored) -> std::cmp::Ordering {
+    let (a0, a1) = a.rank();
+    let (b0, b1) = b.rank();
+    a0.total_cmp(&b0)
+        .then(a1.total_cmp(&b1))
+        .then_with(|| cfg_key(&a.cfg).cmp(&cfg_key(&b.cfg)))
+}
+
+/// Result of tuning one `(workload, budget)` cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub best: Scored,
+    /// Candidate evaluations spent on this cell.
+    pub evals: usize,
+}
+
+fn score_batch(
+    wl: &Workload,
+    cands: &[SamplerConfig],
+    opts: &TuneOptions,
+    exec: &Executor,
+) -> Vec<Scored> {
+    // One model and one reference draw per cell, shared across candidate
+    // workers (ModelEval is Send + Sync) — not one per candidate. Scores
+    // match `engine::evaluate_with` exactly: same reference seed, same
+    // metric parameters.
+    let model = wl.model();
+    let reference = wl.reference(opts.n, opts.seed ^ 0x5a5a);
+    let dim = wl.dim();
+    exec.map(cands, |_, cfg| {
+        let out = sample_with(&*model, wl, cfg, opts.n, opts.seed, &Executor::sequential());
+        let sim_fid = crate::metrics::sim_fid(&out.samples, &reference, dim).unwrap_or(f64::NAN);
+        let sliced_w2 = crate::metrics::sliced_w2(&out.samples, &reference, dim, 32, opts.seed);
+        Scored { cfg: cfg.clone(), sim_fid, sliced_w2 }
+    })
+}
+
+/// Tune one `(workload, NFE budget)` cell: coarse sweep, then
+/// `refine_rounds` rounds of neighborhood search around the `top_k`
+/// incumbents. Deterministic for fixed options, any executor width.
+pub fn tune_cell(
+    wl: &Workload,
+    budget: usize,
+    opts: &TuneOptions,
+    exec: &Executor,
+) -> Result<CellResult> {
+    let coarse = opts.space.candidates(budget);
+    if coarse.is_empty() {
+        return Err(Error::config(format!(
+            "search space has no valid candidates at budget {budget}"
+        )));
+    }
+    let mut visited: BTreeSet<String> = coarse.iter().map(cfg_key).collect();
+    let mut pool = score_batch(wl, &coarse, opts, exec);
+    let mut evals = pool.len();
+
+    for _round in 0..opts.refine_rounds {
+        let mut ranked: Vec<&Scored> = pool.iter().collect();
+        ranked.sort_by(|a, b| cmp_scored(a, b));
+        let mut frontier: Vec<SamplerConfig> = Vec::new();
+        for inc in ranked.iter().take(opts.top_k) {
+            for nb in opts.space.neighbors(&inc.cfg) {
+                if visited.insert(cfg_key(&nb)) {
+                    frontier.push(nb);
+                }
+            }
+        }
+        if frontier.is_empty() {
+            break;
+        }
+        evals += frontier.len();
+        pool.extend(score_batch(wl, &frontier, opts, exec));
+    }
+
+    let best = pool
+        .iter()
+        .min_by(|a, b| cmp_scored(a, b))
+        .expect("non-empty pool")
+        .clone();
+    Ok(CellResult { best, evals })
+}
+
+/// Run the full search over `workload × budget` cells and assemble the
+/// persisted registry. `workload_names` must all exist; budgets must be
+/// valid NFE values.
+pub fn tune(
+    workload_names: &[String],
+    budgets: &[usize],
+    opts: &TuneOptions,
+    exec: &Executor,
+) -> Result<PresetRegistry> {
+    if workload_names.is_empty() || budgets.is_empty() {
+        return Err(Error::config("tune needs at least one workload and one budget"));
+    }
+    for &b in budgets {
+        if !(2..=10_000).contains(&b) {
+            return Err(Error::config(format!("budget {b} out of range (2..=10000)")));
+        }
+    }
+    // Dedup (first occurrence wins) so `--workload a,a --budgets 5,5`
+    // neither re-runs identical cells nor emits colliding preset names,
+    // and resolve every workload *before* any search runs — a typo in the
+    // last name must fail in milliseconds, not after hours of search.
+    let mut seen_names = BTreeSet::new();
+    let cells: Vec<(&str, Workload)> = workload_names
+        .iter()
+        .filter(|n| seen_names.insert(n.as_str()))
+        .map(|name| {
+            workloads::by_name(name)
+                .map(|wl| (name.as_str(), wl))
+                .ok_or_else(|| Error::config(format!("unknown workload '{name}'")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut seen_budgets = BTreeSet::new();
+    let budgets: Vec<usize> =
+        budgets.iter().copied().filter(|b| seen_budgets.insert(*b)).collect();
+    let mut presets = Vec::new();
+    let mut evals = 0usize;
+    for (name, wl) in &cells {
+        for &budget in &budgets {
+            let cell = tune_cell(wl, budget, opts, exec)?;
+            crate::log_info!(
+                "tuner",
+                "{name}@{budget}: {} (sim_fid {:.4}, sliced_w2 {:.4}, {} evals)",
+                cell.best.cfg.solver.name(),
+                cell.best.sim_fid,
+                cell.best.sliced_w2,
+                cell.evals
+            );
+            evals += cell.evals;
+            presets.push(Preset {
+                name: format!("{name}@{budget}"),
+                workload: name.to_string(),
+                budget,
+                cfg: cell.best.cfg,
+                sim_fid: cell.best.sim_fid,
+                sliced_w2: cell.best.sliced_w2,
+            });
+        }
+    }
+    Ok(PresetRegistry {
+        schema_version: SCHEMA_VERSION,
+        created_by: format!("sadiff {}", env!("CARGO_PKG_VERSION")),
+        search: Provenance {
+            seed: opts.seed,
+            n: opts.n,
+            refine_rounds: opts.refine_rounds,
+            evals,
+        },
+        presets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> TuneOptions {
+        // Keep unit tests fast: tiny space, few samples, modest budget.
+        TuneOptions { n: 48, ..TuneOptions::quick() }
+    }
+
+    #[test]
+    fn tune_cell_deterministic_across_threads() {
+        let wl = workloads::latent_analog();
+        let o = opts();
+        let seq = tune_cell(&wl, 6, &o, &Executor::sequential()).unwrap();
+        for threads in [2usize, 5] {
+            let par = tune_cell(&wl, 6, &o, &Executor::new(threads)).unwrap();
+            assert_eq!(cfg_key(&par.best.cfg), cfg_key(&seq.best.cfg), "threads={threads}");
+            assert_eq!(par.best.sim_fid.to_bits(), seq.best.sim_fid.to_bits());
+            assert_eq!(par.evals, seq.evals);
+        }
+    }
+
+    #[test]
+    fn refinement_never_hurts() {
+        let wl = workloads::latent_analog();
+        let coarse_only = TuneOptions { refine_rounds: 0, ..opts() };
+        let refined = TuneOptions { refine_rounds: 2, ..opts() };
+        let a = tune_cell(&wl, 6, &coarse_only, &Executor::sequential()).unwrap();
+        let b = tune_cell(&wl, 6, &refined, &Executor::sequential()).unwrap();
+        // The refined pool contains the coarse pool, so its winner can only
+        // be at least as good under the same total order.
+        assert!(cmp_scored(&b.best, &a.best) != std::cmp::Ordering::Greater);
+        assert!(b.evals >= a.evals);
+    }
+
+    #[test]
+    fn tune_builds_registry_with_provenance() {
+        let reg = tune(
+            &["latent_analog".to_string()],
+            &[5, 8],
+            &opts(),
+            &Executor::sequential(),
+        )
+        .unwrap();
+        assert_eq!(reg.schema_version, SCHEMA_VERSION);
+        assert_eq!(reg.presets.len(), 2);
+        assert_eq!(reg.presets[0].name, "latent_analog@5");
+        assert_eq!(reg.presets[0].cfg.nfe, 5);
+        assert_eq!(reg.presets[1].budget, 8);
+        assert!(reg.search.evals > 0);
+        assert_eq!(reg.search.n, opts().n);
+        assert!(reg.created_by.starts_with("sadiff "));
+    }
+
+    #[test]
+    fn tune_dedups_workloads_and_budgets() {
+        let o = TuneOptions { refine_rounds: 0, ..opts() };
+        let exec = Executor::sequential();
+        let once = tune(&["latent_analog".to_string()], &[5], &o, &exec).unwrap();
+        let duped = tune(
+            &["latent_analog".to_string(), "latent_analog".to_string()],
+            &[5, 5],
+            &o,
+            &exec,
+        )
+        .unwrap();
+        assert_eq!(once.to_line(), duped.to_line(), "duplicate inputs changed the registry");
+    }
+
+    #[test]
+    fn tune_rejects_bad_inputs() {
+        let o = opts();
+        let exec = Executor::sequential();
+        assert!(tune(&[], &[5], &o, &exec).is_err());
+        assert!(tune(&["latent_analog".to_string()], &[], &o, &exec).is_err());
+        assert!(tune(&["latent_analog".to_string()], &[1], &o, &exec).is_err());
+        assert!(tune(&["bogus".to_string()], &[5], &o, &exec).is_err());
+        // A bad name anywhere in the list fails up front — valid earlier
+        // entries must not trigger search work that gets discarded.
+        let names = ["latent_analog".to_string(), "bogus".to_string()];
+        assert!(tune(&names, &[5], &o, &exec).is_err());
+    }
+
+    #[test]
+    fn registry_roundtrips_through_json() {
+        let reg = tune(
+            &["latent_analog".to_string()],
+            &[5],
+            &TuneOptions { refine_rounds: 0, ..opts() },
+            &Executor::sequential(),
+        )
+        .unwrap();
+        let parsed =
+            PresetRegistry::from_json(&crate::jsonlite::parse(&reg.to_line()).unwrap()).unwrap();
+        assert_eq!(reg.to_line(), parsed.to_line());
+    }
+}

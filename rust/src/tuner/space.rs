@@ -1,0 +1,304 @@
+//! The tuner's candidate space: which `(solver, order, τ, grid)` points the
+//! coarse sweep enumerates, and how local refinement perturbs an incumbent.
+//!
+//! Candidates are plain [`SamplerConfig`]s (the NFE budget is stamped on by
+//! the search), deduplicated by their canonical JSON — the same string the
+//! batcher keys on, so "distinct candidate" and "distinct serving batch"
+//! mean the same thing.
+
+use crate::config::{SamplerConfig, SolverKind, TauKind};
+use crate::jsonlite::to_string;
+use crate::schedule::StepSelector;
+
+/// Canonical dedup/ordering key for a candidate (batcher-compatible JSON).
+pub fn cfg_key(cfg: &SamplerConfig) -> String {
+    to_string(&cfg.to_json())
+}
+
+/// The coarse grid the search sweeps, one axis per ablated choice.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Solver families in contention.
+    pub solvers: Vec<SolverKind>,
+    /// SA/UniPC predictor orders s.
+    pub predictor_steps: Vec<usize>,
+    /// SA/UniPC corrector orders ŝ (0 disables the corrector).
+    pub corrector_steps: Vec<usize>,
+    /// τ magnitudes for the stochastic solvers (also DDIM η candidates,
+    /// clamped to η's [0, 2] domain).
+    pub taus: Vec<f64>,
+    /// τ(t) families: constant and/or the EDM-style σ band.
+    pub tau_kinds: Vec<TauKind>,
+    /// Timestep-grid kinds.
+    pub selectors: Vec<StepSelector>,
+    /// τ step tried (±) around an incumbent during refinement.
+    pub tau_delta: f64,
+}
+
+impl Default for SearchSpace {
+    /// The production sweep: every axis the paper ablates by hand, at
+    /// coarse spacing (refinement closes the gap).
+    fn default() -> Self {
+        SearchSpace {
+            solvers: vec![
+                SolverKind::Sa,
+                SolverKind::DpmSolverPp2m,
+                SolverKind::UniPc,
+                SolverKind::Heun,
+                SolverKind::Ddim,
+            ],
+            predictor_steps: vec![2, 3],
+            corrector_steps: vec![0, 2],
+            taus: vec![0.0, 0.6, 1.0, 1.4],
+            tau_kinds: vec![
+                TauKind::Constant,
+                TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 },
+            ],
+            selectors: vec![
+                StepSelector::UniformLambda,
+                StepSelector::EdmRho { rho: 7.0 },
+                StepSelector::UniformT,
+            ],
+            tau_delta: 0.2,
+        }
+    }
+}
+
+impl SearchSpace {
+    /// A minimal space for tests and the CI smoke bench: two solver
+    /// families, one grid kind, a couple of τ points.
+    pub fn tiny() -> Self {
+        SearchSpace {
+            solvers: vec![SolverKind::Sa, SolverKind::Ddim],
+            predictor_steps: vec![2],
+            corrector_steps: vec![0, 1],
+            taus: vec![0.0, 1.0],
+            tau_kinds: vec![TauKind::Constant],
+            selectors: vec![StepSelector::UniformLambda],
+            tau_delta: 0.25,
+        }
+    }
+
+    /// Enumerate the coarse candidates at one NFE budget, deterministic
+    /// order, no duplicates. Invalid combinations are skipped rather than
+    /// erroring so users can put sloppy axes in a config.
+    pub fn candidates(&self, budget: usize) -> Vec<SamplerConfig> {
+        let mut out = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        let mut push = |cfg: SamplerConfig, out: &mut Vec<SamplerConfig>| {
+            if cfg.validate().is_ok() && seen.insert(cfg_key(&cfg)) {
+                out.push(cfg);
+            }
+        };
+        for &solver in &self.solvers {
+            for &selector in &self.selectors {
+                let base = SamplerConfig {
+                    nfe: budget,
+                    selector,
+                    ..SamplerConfig::for_solver(solver)
+                };
+                match solver {
+                    SolverKind::Sa => {
+                        for &predictor_steps in &self.predictor_steps {
+                            for &corrector_steps in &self.corrector_steps {
+                                for &tau in &self.taus {
+                                    for &tau_kind in &self.tau_kinds {
+                                        // A zero-magnitude band is the ODE
+                                        // limit regardless of family; keep
+                                        // the constant form only.
+                                        if tau == 0.0 && tau_kind != TauKind::Constant {
+                                            continue;
+                                        }
+                                        push(
+                                            SamplerConfig {
+                                                predictor_steps,
+                                                corrector_steps,
+                                                tau,
+                                                tau_kind,
+                                                ..base.clone()
+                                            },
+                                            &mut out,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    SolverKind::UniPc => {
+                        for &predictor_steps in &self.predictor_steps {
+                            for &corrector_steps in &self.corrector_steps {
+                                push(
+                                    SamplerConfig {
+                                        predictor_steps: predictor_steps.max(1),
+                                        corrector_steps,
+                                        ..base.clone()
+                                    },
+                                    &mut out,
+                                );
+                            }
+                        }
+                    }
+                    SolverKind::Ddim => {
+                        for &tau in &self.taus {
+                            if tau > 2.0 {
+                                continue; // η domain is [0, 2]
+                            }
+                            push(SamplerConfig { eta: tau, ..base.clone() }, &mut out);
+                        }
+                    }
+                    SolverKind::EulerMaruyama => {
+                        for &tau in &self.taus {
+                            push(SamplerConfig { tau, ..base.clone() }, &mut out);
+                        }
+                    }
+                    // Fixed-recipe baselines: one candidate per grid kind.
+                    _ => push(base, &mut out),
+                }
+            }
+        }
+        out
+    }
+
+    /// Local neighbors of an incumbent: one knob nudged one notch, same
+    /// solver family and grid kind. Deterministic order; the search layer
+    /// handles dedup against already-scored candidates.
+    pub fn neighbors(&self, cfg: &SamplerConfig) -> Vec<SamplerConfig> {
+        let mut out = Vec::new();
+        let mut push = |c: SamplerConfig| {
+            if c.validate().is_ok() && cfg_key(&c) != cfg_key(cfg) {
+                out.push(c);
+            }
+        };
+        match cfg.solver {
+            SolverKind::Sa => {
+                for tau in [cfg.tau - self.tau_delta, cfg.tau + self.tau_delta] {
+                    if (0.0..=16.0).contains(&tau) {
+                        let mut c = SamplerConfig { tau, ..cfg.clone() };
+                        // τ = 0 is the ODE limit whatever the family;
+                        // canonicalize to the constant form (mirrors the
+                        // coarse sweep) so the zero-magnitude band
+                        // duplicate never enters the pool or a registry.
+                        if tau == 0.0 {
+                            c.tau_kind = TauKind::Constant;
+                        }
+                        push(c);
+                    }
+                }
+                for predictor_steps in
+                    [cfg.predictor_steps.saturating_sub(1), cfg.predictor_steps + 1]
+                {
+                    push(SamplerConfig { predictor_steps, ..cfg.clone() });
+                }
+                for corrector_steps in
+                    [cfg.corrector_steps.saturating_sub(1), cfg.corrector_steps + 1]
+                {
+                    push(SamplerConfig { corrector_steps, ..cfg.clone() });
+                }
+            }
+            SolverKind::UniPc => {
+                for predictor_steps in
+                    [cfg.predictor_steps.saturating_sub(1).max(1), cfg.predictor_steps + 1]
+                {
+                    push(SamplerConfig { predictor_steps, ..cfg.clone() });
+                }
+                for corrector_steps in
+                    [cfg.corrector_steps.saturating_sub(1), cfg.corrector_steps + 1]
+                {
+                    push(SamplerConfig { corrector_steps, ..cfg.clone() });
+                }
+            }
+            SolverKind::Ddim => {
+                for eta in [cfg.eta - self.tau_delta, cfg.eta + self.tau_delta] {
+                    if (0.0..=2.0).contains(&eta) {
+                        push(SamplerConfig { eta, ..cfg.clone() });
+                    }
+                }
+            }
+            SolverKind::EulerMaruyama => {
+                for tau in [cfg.tau - self.tau_delta, cfg.tau + self.tau_delta] {
+                    if (0.0..=16.0).contains(&tau) {
+                        push(SamplerConfig { tau, ..cfg.clone() });
+                    }
+                }
+            }
+            // Fixed-recipe baselines have no local knobs worth nudging.
+            _ => {}
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coarse_candidates_valid_unique_and_budgeted() {
+        for space in [SearchSpace::default(), SearchSpace::tiny()] {
+            let cands = space.candidates(10);
+            assert!(!cands.is_empty());
+            let mut keys = std::collections::BTreeSet::new();
+            for c in &cands {
+                c.validate().unwrap();
+                assert_eq!(c.nfe, 10);
+                assert!(keys.insert(cfg_key(c)), "duplicate candidate {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_deterministic_order() {
+        let space = SearchSpace::default();
+        let a: Vec<String> = space.candidates(8).iter().map(cfg_key).collect();
+        let b: Vec<String> = space.candidates(8).iter().map(cfg_key).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiny_space_is_small() {
+        let n = SearchSpace::tiny().candidates(5).len();
+        assert!(n <= 12, "tiny space has {n} candidates");
+        assert!(n < SearchSpace::default().candidates(5).len());
+    }
+
+    #[test]
+    fn neighbors_differ_and_validate() {
+        let space = SearchSpace::default();
+        for cfg in space.candidates(10).iter().take(20) {
+            for nb in space.neighbors(cfg) {
+                nb.validate().unwrap();
+                assert_ne!(cfg_key(&nb), cfg_key(cfg));
+                assert_eq!(nb.solver, cfg.solver, "refinement must stay in-family");
+                assert_eq!(nb.nfe, cfg.nfe);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tau_neighbor_canonicalizes_to_constant() {
+        // Refining an interval-τ incumbent down to τ = 0 must emit the
+        // constant form (same rule as the coarse sweep), not a
+        // zero-magnitude band duplicate with a distinct batch key.
+        let space = SearchSpace { tau_delta: 0.5, ..SearchSpace::default() };
+        let cfg = SamplerConfig {
+            nfe: 10,
+            tau: 0.5,
+            tau_kind: TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 },
+            ..SamplerConfig::sa_default()
+        };
+        let nbs = space.neighbors(&cfg);
+        let zero: Vec<_> = nbs.iter().filter(|c| c.tau == 0.0).collect();
+        assert!(!zero.is_empty(), "τ−δ neighbor missing");
+        assert!(zero.iter().all(|c| c.tau_kind == TauKind::Constant));
+    }
+
+    #[test]
+    fn sa_neighbors_cover_every_knob() {
+        let space = SearchSpace::default();
+        let cfg = SamplerConfig { nfe: 10, ..SamplerConfig::sa_default() };
+        let nbs = space.neighbors(&cfg);
+        assert!(nbs.iter().any(|c| c.tau != cfg.tau));
+        assert!(nbs.iter().any(|c| c.predictor_steps != cfg.predictor_steps));
+        assert!(nbs.iter().any(|c| c.corrector_steps != cfg.corrector_steps));
+    }
+}

@@ -143,6 +143,11 @@ mod tests {
             assert!(wl.dim() >= 16);
         }
         assert!(by_name("nope").is_none());
+        assert!(by_name("").is_none());
+        // all_names is exactly the set by_name accepts (no dangling names,
+        // no duplicates).
+        let unique: std::collections::BTreeSet<&str> = all_names().iter().copied().collect();
+        assert_eq!(unique.len(), all_names().len());
     }
 
     #[test]
@@ -153,9 +158,26 @@ mod tests {
     }
 
     #[test]
+    fn reference_deterministic_for_every_workload() {
+        // The tuner scores against `reference`; a nondeterministic
+        // reference would make tuned registries irreproducible.
+        for name in all_names() {
+            let wl = by_name(name).unwrap();
+            let a = wl.reference(16, 42);
+            let b = wl.reference(16, 42);
+            assert_eq!(a, b, "{name}: reference not reproducible");
+            assert_eq!(a.len(), 16 * wl.dim(), "{name}: wrong layout");
+            assert!(a.iter().all(|v| v.is_finite()), "{name}: non-finite reference");
+            assert_ne!(a, wl.reference(16, 43), "{name}: seed ignored");
+        }
+    }
+
+    #[test]
     fn workload_model_dim_matches() {
-        let wl = cifar_analog();
-        assert_eq!(wl.model().dim(), wl.dim());
+        for name in all_names() {
+            let wl = by_name(name).unwrap();
+            assert_eq!(wl.model().dim(), wl.dim(), "{name}");
+        }
     }
 
     #[test]

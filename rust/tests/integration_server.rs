@@ -21,6 +21,7 @@ fn spawn_server_threads(max_batch: usize, workers: usize, threads: usize) -> Spa
         workers,
         queue_cap: 64,
         threads,
+        presets_path: None,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -37,6 +38,7 @@ fn request(n: usize, seed: u64, nfe: usize) -> SampleRequest {
         seed,
         return_samples: true,
         want_metrics: true,
+        preset: None,
     }
 }
 
@@ -205,6 +207,7 @@ fn load_shedding_under_queue_cap() {
         workers: 1,
         queue_cap: 2,
         threads: 1,
+        presets_path: None,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -229,6 +232,67 @@ fn load_shedding_under_queue_cap() {
     let stats = client.stats().unwrap();
     assert_eq!(stats.req_f64("shed").unwrap() as usize, shed);
     handle.shutdown();
+}
+
+#[test]
+fn invalid_utf8_line_gets_error_reply_not_a_dropped_connection() {
+    use std::io::{BufRead, BufReader, Write};
+    let (handle, addr) = spawn_server(4, 1);
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(b"\xff\xfe{not utf8}\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = jsonlite::parse(line.trim_end()).unwrap();
+    assert!(!v.opt_bool("ok", true));
+    assert!(v.req_str("error").unwrap().contains("utf-8"), "{line}");
+    // Connection must still be usable.
+    stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), r#"{"ok":true}"#);
+    handle.shutdown();
+}
+
+#[test]
+fn presets_cmd_without_registry_reports_error() {
+    let (handle, addr) = spawn_server(4, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let v = jsonlite::parse(&client.round_trip(r#"{"cmd":"presets"}"#).unwrap()).unwrap();
+    assert!(!v.opt_bool("ok", true));
+    assert!(v.req_str("error").unwrap().contains("no preset registry"));
+    // A request asking for a preset is an error, not a hang or a crash.
+    let mut req = request(2, 3, 6);
+    req.preset = Some("auto".into());
+    let resp = client.request(&req).unwrap();
+    assert!(!resp.ok);
+    assert!(resp.error.as_ref().unwrap().contains("no registry loaded"));
+    handle.shutdown();
+}
+
+#[test]
+fn stats_include_queue_depth() {
+    let (handle, addr) = spawn_server(4, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let _ = client.request(&request(2, 1, 6)).unwrap();
+    let stats = client.stats().unwrap();
+    // Drained by now, but the gauge must exist and be a number.
+    assert!(stats.req_f64("queued_samples").unwrap() >= 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_after_protocol_shutdown_does_not_hang() {
+    // A client-initiated shutdown exits the accept thread; the handle's
+    // shutdown() afterwards must join cleanly (the poke-connect fails, but
+    // the join still runs) instead of hanging or panicking.
+    let (handle, addr) = spawn_server(4, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let line = client.round_trip(r#"{"cmd":"shutdown"}"#).unwrap();
+    assert!(line.contains("shutting_down"));
+    // Give the accept thread a moment to observe the flag and exit.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    handle.shutdown(); // must return promptly
 }
 
 #[test]

@@ -1,0 +1,205 @@
+//! Tuner → registry → server end-to-end: a tuned registry persisted to
+//! disk, loaded by `serve --presets`-equivalent config, and resolved by
+//! request `"preset"` fields must serve samples bit-identical to running
+//! the winning config directly — at any lane-parallel thread count.
+
+use sadiff::config::ServerConfig;
+use sadiff::coordinator::engine;
+use sadiff::coordinator::server::{Client, Server};
+use sadiff::coordinator::SampleRequest;
+use sadiff::exec::Executor;
+use sadiff::jsonlite;
+use sadiff::tuner::{tune, PresetRegistry, TuneOptions};
+use sadiff::workloads;
+
+fn tiny_opts() -> TuneOptions {
+    TuneOptions { n: 96, ..TuneOptions::quick() }
+}
+
+/// Tune cifar_analog at two budgets and persist the registry to a temp
+/// path; callers clean the directory up.
+fn tuned_registry_on_disk(tag: &str) -> (PresetRegistry, std::path::PathBuf, std::path::PathBuf) {
+    let reg = tune(
+        &["cifar_analog".to_string()],
+        &[5, 10],
+        &tiny_opts(),
+        &Executor::new(2),
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join(format!("sadiff_tuner_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("presets.json");
+    reg.save(path.to_str().unwrap()).unwrap();
+    (reg, path, dir)
+}
+
+fn spawn_with_presets(
+    path: &str,
+    threads: usize,
+    deadline_ms: u64,
+) -> (sadiff::coordinator::ServerHandle, String) {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        batch_deadline_ms: deadline_ms,
+        threads,
+        presets_path: Some(path.to_string()),
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+fn preset_request(preset: &str, nfe_hint: usize, n: usize, seed: u64) -> SampleRequest {
+    let mut req = SampleRequest::from_json(
+        &jsonlite::parse(&format!(
+            r#"{{"id": 1, "workload": "cifar_analog", "n": {n}, "seed": {seed},
+                "return_samples": true, "preset": "{preset}",
+                "solver": {{"nfe": {nfe_hint}}}}}"#
+        ))
+        .unwrap(),
+    )
+    .unwrap();
+    req.id = seed;
+    req
+}
+
+#[test]
+fn preset_auto_serves_winning_config_bit_identical_at_any_thread_count() {
+    let (reg, path, dir) = tuned_registry_on_disk("auto");
+
+    // The expected samples: run the winning config for (cifar_analog,
+    // budget nearest to the request's nfe=10) directly through the engine.
+    let wl = workloads::by_name("cifar_analog").unwrap();
+    let winner = reg.resolve("auto", "cifar_analog", 10).unwrap();
+    assert_eq!(winner.budget, 10);
+    let direct = engine::sample(&*wl.model(), &wl, &winner.cfg, 7, 4242);
+
+    for threads in [1usize, 4] {
+        let (handle, addr) = spawn_with_presets(path.to_str().unwrap(), threads, 2);
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.request(&preset_request("auto", 10, 7, 4242)).unwrap();
+        assert!(resp.ok, "threads={threads}: {:?}", resp.error);
+        assert_eq!(resp.nfe, direct.nfe, "threads={threads}");
+        assert_eq!(
+            resp.samples.as_deref(),
+            Some(&direct.samples[..]),
+            "threads={threads}: served preset samples diverge from direct run"
+        );
+        handle.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn preset_by_name_and_summary_roundtrip() {
+    let (reg, path, dir) = tuned_registry_on_disk("name");
+    let wl = workloads::by_name("cifar_analog").unwrap();
+    let named = reg.resolve("cifar_analog@5", "cifar_analog", 999).unwrap();
+    let direct = engine::sample(&*wl.model(), &wl, &named.cfg, 4, 99);
+
+    let (handle, addr) = spawn_with_presets(path.to_str().unwrap(), 1, 2);
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Exact-name resolution ignores the request's own nfe.
+    let resp = client.request(&preset_request("cifar_analog@5", 40, 4, 99)).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.samples.as_deref(), Some(&direct.samples[..]));
+
+    // Unknown preset → error listing what exists.
+    let resp = client.request(&preset_request("nope@7", 10, 2, 1)).unwrap();
+    assert!(!resp.ok);
+    assert!(resp.error.as_ref().unwrap().contains("cifar_analog@5"));
+
+    // The presets command reports the loaded registry.
+    let v = jsonlite::parse(&client.round_trip(r#"{"cmd":"presets"}"#).unwrap()).unwrap();
+    assert!(v.opt_bool("ok", false));
+    assert_eq!(v.req_usize("count").unwrap(), 2);
+    let names: Vec<&str> = v
+        .get("presets")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|p| p.req_str("name").unwrap())
+        .collect();
+    assert_eq!(names, vec!["cifar_analog@5", "cifar_analog@10"]);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn preset_and_manual_requests_share_a_batch() {
+    // A preset request resolves at ingress to the same concrete config as
+    // a manual request; the two must merge into one batch (observed via
+    // the mean-occupancy metric) and still get per-request samples.
+    let (reg, path, dir) = tuned_registry_on_disk("merge");
+    let winner = reg.resolve("auto", "cifar_analog", 5).unwrap().cfg.clone();
+
+    // A generous batching window so the four concurrent requests reliably
+    // land in one flush.
+    let (handle, addr) = spawn_with_presets(path.to_str().unwrap(), 1, 150);
+    let mut joins = Vec::new();
+    for seed in [21u64, 22, 23, 24] {
+        let addr = addr.clone();
+        let manual_cfg = winner.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let req = if seed % 2 == 0 {
+                // Manual request with the winning config spelled out.
+                SampleRequest {
+                    id: seed,
+                    workload: "cifar_analog".into(),
+                    model: "gmm".into(),
+                    cfg: manual_cfg,
+                    n: 3,
+                    seed,
+                    return_samples: true,
+                    want_metrics: false,
+                    preset: None,
+                }
+            } else {
+                preset_request("auto", 5, 3, seed)
+            };
+            client.request(&req).unwrap()
+        }));
+    }
+    let responses: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for r in &responses {
+        assert!(r.ok, "{:?}", r.error);
+        assert_eq!(r.samples.as_ref().unwrap().len(), 3 * r.dim);
+    }
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(
+        stats.req_f64("mean_batch_occupancy").unwrap() > 1.0,
+        "preset and manual requests never merged: {}",
+        jsonlite::to_string(&stats)
+    );
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_load_rejects_garbage() {
+    let dir = std::env::temp_dir().join(format!("sadiff_tuner_bad_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.json");
+
+    std::fs::write(&path, "{ not json").unwrap();
+    assert!(PresetRegistry::load(path.to_str().unwrap()).is_err());
+
+    std::fs::write(&path, r#"{"schema_version": 999, "presets": []}"#).unwrap();
+    let err = PresetRegistry::load(path.to_str().unwrap()).unwrap_err();
+    assert!(err.to_string().contains("newer"));
+
+    // A server pointed at a bad registry fails to bind, loudly.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        presets_path: Some(path.to_str().unwrap().to_string()),
+        ..ServerConfig::default()
+    };
+    assert!(Server::bind(cfg).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -228,6 +228,7 @@ fn prop_sampler_config_json_roundtrip() {
         cfg.predictor_steps = g.usize_in(1, 6);
         cfg.corrector_steps = g.usize_in(0, 6);
         cfg.prediction = if g.bool() { Prediction::Data } else { Prediction::Noise };
+        cfg.selector = *g.choice(sadiff::schedule::StepSelector::all());
         if g.bool() {
             cfg.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
         }
