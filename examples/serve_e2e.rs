@@ -40,6 +40,7 @@ fn main() {
         workers: 2,
         queue_cap: 512,
         threads: 0, // lane-parallel executor: auto-size to the cores
+        max_inflight: 4,
         presets_path: None,
     };
     let handle = Server::bind(server_cfg).unwrap().spawn().unwrap();

@@ -7,15 +7,25 @@
 //!     sample·step, excluding the model;
 //!   * coefficient engine cost alone (exact vs quadrature path);
 //!   * batcher throughput;
-//!   * end-to-end sampling throughput on the GMM model.
+//!   * end-to-end sampling throughput on the GMM model;
+//!   * stepper-driver hot path: monolithic reference loop vs the
+//!     incremental stepper driver vs the step-level `BatchRun` scheduler
+//!     primitive — asserts all three are bit-identical and emits
+//!     `BENCH_stepper.json` (CI uploads it next to the smoke benches).
 //! Runtime measurement (needs `make artifacts`):
 //!   * artifact execute round-trip (channel + PJRT) for the GMM denoiser
 //!     and the fused sa_update kernel vs the native Rust update.
+//!
+//! Flags: `--quick` (smaller shapes), `--out <path>` for the stepper
+//! report (default `BENCH_stepper.json`).
 
 use sadiff::config::{Prediction, SamplerConfig};
 use sadiff::coordinator::batcher::Batcher;
+use sadiff::coordinator::engine::BatchRun;
 use sadiff::coordinator::SampleRequest;
+use sadiff::exec::Executor;
 use sadiff::gmm::Gmm;
+use sadiff::jsonlite::{to_string, Value};
 use sadiff::models::{EvalCtx, GmmAnalytic, ModelEval};
 use sadiff::rng::normal::PhiloxNormal;
 use sadiff::schedule::{timesteps, NoiseSchedule, StepSelector};
@@ -24,6 +34,8 @@ use sadiff::solvers::sa::{SaSolver, SaSolverOpts};
 use sadiff::solvers::Grid;
 use sadiff::tau::TauFn;
 use sadiff::util::timing::time_it;
+use sadiff::workloads;
+use std::sync::Arc;
 
 /// A free model: measures pure coordinator overhead.
 struct NullModel {
@@ -39,9 +51,32 @@ impl ModelEval for NullModel {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_stepper.json")
+        .to_string();
+
     println!("== bench_perf: L3 coordinator hot paths ==\n");
     let sch = NoiseSchedule::vp_linear();
 
+    if !quick {
+        l3_sections(&sch);
+    }
+    stepper_section(quick, &out_path);
+
+    // --- 5. Artifact round-trips (skipped without `make artifacts`).
+    artifact_section();
+}
+
+/// Sections 1–4: the original L3 cost decomposition (skipped by `--quick`,
+/// which CI uses to get just the stepper report).
+fn l3_sections(sch: &NoiseSchedule) {
+    let sch = *sch; // Copy: the section bodies take &sch
     // --- 1. Solver-step overhead (model-free), SDE and ODE configs.
     for (n, dim) in [(64usize, 16usize), (256, 64)] {
         for tau in [1.0f64, 0.0] {
@@ -128,8 +163,96 @@ fn main() {
         mean * 1e3,
         256.0 / mean
     );
+}
 
-    // --- 5. Artifact round-trips (skipped without `make artifacts`).
+/// Stepper-driver hot path: the monolithic reference loop vs the
+/// incremental stepper driver vs the step-level `BatchRun` primitive the
+/// serving scheduler drives. The three must agree bitwise (gate), and the
+/// per-step scheduling overhead (BatchRun vs driver) is the number the
+/// continuous-batching design pays per step boundary.
+fn stepper_section(quick: bool, out_path: &str) {
+    let sch = NoiseSchedule::vp_linear();
+    let (n, nfe, iters) = if quick { (64usize, 12usize, 3usize) } else { (256, 20, 5) };
+    let wl = workloads::latent_analog();
+    let cfg = SamplerConfig { nfe, tau: 1.0, ..SamplerConfig::sa_default() };
+    let model = GmmAnalytic::new(wl.gmm.clone());
+    let exec = Executor::sequential();
+    let mk_req = |id: u64| SampleRequest {
+        id,
+        workload: wl.name.into(),
+        model: "gmm".into(),
+        cfg: cfg.clone(),
+        n,
+        seed: 7,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+    };
+
+    // Bit-identity gate across the three paths.
+    let reference = sadiff::solvers::run_reference(&model, &sch, &cfg, n, 7);
+    let driver = sadiff::solvers::run(&model, &sch, &cfg, n, 7);
+    let batch = {
+        let m: Arc<dyn ModelEval> = Arc::new(GmmAnalytic::new(wl.gmm.clone()));
+        let mut br = BatchRun::new(m, &wl, &cfg, vec![mk_req(1)], &exec);
+        while !br.step(&exec) {}
+        br.finish().remove(0).samples.unwrap()
+    };
+    let identical = reference.samples == driver.samples && driver.samples == batch;
+
+    let (ref_mean, ref_min) = time_it(iters, || {
+        std::hint::black_box(sadiff::solvers::run_reference(&model, &sch, &cfg, n, 7));
+    });
+    let (drv_mean, drv_min) = time_it(iters, || {
+        std::hint::black_box(sadiff::solvers::run(&model, &sch, &cfg, n, 7));
+    });
+    // Model construction stays outside the timed region (the driver loop
+    // reuses a prebuilt model too) so per_step_overhead_us measures only
+    // scheduler work.
+    let bat_model: Arc<dyn ModelEval> = Arc::new(GmmAnalytic::new(wl.gmm.clone()));
+    let (bat_mean, bat_min) = time_it(iters, || {
+        let mut br = BatchRun::new(bat_model.clone(), &wl, &cfg, vec![mk_req(1)], &exec);
+        while !br.step(&exec) {}
+        std::hint::black_box(br.finish());
+    });
+    // Scheduling overhead the step-level scheduler adds per step boundary.
+    let steps = cfg.steps_for_nfe() as f64;
+    let per_step_overhead_us = (bat_min - drv_min).max(0.0) / steps * 1e6;
+    println!(
+        "\nstepper hot path (n={n}, NFE={nfe}): reference {:.2} ms, driver {:.2} ms, \
+         batch-run {:.2} ms, per-step scheduling overhead {:.2} µs (identical: {identical})",
+        ref_mean * 1e3,
+        drv_mean * 1e3,
+        bat_mean * 1e3,
+        per_step_overhead_us
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::Str("stepper".into())),
+        ("lanes", Value::Num(n as f64)),
+        ("nfe", Value::Num(nfe as f64)),
+        ("reference_mean_ms", Value::Num(ref_mean * 1e3)),
+        ("reference_min_ms", Value::Num(ref_min * 1e3)),
+        ("driver_mean_ms", Value::Num(drv_mean * 1e3)),
+        ("driver_min_ms", Value::Num(drv_min * 1e3)),
+        ("batch_run_mean_ms", Value::Num(bat_mean * 1e3)),
+        ("batch_run_min_ms", Value::Num(bat_min * 1e3)),
+        ("per_step_overhead_us", Value::Num(per_step_overhead_us)),
+        ("identical", Value::Bool(identical)),
+    ]);
+    if let Err(e) = std::fs::write(out_path, format!("{}\n", to_string(&report))) {
+        eprintln!("cannot write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out_path}");
+    if !identical {
+        eprintln!("FAIL: stepper paths are not bit-identical to the monolithic reference");
+        std::process::exit(1);
+    }
+}
+
+/// Artifact round-trips (skipped without `make artifacts`).
+fn artifact_section() {
     let dir = std::env::var("SADIFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     if std::path::Path::new(&dir).join("manifest.json").exists() {
         let host = sadiff::runtime::RuntimeHost::open(&dir).unwrap();

@@ -320,6 +320,13 @@ pub struct ServerConfig {
     /// (sequential per batch) so `workers × threads` cannot oversubscribe
     /// the host unless explicitly requested.
     pub threads: usize,
+    /// Lane groups a worker may hold in flight at once. The step-
+    /// synchronous scheduler interleaves steps across its in-flight groups
+    /// and admits newly queued compatible requests at step boundaries, so
+    /// values > 1 let fresh requests start making progress while a long
+    /// solve is still running (continuous batching). `1` reproduces the
+    /// old run-to-completion behavior.
+    pub max_inflight: usize,
     /// Path to a tuner preset registry (`sadiff tune` output) to load at
     /// bind time; enables the request `"preset"` field and the `presets`
     /// protocol command.
@@ -335,6 +342,7 @@ impl Default for ServerConfig {
             workers: 2,
             queue_cap: 256,
             threads: 1,
+            max_inflight: 4,
             presets_path: None,
         }
     }
@@ -351,6 +359,7 @@ impl ServerConfig {
             workers: v.opt_usize("workers", d.workers).max(1),
             queue_cap: v.opt_usize("queue_cap", d.queue_cap),
             threads: v.opt_usize("threads", d.threads),
+            max_inflight: v.opt_usize("max_inflight", d.max_inflight).max(1),
             presets_path: v.get("presets").and_then(Value::as_str).map(String::from),
         })
     }
@@ -462,6 +471,12 @@ mod tests {
 
         let v = jsonlite::parse(r#"{"threads": 3}"#).unwrap();
         assert_eq!(ServerConfig::from_json(&v).unwrap().threads, 3);
+
+        assert_eq!(c.max_inflight, ServerConfig::default().max_inflight);
+        let v = jsonlite::parse(r#"{"max_inflight": 0}"#).unwrap();
+        assert_eq!(ServerConfig::from_json(&v).unwrap().max_inflight, 1); // clamped
+        let v = jsonlite::parse(r#"{"max_inflight": 7}"#).unwrap();
+        assert_eq!(ServerConfig::from_json(&v).unwrap().max_inflight, 7);
 
         assert_eq!(c.presets_path, None);
         let v = jsonlite::parse(r#"{"presets": "presets.json"}"#).unwrap();

@@ -77,6 +77,24 @@ impl Batcher {
         self.queue.front().map(|p| p.arrived.elapsed())
     }
 
+    /// Remove every queued request matching `pred` (cancellation before
+    /// admission), preserving the order of the rest. Returns the removed
+    /// requests so the caller can route their replies.
+    pub fn remove_where(&mut self, pred: impl Fn(&SampleRequest) -> bool) -> Vec<SampleRequest> {
+        let mut removed = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        while let Some(p) = self.queue.pop_front() {
+            if pred(&p.request) {
+                self.queued_samples -= p.request.n;
+                removed.push(p.request);
+            } else {
+                kept.push_back(p);
+            }
+        }
+        self.queue = kept;
+        removed
+    }
+
     /// Pop the oldest request plus up to `max_batch − 1` *compatible*
     /// requests (FIFO order preserved within the group; incompatible
     /// requests keep their positions).
@@ -158,6 +176,24 @@ mod tests {
         b.push(req(2, 20, "cifar_analog"));
         let g = b.pop_group(8);
         assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn remove_where_cancels_queued_requests() {
+        let mut b = Batcher::new();
+        for id in 0..5 {
+            b.push(req(id, 10, "latent_analog"));
+        }
+        assert_eq!(b.queued_samples(), 10);
+        let removed = b.remove_where(|r| r.id % 2 == 1);
+        assert_eq!(removed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.queued_samples(), 6);
+        // Order of the survivors is preserved.
+        let g = b.pop_group(8);
+        assert_eq!(g.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        // No match → no-op.
+        assert!(b.remove_where(|_| true).is_empty());
     }
 
     #[test]

@@ -4,13 +4,16 @@
 
 use crate::config::SamplerConfig;
 use crate::coordinator::request::{SampleRequest, SampleResponse};
-use crate::exec::Executor;
-use crate::models::ModelEval;
+use crate::exec::{chunks, Executor};
+use crate::models::{CountingModel, ModelEval};
 use crate::rng::normal::{NormalSource, SplitNoise};
 use crate::rng::Philox4x32;
-use crate::solvers::{run_chunked, SolveOutput};
+use crate::schedule::timesteps;
+use crate::solvers::stepper::{self, Stepper};
+use crate::solvers::{prior_sample, run_chunked, Grid, SolveOutput};
 use crate::util::timing::Stopwatch;
 use crate::workloads::Workload;
+use std::ops::Range;
 use std::sync::Arc;
 
 /// Per-request noise streams inside a merged batch: global lane `l` maps to
@@ -40,11 +43,35 @@ impl CompositeNormal {
         }
         CompositeNormal { gens: Arc::new(gens), lane_map: Arc::new(lane_map), lane0: 0 }
     }
+
+    /// A view whose local stream `l` draws global lane `lanes[l]`'s stream.
+    /// This generalizes [`SplitNoise::split_lanes`] to non-contiguous lane
+    /// sets — what a step-level shard becomes once cancellation has punched
+    /// holes into its original lane range.
+    pub fn select(&self, lanes: &[usize]) -> CompositeNormal {
+        let map: Vec<(usize, u64)> =
+            lanes.iter().map(|&l| self.lane_map[self.lane0 + l]).collect();
+        CompositeNormal { gens: self.gens.clone(), lane_map: Arc::new(map), lane0: 0 }
+    }
+
+    /// Number of lanes this source addresses.
+    pub fn lanes(&self) -> usize {
+        self.lane_map.len() - self.lane0
+    }
 }
 
 impl NormalSource for CompositeNormal {
     fn fill(&mut self, stream: u64, step: u64, out: &mut [f64]) {
-        let lane = (self.lane0 + stream as usize) % self.lane_map.len();
+        // An out-of-range lane must panic, not wrap: a silent `% len` here
+        // would alias two requests' noise streams and quietly correlate
+        // their samples — the worst possible failure mode for a serving
+        // system whose core invariant is batch-composition-independence.
+        let lane = self.lane0 + stream as usize;
+        assert!(
+            lane < self.lane_map.len(),
+            "noise stream {stream} (global lane {lane}) out of range for a {}-lane batch",
+            self.lane_map.len()
+        );
         let (gi, local) = self.lane_map[lane];
         self.gens[gi].normals_into(local, step, out);
     }
@@ -141,6 +168,8 @@ pub fn run_batch(
 /// [`run_batch`] with an explicit lane-parallel executor: the merged batch's
 /// lanes are chunked across worker threads, and per-request Philox streams
 /// keep every request's samples identical to an unbatched sequential run.
+/// Runs start-to-finish on the stepper driver; the serving scheduler uses
+/// the step-level [`BatchRun`] instead (bit-identical, asserted in tests).
 pub fn run_batch_with(
     model: &dyn ModelEval,
     wl: &Workload,
@@ -187,6 +216,231 @@ pub fn run_batch_with(
         });
     }
     responses
+}
+
+/// One lane shard of an in-flight batch: a contiguous-at-admission slice
+/// of the merged batch's lanes, with its own stepper state and noise view.
+/// Cancellation can punch holes into `lanes`; the `select`ed noise view
+/// keeps every surviving lane on its original global stream.
+struct Shard {
+    /// Original global lane ids this shard still runs, ascending.
+    lanes: Vec<usize>,
+    /// Row-major `lanes.len() × dim` state.
+    x: Vec<f64>,
+    stepper: Box<dyn Stepper>,
+    noise: CompositeNormal,
+    /// Model evaluations this shard has spent (identical across shards —
+    /// calls are per step, not per lane; see `solvers::run_chunked`).
+    evals: usize,
+}
+
+/// A merged batch as a *step-level* primitive: the scheduler advances it
+/// one grid step at a time (`step`), can drop a cancelled request's lanes
+/// at any step boundary (`cancel`), and collects responses at the end
+/// (`finish`). Built on the solver [`Stepper`] core; a `BatchRun` stepped
+/// to completion is bit-identical to [`run_batch_with`] on the same
+/// executor width (asserted in tests), which is itself bit-identical to a
+/// sequential unbatched run per request.
+pub struct BatchRun {
+    model: Arc<dyn ModelEval>,
+    wl: Workload,
+    grid: Grid,
+    dim: usize,
+    /// Surviving requests in arrival order, each with its original global
+    /// lane range in the merged batch.
+    requests: Vec<(SampleRequest, Range<usize>)>,
+    shards: Vec<Shard>,
+    parent_noise: CompositeNormal,
+    next_step: usize,
+    sw: Stopwatch,
+}
+
+impl BatchRun {
+    /// Admit a compatible group: draw priors, build per-shard steppers and
+    /// run their warm-up (`init`) evaluations. All requests must share
+    /// (workload, cfg) — the batcher guarantees this.
+    pub fn new(
+        model: Arc<dyn ModelEval>,
+        wl: &Workload,
+        cfg: &SamplerConfig,
+        requests: Vec<SampleRequest>,
+        exec: &Executor,
+    ) -> BatchRun {
+        debug_assert!(!requests.is_empty());
+        let sw = Stopwatch::start();
+        let dim = model.dim();
+        let m = cfg.steps_for_nfe();
+        let grid = Grid::new(&wl.schedule, timesteps(&wl.schedule, cfg.selector, m));
+        let members: Vec<(u64, usize)> = requests.iter().map(|r| (r.seed, r.n)).collect();
+        let total_n: usize = members.iter().map(|(_, n)| n).sum();
+        let parent_noise = CompositeNormal::new(&members);
+
+        let mut lane = 0usize;
+        let requests: Vec<(SampleRequest, Range<usize>)> = requests
+            .into_iter()
+            .map(|r| {
+                let range = lane..lane + r.n;
+                lane += r.n;
+                (r, range)
+            })
+            .collect();
+
+        // Same lane chunking as `run_chunked`, so a full BatchRun equals a
+        // `run_batch_with` of the same group bitwise at any thread count.
+        // The prior draws and stepper warm-up evaluations (the expensive
+        // part of admission for a real model) run shard-parallel on the
+        // executor, like every subsequent step.
+        let mut shards: Vec<Shard> = chunks(total_n, exec.threads())
+            .into_iter()
+            .map(|range| {
+                let lanes: Vec<usize> = range.collect();
+                let noise = parent_noise.select(&lanes);
+                let stepper = stepper::make_stepper(cfg, &wl.schedule);
+                Shard { lanes, x: Vec::new(), stepper, noise, evals: 0 }
+            })
+            .collect();
+        let model_ref = &*model;
+        let grid_ref = &grid;
+        exec.for_each_mut(&mut shards, |_, shard| {
+            let counting = CountingModel::new(model_ref);
+            let n = shard.lanes.len();
+            shard.x = prior_sample(grid_ref, dim, n, &mut shard.noise);
+            shard.stepper.init(&counting, grid_ref, &mut shard.x, n, &mut shard.noise);
+            shard.evals = counting.count();
+        });
+        BatchRun {
+            model,
+            wl: wl.clone(),
+            grid,
+            dim,
+            requests,
+            shards,
+            parent_noise,
+            next_step: 0,
+            sw,
+        }
+    }
+
+    /// Advance every lane by one grid step (shards run on `exec`'s
+    /// workers). Returns `true` once the run is finished.
+    pub fn step(&mut self, exec: &Executor) -> bool {
+        if self.is_done() {
+            return true;
+        }
+        let i = self.next_step;
+        let model = &*self.model;
+        let grid = &self.grid;
+        exec.for_each_mut(&mut self.shards, |_, shard| {
+            let counting = CountingModel::new(model);
+            let n = shard.lanes.len();
+            shard.stepper.step(&counting, grid, i, &mut shard.x, n, &mut shard.noise);
+            shard.evals += counting.count();
+        });
+        self.next_step += 1;
+        self.is_done()
+    }
+
+    /// Steps completed / total steps (per-step progress reporting).
+    pub fn progress(&self) -> (usize, usize) {
+        (self.next_step, self.grid.m())
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.next_step >= self.grid.m() || self.requests.is_empty()
+    }
+
+    /// Ids of the requests still in flight (the server's reply tickets).
+    pub fn tickets(&self) -> Vec<u64> {
+        self.requests.iter().map(|(r, _)| r.id).collect()
+    }
+
+    /// Surviving lane count.
+    pub fn lanes(&self) -> usize {
+        self.requests.iter().map(|(r, _)| r.n).sum()
+    }
+
+    /// Drop request `ticket`'s lanes at the current step boundary. Every
+    /// other request's lanes keep their global noise streams and history
+    /// rows, so survivors are bit-identical to an undisturbed run. Returns
+    /// the `"cancelled"` error response for the dropped request, or `None`
+    /// if the ticket is not part of this run.
+    pub fn cancel(&mut self, ticket: u64) -> Option<SampleResponse> {
+        let pos = self.requests.iter().position(|(r, _)| r.id == ticket)?;
+        let (req, range) = self.requests.remove(pos);
+        let dim = self.dim;
+        for shard in &mut self.shards {
+            let keep: Vec<bool> = shard.lanes.iter().map(|l| !range.contains(l)).collect();
+            if keep.iter().all(|k| *k) {
+                continue;
+            }
+            shard.stepper.retain_lanes(&keep, dim);
+            stepper::retain_rows(&mut shard.x, &keep, dim);
+            shard.lanes = shard
+                .lanes
+                .iter()
+                .zip(&keep)
+                .filter(|(_, k)| **k)
+                .map(|(l, _)| *l)
+                .collect();
+            shard.noise = self.parent_noise.select(&shard.lanes);
+        }
+        // A shard whose lanes were all cancelled has nothing left to
+        // advance — drop it so remaining steps don't pay its per-step
+        // lane-independent costs (coefficients, empty model calls). The
+        // surviving shards all hold the full eval history, so NFE
+        // accounting still reads any remaining shard.
+        self.shards.retain(|s| !s.lanes.is_empty());
+        Some(SampleResponse::err(req.id, "cancelled"))
+    }
+
+    /// Collect responses for the surviving requests. Call after `step`
+    /// returned `true`.
+    pub fn finish(mut self) -> Vec<SampleResponse> {
+        debug_assert!(self.is_done());
+        for shard in &mut self.shards {
+            shard.stepper.finish(&mut shard.x);
+        }
+        let wall_ms = self.sw.millis();
+        let nfe = self.shards.first().map_or(0, |s| s.evals);
+        let dim = self.dim;
+        // Shards hold ascending disjoint lane sets, so their concatenation
+        // is the surviving lanes in global order — request blocks in
+        // arrival order, exactly as `run_batch_with` lays them out.
+        let mut samples = Vec::with_capacity(self.lanes() * dim);
+        for shard in &self.shards {
+            samples.extend_from_slice(&shard.x);
+        }
+        let mut responses = Vec::with_capacity(self.requests.len());
+        let mut lane = 0usize;
+        for (req, _) in &self.requests {
+            let lo = lane * dim;
+            let hi = (lane + req.n) * dim;
+            lane += req.n;
+            let slice = &samples[lo..hi];
+            let (sim_fid, sliced_w2) = if req.want_metrics && req.n >= 2 {
+                let reference = self.wl.reference(req.n, req.seed ^ 0x5a5a);
+                (
+                    crate::metrics::sim_fid(slice, &reference, dim).ok(),
+                    Some(crate::metrics::sliced_w2(slice, &reference, dim, 32, req.seed)),
+                )
+            } else {
+                (None, None)
+            };
+            responses.push(SampleResponse {
+                id: req.id,
+                ok: true,
+                error: None,
+                n: req.n,
+                dim,
+                nfe,
+                wall_ms,
+                sim_fid,
+                sliced_w2,
+                samples: if req.return_samples { Some(slice.to_vec()) } else { None },
+            });
+        }
+        responses
+    }
 }
 
 #[cfg(test)]
@@ -243,6 +497,117 @@ mod tests {
                 assert_eq!(a.nfe, b.nfe);
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn composite_fill_out_of_range_lane_panics() {
+        // Regression: this used to wrap with `% lane_map.len()`, silently
+        // aliasing two requests' noise streams. It must panic instead.
+        let mut noise = CompositeNormal::new(&[(1, 2), (2, 3)]);
+        let mut out = [0.0; 4];
+        noise.fill(5, 0, &mut out); // 5 lanes exist: streams 0..=4
+    }
+
+    #[test]
+    fn composite_fill_in_range_lane_still_works() {
+        let mut noise = CompositeNormal::new(&[(1, 2), (2, 3)]);
+        let mut a = [0.0; 4];
+        let mut b = [0.0; 4];
+        noise.fill(4, 0, &mut a); // last valid lane: request 2, local lane 2
+        let mut direct = crate::rng::normal::PhiloxNormal::new(2);
+        direct.fill(2, 0, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(noise.lanes(), 5);
+    }
+
+    #[test]
+    fn select_view_matches_global_streams() {
+        // A selected (non-contiguous) view must draw exactly the global
+        // lanes it names — the cancellation-survivor noise contract.
+        let parent = CompositeNormal::new(&[(7, 2), (9, 3)]);
+        let mut view = parent.select(&[0, 3, 4]);
+        let mut direct = CompositeNormal::new(&[(7, 2), (9, 3)]);
+        let mut a = [0.0; 4];
+        let mut b = [0.0; 4];
+        for (local, global) in [(0u64, 0u64), (1, 3), (2, 4)] {
+            view.fill(local, 5, &mut a);
+            direct.fill(global, 5, &mut b);
+            assert_eq!(a, b, "local={local} global={global}");
+        }
+    }
+
+    #[test]
+    fn batch_run_stepping_matches_run_batch() {
+        // BatchRun stepped to completion == run_batch_with, bitwise, for
+        // every executor width (the step-level scheduler's correctness
+        // contract).
+        let wl = workloads::latent_analog();
+        let cfg = SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() };
+        let reqs = [req(0, 5, 999), req(1, 3, 111), req(2, 2, 222)];
+        let model = wl.model();
+        let want = run_batch(&*model, &wl, &cfg, &reqs);
+        for threads in [1usize, 2, 4] {
+            let exec = Executor::new(threads);
+            let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+            let mut run = BatchRun::new(model, &wl, &cfg, reqs.to_vec(), &exec);
+            let mut steps = 0usize;
+            while !run.step(&exec) {
+                steps += 1;
+            }
+            assert_eq!(run.progress().0, run.progress().1);
+            assert!(steps + 1 == run.progress().1, "one step() call per grid step");
+            let got = run.finish();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.samples, b.samples, "threads={threads}, id={}", a.id);
+                assert_eq!(a.nfe, b.nfe, "threads={threads}");
+                assert_eq!((a.n, a.dim, a.id), (b.n, b.dim, b.id));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_run_cancel_leaves_survivors_bit_identical() {
+        // Cancel the middle request halfway through: the survivors must
+        // equal their solo runs bitwise, at several thread counts.
+        let wl = workloads::latent_analog();
+        let cfg = SamplerConfig { nfe: 10, ..SamplerConfig::sa_default() };
+        let reqs = [req(0, 3, 999), req(1, 4, 111), req(2, 2, 222)];
+        let model = wl.model();
+        let solo_a = run_batch(&*model, &wl, &cfg, &reqs[0..1]);
+        let solo_c = run_batch(&*model, &wl, &cfg, &reqs[2..3]);
+        for threads in [1usize, 3] {
+            let exec = Executor::new(threads);
+            let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+            let mut run = BatchRun::new(model, &wl, &cfg, reqs.to_vec(), &exec);
+            for _ in 0..4 {
+                assert!(!run.step(&exec));
+            }
+            let resp = run.cancel(1).expect("ticket 1 is in flight");
+            assert!(!resp.ok);
+            assert_eq!(resp.error.as_deref(), Some("cancelled"));
+            assert!(run.cancel(1).is_none(), "double-cancel finds nothing");
+            assert_eq!(run.lanes(), 5);
+            assert_eq!(run.tickets(), vec![0, 2]);
+            while !run.step(&exec) {}
+            let got = run.finish();
+            assert_eq!(got.len(), 2);
+            assert_eq!(got[0].samples, solo_a[0].samples, "threads={threads}");
+            assert_eq!(got[1].samples, solo_c[0].samples, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batch_run_cancel_everything_finishes_early() {
+        let wl = workloads::latent_analog();
+        let cfg = SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() };
+        let exec = Executor::sequential();
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let mut run = BatchRun::new(model, &wl, &cfg, vec![req(7, 2, 1)], &exec);
+        run.step(&exec);
+        assert!(run.cancel(7).is_some());
+        assert!(run.is_done(), "no surviving requests → done");
+        assert!(run.finish().is_empty());
     }
 
     #[test]

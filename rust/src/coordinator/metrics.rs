@@ -23,6 +23,19 @@ pub struct ServingMetrics {
     /// Gauge: samples currently queued in the batcher (set by the server
     /// after every push/pop under the queue lock).
     queued_samples: AtomicU64,
+    /// Counter: solver steps executed by the step-synchronous scheduler
+    /// (one per in-flight group per grid step). Written only via
+    /// [`Self::observe_step`] so it stays in lockstep with `step_lanes`.
+    steps: AtomicU64,
+    /// Counter: lane·steps executed (steps weighted by group width).
+    step_lanes: AtomicU64,
+    /// Counter: requests cancelled (queued or in flight); written via
+    /// [`Self::observe_cancel`].
+    cancelled: AtomicU64,
+    /// Gauge: lane groups currently in flight across all workers.
+    inflight_groups: AtomicU64,
+    /// Gauge: lanes currently in flight across all workers.
+    inflight_lanes: AtomicU64,
     latency_buckets: [AtomicU64; 13],
     latency_sum_us: AtomicU64,
 }
@@ -48,6 +61,31 @@ impl ServingMetrics {
     /// Record the batcher's current queue depth (in samples).
     pub fn set_queued_samples(&self, n: usize) {
         self.queued_samples.store(n as u64, Ordering::Relaxed);
+    }
+
+    /// One scheduler step of a `lanes`-wide in-flight group.
+    pub fn observe_step(&self, lanes: usize) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.step_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+    }
+
+    /// A group entered the in-flight set.
+    pub fn group_admitted(&self, lanes: usize) {
+        self.inflight_groups.fetch_add(1, Ordering::Relaxed);
+        self.inflight_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
+    }
+
+    /// A group left the in-flight set with `lanes` lanes still attached.
+    pub fn group_retired(&self, lanes: usize) {
+        self.inflight_groups.fetch_sub(1, Ordering::Relaxed);
+        self.inflight_lanes.fetch_sub(lanes as u64, Ordering::Relaxed);
+    }
+
+    /// A cancelled request freed `lanes` in-flight lanes (0 if it was
+    /// still queued).
+    pub fn observe_cancel(&self, lanes: usize) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+        self.inflight_lanes.fetch_sub(lanes as u64, Ordering::Relaxed);
     }
 
     pub fn observe_batch(&self, group_size: usize, total_samples: usize, nfe: usize) {
@@ -99,6 +137,11 @@ impl ServingMetrics {
             ("model_evals", load(&self.model_evals)),
             ("batches", load(&self.batches)),
             ("queued_samples", load(&self.queued_samples)),
+            ("steps", load(&self.steps)),
+            ("step_lanes", load(&self.step_lanes)),
+            ("cancelled", load(&self.cancelled)),
+            ("inflight_groups", load(&self.inflight_groups)),
+            ("inflight_lanes", load(&self.inflight_lanes)),
             ("mean_batch_occupancy", Value::Num(occupancy)),
             ("latency_p50_ms", Value::Num(self.latency_percentile_ms(0.5))),
             ("latency_p95_ms", Value::Num(self.latency_percentile_ms(0.95))),
@@ -148,6 +191,25 @@ mod tests {
         assert_eq!(m.snapshot().req_f64("queued_samples").unwrap(), 17.0);
         m.set_queued_samples(0); // gauge, not a counter
         assert_eq!(m.snapshot().req_f64("queued_samples").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn scheduler_counters_and_gauges() {
+        let m = ServingMetrics::new();
+        m.group_admitted(8);
+        m.group_admitted(4);
+        m.observe_step(8);
+        m.observe_step(8);
+        m.observe_step(4);
+        m.observe_cancel(4); // in-flight cancel frees its lanes
+        m.group_retired(8);
+        m.group_retired(0); // the cancelled group retires empty
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("steps").unwrap(), 3.0);
+        assert_eq!(s.req_f64("step_lanes").unwrap(), 20.0);
+        assert_eq!(s.req_f64("cancelled").unwrap(), 1.0);
+        assert_eq!(s.req_f64("inflight_groups").unwrap(), 0.0);
+        assert_eq!(s.req_f64("inflight_lanes").unwrap(), 0.0);
     }
 
     #[test]

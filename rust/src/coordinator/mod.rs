@@ -3,9 +3,14 @@
 //!
 //! Design (vLLM-router mold, DESIGN.md §6): clients submit sampling
 //! requests over newline-delimited JSON; the batcher groups *compatible*
-//! requests (same workload + solver config) into one solver loop whose
-//! model evaluations are batched; per-request Philox noise streams make a
-//! request's samples independent of how it was batched.
+//! requests (same workload + solver config) into one merged lane batch
+//! whose model evaluations are shared; per-request Philox noise streams
+//! make a request's samples independent of how it was batched. The hot
+//! path is *step-synchronous*: a merged batch is an [`engine::BatchRun`]
+//! over the solver `Stepper` core, advanced one grid step at a time, so
+//! workers can interleave several in-flight batches, admit newly queued
+//! requests at step boundaries (continuous batching), cancel in-flight
+//! requests, and report per-step progress.
 
 pub mod batcher;
 pub mod engine;
@@ -14,6 +19,6 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{BatchKey, Batcher};
-pub use engine::{sample, EvalRow};
-pub use request::{SampleRequest, SampleResponse};
+pub use engine::{sample, BatchRun, EvalRow};
+pub use request::{cancel_line, SampleRequest, SampleResponse};
 pub use server::{Server, ServerHandle};

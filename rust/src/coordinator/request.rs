@@ -74,6 +74,14 @@ impl SampleRequest {
     }
 }
 
+/// Wire line for the `cancel` protocol command: cancels every queued or
+/// in-flight request whose client-visible id equals `id` (the server
+/// replies to each cancelled request's own connection with
+/// `{"error":"cancelled"}`).
+pub fn cancel_line(id: u64) -> String {
+    format!(r#"{{"cmd":"cancel","id":{id}}}"#)
+}
+
 /// A sampling response.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SampleResponse {
@@ -201,6 +209,13 @@ mod tests {
             let v = jsonlite::parse(bad).unwrap();
             assert!(SampleRequest::from_json(&v).is_err());
         }
+    }
+
+    #[test]
+    fn cancel_line_is_valid_protocol_json() {
+        let v = jsonlite::parse(&cancel_line(42)).unwrap();
+        assert_eq!(v.opt_str("cmd", ""), "cancel");
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(42));
     }
 
     #[test]

@@ -1,17 +1,30 @@
 //! The sampling server: newline-delimited JSON over TCP, a shared pending
-//! queue with deadline-based dynamic batching, and a worker pool executing
-//! solver loops. tokio is not in the offline vendor set; the design is a
-//! classic blocking-I/O thread-per-connection front with channel-backed
-//! response routing, which is appropriate at the connection counts a
-//! sampling service sees.
+//! queue, and a worker pool running a *step-synchronous scheduler*. tokio
+//! is not in the offline vendor set; the design is a classic blocking-I/O
+//! thread-per-connection front with channel-backed response routing, which
+//! is appropriate at the connection counts a sampling service sees.
+//!
+//! Each worker owns a set of in-flight lane groups ([`BatchRun`]s built on
+//! the solver `Stepper` core) and interleaves them one solver step at a
+//! time. At every step boundary it admits newly queued compatible groups
+//! (up to `max_inflight`) instead of waiting for the current solve to
+//! drain, and applies pending cancellations — per-lane Philox streams make
+//! every request's samples independent of when and with whom it ran.
 //!
 //! Protocol (one JSON object per line):
 //! * sampling request — see [`SampleRequest::from_json`]; an optional
 //!   `"preset"` field (`"auto"` or a preset name) resolves against the
 //!   loaded tuner registry *at ingress*, so preset and manual requests
 //!   with the same concrete config share a batch;
-//! * `{"cmd": "stats"}` → serving-metrics snapshot (includes the current
-//!   `queued_samples` gauge);
+//! * `{"cmd": "stats"}` → serving-metrics snapshot (includes the
+//!   `queued_samples` gauge plus the per-step scheduler fields `steps`,
+//!   `step_lanes`, `cancelled`, `inflight_groups`, `inflight_lanes`);
+//! * `{"cmd": "cancel", "id": N}` → cancels every queued or in-flight
+//!   request whose client-visible id is `N`: queued requests are removed
+//!   immediately, in-flight ones are dropped at the owning worker's next
+//!   step boundary (their lanes are freed; co-batched requests are
+//!   unaffected). Each cancelled request's waiting connection receives an
+//!   `{"error":"cancelled"}` reply;
 //! * `{"cmd": "presets"}` → summary of the loaded preset registry;
 //! * `{"cmd": "ping"}` → `{"ok": true}`;
 //! * `{"cmd": "shutdown"}` → stops accepting and drains workers.
@@ -22,9 +35,9 @@
 
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::engine::run_batch_with;
+use crate::coordinator::engine::BatchRun;
 use crate::coordinator::metrics::ServingMetrics;
-use crate::coordinator::request::{SampleRequest, SampleResponse};
+use crate::coordinator::request::{cancel_line, SampleRequest, SampleResponse};
 use crate::exec::Executor;
 use crate::jsonlite::{parse, to_string, Value};
 use crate::models::ModelEval;
@@ -32,7 +45,7 @@ use crate::runtime::{HloModel, RuntimeHost};
 use crate::tuner::PresetRegistry;
 use crate::util::error::{Error, Result};
 use crate::workloads;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -61,8 +74,23 @@ struct Shared {
 struct QueueState {
     batcher: Batcher,
     replies: HashMap<u64, Sender<SampleResponse>>,
+    /// Ticket → client-visible id, for `cancel` routing; entries live from
+    /// enqueue until the reply is routed.
+    client_of: HashMap<u64, u64>,
+    /// Tickets flagged for cancellation while in flight; the owning worker
+    /// applies them at its next step boundary.
+    cancel_flags: HashSet<u64>,
     /// Monotone internal ticket for reply routing (client ids may collide).
     next_ticket: u64,
+}
+
+/// Route one response to its waiting connection and drop its bookkeeping.
+fn route_reply(q: &mut QueueState, resp: SampleResponse) {
+    q.client_of.remove(&resp.id);
+    q.cancel_flags.remove(&resp.id);
+    if let Some(tx) = q.replies.remove(&resp.id) {
+        let _ = tx.send(resp);
+    }
 }
 
 /// A running server.
@@ -131,6 +159,8 @@ impl Server {
             queue: Mutex::new(QueueState {
                 batcher: Batcher::new(),
                 replies: HashMap::new(),
+                client_of: HashMap::new(),
+                cancel_flags: HashSet::new(),
                 next_ticket: 1,
             }),
             cond: Condvar::new(),
@@ -232,6 +262,10 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
     if let Some(cmd) = v.get("cmd").and_then(Value::as_str) {
         return match cmd {
             "stats" => to_string(&shared.metrics.snapshot()),
+            "cancel" => match v.get("id").and_then(Value::as_u64) {
+                None => SampleResponse::err(0, "cancel needs a numeric \"id\"").to_line(),
+                Some(target) => handle_cancel(shared, target),
+            },
             "presets" => match &shared.presets {
                 Some(reg) => to_string(&reg.summary()),
                 None => r#"{"ok":false,"error":"no preset registry loaded"}"#.to_string(),
@@ -286,6 +320,7 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
         let mut internal = request.clone();
         internal.id = ticket;
         q.replies.insert(ticket, tx);
+        q.client_of.insert(ticket, request.id);
         q.batcher.push(internal);
         shared.metrics.set_queued_samples(q.batcher.queued_samples());
     }
@@ -306,83 +341,200 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
     }
 }
 
-/// Worker: wait for work, give the batcher a short deadline to fill a
-/// group, execute, route responses.
+/// The `cancel` protocol command: cancel every queued or in-flight request
+/// with client-visible id `target`. Queued requests are removed and
+/// answered immediately; in-flight tickets are flagged for the owning
+/// worker's next step boundary.
+fn handle_cancel(shared: &Arc<Shared>, target: u64) -> String {
+    let (queued, pending) = {
+        let mut q = shared.queue.lock().expect("queue lock");
+        let tickets: Vec<u64> = q
+            .client_of
+            .iter()
+            .filter(|(_, c)| **c == target)
+            .map(|(t, _)| *t)
+            .collect();
+        let removed = q.batcher.remove_where(|r| tickets.contains(&r.id));
+        shared.metrics.set_queued_samples(q.batcher.queued_samples());
+        let removed_tickets: HashSet<u64> = removed.iter().map(|r| r.id).collect();
+        for r in removed {
+            shared.metrics.observe_cancel(0);
+            route_reply(&mut q, SampleResponse::err(r.id, "cancelled"));
+        }
+        let mut pending = 0usize;
+        for t in &tickets {
+            if !removed_tickets.contains(t) && q.cancel_flags.insert(*t) {
+                pending += 1;
+            }
+        }
+        (removed_tickets.len(), pending)
+    };
+    shared.cond.notify_all();
+    format!(r#"{{"ok":true,"cancelled_queued":{queued},"cancel_pending":{pending}}}"#)
+}
+
+/// Worker: a step-synchronous scheduler over up to `max_inflight` lane
+/// groups. Each loop iteration is one step boundary: admit newly queued
+/// groups whose batching deadline has passed (or whose batch is full),
+/// apply pending cancellations, then advance ONE group by ONE solver step
+/// (round-robin). A request that arrives while a long solve is in flight
+/// therefore starts making progress at the next boundary instead of
+/// waiting for the drain — and its samples are identical either way,
+/// because every lane draws from its own request-seeded Philox stream.
 fn worker_loop(shared: Arc<Shared>) {
+    let mut active: Vec<BatchRun> = Vec::new();
+    let mut rr = 0usize;
+    // Tolerate a programmatically-built config with max_inflight 0 (the
+    // JSON/CLI ingress clamps, direct struct literals may not): 0 would
+    // admit nothing and hang shutdown on a non-empty queue.
+    let max_inflight = shared.cfg.max_inflight.max(1);
     loop {
-        let group = {
+        // --- Step boundary bookkeeping under the queue lock.
+        let mut admitted: Vec<Vec<SampleRequest>> = Vec::new();
+        let mut flagged: Vec<u64> = Vec::new();
+        {
             let mut q = shared.queue.lock().expect("queue lock");
             loop {
-                if shared.shutdown.load(Ordering::SeqCst) && q.batcher.is_empty() {
+                let draining = shared.shutdown.load(Ordering::SeqCst);
+                if draining && q.batcher.is_empty() && active.is_empty() && admitted.is_empty() {
                     return;
                 }
-                if !q.batcher.is_empty() {
-                    // Deadline-based flush: wait until the oldest request
-                    // has aged past the batching window, or a full batch
-                    // is available.
+                // Admit at most ONE ready group per boundary ("ready" =
+                // full batch, aged past the batching deadline, or drain);
+                // taking one at a time leaves further ready groups for
+                // idle sibling workers (see the hand-off notify below)
+                // instead of one worker hoarding the whole queue.
+                if active.len() + admitted.len() < max_inflight && !q.batcher.is_empty() {
                     let deadline = Duration::from_millis(shared.cfg.batch_deadline_ms);
                     let age = q.batcher.oldest_age().unwrap_or_default();
-                    if q.batcher.len() >= shared.cfg.max_batch || age >= deadline {
-                        break;
+                    let ready =
+                        q.batcher.len() >= shared.cfg.max_batch || age >= deadline || draining;
+                    if ready {
+                        let g = q.batcher.pop_group(shared.cfg.max_batch);
+                        if !g.is_empty() {
+                            admitted.push(g);
+                        }
+                        // Hand any remaining queued work to an idle
+                        // sibling worker.
+                        if !q.batcher.is_empty() {
+                            shared.cond.notify_one();
+                        }
                     }
-                    let wait = deadline - age;
-                    let (qq, _timeout) = shared
-                        .cond
-                        .wait_timeout(q, wait)
-                        .expect("queue lock poisoned");
-                    q = qq;
-                } else {
-                    let (qq, _res) = shared
-                        .cond
-                        .wait_timeout(q, Duration::from_millis(50))
-                        .expect("queue lock poisoned");
-                    q = qq;
+                }
+                shared.metrics.set_queued_samples(q.batcher.queued_samples());
+                if !admitted.is_empty() || !active.is_empty() {
+                    break;
+                }
+                // Idle: wait for work, bounded so the deadline clock and
+                // the shutdown flag are re-checked.
+                let wait = match q.batcher.oldest_age() {
+                    Some(age) => Duration::from_millis(shared.cfg.batch_deadline_ms)
+                        .saturating_sub(age)
+                        .max(Duration::from_millis(1)),
+                    None => Duration::from_millis(50),
+                };
+                let (qq, _res) = shared.cond.wait_timeout(q, wait).expect("queue lock poisoned");
+                q = qq;
+            }
+            // Claim the cancel flags that belong to this worker's groups.
+            if !q.cancel_flags.is_empty() {
+                for run in &active {
+                    for t in run.tickets() {
+                        if q.cancel_flags.remove(&t) {
+                            flagged.push(t);
+                        }
+                    }
                 }
             }
-            let group = q.batcher.pop_group(shared.cfg.max_batch);
-            shared.metrics.set_queued_samples(q.batcher.queued_samples());
-            group
-        };
-        if group.is_empty() {
+        }
+        // --- Materialize admissions (model resolution + stepper warm-up
+        // run outside the lock).
+        for g in admitted {
+            match admit_group(&shared, g) {
+                Ok(run) => {
+                    shared.metrics.group_admitted(run.lanes());
+                    active.push(run);
+                }
+                Err(responses) => {
+                    let mut q = shared.queue.lock().expect("queue lock");
+                    for resp in responses {
+                        route_reply(&mut q, resp);
+                    }
+                }
+            }
+        }
+        // --- Apply cancellations at this step boundary.
+        for t in flagged {
+            for run in active.iter_mut() {
+                let before = run.lanes();
+                if let Some(resp) = run.cancel(t) {
+                    shared.metrics.observe_cancel(before - run.lanes());
+                    let mut q = shared.queue.lock().expect("queue lock");
+                    route_reply(&mut q, resp);
+                    break;
+                }
+            }
+        }
+        // --- Advance one group by one solver step (round-robin).
+        if active.is_empty() {
             continue;
         }
-        let responses = execute_group(&shared, &group);
-        let mut q = shared.queue.lock().expect("queue lock");
-        for resp in responses {
-            if let Some(tx) = q.replies.remove(&resp.id) {
-                let _ = tx.send(resp);
+        if rr >= active.len() {
+            rr = 0;
+        }
+        // A group whose last request was cancelled is already done —
+        // retire it without counting a phantom scheduler step.
+        let was_done = active[rr].is_done();
+        let done = active[rr].step(&shared.exec);
+        if !was_done {
+            shared.metrics.observe_step(active[rr].lanes());
+        }
+        if done {
+            let run = active.swap_remove(rr);
+            shared.metrics.group_retired(run.lanes());
+            let total = run.lanes();
+            let responses = run.finish();
+            if !responses.is_empty() {
+                let nfe = responses.first().map(|r| r.nfe).unwrap_or(0);
+                shared.metrics.observe_batch(responses.len(), total, nfe);
             }
+            let mut q = shared.queue.lock().expect("queue lock");
+            for resp in responses {
+                route_reply(&mut q, resp);
+            }
+        } else {
+            rr += 1;
         }
     }
 }
 
-/// Execute one compatible group end to end.
-fn execute_group(shared: &Arc<Shared>, group: &[SampleRequest]) -> Vec<SampleResponse> {
+/// Resolve a group's workload + model and admit it as an in-flight
+/// [`BatchRun`] (runs the steppers' warm-up evaluations); on resolution
+/// failure, an error response per member.
+fn admit_group(
+    shared: &Arc<Shared>,
+    group: Vec<SampleRequest>,
+) -> std::result::Result<BatchRun, Vec<SampleResponse>> {
     let first = &group[0];
     let Some(wl) = workloads::by_name(&first.workload) else {
-        return group
-            .iter()
-            .map(|r| SampleResponse::err(r.id, format!("unknown workload '{}'", first.workload)))
-            .collect();
+        let msg = format!("unknown workload '{}'", first.workload);
+        return Err(group.iter().map(|r| SampleResponse::err(r.id, msg.clone())).collect());
     };
-    let model: Box<dyn ModelEval> = if let Some(name) = first.model.strip_prefix("artifact:") {
+    let model: Arc<dyn ModelEval> = if let Some(name) = first.model.strip_prefix("artifact:") {
         match artifact_model(shared, name) {
-            Ok(m) => m,
+            Ok(m) => Arc::from(m),
             Err(e) => {
-                return group
+                return Err(group
                     .iter()
                     .map(|r| SampleResponse::err(r.id, e.to_string()))
-                    .collect()
+                    .collect())
             }
         }
     } else {
-        wl.model()
+        Arc::from(wl.model())
     };
-    let total: usize = group.iter().map(|r| r.n).sum();
-    let responses = run_batch_with(&*model, &wl, &first.cfg, group, &shared.exec);
-    let nfe = responses.first().map(|r| r.nfe).unwrap_or(0);
-    shared.metrics.observe_batch(group.len(), total, nfe);
-    responses
+    let cfg = first.cfg.clone();
+    Ok(BatchRun::new(model, &wl, &cfg, group, &shared.exec))
 }
 
 /// Resolve an artifact-backed model through the lazily started runtime host.
@@ -429,6 +581,14 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Value> {
         let line = self.round_trip(r#"{"cmd":"stats"}"#)?;
+        parse(&line)
+    }
+
+    /// Cancel every queued or in-flight request with client-visible `id`.
+    /// The reply reports how many were removed from the queue and how many
+    /// were flagged for their owning worker's next step boundary.
+    pub fn cancel(&mut self, id: u64) -> Result<Value> {
+        let line = self.round_trip(&cancel_line(id))?;
         parse(&line)
     }
 }

@@ -109,6 +109,39 @@ impl Executor {
         })
     }
 
+    /// Run `f` once per item with exclusive access, one scoped thread per
+    /// item (callers pass at most [`Self::threads`] items — the step-level
+    /// scheduler's lane shards). With one thread (or ≤ 1 item) everything
+    /// runs inline on the caller.
+    ///
+    /// Threads are spawned per call, so a step-level driver pays one
+    /// spawn/join cycle per shard per step when `threads > 1`. That
+    /// overhead is measured by `bench_perf`'s stepper section
+    /// (`per_step_overhead_us` in `BENCH_stepper.json`); the serving
+    /// default (`ServerConfig.threads = 1`) takes the inline path and
+    /// pays nothing.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for (i, item) in items.iter_mut().enumerate() {
+                std::thread::Builder::new()
+                    .name(format!("sadiff-step-{i}"))
+                    .spawn_scoped(s, move || f(i, item))
+                    .expect("spawn step worker");
+            }
+        });
+    }
+
     /// Parallel map over independent items, preserving item order. Each
     /// worker handles one contiguous chunk of the item list.
     pub fn map<I, T, F>(&self, items: &[I], f: F) -> Vec<T>
@@ -170,6 +203,20 @@ mod tests {
             let want: Vec<usize> = (0..n).collect();
             assert_eq!(got, want, "n={n} threads={threads}");
         }
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_item_once() {
+        for threads in [1usize, 2, 8] {
+            let mut items: Vec<u64> = (0..5).collect();
+            Executor::new(threads).for_each_mut(&mut items, |i, v| {
+                assert_eq!(*v, i as u64);
+                *v += 100;
+            });
+            assert_eq!(items, vec![100, 101, 102, 103, 104]);
+        }
+        let mut empty: Vec<u64> = Vec::new();
+        Executor::new(4).for_each_mut(&mut empty, |_, _| panic!("no items"));
     }
 
     #[test]

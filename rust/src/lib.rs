@@ -4,10 +4,11 @@
 //! Diffusion Models* (Xue et al., NeurIPS 2023) as a three-layer system:
 //!
 //! * **Layer 3 (this crate)** — the solver machinery (stochastic Adams
-//!   predictor/corrector, the full baseline-solver zoo, noise schedules,
-//!   τ-functions, exponentially weighted coefficient engine) plus a
-//!   production sampling server (request router, dynamic batcher, worker
-//!   pool, metrics).
+//!   predictor/corrector, the full baseline-solver zoo as incremental
+//!   `solvers::stepper::Stepper`s, noise schedules, τ-functions,
+//!   exponentially weighted coefficient engine) plus a production sampling
+//!   server (request router, dynamic batcher, step-synchronous scheduler
+//!   with continuous batching and cancellation, metrics).
 //! * **Layer 2 (python/compile, build-time)** — JAX denoiser models (tiny
 //!   DiT, analytic GMM posterior mean) lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
@@ -71,6 +72,7 @@ pub mod prelude {
     pub use crate::rng::Philox4x32;
     pub use crate::schedule::{NoiseSchedule, ScheduleKind, StepSelector};
     pub use crate::solvers::sa::{SaSolver, SaSolverOpts};
+    pub use crate::solvers::stepper::{make_stepper, Stepper};
     pub use crate::tau::TauFn;
     pub use crate::tuner::{PresetRegistry, SearchSpace, TuneOptions};
     pub use crate::util::error::{Error, Result};

@@ -29,6 +29,16 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "workers", help: "worker threads", takes_value: true },
         FlagSpec { name: "threads", help: "lane-parallel threads (0 = auto)", takes_value: true },
         FlagSpec { name: "max-batch", help: "max requests per batch", takes_value: true },
+        FlagSpec {
+            name: "max-inflight",
+            help: "in-flight lane groups per worker (serve)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "cancel",
+            help: "cancel request id on the server (client)",
+            takes_value: true,
+        },
         FlagSpec { name: "workload", help: "workload name", takes_value: true },
         FlagSpec { name: "model", help: "gmm | artifact:<name>", takes_value: true },
         FlagSpec { name: "solver", help: "solver name", takes_value: true },
@@ -111,6 +121,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?.max(1);
     if let Some(path) = args.get("presets") {
         cfg.presets_path = Some(path.to_string());
     }
@@ -149,6 +160,14 @@ fn cmd_sample(args: &Args) -> Result<()> {
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let mut client = Client::connect(addr)?;
+    if let Some(id) = args.get("cancel") {
+        let id: u64 = id
+            .parse()
+            .map_err(|_| Error::config(format!("--cancel: '{id}' is not a request id")))?;
+        let reply = client.cancel(id)?;
+        println!("{}", jsonlite::to_string(&reply));
+        return Ok(());
+    }
     let req = SampleRequest {
         id: 1,
         workload: args.get_str("workload", "latent_analog").to_string(),

@@ -11,8 +11,12 @@
 
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
+use crate::solvers::stepper::{ensure_len, Stepper};
 use crate::solvers::{step_noise, Grid};
 
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`DdimStepper`]).
 pub fn solve(
     model: &dyn ModelEval,
     grid: &Grid,
@@ -36,6 +40,47 @@ pub fn solve(
         for k in 0..n * dim {
             let eps = (x[k] - a_s * x0[k]) / s_s;
             x[k] = a_t * x0[k] + det * eps + sig_hat * xi[k];
+        }
+    }
+}
+
+/// DDIM-η as an incremental [`Stepper`]: memoryless scheme, the only state
+/// is the scratch for x₀̂ and ξ.
+pub struct DdimStepper {
+    eta: f64,
+    x0: Vec<f64>,
+    xi: Vec<f64>,
+}
+
+impl DdimStepper {
+    pub fn new(eta: f64) -> Self {
+        DdimStepper { eta, x0: Vec::new(), xi: Vec::new() }
+    }
+}
+
+impl Stepper for DdimStepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        ensure_len(&mut self.x0, n * dim);
+        ensure_len(&mut self.xi, n * dim);
+        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        step_noise(noise, i, dim, n, &mut self.xi);
+        let h = grid.lams[i + 1] - grid.lams[i];
+        let (a_s, a_t) = (grid.alphas[i], grid.alphas[i + 1]);
+        let (s_s, s_t) = (grid.sigmas[i], grid.sigmas[i + 1]);
+        let sig_hat = self.eta * s_t * crate::util::one_minus_exp_neg(2.0 * h).max(0.0).sqrt();
+        let det = (s_t * s_t - sig_hat * sig_hat).max(0.0).sqrt();
+        for k in 0..n * dim {
+            let eps = (x[k] - a_s * self.x0[k]) / s_s;
+            x[k] = a_t * self.x0[k] + det * eps + sig_hat * self.xi[k];
         }
     }
 }

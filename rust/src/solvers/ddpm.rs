@@ -14,8 +14,12 @@
 
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
+use crate::solvers::stepper::{ensure_len, Stepper};
 use crate::solvers::{step_noise, Grid};
 
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`DdpmStepper`]).
 pub fn solve(
     model: &dyn ModelEval,
     grid: &Grid,
@@ -39,6 +43,47 @@ pub fn solve(
         for k in 0..n * dim {
             let mean = a_s * x0[k] + gain * (x[k] - a_t * x0[k]);
             x[k] = mean + post_std * xi[k];
+        }
+    }
+}
+
+/// Ancestral DDPM as an incremental [`Stepper`] (memoryless).
+#[derive(Default)]
+pub struct DdpmStepper {
+    x0: Vec<f64>,
+    xi: Vec<f64>,
+}
+
+impl DdpmStepper {
+    pub fn new() -> Self {
+        DdpmStepper::default()
+    }
+}
+
+impl Stepper for DdpmStepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        ensure_len(&mut self.x0, n * dim);
+        ensure_len(&mut self.xi, n * dim);
+        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        step_noise(noise, i, dim, n, &mut self.xi);
+        let (a_t, a_s) = (grid.alphas[i], grid.alphas[i + 1]);
+        let (s_t, s_s) = (grid.sigmas[i], grid.sigmas[i + 1]);
+        let ratio = a_t / a_s;
+        let sig_ts2 = (s_t * s_t - ratio * ratio * s_s * s_s).max(0.0);
+        let gain = ratio * s_s * s_s / (s_t * s_t);
+        let post_std = (s_s * s_s * sig_ts2 / (s_t * s_t)).max(0.0).sqrt();
+        for k in 0..n * dim {
+            let mean = a_s * self.x0[k] + gain * (x[k] - a_t * self.x0[k]);
+            x[k] = mean + post_std * self.xi[k];
         }
     }
 }

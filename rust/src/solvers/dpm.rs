@@ -8,10 +8,16 @@
 //!   checks our SA implementation against this independent one.
 
 use crate::models::{EvalCtx, ModelEval};
+use crate::rng::normal::NormalSource;
 use crate::schedule::NoiseSchedule;
+use crate::solvers::stepper::{ensure_len, retain_rows, Stepper};
 use crate::solvers::Grid;
 
 /// DPM-Solver-2 (singlestep, midpoint in λ, noise prediction).
+///
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`Dpm2Stepper`]).
 pub fn solve_dpm2(
     model: &dyn ModelEval,
     sch: &NoiseSchedule,
@@ -52,6 +58,10 @@ pub fn solve_dpm2(
 }
 
 /// DPM-Solver++(2M): multistep data-prediction scheme.
+///
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`Pp2mStepper`]).
 pub fn solve_pp2m(model: &dyn ModelEval, grid: &Grid, x: &mut [f64], n: usize) {
     let dim = model.dim();
     let m = grid.m();
@@ -84,6 +94,126 @@ pub fn solve_pp2m(model: &dyn ModelEval, grid: &Grid, x: &mut [f64], n: usize) {
         }
         h_prev = h;
         x0_prev = Some(std::mem::replace(&mut x0, vec![0.0; n * dim]));
+    }
+}
+
+/// DPM-Solver-2 as an incremental [`Stepper`] (memoryless; 2 NFE/step).
+/// Holds the schedule by value for the λ-midpoint inversion.
+pub struct Dpm2Stepper {
+    sch: NoiseSchedule,
+    x0: Vec<f64>,
+    u: Vec<f64>,
+    x0_mid: Vec<f64>,
+}
+
+impl Dpm2Stepper {
+    pub fn new(sch: NoiseSchedule) -> Self {
+        Dpm2Stepper { sch, x0: Vec::new(), u: Vec::new(), x0_mid: Vec::new() }
+    }
+}
+
+impl Stepper for Dpm2Stepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        ensure_len(&mut self.x0, n * dim);
+        ensure_len(&mut self.u, n * dim);
+        ensure_len(&mut self.x0_mid, n * dim);
+        let (lam_s, lam_t) = (grid.lams[i], grid.lams[i + 1]);
+        let h = lam_t - lam_s;
+        let lam_mid = 0.5 * (lam_s + lam_t);
+        let t_mid = self.sch.t_of_lambda(lam_mid);
+        let (a_mid, s_mid) = (self.sch.alpha(t_mid), self.sch.sigma(t_mid));
+        let (a_s, s_s) = (grid.alphas[i], grid.sigmas[i]);
+        let (a_t, s_t) = (grid.alphas[i + 1], grid.sigmas[i + 1]);
+
+        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        let c_mid = s_mid * ((0.5 * h).exp() - 1.0);
+        for k in 0..n * dim {
+            let eps = (x[k] - a_s * self.x0[k]) / s_s;
+            self.u[k] = a_mid / a_s * x[k] - c_mid * eps;
+        }
+        let mid_ctx = EvalCtx { t: t_mid, alpha: a_mid, sigma: s_mid };
+        model.eval_batch(&self.u, &mid_ctx, &mut self.x0_mid);
+        let c_t = s_t * (h.exp() - 1.0);
+        for k in 0..n * dim {
+            let eps_mid = (self.u[k] - a_mid * self.x0_mid[k]) / s_mid;
+            x[k] = a_t / a_s * x[k] - c_t * eps_mid;
+        }
+    }
+}
+
+/// DPM-Solver++(2M) as an incremental [`Stepper`]: the one-entry x₀̂
+/// history and the previous step size are the carried state.
+#[derive(Default)]
+pub struct Pp2mStepper {
+    x0_prev: Option<Vec<f64>>,
+    h_prev: f64,
+    x0: Vec<f64>,
+}
+
+impl Pp2mStepper {
+    pub fn new() -> Self {
+        Pp2mStepper::default()
+    }
+}
+
+impl Stepper for Pp2mStepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        ensure_len(&mut self.x0, n * dim);
+        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        let h = grid.lams[i + 1] - grid.lams[i];
+        let (s_s, s_t) = (grid.sigmas[i], grid.sigmas[i + 1]);
+        let a_t = grid.alphas[i + 1];
+        let ratio = s_t / s_s;
+        let phi = 1.0 - (-h).exp();
+        match &self.x0_prev {
+            None => {
+                // First step: DPM-Solver++(1) == deterministic DDIM.
+                for k in 0..n * dim {
+                    x[k] = ratio * x[k] + a_t * phi * self.x0[k];
+                }
+            }
+            Some(prev) => {
+                let r = self.h_prev / h;
+                let c_cur = 1.0 + 1.0 / (2.0 * r);
+                let c_prev = -1.0 / (2.0 * r);
+                for k in 0..n * dim {
+                    let d = c_cur * self.x0[k] + c_prev * prev[k];
+                    x[k] = ratio * x[k] + a_t * phi * d;
+                }
+            }
+        }
+        self.h_prev = h;
+        // Swap the old history buffer in as the next step's scratch (it is
+        // fully overwritten by the next eval) — no per-step allocation.
+        let next = self.x0_prev.take().unwrap_or_else(|| vec![0.0; n * dim]);
+        self.x0_prev = Some(std::mem::replace(&mut self.x0, next));
+    }
+
+    fn retain_lanes(&mut self, keep: &[bool], dim: usize) {
+        if let Some(prev) = &mut self.x0_prev {
+            retain_rows(prev, keep, dim);
+        }
+        // x0 is pure scratch between steps (its content moves into
+        // x0_prev); it may still be unallocated if no step has run yet.
+        self.x0.clear();
     }
 }
 

@@ -10,6 +10,7 @@
 
 use crate::models::{EvalCtx, ModelEval};
 use crate::rng::normal::NormalSource;
+use crate::solvers::stepper::{ensure_len, Stepper};
 use crate::solvers::{step_noise, Grid};
 
 /// EDM stochastic-sampler hyperparameters.
@@ -22,6 +23,10 @@ pub struct ChurnParams {
 }
 
 /// Deterministic Heun.
+///
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`HeunStepper`]).
 pub fn solve_heun(model: &dyn ModelEval, grid: &Grid, x: &mut [f64], n: usize) {
     let dim = model.dim();
     let m = grid.m();
@@ -64,6 +69,10 @@ pub fn solve_heun(model: &dyn ModelEval, grid: &Grid, x: &mut [f64], n: usize) {
 }
 
 /// Stochastic churn sampler.
+///
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`EdmSdeStepper`]).
 pub fn solve_sde(
     model: &dyn ModelEval,
     grid: &Grid,
@@ -131,6 +140,163 @@ pub fn solve_sde(
 /// σ^{EDM} at grid point i.
 fn edm_sigma(grid: &Grid, i: usize) -> f64 {
     grid.sigmas[i] / grid.alphas[i]
+}
+
+/// Deterministic Heun as an incremental [`Stepper`] (memoryless; the
+/// trailing-Euler special case keys off `i + 1 == grid.m()`).
+#[derive(Default)]
+pub struct HeunStepper {
+    x0: Vec<f64>,
+    x0b: Vec<f64>,
+    xb: Vec<f64>,
+    trial: Vec<f64>,
+}
+
+impl HeunStepper {
+    pub fn new() -> Self {
+        HeunStepper::default()
+    }
+}
+
+impl Stepper for HeunStepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        let m = grid.m();
+        ensure_len(&mut self.x0, n * dim);
+        ensure_len(&mut self.x0b, n * dim);
+        ensure_len(&mut self.xb, n * dim);
+        ensure_len(&mut self.trial, n * dim);
+        let (sig_i, sig_j) = (edm_sigma(grid, i), edm_sigma(grid, i + 1));
+        let (a_i, a_j) = (grid.alphas[i], grid.alphas[i + 1]);
+        let dsig = sig_j - sig_i;
+        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        if i + 1 == m || sig_j == 0.0 {
+            // Trailing Euler step.
+            for k in 0..n * dim {
+                let xbar = x[k] / a_i;
+                let d = (xbar - self.x0[k]) / sig_i;
+                x[k] = a_j * (xbar + dsig * d);
+            }
+        } else {
+            for k in 0..n * dim {
+                let xbar = x[k] / a_i;
+                let d = (xbar - self.x0[k]) / sig_i;
+                self.xb[k] = xbar + dsig * d;
+            }
+            for k in 0..n * dim {
+                self.trial[k] = a_j * self.xb[k];
+            }
+            let ctx_j = EvalCtx { t: grid.ts[i + 1], alpha: a_j, sigma: grid.sigmas[i + 1] };
+            model.eval_batch(&self.trial, &ctx_j, &mut self.x0b);
+            for k in 0..n * dim {
+                let xbar = x[k] / a_i;
+                let d = (xbar - self.x0[k]) / sig_i;
+                let d2 = (self.xb[k] - self.x0b[k]) / sig_j;
+                x[k] = a_j * (xbar + dsig * 0.5 * (d + d2));
+            }
+        }
+    }
+}
+
+/// The stochastic churn sampler as an incremental [`Stepper`]. The churn
+/// band test and γ depend only on the grid (passed every step), so the
+/// stepper itself is memoryless.
+pub struct EdmSdeStepper {
+    p: ChurnParams,
+    x0: Vec<f64>,
+    x0b: Vec<f64>,
+    xi: Vec<f64>,
+    xhat: Vec<f64>,
+    xb: Vec<f64>,
+    trial: Vec<f64>,
+}
+
+impl EdmSdeStepper {
+    pub fn new(p: ChurnParams) -> Self {
+        EdmSdeStepper {
+            p,
+            x0: Vec::new(),
+            x0b: Vec::new(),
+            xi: Vec::new(),
+            xhat: Vec::new(),
+            xb: Vec::new(),
+            trial: Vec::new(),
+        }
+    }
+}
+
+impl Stepper for EdmSdeStepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        let m = grid.m();
+        ensure_len(&mut self.x0, n * dim);
+        ensure_len(&mut self.x0b, n * dim);
+        ensure_len(&mut self.xi, n * dim);
+        ensure_len(&mut self.xhat, n * dim);
+        ensure_len(&mut self.xb, n * dim);
+        ensure_len(&mut self.trial, n * dim);
+        let p = self.p;
+        let gamma_max = (2.0f64).sqrt() - 1.0;
+        let (sig_i, sig_j) = (edm_sigma(grid, i), edm_sigma(grid, i + 1));
+        let (a_i, a_j) = (grid.alphas[i], grid.alphas[i + 1]);
+        let gamma = if sig_i >= p.s_tmin && sig_i <= p.s_tmax {
+            (p.churn / m as f64).min(gamma_max)
+        } else {
+            0.0
+        };
+        let sig_hat = sig_i * (1.0 + gamma);
+        step_noise(noise, i, dim, n, &mut self.xi);
+        let extra = (sig_hat * sig_hat - sig_i * sig_i).max(0.0).sqrt() * p.s_noise;
+        let xhat = &mut self.xhat;
+        for k in 0..n * dim {
+            xhat[k] = x[k] / a_i + extra * self.xi[k];
+        }
+        let ctx_hat = EvalCtx { t: grid.ts[i], alpha: a_i, sigma: sig_hat * a_i };
+        // `trial` doubles as the unscaled churned state for the first eval.
+        for k in 0..n * dim {
+            self.trial[k] = xhat[k] * a_i;
+        }
+        model.eval_batch(&self.trial, &ctx_hat, &mut self.x0);
+        let dsig = sig_j - sig_hat;
+        if i + 1 == m || sig_j == 0.0 {
+            for k in 0..n * dim {
+                let d = (xhat[k] - self.x0[k]) / sig_hat;
+                x[k] = a_j * (xhat[k] + dsig * d);
+            }
+        } else {
+            let xb = &mut self.xb;
+            for k in 0..n * dim {
+                let d = (xhat[k] - self.x0[k]) / sig_hat;
+                xb[k] = xhat[k] + dsig * d;
+            }
+            for k in 0..n * dim {
+                self.trial[k] = xb[k] * a_j;
+            }
+            let ctx_j = EvalCtx { t: grid.ts[i + 1], alpha: a_j, sigma: grid.sigmas[i + 1] };
+            model.eval_batch(&self.trial, &ctx_j, &mut self.x0b);
+            for k in 0..n * dim {
+                let d = (xhat[k] - self.x0[k]) / sig_hat;
+                let d2 = (xb[k] - self.x0b[k]) / sig_j;
+                x[k] = a_j * (xhat[k] + dsig * 0.5 * (d + d2));
+            }
+        }
+    }
 }
 
 #[cfg(test)]

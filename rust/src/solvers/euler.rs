@@ -10,8 +10,12 @@
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
 use crate::schedule::NoiseSchedule;
+use crate::solvers::stepper::{ensure_len, Stepper};
 use crate::solvers::{step_noise, Grid};
 
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`EulerStepper`]).
 pub fn solve(
     model: &dyn ModelEval,
     sch: &NoiseSchedule,
@@ -39,6 +43,52 @@ pub fn solve(
         for k in 0..n * dim {
             let score = (alpha * x0[k] - x[k]) / sigma2;
             x[k] += (f * x[k] - half * score) * dt + noise_scale * xi[k];
+        }
+    }
+}
+
+/// Euler–Maruyama as an incremental [`Stepper`]; holds the schedule by
+/// value (`NoiseSchedule` is `Copy`) because the drift terms f(t), g²(t)
+/// are evaluated off-grid.
+pub struct EulerStepper {
+    sch: NoiseSchedule,
+    tau: f64,
+    x0: Vec<f64>,
+    xi: Vec<f64>,
+}
+
+impl EulerStepper {
+    pub fn new(sch: NoiseSchedule, tau: f64) -> Self {
+        EulerStepper { sch, tau, x0: Vec::new(), xi: Vec::new() }
+    }
+}
+
+impl Stepper for EulerStepper {
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        ensure_len(&mut self.x0, n * dim);
+        ensure_len(&mut self.xi, n * dim);
+        let t = grid.ts[i];
+        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        step_noise(noise, i, dim, n, &mut self.xi);
+        let dt = grid.ts[i + 1] - t; // negative
+        let f = self.sch.dlog_alpha_dt(t);
+        let g2 = self.sch.g2(t);
+        let alpha = grid.alphas[i];
+        let sigma2 = grid.sigmas[i] * grid.sigmas[i];
+        let noise_scale = self.tau * g2.sqrt() * (-dt).max(0.0).sqrt();
+        let half = 0.5 * (1.0 + self.tau * self.tau) * g2;
+        for k in 0..n * dim {
+            let score = (alpha * self.x0[k] - x[k]) / sigma2;
+            x[k] += (f * x[k] - half * score) * dt + noise_scale * self.xi[k];
         }
     }
 }

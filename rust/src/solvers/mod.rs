@@ -19,6 +19,7 @@ pub mod dpm;
 pub mod edm;
 pub mod euler;
 pub mod sa;
+pub mod stepper;
 pub mod unipc;
 
 use crate::config::{SamplerConfig, SolverKind};
@@ -141,9 +142,18 @@ pub fn run_chunked(
         let mut local = noise.split_lanes(lanes.start);
         run_with_noise(model, sch, cfg, lanes.len(), &mut *local)
     });
-    // NFE is per-step model calls, identical in every chunk; report one
-    // chunk's count so batched-vs-parallel accounting matches sequential.
+    // NFE accounting invariant: model calls are per *step*, not per lane,
+    // and every chunk walks the same grid, so all chunks must report the
+    // same count; one chunk's count is the whole batch's NFE (this is what
+    // keeps batched-vs-parallel accounting equal to sequential). A chunk
+    // disagreeing means a solver made its call pattern depend on lane
+    // count — a bug worth failing loudly on in debug builds.
     let nfe = outs.first().map_or(0, |o| o.nfe);
+    debug_assert!(
+        outs.iter().all(|o| o.nfe == nfe),
+        "chunks disagree on NFE: {:?} (solver call pattern depends on lane count)",
+        outs.iter().map(|o| o.nfe).collect::<Vec<_>>()
+    );
     let mut samples = Vec::with_capacity(n * dim);
     for o in &outs {
         samples.extend_from_slice(&o.samples);
@@ -153,7 +163,46 @@ pub fn run_chunked(
 
 /// Same as [`run`] but with a caller-supplied noise source (tests use this
 /// to couple Brownian paths across solvers).
+///
+/// This is a thin generic driver over the [`stepper::Stepper`] trait:
+/// build the grid, draw the prior, then `init` + `step` × M + `finish`.
+/// Bit-identical to the monolithic per-solver loops ([`run_reference`])
+/// for every [`SolverKind`] — asserted per-step in the equivalence suite.
 pub fn run_with_noise(
+    model: &dyn ModelEval,
+    sch: &NoiseSchedule,
+    cfg: &SamplerConfig,
+    n: usize,
+    noise: &mut dyn NormalSource,
+) -> SolveOutput {
+    let dim = model.dim();
+    let m = cfg.steps_for_nfe();
+    let grid = Grid::new(sch, timesteps(sch, cfg.selector, m));
+    let counting = CountingModel::new(model);
+    let mut x = prior_sample(&grid, dim, n, noise);
+    let mut st = stepper::make_stepper(cfg, sch);
+    stepper::drive(&mut *st, &counting, &grid, &mut x, n, noise);
+    SolveOutput { samples: x, n, dim, nfe: counting.count() }
+}
+
+/// The seed-era monolithic dispatch: every solver runs its own whole-grid
+/// `solve()` loop. Retained verbatim as the *reference implementation* for
+/// the stepper equivalence contract — tests assert [`run_with_noise`]
+/// (the incremental driver) reproduces this path bitwise for every
+/// [`SolverKind`]. Not used on any production path.
+pub fn run_reference(
+    model: &dyn ModelEval,
+    sch: &NoiseSchedule,
+    cfg: &SamplerConfig,
+    n: usize,
+    seed: u64,
+) -> SolveOutput {
+    let mut noise = PhiloxNormal::new(seed);
+    run_reference_with_noise(model, sch, cfg, n, &mut noise)
+}
+
+/// [`run_reference`] with a caller-supplied noise source.
+pub fn run_reference_with_noise(
     model: &dyn ModelEval,
     sch: &NoiseSchedule,
     cfg: &SamplerConfig,
@@ -289,6 +338,23 @@ mod tests {
                 assert_eq!(seq.nfe, par.nfe, "{kind:?}: NFE accounting diverged");
                 assert_eq!((par.n, par.dim), (seq.n, seq.dim));
             }
+        }
+    }
+
+    #[test]
+    fn stepper_driver_matches_monolithic_reference() {
+        // run() now goes through the incremental stepper driver; it must
+        // reproduce the seed-era monolithic dispatch bitwise (NFE included)
+        // for every solver in the zoo.
+        let model = tiny_model();
+        let sch = NoiseSchedule::vp_linear();
+        for kind in SolverKind::all() {
+            let mut cfg = SamplerConfig::for_solver(*kind);
+            cfg.nfe = 11;
+            let new = run(&model, &sch, &cfg, 7, 123);
+            let old = run_reference(&model, &sch, &cfg, 7, 123);
+            assert_eq!(new.samples, old.samples, "{kind:?}: driver diverged from reference");
+            assert_eq!(new.nfe, old.nfe, "{kind:?}: NFE accounting diverged");
         }
     }
 

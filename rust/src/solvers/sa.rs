@@ -12,6 +12,7 @@ use crate::config::{Prediction, SamplerConfig};
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
 use crate::solvers::coeffs::{coefficients, StepCoeffs, StepEnds};
+use crate::solvers::stepper::{retain_rows, Stepper};
 use crate::solvers::{step_noise, Grid};
 use crate::tau::TauFn;
 use std::collections::VecDeque;
@@ -60,6 +61,11 @@ impl SaSolver {
 
     /// Run the full Algorithm 1 over `grid`, evolving `x` (n×dim) in place
     /// from x_{t₀} to x_{t_M}.
+    ///
+    /// This is the monolithic seed-era loop, retained as the reference
+    /// implementation for the stepper equivalence contract; production
+    /// traffic goes through [`SaStepper`] (asserted bit-identical in the
+    /// equivalence suite).
     pub fn solve(
         &self,
         model: &dyn ModelEval,
@@ -77,7 +83,7 @@ impl SaSolver {
         // Warm-up eval at t₀ (line 1 of Algorithm 1).
         let mut f0 = vec![0.0; n * dim];
         model.eval_batch(x, &grid.ctx(0), &mut f0);
-        self.to_interp_space(x, &mut f0, grid, 0, n, dim);
+        to_interp_space(self.opts.prediction, x, &mut f0, grid, 0);
         buffer.push_front(Entry { idx: 0, f: f0 });
 
         let mut xi = vec![0.0; n * dim];
@@ -109,7 +115,7 @@ impl SaSolver {
 
             // --- Evaluate the model at the prediction (line 6/11).
             model.eval_batch(&x_pred, &grid.ctx(i + 1), &mut f_new);
-            self.to_interp_space(&x_pred, &mut f_new, grid, i + 1, n, dim);
+            to_interp_space(self.opts.prediction, &x_pred, &mut f_new, grid, i + 1);
 
             // --- Corrector (Eq. 17): prediction eval + ŝ_eff former evals.
             if self.opts.corrector_steps > 0 {
@@ -146,25 +152,156 @@ impl SaSolver {
             }
         }
     }
+}
 
-    /// Convert a fresh data-prediction eval into the interpolation space:
-    /// identity for data prediction, ε̂ = (x − α x₀̂)/σ for noise prediction.
-    fn to_interp_space(
-        &self,
-        x_at_eval: &[f64],
-        f: &mut [f64],
-        grid: &Grid,
-        idx: usize,
-        n: usize,
-        dim: usize,
-    ) {
-        if self.opts.prediction == Prediction::Noise {
-            let alpha = grid.alphas[idx];
-            let sigma = grid.sigmas[idx];
-            for k in 0..n * dim {
-                f[k] = (x_at_eval[k] - alpha * f[k]) / sigma;
-            }
+/// Convert a fresh data-prediction eval into the interpolation space:
+/// identity for data prediction, ε̂ = (x − α x₀̂)/σ for noise prediction.
+/// Shared by the monolithic reference loop and [`SaStepper`].
+fn to_interp_space(
+    prediction: Prediction,
+    x_at_eval: &[f64],
+    f: &mut [f64],
+    grid: &Grid,
+    idx: usize,
+) {
+    if prediction == Prediction::Noise {
+        let alpha = grid.alphas[idx];
+        let sigma = grid.sigmas[idx];
+        for k in 0..f.len() {
+            f[k] = (x_at_eval[k] - alpha * f[k]) / sigma;
         }
+    }
+}
+
+/// SA-Solver as an incremental [`Stepper`]: the history buffer, the shared
+/// per-step ξ and the scratch buffers that `SaSolver::solve` keeps on its
+/// stack become fields, and each `step(i)` call is exactly one iteration
+/// of Algorithm 1's loop.
+pub struct SaStepper {
+    opts: SaSolverOpts,
+    /// History depth max(s, ŝ, 1).
+    keep: usize,
+    buffer: VecDeque<Entry>,
+    xi: Vec<f64>,
+    xi_dirty: bool,
+    x_pred: Vec<f64>,
+    f_new: Vec<f64>,
+}
+
+impl SaStepper {
+    pub fn new(opts: SaSolverOpts) -> Self {
+        assert!(opts.predictor_steps >= 1);
+        let keep = opts.predictor_steps.max(opts.corrector_steps).max(1);
+        SaStepper {
+            opts,
+            keep,
+            buffer: VecDeque::with_capacity(keep + 1),
+            xi: Vec::new(),
+            xi_dirty: false,
+            x_pred: Vec::new(),
+            f_new: Vec::new(),
+        }
+    }
+}
+
+impl Stepper for SaStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        debug_assert_eq!(x.len(), n * dim);
+        // Warm-up eval at t₀ (line 1 of Algorithm 1).
+        let mut f0 = vec![0.0; n * dim];
+        model.eval_batch(x, &grid.ctx(0), &mut f0);
+        to_interp_space(self.opts.prediction, x, &mut f0, grid, 0);
+        self.buffer.push_front(Entry { idx: 0, f: f0 });
+        self.xi = vec![0.0; n * dim];
+        self.xi_dirty = false;
+        self.x_pred = vec![0.0; n * dim];
+        self.f_new = vec![0.0; n * dim];
+    }
+
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        debug_assert_eq!(x.len(), n * dim);
+        let ends = step_ends(grid, i, i + 1);
+        // One ξ per step, shared by predictor and corrector (Alg. 1); skip
+        // generation entirely on steps that inject none (see solve()).
+        let injects = self.opts.tau.int_tau2(ends.lam_s, ends.lam_t) > 0.0;
+        if injects {
+            step_noise(noise, i, dim, n, &mut self.xi);
+        } else if self.xi_dirty {
+            self.xi.fill(0.0);
+        }
+        let xi_was_filled = injects;
+
+        // --- Predictor (Eq. 14): s_eff most recent evals.
+        let s_eff = self.buffer.len().min(self.opts.predictor_steps);
+        let nodes: Vec<f64> = self.buffer.iter().take(s_eff).map(|e| grid.lams[e.idx]).collect();
+        let pc = coefficients(&nodes, &ends, &self.opts.tau, self.opts.prediction);
+        let fs = self.buffer.iter().take(s_eff).map(|e| e.f.as_slice());
+        apply_update(&pc, x, fs, &self.xi, &mut self.x_pred);
+
+        // --- Evaluate the model at the prediction (line 6/11).
+        model.eval_batch(&self.x_pred, &grid.ctx(i + 1), &mut self.f_new);
+        to_interp_space(self.opts.prediction, &self.x_pred, &mut self.f_new, grid, i + 1);
+
+        // --- Corrector (Eq. 17): prediction eval + ŝ_eff former evals.
+        if self.opts.corrector_steps > 0 {
+            let sc_eff = self.buffer.len().min(self.opts.corrector_steps);
+            let mut cnodes = Vec::with_capacity(sc_eff + 1);
+            cnodes.push(grid.lams[i + 1]);
+            cnodes.extend(self.buffer.iter().take(sc_eff).map(|e| grid.lams[e.idx]));
+            let cc = coefficients(&cnodes, &ends, &self.opts.tau, self.opts.prediction);
+            let fs = std::iter::once(self.f_new.as_slice())
+                .chain(self.buffer.iter().take(sc_eff).map(|e| e.f.as_slice()));
+            let mut x_next = std::mem::take(&mut self.x_pred);
+            apply_update(&cc, x, fs, &self.xi, &mut x_next);
+            x.copy_from_slice(&x_next);
+            self.x_pred = x_next;
+        } else {
+            x.copy_from_slice(&self.x_pred);
+        }
+
+        self.xi_dirty = xi_was_filled;
+
+        // Recycle the evicted entry's allocation (as in solve()).
+        let recycled = if self.buffer.len() >= self.keep {
+            self.buffer.pop_back().map(|e| e.f)
+        } else {
+            None
+        };
+        let next = recycled.unwrap_or_else(|| vec![0.0; n * dim]);
+        let f = std::mem::replace(&mut self.f_new, next);
+        self.buffer.push_front(Entry { idx: i + 1, f });
+        while self.buffer.len() > self.keep {
+            self.buffer.pop_back();
+        }
+    }
+
+    fn retain_lanes(&mut self, keep: &[bool], dim: usize) {
+        for e in self.buffer.iter_mut() {
+            retain_rows(&mut e.f, keep, dim);
+        }
+        // ξ rows carry cross-step state only in the "stays zero" sense;
+        // compacting survivor rows preserves both the zero and the filled
+        // case bitwise.
+        retain_rows(&mut self.xi, keep, dim);
+        retain_rows(&mut self.x_pred, keep, dim);
+        retain_rows(&mut self.f_new, keep, dim);
     }
 }
 

@@ -1,0 +1,174 @@
+//! The incremental `Stepper` core: every solver in the zoo exposed as a
+//! per-step recurrence instead of a monolithic grid loop.
+//!
+//! SA-Solver's Algorithm 1 — and the predictor/corrector family generally —
+//! is a recurrence over a small history buffer: `init` performs the warm-up
+//! evaluation (if the scheme has one), `step(i)` advances the state from
+//! grid point `i` to `i + 1`, and `finish` runs any trailing work. Holding
+//! that state in a struct instead of on a call stack is what turns a solve
+//! into a *schedulable primitive*: the coordinator can interleave steps of
+//! several in-flight batches, admit new requests at step boundaries, drop a
+//! cancelled request's lanes mid-run, and report per-step progress — the
+//! same structural move that unlocked continuous batching for LLM serving.
+//!
+//! Contract (asserted for every [`SolverKind`] in the equivalence suite):
+//! driving a stepper one step at a time is bit-identical to the monolithic
+//! seed-era `solve()` loop ([`crate::solvers::run_reference`]), for any
+//! split of the step sequence across separate driving loops, and all
+//! per-lane state is keyed by the lane's noise stream so lanes can be
+//! removed at a step boundary without perturbing the survivors.
+
+use crate::config::{SamplerConfig, SolverKind};
+use crate::models::ModelEval;
+use crate::rng::normal::NormalSource;
+use crate::schedule::NoiseSchedule;
+use crate::solvers::{ddim, ddpm, dpm, edm, euler, sa, unipc, Grid};
+
+/// One solver as an incremental per-step recurrence. All methods take the
+/// state `x` (row-major `n × dim`, evolved in place) plus the shared grid;
+/// the stepper owns only its history/buffer state between calls.
+pub trait Stepper: Send {
+    /// Warm-up before the first step (multistep schemes evaluate the model
+    /// at grid point 0 here). Must be called exactly once, before `step`.
+    fn init(
+        &mut self,
+        _model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        _n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+    }
+
+    /// Advance `x` from grid point `i` to `i + 1`.
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        noise: &mut dyn NormalSource,
+    );
+
+    /// Drop lanes at a step boundary: keep lane `l` iff `keep[l]`. Called
+    /// by the scheduler when a co-batched request is cancelled; per-lane
+    /// history rows for surviving lanes must be preserved bitwise (the
+    /// caller remaps the noise source so surviving lanes keep their global
+    /// streams).
+    fn retain_lanes(&mut self, _keep: &[bool], _dim: usize) {}
+
+    /// Trailing work after the last step. No solver in the zoo needs one
+    /// today; part of the API so a scheme with a final transform can add it
+    /// without changing the driver.
+    fn finish(&mut self, _x: &mut [f64]) {}
+}
+
+/// Build the stepper for a config. `sch` is captured by value (it is
+/// `Copy`) by the schemes that evaluate the schedule off-grid.
+pub fn make_stepper(cfg: &SamplerConfig, sch: &NoiseSchedule) -> Box<dyn Stepper> {
+    match cfg.solver {
+        SolverKind::Sa => Box::new(sa::SaStepper::new(sa::SaSolverOpts::from_config(cfg))),
+        SolverKind::Ddim => Box::new(ddim::DdimStepper::new(cfg.eta)),
+        SolverKind::Ddpm => Box::new(ddpm::DdpmStepper::new()),
+        SolverKind::EulerMaruyama => Box::new(euler::EulerStepper::new(*sch, cfg.tau)),
+        SolverKind::DpmSolver2 => Box::new(dpm::Dpm2Stepper::new(*sch)),
+        SolverKind::DpmSolverPp2m => Box::new(dpm::Pp2mStepper::new()),
+        SolverKind::UniPc => {
+            Box::new(unipc::UniPcStepper::new(cfg.predictor_steps, cfg.corrector_steps))
+        }
+        SolverKind::Heun => Box::new(edm::HeunStepper::new()),
+        SolverKind::EdmSde => Box::new(edm::EdmSdeStepper::new(edm::ChurnParams {
+            churn: cfg.churn,
+            s_noise: cfg.s_noise,
+            s_tmin: cfg.s_tmin,
+            s_tmax: cfg.s_tmax,
+        })),
+    }
+}
+
+/// Drive a stepper over the whole grid: `init`, every `step`, `finish`.
+/// This is the thin generic loop [`crate::solvers::run_with_noise`] is
+/// built on; schedulers inline it so they can interleave work between
+/// steps.
+pub fn drive(
+    stepper: &mut dyn Stepper,
+    model: &dyn ModelEval,
+    grid: &Grid,
+    x: &mut [f64],
+    n: usize,
+    noise: &mut dyn NormalSource,
+) {
+    stepper.init(model, grid, x, n, noise);
+    for i in 0..grid.m() {
+        stepper.step(model, grid, i, x, n, noise);
+    }
+    stepper.finish(x);
+}
+
+/// Compact a row-major `n × dim` buffer in place, keeping row `l` iff
+/// `keep[l]`. Shared by every stepper's `retain_lanes`.
+pub fn retain_rows(v: &mut Vec<f64>, keep: &[bool], dim: usize) {
+    debug_assert_eq!(v.len(), keep.len() * dim, "row buffer / keep mask mismatch");
+    let mut w = 0usize;
+    for (l, &k) in keep.iter().enumerate() {
+        if k {
+            if w != l {
+                v.copy_within(l * dim..(l + 1) * dim, w * dim);
+            }
+            w += 1;
+        }
+    }
+    v.truncate(w * dim);
+}
+
+/// Grow-or-shrink a scratch buffer to `len` (contents are overwritten by
+/// the next step; only the length matters after a lane-count change).
+pub(crate) fn ensure_len(v: &mut Vec<f64>, len: usize) {
+    v.resize(len, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::models::GmmAnalytic;
+    use crate::rng::normal::PhiloxNormal;
+    use crate::schedule::timesteps;
+    use crate::solvers::{prior_sample, run_reference};
+
+    #[test]
+    fn retain_rows_compacts() {
+        let mut v = vec![0.0, 0.1, 1.0, 1.1, 2.0, 2.1, 3.0, 3.1];
+        retain_rows(&mut v, &[true, false, false, true], 2);
+        assert_eq!(v, vec![0.0, 0.1, 3.0, 3.1]);
+        let mut all = vec![1.0, 2.0];
+        retain_rows(&mut all, &[true], 2);
+        assert_eq!(all, vec![1.0, 2.0]);
+        let mut none = vec![1.0, 2.0];
+        retain_rows(&mut none, &[false], 2);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn driven_stepper_matches_reference_for_every_solver() {
+        // The core contract at unit scope (the integration suite covers
+        // splits and threads): drive() == the monolithic seed-era loop,
+        // bitwise, for all nine solvers.
+        let model = GmmAnalytic::new(Gmm::structured(2, 2, 1.5, 3));
+        let sch = NoiseSchedule::vp_linear();
+        for kind in SolverKind::all() {
+            let mut cfg = SamplerConfig::for_solver(*kind);
+            cfg.nfe = 12;
+            let reference = run_reference(&model, &sch, &cfg, 5, 42);
+
+            let m = cfg.steps_for_nfe();
+            let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+            let mut noise = PhiloxNormal::new(42);
+            let mut x = prior_sample(&grid, model.gmm.dim, 5, &mut noise);
+            let mut stepper = make_stepper(&cfg, &sch);
+            drive(&mut *stepper, &model, &grid, &mut x, 5, &mut noise);
+            assert_eq!(x, reference.samples, "{kind:?}: stepper diverged from reference");
+        }
+    }
+}

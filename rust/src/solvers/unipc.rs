@@ -11,6 +11,8 @@
 use crate::lagrange::{lagrange_basis_coeffs, poly_eval};
 use crate::models::ModelEval;
 use crate::quad::adaptive_simpson;
+use crate::rng::normal::NormalSource;
+use crate::solvers::stepper::{ensure_len, retain_rows, Stepper};
 use crate::solvers::Grid;
 use std::collections::VecDeque;
 
@@ -28,6 +30,10 @@ fn ode_coeffs(nodes: &[f64], lam_s: f64, lam_t: f64, alpha_t: f64) -> Vec<f64> {
 
 /// Run UniPC-p with predictor order `p` and corrector order `pc`
 /// (`pc = 0` disables the corrector).
+///
+/// Monolithic seed-era loop, retained as the reference implementation for
+/// the stepper equivalence contract (production goes through
+/// [`UniPcStepper`]).
 pub fn solve(
     model: &dyn ModelEval,
     grid: &Grid,
@@ -90,6 +96,116 @@ pub fn solve(
         while buffer.len() > keep {
             buffer.pop_back();
         }
+    }
+}
+
+/// UniPC-p as an incremental [`Stepper`]: the AB/AM history buffer is the
+/// carried state; coefficients are recomputed per step from the grid.
+pub struct UniPcStepper {
+    p: usize,
+    pc: usize,
+    keep: usize,
+    buffer: VecDeque<(usize, Vec<f64>)>,
+    x_pred: Vec<f64>,
+    f_new: Vec<f64>,
+}
+
+impl UniPcStepper {
+    pub fn new(p: usize, pc: usize) -> Self {
+        let p = p.max(1);
+        let keep = p.max(pc).max(1);
+        UniPcStepper { p, pc, keep, buffer: VecDeque::new(), x_pred: Vec::new(), f_new: Vec::new() }
+    }
+}
+
+impl Stepper for UniPcStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        let mut f0 = vec![0.0; n * dim];
+        model.eval_batch(x, &grid.ctx(0), &mut f0);
+        self.buffer.push_front((0, f0));
+        self.x_pred = vec![0.0; n * dim];
+        self.f_new = vec![0.0; n * dim];
+    }
+
+    fn step(
+        &mut self,
+        model: &dyn ModelEval,
+        grid: &Grid,
+        i: usize,
+        x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let dim = model.dim();
+        ensure_len(&mut self.x_pred, n * dim);
+        ensure_len(&mut self.f_new, n * dim);
+        let (lam_s, lam_t) = (grid.lams[i], grid.lams[i + 1]);
+        let ratio = grid.sigmas[i + 1] / grid.sigmas[i];
+        let a_t = grid.alphas[i + 1];
+
+        // Predictor: AB over the p_eff most recent evals.
+        let p_eff = self.buffer.len().min(self.p);
+        let nodes: Vec<f64> = self.buffer.iter().take(p_eff).map(|(j, _)| grid.lams[*j]).collect();
+        let b = ode_coeffs(&nodes, lam_s, lam_t, a_t);
+        for k in 0..n * dim {
+            self.x_pred[k] = ratio * x[k];
+        }
+        for (bj, (_, f)) in b.iter().zip(self.buffer.iter().take(p_eff)) {
+            for k in 0..n * dim {
+                self.x_pred[k] += bj * f[k];
+            }
+        }
+
+        model.eval_batch(&self.x_pred, &grid.ctx(i + 1), &mut self.f_new);
+
+        if self.pc > 0 {
+            // Corrector: AM over {λ_{i+1}} ∪ pc_eff former evals.
+            let pc_eff = self.buffer.len().min(self.pc);
+            let mut cnodes = vec![lam_t];
+            cnodes.extend(self.buffer.iter().take(pc_eff).map(|(j, _)| grid.lams[*j]));
+            let bc = ode_coeffs(&cnodes, lam_s, lam_t, a_t);
+            for k in 0..n * dim {
+                x[k] = ratio * x[k] + bc[0] * self.f_new[k];
+            }
+            for (bj, (_, f)) in bc[1..].iter().zip(self.buffer.iter().take(pc_eff)) {
+                for k in 0..n * dim {
+                    x[k] += bj * f[k];
+                }
+            }
+        } else {
+            x.copy_from_slice(&self.x_pred);
+        }
+
+        // Recycle the evicted entry's allocation for the next step's
+        // f_new scratch (it is fully overwritten by the next eval), as
+        // SaStepper does — no steady-state allocation per step.
+        let recycled = if self.buffer.len() >= self.keep {
+            self.buffer.pop_back().map(|(_, f)| f)
+        } else {
+            None
+        };
+        let next = recycled.unwrap_or_else(|| vec![0.0; n * dim]);
+        let f = std::mem::replace(&mut self.f_new, next);
+        self.buffer.push_front((i + 1, f));
+        while self.buffer.len() > self.keep {
+            self.buffer.pop_back();
+        }
+    }
+
+    fn retain_lanes(&mut self, keep: &[bool], dim: usize) {
+        for (_, f) in self.buffer.iter_mut() {
+            retain_rows(f, keep, dim);
+        }
+        retain_rows(&mut self.x_pred, keep, dim);
+        retain_rows(&mut self.f_new, keep, dim);
     }
 }
 

@@ -11,7 +11,6 @@
 use super::registry::{Preset, PresetRegistry, Provenance, SCHEMA_VERSION};
 use super::space::{cfg_key, SearchSpace};
 use crate::config::SamplerConfig;
-use crate::coordinator::engine::sample_with;
 use crate::exec::Executor;
 use crate::util::error::{Error, Result};
 use crate::workloads::{self, Workload};
@@ -87,12 +86,16 @@ fn score_batch(
     // One model and one reference draw per cell, shared across candidate
     // workers (ModelEval is Send + Sync) — not one per candidate. Scores
     // match `engine::evaluate_with` exactly: same reference seed, same
-    // metric parameters.
+    // metric parameters. Each candidate runs through the incremental
+    // stepper driver (`solvers::run`) — the same code path the serving
+    // scheduler steps — so a tuned preset is scored on exactly the
+    // numerics it will serve with (bit-identical to the old
+    // `engine::sample_with` path: single-member Philox batches coincide).
     let model = wl.model();
     let reference = wl.reference(opts.n, opts.seed ^ 0x5a5a);
     let dim = wl.dim();
     exec.map(cands, |_, cfg| {
-        let out = sample_with(&*model, wl, cfg, opts.n, opts.seed, &Executor::sequential());
+        let out = crate::solvers::run(&*model, &wl.schedule, cfg, opts.n, opts.seed);
         let sim_fid = crate::metrics::sim_fid(&out.samples, &reference, dim).unwrap_or(f64::NAN);
         let sliced_w2 = crate::metrics::sliced_w2(&out.samples, &reference, dim, 32, opts.seed);
         Scored { cfg: cfg.clone(), sim_fid, sliced_w2 }

@@ -21,6 +21,7 @@ fn spawn_server_threads(max_batch: usize, workers: usize, threads: usize) -> Spa
         workers,
         queue_cap: 64,
         threads,
+        max_inflight: 4,
         presets_path: None,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
@@ -160,6 +161,148 @@ fn lane_parallel_server_matches_sequential_server() {
 }
 
 #[test]
+fn request_admitted_mid_flight_is_bit_identical_to_solo() {
+    // Continuous batching: with ONE worker, a request that arrives while a
+    // long solve is in flight is admitted at a step boundary into the
+    // worker's in-flight set (old behavior: it waited for the drain). Its
+    // samples must equal an idle-server run bitwise — per-lane Philox
+    // streams make results independent of co-scheduled work. Checked at
+    // lane-executor widths 1 and 4.
+    for threads in [1usize, 4] {
+        let (handle, addr) = spawn_server_threads(8, 1, threads);
+
+        // Reference run on the idle server.
+        let solo = Client::connect(&addr).unwrap().request(&request(4, 4242, 12)).unwrap();
+        assert!(solo.ok);
+
+        // Long-running foreground solve (hundreds of steps over thousands
+        // of lanes — wide enough that it is still mid-flight when the late
+        // request arrives, on any machine).
+        let long_addr = addr.clone();
+        let long = std::thread::spawn(move || {
+            let mut client = Client::connect(&long_addr).unwrap();
+            client.request(&request(2048, 7, 500)).unwrap()
+        });
+        // Give it time to be admitted and start stepping.
+        std::thread::sleep(std::time::Duration::from_millis(60));
+
+        let late = Client::connect(&addr).unwrap().request(&request(4, 4242, 12)).unwrap();
+        assert!(late.ok, "{:?}", late.error);
+        assert_eq!(
+            late.samples, solo.samples,
+            "threads={threads}: mid-flight admission changed the samples"
+        );
+        let long_resp = long.join().unwrap();
+        assert!(long_resp.ok, "{:?}", long_resp.error);
+
+        let mut client = Client::connect(&addr).unwrap();
+        let stats = client.stats().unwrap();
+        assert!(stats.req_f64("steps").unwrap() >= 300.0, "scheduler reported too few steps");
+        assert!(stats.req_f64("step_lanes").unwrap() >= stats.req_f64("steps").unwrap());
+        assert_eq!(stats.req_f64("inflight_groups").unwrap(), 0.0, "drained server");
+        assert_eq!(stats.req_f64("inflight_lanes").unwrap(), 0.0);
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn cancel_frees_lanes_without_corrupting_cobatched_requests() {
+    // A heavy request and a small compatible request merge into one lane
+    // group (generous batching window). Cancelling the heavy one mid-run
+    // must (a) answer its connection with {"error":"cancelled"}, (b) leave
+    // the co-batched survivor bit-identical to a solo run, and (c) free
+    // the lanes so the server keeps serving.
+    use sadiff::coordinator::engine::run_batch;
+    use sadiff::workloads;
+
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        batch_deadline_ms: 150,
+        workers: 1,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 2,
+        presets_path: None,
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    // Solo reference for the survivor, computed engine-side (the server's
+    // batch path is bit-identical to this by the engine's contract).
+    let survivor_req = request(2, 606, 5000);
+    let wl = workloads::by_name(&survivor_req.workload).unwrap();
+    let model = wl.model();
+    let solo = run_batch(&*model, &wl, &survivor_req.cfg, &[survivor_req.clone()]);
+
+    // Heavy victim (id 900) and the survivor (id 606), sent within the
+    // batching window so they merge.
+    let heavy_addr = addr.clone();
+    let heavy = std::thread::spawn(move || {
+        let mut client = Client::connect(&heavy_addr).unwrap();
+        client.request(&request(4000, 900, 5000)).unwrap()
+    });
+    let surv_addr = addr.clone();
+    let surv = std::thread::spawn(move || {
+        let mut client = Client::connect(&surv_addr).unwrap();
+        client.request(&request(2, 606, 5000)).unwrap()
+    });
+
+    // Let the pair merge and start stepping, then cancel the heavy one.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut canceller = Client::connect(&addr).unwrap();
+    let mut cancelled_somewhere = false;
+    for _ in 0..200 {
+        let v = canceller.cancel(900).unwrap();
+        assert!(v.opt_bool("ok", false));
+        let hit = v.req_f64("cancelled_queued").unwrap() + v.req_f64("cancel_pending").unwrap();
+        if hit >= 1.0 {
+            cancelled_somewhere = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(cancelled_somewhere, "cancel never found request 900 (finished too fast?)");
+
+    let heavy_resp = heavy.join().unwrap();
+    assert!(!heavy_resp.ok, "heavy request was not cancelled");
+    assert_eq!(heavy_resp.error.as_deref(), Some("cancelled"));
+
+    let surv_resp = surv.join().unwrap();
+    assert!(surv_resp.ok, "{:?}", surv_resp.error);
+    assert_eq!(
+        surv_resp.samples,
+        solo[0].samples.clone(),
+        "cancel corrupted the co-batched survivor"
+    );
+
+    // Lanes are freed: the server still serves, and the gauges drain.
+    let mut client = Client::connect(&addr).unwrap();
+    let after = client.request(&request(2, 1, 6)).unwrap();
+    assert!(after.ok);
+    let stats = client.stats().unwrap();
+    assert!(stats.req_f64("cancelled").unwrap() >= 1.0);
+    assert_eq!(stats.req_f64("inflight_lanes").unwrap(), 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn cancel_with_unknown_id_or_missing_id_is_clean() {
+    let (handle, addr) = spawn_server(4, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let v = client.cancel(5555).unwrap();
+    assert!(v.opt_bool("ok", false));
+    assert_eq!(v.req_f64("cancelled_queued").unwrap(), 0.0);
+    assert_eq!(v.req_f64("cancel_pending").unwrap(), 0.0);
+    // Missing id → protocol error, not a crash.
+    let line = client.round_trip(r#"{"cmd":"cancel"}"#).unwrap();
+    let v = jsonlite::parse(&line).unwrap();
+    assert!(!v.opt_bool("ok", true));
+    assert!(v.req_str("error").unwrap().contains("id"));
+    handle.shutdown();
+}
+
+#[test]
 fn unknown_workload_is_an_error_response() {
     let (handle, addr) = spawn_server(4, 1);
     let mut client = Client::connect(&addr).unwrap();
@@ -207,6 +350,7 @@ fn load_shedding_under_queue_cap() {
         workers: 1,
         queue_cap: 2,
         threads: 1,
+        max_inflight: 1,
         presets_path: None,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();

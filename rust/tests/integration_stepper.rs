@@ -1,0 +1,279 @@
+//! The stepper equivalence contract, end to end: for every `SolverKind`,
+//! the incremental `Stepper` path must reproduce the monolithic seed-era
+//! `solve()` loops (`solvers::run_reference`) bitwise — stepping one step
+//! at a time, under arbitrary splits of the step sequence across driving
+//! loops, interleaved with other in-flight runs, at any executor width,
+//! and across mid-run lane cancellation.
+
+use sadiff::config::{SamplerConfig, SolverKind};
+use sadiff::coordinator::engine::{run_batch, BatchRun};
+use sadiff::coordinator::SampleRequest;
+use sadiff::exec::Executor;
+use sadiff::gmm::Gmm;
+use sadiff::models::{GmmAnalytic, ModelEval};
+use sadiff::rng::normal::PhiloxNormal;
+use sadiff::schedule::{timesteps, NoiseSchedule};
+use sadiff::solvers::stepper::{make_stepper, Stepper};
+use sadiff::solvers::{prior_sample, run, run_parallel, run_reference, Grid};
+use sadiff::workloads;
+use std::sync::Arc;
+
+fn tiny_model() -> GmmAnalytic {
+    GmmAnalytic::new(Gmm::structured(3, 3, 1.5, 11))
+}
+
+#[test]
+fn stepper_matches_monolithic_for_every_solver_at_any_split() {
+    // Drive each solver's stepper (a) continuously and (b) in two separate
+    // loops split at every interesting boundary. Both the mid-run state at
+    // the split and the final output must equal the continuous run, and
+    // the continuous run must equal the monolithic reference — bitwise.
+    let model = tiny_model();
+    let sch = NoiseSchedule::vp_linear();
+    let n = 6;
+    for kind in SolverKind::all() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 14;
+        let want = run_reference(&model, &sch, &cfg, n, 77);
+
+        let m = cfg.steps_for_nfe();
+        let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+        let mut noise = PhiloxNormal::new(77);
+        let mut x = prior_sample(&grid, model.dim(), n, &mut noise);
+        let mut st: Box<dyn Stepper> = make_stepper(&cfg, &sch);
+        st.init(&model, &grid, &mut x, n, &mut noise);
+        let mut traj = Vec::with_capacity(m);
+        for i in 0..m {
+            st.step(&model, &grid, i, &mut x, n, &mut noise);
+            traj.push(x.clone());
+        }
+        st.finish(&mut x);
+        assert_eq!(x, want.samples, "{kind:?}: continuous stepper != reference");
+
+        for k in [0usize, 1, m / 2, m - 1] {
+            let mut noise = PhiloxNormal::new(77);
+            let mut xb = prior_sample(&grid, model.dim(), n, &mut noise);
+            let mut stb: Box<dyn Stepper> = make_stepper(&cfg, &sch);
+            stb.init(&model, &grid, &mut xb, n, &mut noise);
+            for i in 0..k {
+                stb.step(&model, &grid, i, &mut xb, n, &mut noise);
+            }
+            if k > 0 {
+                assert_eq!(xb, traj[k - 1], "{kind:?}: mid-run state at split {k}");
+            }
+            for i in k..m {
+                stb.step(&model, &grid, i, &mut xb, n, &mut noise);
+            }
+            stb.finish(&mut xb);
+            assert_eq!(xb, want.samples, "{kind:?}: split at {k} changed the output");
+        }
+    }
+}
+
+#[test]
+fn stepper_matches_monolithic_for_non_default_configs() {
+    // The configs tuned presets actually serve are not the per-solver
+    // defaults. Drive the config-dependent stepper branches — SA's
+    // interval-τ path (ξ injected on some steps only, exercising the
+    // xi_dirty re-zeroing), noise prediction, predictor-only SA, DDIM with
+    // η > 0, UniPC with the corrector disabled, the EDM churn band, the
+    // ρ-shaped grid — against the monolithic reference, continuously and
+    // split at m/2.
+    use sadiff::config::{Prediction, SamplerConfig, SolverKind, TauKind};
+    use sadiff::schedule::StepSelector;
+
+    let model = tiny_model();
+    let sch = NoiseSchedule::vp_linear();
+    let mut cfgs: Vec<(&str, SamplerConfig)> = Vec::new();
+
+    let mut sa_interval = SamplerConfig::sa_default();
+    sa_interval.nfe = 16;
+    sa_interval.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
+    sa_interval.predictor_steps = 2;
+    sa_interval.corrector_steps = 2;
+    cfgs.push(("sa interval-tau", sa_interval));
+
+    let mut sa_noise = SamplerConfig::sa_default();
+    sa_noise.nfe = 14;
+    sa_noise.prediction = Prediction::Noise;
+    sa_noise.tau = 0.4;
+    sa_noise.corrector_steps = 1;
+    cfgs.push(("sa noise-prediction", sa_noise));
+
+    let mut sa_pred_only = SamplerConfig::sa_default();
+    sa_pred_only.nfe = 12;
+    sa_pred_only.tau = 0.0;
+    sa_pred_only.corrector_steps = 0;
+    cfgs.push(("sa predictor-only ODE", sa_pred_only));
+
+    let mut ddim_eta = SamplerConfig::for_solver(SolverKind::Ddim);
+    ddim_eta.nfe = 12;
+    ddim_eta.eta = 1.0;
+    cfgs.push(("ddim eta=1", ddim_eta));
+
+    let mut unipc_p_only = SamplerConfig::for_solver(SolverKind::UniPc);
+    unipc_p_only.nfe = 12;
+    unipc_p_only.predictor_steps = 2;
+    unipc_p_only.corrector_steps = 0;
+    cfgs.push(("unipc corrector-off", unipc_p_only));
+
+    let mut edm_churn = SamplerConfig::for_solver(SolverKind::EdmSde);
+    edm_churn.nfe = 13;
+    edm_churn.churn = 10.0;
+    edm_churn.s_tmin = 0.1;
+    edm_churn.s_tmax = 10.0;
+    edm_churn.selector = StepSelector::EdmRho { rho: 7.0 };
+    cfgs.push(("edm_sde churn band", edm_churn));
+
+    let mut heun_rho = SamplerConfig::for_solver(SolverKind::Heun);
+    heun_rho.nfe = 13;
+    heun_rho.selector = StepSelector::EdmRho { rho: 5.0 };
+    cfgs.push(("heun rho grid", heun_rho));
+
+    let mut em = SamplerConfig::for_solver(SolverKind::EulerMaruyama);
+    em.nfe = 15;
+    em.tau = 0.3;
+    cfgs.push(("euler_maruyama tau=0.3", em));
+
+    for (name, cfg) in &cfgs {
+        let n = 5;
+        let want = run_reference(&model, &sch, cfg, n, 99);
+        let got = run(&model, &sch, cfg, n, 99);
+        assert_eq!(got.samples, want.samples, "{name}: stepper != monolithic");
+        assert_eq!(got.nfe, want.nfe, "{name}: NFE diverged");
+
+        // Split drive at m/2 (pauses must not disturb carried state —
+        // notably SA's xi_dirty flag on interval-τ schedules).
+        let m = cfg.steps_for_nfe();
+        let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+        let mut noise = PhiloxNormal::new(99);
+        let mut x = prior_sample(&grid, model.dim(), n, &mut noise);
+        let mut st: Box<dyn Stepper> = make_stepper(cfg, &sch);
+        st.init(&model, &grid, &mut x, n, &mut noise);
+        for i in 0..m / 2 {
+            st.step(&model, &grid, i, &mut x, n, &mut noise);
+        }
+        for i in m / 2..m {
+            st.step(&model, &grid, i, &mut x, n, &mut noise);
+        }
+        st.finish(&mut x);
+        assert_eq!(x, want.samples, "{name}: split drive diverged");
+    }
+}
+
+#[test]
+fn stepper_parallel_matches_monolithic_reference_any_thread_count() {
+    // The production entry points (driver + lane-chunked executor) against
+    // the seed-era monolithic path, across thread counts and awkward
+    // chunk shapes.
+    let model = tiny_model();
+    let sch = NoiseSchedule::vp_linear();
+    for kind in SolverKind::all() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 10;
+        for (n, threads) in [(13usize, 4usize), (5, 1), (3, 8)] {
+            let want = run_reference(&model, &sch, &cfg, n, 7);
+            let got = run_parallel(&model, &sch, &cfg, n, 7, &Executor::new(threads));
+            assert_eq!(
+                got.samples, want.samples,
+                "{kind:?}: stepper (n={n}, threads={threads}) != monolithic reference"
+            );
+            assert_eq!(got.nfe, want.nfe, "{kind:?}: NFE accounting diverged");
+        }
+    }
+}
+
+#[test]
+fn interleaved_stepping_of_independent_runs_matches_solo() {
+    // The step-synchronous scheduler's core assumption: advancing two
+    // in-flight runs alternately (different grids, different step counts)
+    // is invisible to each — both equal their solo runs bitwise.
+    let model = tiny_model();
+    let sch = NoiseSchedule::vp_linear();
+    for kind in [SolverKind::Sa, SolverKind::UniPc, SolverKind::DpmSolverPp2m, SolverKind::EdmSde]
+    {
+        let mut cfg_a = SamplerConfig::for_solver(kind);
+        cfg_a.nfe = 12;
+        let mut cfg_b = SamplerConfig::for_solver(kind);
+        cfg_b.nfe = 9;
+        let solo_a = run(&model, &sch, &cfg_a, 4, 5);
+        let solo_b = run(&model, &sch, &cfg_b, 3, 6);
+
+        let (ma, mb) = (cfg_a.steps_for_nfe(), cfg_b.steps_for_nfe());
+        let grid_a = Grid::new(&sch, timesteps(&sch, cfg_a.selector, ma));
+        let grid_b = Grid::new(&sch, timesteps(&sch, cfg_b.selector, mb));
+        let mut noise_a = PhiloxNormal::new(5);
+        let mut noise_b = PhiloxNormal::new(6);
+        let mut xa = prior_sample(&grid_a, model.dim(), 4, &mut noise_a);
+        let mut xb = prior_sample(&grid_b, model.dim(), 3, &mut noise_b);
+        let mut st_a: Box<dyn Stepper> = make_stepper(&cfg_a, &sch);
+        let mut st_b: Box<dyn Stepper> = make_stepper(&cfg_b, &sch);
+        st_a.init(&model, &grid_a, &mut xa, 4, &mut noise_a);
+        st_b.init(&model, &grid_b, &mut xb, 3, &mut noise_b);
+        let (mut ia, mut ib) = (0usize, 0usize);
+        while ia < ma || ib < mb {
+            if ia < ma {
+                st_a.step(&model, &grid_a, ia, &mut xa, 4, &mut noise_a);
+                ia += 1;
+            }
+            if ib < mb {
+                st_b.step(&model, &grid_b, ib, &mut xb, 3, &mut noise_b);
+                ib += 1;
+            }
+        }
+        st_a.finish(&mut xa);
+        st_b.finish(&mut xb);
+        assert_eq!(xa, solo_a.samples, "{kind:?}: interleaving changed run A");
+        assert_eq!(xb, solo_b.samples, "{kind:?}: interleaving changed run B");
+    }
+}
+
+#[test]
+fn batch_run_cancel_survivors_bit_identical_for_every_solver() {
+    // Mid-run cancellation exercises every stepper's `retain_lanes` (the
+    // history-buffer solvers are the interesting ones): cancel the middle
+    // request of a merged batch halfway through and check both survivors
+    // against their solo runs, at two executor widths.
+    let wl = workloads::latent_analog();
+    let req = |id: u64, n: usize, seed: u64, cfg: &SamplerConfig| SampleRequest {
+        id,
+        workload: wl.name.into(),
+        model: "gmm".into(),
+        cfg: cfg.clone(),
+        n,
+        seed,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+    };
+    for kind in SolverKind::all() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 10;
+        let reqs = [req(0, 3, 41, &cfg), req(1, 4, 42, &cfg), req(2, 2, 43, &cfg)];
+        let model = wl.model();
+        let solo_a = run_batch(&*model, &wl, &cfg, &reqs[0..1]);
+        let solo_c = run_batch(&*model, &wl, &cfg, &reqs[2..3]);
+        for threads in [1usize, 3] {
+            let exec = Executor::new(threads);
+            let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+            let mut br = BatchRun::new(model, &wl, &cfg, reqs.to_vec(), &exec);
+            let half = br.progress().1 / 2;
+            for _ in 0..half {
+                br.step(&exec);
+            }
+            let resp = br.cancel(1).expect("middle request is in flight");
+            assert_eq!(resp.error.as_deref(), Some("cancelled"), "{kind:?}");
+            while !br.step(&exec) {}
+            let got = br.finish();
+            assert_eq!(got.len(), 2, "{kind:?}");
+            assert_eq!(
+                got[0].samples, solo_a[0].samples,
+                "{kind:?} threads={threads}: survivor A corrupted by cancel"
+            );
+            assert_eq!(
+                got[1].samples, solo_c[0].samples,
+                "{kind:?} threads={threads}: survivor C corrupted by cancel"
+            );
+        }
+    }
+}
