@@ -42,6 +42,8 @@ fn main() {
         threads: 0, // lane-parallel executor: auto-size to the cores
         max_inflight: 4,
         presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
     };
     let handle = Server::bind(server_cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();

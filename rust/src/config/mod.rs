@@ -331,6 +331,17 @@ pub struct ServerConfig {
     /// bind time; enables the request `"preset"` field and the `presets`
     /// protocol command.
     pub presets_path: Option<String>,
+    /// Path to the serving checkpoint file. When set, every worker rewrites
+    /// the in-flight set at step boundaries (see `checkpoint_every`), and a
+    /// restarting server resumes the checkpointed groups — their results
+    /// land in the `{"cmd":"recover"}` store since the original connections
+    /// are gone. `None` disables checkpointing entirely.
+    pub checkpoint_path: Option<String>,
+    /// Scheduler steps between checkpoint rewrites, per worker (the file is
+    /// also rewritten whenever the in-flight set changes — admission,
+    /// retirement, cancellation). Clamped to ≥ 1; only meaningful with
+    /// `checkpoint_path` set.
+    pub checkpoint_every: u64,
 }
 
 impl Default for ServerConfig {
@@ -344,6 +355,8 @@ impl Default for ServerConfig {
             threads: 1,
             max_inflight: 4,
             presets_path: None,
+            checkpoint_path: None,
+            checkpoint_every: 16,
         }
     }
 }
@@ -361,6 +374,10 @@ impl ServerConfig {
             threads: v.opt_usize("threads", d.threads),
             max_inflight: v.opt_usize("max_inflight", d.max_inflight).max(1),
             presets_path: v.get("presets").and_then(Value::as_str).map(String::from),
+            checkpoint_path: v.get("checkpoint").and_then(Value::as_str).map(String::from),
+            checkpoint_every: v
+                .opt_usize("checkpoint_every", d.checkpoint_every as usize)
+                .max(1) as u64,
         })
     }
 }
@@ -484,5 +501,12 @@ mod tests {
             ServerConfig::from_json(&v).unwrap().presets_path,
             Some("presets.json".to_string())
         );
+
+        assert_eq!(c.checkpoint_path, None);
+        assert_eq!(c.checkpoint_every, ServerConfig::default().checkpoint_every);
+        let v = jsonlite::parse(r#"{"checkpoint": "ck.json", "checkpoint_every": 0}"#).unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.checkpoint_path, Some("ck.json".to_string()));
+        assert_eq!(c.checkpoint_every, 1); // clamped
     }
 }

@@ -204,6 +204,47 @@ mod tests {
     }
 
     #[test]
+    fn remove_where_emptying_the_queue_leaves_no_zero_lane_group() {
+        // Regression: cancellation that removes EVERY queued request must
+        // leave the batcher truly empty — a later pop_group must return an
+        // empty vec (the worker drops it instead of admitting a zero-lane
+        // group), the sample gauge must read 0, and the empty queue must
+        // not report an oldest age (which would keep waking the deadline
+        // clock for work that no longer exists).
+        let mut b = Batcher::new();
+        for id in 0..4 {
+            b.push(req(id, 10, "latent_analog"));
+        }
+        let removed = b.remove_where(|_| true);
+        assert_eq!(removed.len(), 4);
+        assert!(b.is_empty());
+        assert_eq!(b.queued_samples(), 0);
+        assert!(b.oldest_age().is_none());
+        assert!(b.pop_group(8).is_empty(), "empty queue must never yield a group");
+        // The batcher keeps working after being emptied by cancellation.
+        b.push(req(9, 10, "latent_analog"));
+        let g = b.pop_group(8);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].id, 9);
+    }
+
+    #[test]
+    fn remove_where_twice_for_same_id_is_a_clean_no_op() {
+        // Double-cancel of the same ticket: the second pass finds nothing
+        // and removes nothing (the server turns this into a zero-count
+        // reply, not an error or a double-routed response).
+        let mut b = Batcher::new();
+        b.push(req(1, 10, "latent_analog"));
+        b.push(req(2, 10, "latent_analog"));
+        let first = b.remove_where(|r| r.id == 1);
+        assert_eq!(first.len(), 1);
+        let second = b.remove_where(|r| r.id == 1);
+        assert!(second.is_empty());
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.queued_samples(), 2);
+    }
+
+    #[test]
     fn preset_requests_merge_with_manual_requests() {
         // The server resolves `"preset"` to a concrete config at ingress,
         // so by the time requests reach the batcher only the resolved

@@ -1,0 +1,217 @@
+//! The serving checkpoint file: the server's in-flight set, serialized at
+//! step boundaries so a crashed or preempted process can be restarted and
+//! every interrupted solve resumed bit-identically.
+//!
+//! Wire shape (schema_version 1 — the registry.rs provenance pattern
+//! applied to checkpoints):
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "created_by": "sadiff 0.1.0",
+//!   "groups": [
+//!     {"tickets": ["0000000000000001"], "clients": ["00000000000004d2"],
+//!      "group": { ...engine::BatchRun::snapshot()... }}
+//!   ]
+//! }
+//! ```
+//!
+//! Tickets are the server's internal reply ids; `clients[i]` is the
+//! client-visible id of `tickets[i]`. Both are serialized as hex (JSON
+//! numbers are f64 here and cannot hold every u64). Writes go through a
+//! temp file + atomic rename, so a crash mid-write leaves the previous
+//! complete checkpoint in place, never a torn file.
+
+use crate::jsonlite::{to_string, Value};
+use crate::solvers::snapshot::{check_schema_version, hex_u64_array, u64_to_hex};
+use crate::util::error::{Error, Result};
+
+/// One checkpointed in-flight group: the engine-level batch snapshot plus
+/// the ticket → client-id pairs its replies route through.
+#[derive(Debug, Clone)]
+pub struct GroupCheckpoint {
+    /// `engine::BatchRun::snapshot()` value.
+    pub group: Value,
+    /// `(ticket, client_id)` per surviving request, in ticket order.
+    pub clients: Vec<(u64, u64)>,
+}
+
+impl GroupCheckpoint {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "tickets",
+                Value::Array(
+                    self.clients.iter().map(|(t, _)| Value::Str(u64_to_hex(*t))).collect(),
+                ),
+            ),
+            (
+                "clients",
+                Value::Array(
+                    self.clients.iter().map(|(_, c)| Value::Str(u64_to_hex(*c))).collect(),
+                ),
+            ),
+            ("group", self.group.clone()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<GroupCheckpoint> {
+        let tickets = hex_u64_array(v, "tickets")?;
+        let clients = hex_u64_array(v, "clients")?;
+        if tickets.len() != clients.len() {
+            return Err(Error::config(format!(
+                "checkpoint group has {} tickets but {} client ids",
+                tickets.len(),
+                clients.len()
+            )));
+        }
+        let group = v
+            .get("group")
+            .cloned()
+            .ok_or_else(|| Error::config("checkpoint group missing 'group'"))?;
+        Ok(GroupCheckpoint { group, clients: tickets.into_iter().zip(clients).collect() })
+    }
+}
+
+/// A whole serving checkpoint: every worker's in-flight groups.
+#[derive(Debug, Clone, Default)]
+pub struct ServerCheckpoint {
+    pub groups: Vec<GroupCheckpoint>,
+}
+
+impl ServerCheckpoint {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "schema_version",
+                Value::Num(crate::solvers::snapshot::SNAPSHOT_SCHEMA_VERSION as f64),
+            ),
+            (
+                "created_by",
+                Value::Str(format!("sadiff {}", env!("CARGO_PKG_VERSION"))),
+            ),
+            (
+                "groups",
+                Value::Array(self.groups.iter().map(GroupCheckpoint::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ServerCheckpoint> {
+        check_schema_version(v, "server checkpoint")?;
+        let groups = v
+            .get("groups")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::config("server checkpoint missing 'groups' array"))?
+            .iter()
+            .map(GroupCheckpoint::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ServerCheckpoint { groups })
+    }
+
+    /// Write atomically: temp file in the same directory, then rename over
+    /// the target, so readers only ever see a complete checkpoint.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, format!("{}\n", to_string(&self.to_json())))
+            .map_err(|e| Error::runtime(format!("cannot write {tmp}: {e}")))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| Error::runtime(format!("cannot rename {tmp} -> {path}: {e}")))
+    }
+
+    pub fn load(path: &str) -> Result<ServerCheckpoint> {
+        Self::from_json(&crate::config::load_json_file(path)?)
+    }
+
+    /// Human-readable summary lines for the `sadiff checkpoint` command.
+    pub fn describe(&self) -> Vec<String> {
+        let mut out = vec![format!("{} in-flight group(s)", self.groups.len())];
+        for (i, g) in self.groups.iter().enumerate() {
+            let workload = g.group.opt_str("workload", "?");
+            let solver = g
+                .group
+                .get("solver_cfg")
+                .map(|c| c.opt_str("solver", "?"))
+                .unwrap_or("?");
+            let next_step = g.group.opt_usize("next_step", 0);
+            let lanes = g
+                .group
+                .get("stream_keys")
+                .and_then(Value::as_array)
+                .map_or(0, |a| a.len());
+            let clients: Vec<String> =
+                g.clients.iter().map(|(_, c)| c.to_string()).collect();
+            out.push(format!(
+                "group {i}: workload={workload} solver={solver} lanes={lanes} \
+                 next_step={next_step} clients=[{}]",
+                clients.join(", ")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite::parse;
+
+    fn checkpoint() -> ServerCheckpoint {
+        ServerCheckpoint {
+            groups: vec![GroupCheckpoint {
+                group: Value::obj(vec![
+                    ("workload", Value::Str("latent_analog".into())),
+                    ("next_step", Value::Num(3.0)),
+                ]),
+                clients: vec![(1, 1234), (2, u64::MAX)],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_u64_ids() {
+        let ck = checkpoint();
+        let back =
+            ServerCheckpoint::from_json(&parse(&to_string(&ck.to_json())).unwrap()).unwrap();
+        assert_eq!(back.groups.len(), 1);
+        assert_eq!(back.groups[0].clients, vec![(1, 1234), (2, u64::MAX)]);
+        assert_eq!(back.groups[0].group.opt_usize("next_step", 0), 3);
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_atomic_over_existing_file() {
+        let dir = std::env::temp_dir().join(format!("sadiff_ck_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let path = path.to_str().unwrap();
+        checkpoint().save(path).unwrap();
+        // Overwrite with a different checkpoint; the rename replaces it.
+        ServerCheckpoint::default().save(path).unwrap();
+        let loaded = ServerCheckpoint::load(path).unwrap();
+        assert!(loaded.groups.is_empty());
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn newer_schema_rejected() {
+        let mut v = checkpoint().to_json();
+        if let Value::Object(fields) = &mut v {
+            for (k, val) in fields.iter_mut() {
+                if k == "schema_version" {
+                    *val = Value::Num(99.0);
+                }
+            }
+        }
+        let err = ServerCheckpoint::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        assert!(ServerCheckpoint::from_json(&Value::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn describe_names_the_groups() {
+        let lines = checkpoint().describe();
+        assert!(lines[0].contains("1 in-flight"));
+        assert!(lines[1].contains("latent_analog"), "{}", lines[1]);
+        assert!(lines[1].contains("next_step=3"));
+    }
+}

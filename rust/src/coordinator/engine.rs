@@ -5,14 +5,21 @@
 use crate::config::SamplerConfig;
 use crate::coordinator::request::{SampleRequest, SampleResponse};
 use crate::exec::{chunks, Executor};
+use crate::jsonlite::Value;
 use crate::models::{CountingModel, ModelEval};
 use crate::rng::normal::{NormalSource, SplitNoise};
 use crate::rng::Philox4x32;
 use crate::schedule::timesteps;
+use crate::solvers::snapshot::{
+    check_schema_version, f64s_to_hex, hex_to_f64s, hex_u64_array, u64_to_hex, StepperState,
+    SNAPSHOT_SCHEMA_VERSION,
+};
 use crate::solvers::stepper::{self, Stepper};
 use crate::solvers::{prior_sample, run_chunked, Grid, SolveOutput};
+use crate::util::error::{Error, Result};
 use crate::util::timing::Stopwatch;
 use crate::workloads::Workload;
+use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::Arc;
 
@@ -57,6 +64,34 @@ impl CompositeNormal {
     /// Number of lanes this source addresses.
     pub fn lanes(&self) -> usize {
         self.lane_map.len() - self.lane0
+    }
+
+    /// The `(Philox key, local stream)` pair driving this view's lane
+    /// `lane`. Philox is counter-keyed, so this pair IS the lane's whole
+    /// noise-stream state — there is no mutable cursor; the step index of
+    /// the next draw lives in the solve's grid position. This is what a
+    /// checkpoint records per lane.
+    pub fn stream_of(&self, lane: usize) -> (u64, u64) {
+        let (gi, local) = self.lane_map[self.lane0 + lane];
+        (self.gens[gi].key_u64(), local)
+    }
+
+    /// Rebuild a source from explicit per-lane streams (checkpoint
+    /// restore): the new lane `l` draws stream `streams[l]` = (key, local).
+    /// Generators are deduplicated by key, so a restored batch keeps one
+    /// generator per original request like [`CompositeNormal::new`] builds.
+    pub fn from_streams(streams: &[(u64, u64)]) -> CompositeNormal {
+        let mut gens: Vec<Philox4x32> = Vec::new();
+        let mut index: HashMap<u64, usize> = HashMap::new();
+        let mut lane_map = Vec::with_capacity(streams.len());
+        for (key, local) in streams {
+            let gi = *index.entry(*key).or_insert_with(|| {
+                gens.push(Philox4x32::new(*key));
+                gens.len() - 1
+            });
+            lane_map.push((gi, *local));
+        }
+        CompositeNormal { gens: Arc::new(gens), lane_map: Arc::new(lane_map), lane0: 0 }
     }
 }
 
@@ -244,10 +279,14 @@ struct Shard {
 pub struct BatchRun {
     model: Arc<dyn ModelEval>,
     wl: Workload,
+    /// The group's shared solver config (kept for snapshot/restore — the
+    /// grid and steppers are derived from it).
+    cfg: SamplerConfig,
     grid: Grid,
     dim: usize,
-    /// Surviving requests in arrival order, each with its original global
-    /// lane range in the merged batch.
+    /// Surviving requests in arrival order, each with its global lane range
+    /// in the merged batch (original ranges at admission; renumbered to a
+    /// compact 0-based layout after a checkpoint restore).
     requests: Vec<(SampleRequest, Range<usize>)>,
     shards: Vec<Shard>,
     parent_noise: CompositeNormal,
@@ -311,6 +350,7 @@ impl BatchRun {
         BatchRun {
             model,
             wl: wl.clone(),
+            cfg: cfg.clone(),
             grid,
             dim,
             requests,
@@ -319,6 +359,167 @@ impl BatchRun {
             next_step: 0,
             sw,
         }
+    }
+
+    /// Serialize the whole in-flight run at the current step boundary: the
+    /// surviving requests, the evolved per-lane state, every stepper's
+    /// history (shard states merged into one lane-ordered state), the grid
+    /// position, and each lane's noise stream. The snapshot is independent
+    /// of the shard layout it was taken under — [`BatchRun::restore`] is
+    /// free to re-shard for a different executor width, and the resumed
+    /// steps are bit-identical either way (asserted in
+    /// `integration_snapshot` for every `SolverKind`).
+    pub fn snapshot(&self) -> Value {
+        debug_assert!(!self.requests.is_empty(), "snapshot of a drained group");
+        let mut x = Vec::with_capacity(self.lanes() * self.dim);
+        let mut keys = Vec::with_capacity(self.lanes());
+        let mut locals = Vec::with_capacity(self.lanes());
+        for shard in &self.shards {
+            x.extend_from_slice(&shard.x);
+            for &l in &shard.lanes {
+                let (k, local) = self.parent_noise.stream_of(l);
+                keys.push(Value::Str(u64_to_hex(k)));
+                locals.push(Value::Str(u64_to_hex(local)));
+            }
+        }
+        let states: Vec<StepperState> = self
+            .shards
+            .iter()
+            .map(|s| s.stepper.snapshot(s.lanes.len(), self.dim))
+            .collect();
+        let merged = StepperState::merge(&states).expect("lockstep shards have mergeable states");
+        Value::obj(vec![
+            ("schema_version", Value::Num(SNAPSHOT_SCHEMA_VERSION as f64)),
+            ("workload", Value::Str(self.wl.name.to_string())),
+            ("solver_cfg", self.cfg.to_json()),
+            ("dim", Value::Num(self.dim as f64)),
+            ("next_step", Value::Num(self.next_step as f64)),
+            ("evals", Value::Num(self.shards.first().map_or(0, |s| s.evals) as f64)),
+            (
+                "requests",
+                Value::Array(self.requests.iter().map(|(r, _)| r.to_json()).collect()),
+            ),
+            ("stream_keys", Value::Array(keys)),
+            ("stream_locals", Value::Array(locals)),
+            ("x", Value::Str(f64s_to_hex(&x))),
+            ("stepper", merged.to_json()),
+        ])
+    }
+
+    /// Rebuild an in-flight run from a [`BatchRun::snapshot`] value. The
+    /// lane shards are laid out for `exec`'s width — same or different from
+    /// the snapshotting process — and surviving lanes are renumbered to a
+    /// compact 0-based layout while each keeps its original noise stream,
+    /// so the remaining steps reproduce the uninterrupted run bitwise.
+    /// `model` is the resolved model for the group's requests (the caller
+    /// resolves it the same way admission does).
+    pub fn restore(v: &Value, model: Arc<dyn ModelEval>, exec: &Executor) -> Result<BatchRun> {
+        check_schema_version(v, "batch checkpoint")?;
+        let wl_name = v.req_str("workload")?;
+        let wl = crate::workloads::by_name(wl_name)
+            .ok_or_else(|| Error::config(format!("checkpoint names unknown workload '{wl_name}'")))?;
+        let cfg = SamplerConfig::from_json(
+            v.get("solver_cfg")
+                .ok_or_else(|| Error::config("checkpoint missing 'solver_cfg'"))?,
+        )?;
+        let dim = v.req_usize("dim")?;
+        if dim != model.dim() {
+            return Err(Error::config(format!(
+                "checkpoint dim {dim} does not match model dim {}",
+                model.dim()
+            )));
+        }
+        let next_step = v.req_usize("next_step")?;
+        let evals = v.req_usize("evals")?;
+
+        // Surviving requests, renumbered onto compact lane ranges.
+        let req_values = v
+            .get("requests")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::config("checkpoint missing 'requests' array"))?;
+        let mut lane = 0usize;
+        let mut requests: Vec<(SampleRequest, Range<usize>)> = Vec::with_capacity(req_values.len());
+        for rv in req_values {
+            let r = SampleRequest::from_json(rv)?;
+            let range = lane..lane + r.n;
+            lane += r.n;
+            requests.push((r, range));
+        }
+        let total_n = lane;
+        if total_n == 0 {
+            return Err(Error::config("checkpoint group has no surviving lanes"));
+        }
+
+        let keys = hex_u64_array(v, "stream_keys")?;
+        let locals = hex_u64_array(v, "stream_locals")?;
+        if keys.len() != total_n || locals.len() != total_n {
+            return Err(Error::config(format!(
+                "checkpoint has {} noise streams for {} lanes",
+                keys.len().min(locals.len()),
+                total_n
+            )));
+        }
+        let streams: Vec<(u64, u64)> = keys.into_iter().zip(locals).collect();
+        let parent_noise = CompositeNormal::from_streams(&streams);
+
+        let x = hex_to_f64s(v.req_str("x")?)?;
+        if x.len() != total_n * dim {
+            return Err(Error::config(format!(
+                "checkpoint state has {} values for {} lanes × dim {}",
+                x.len(),
+                total_n,
+                dim
+            )));
+        }
+
+        let m = cfg.steps_for_nfe();
+        if next_step > m {
+            return Err(Error::config(format!(
+                "checkpoint next_step {next_step} exceeds the {m}-step grid"
+            )));
+        }
+        let grid = Grid::new(&wl.schedule, timesteps(&wl.schedule, cfg.selector, m));
+
+        let merged = StepperState::from_json(
+            v.get("stepper").ok_or_else(|| Error::config("checkpoint missing 'stepper'"))?,
+        )?;
+        if merged.lanes != total_n || merged.dim != dim {
+            return Err(Error::config(format!(
+                "checkpoint stepper state is {}×{}, expected {}×{}",
+                merged.lanes, merged.dim, total_n, dim
+            )));
+        }
+
+        // Lay the surviving lanes out as shards for THIS executor's width.
+        let ranges = chunks(total_n, exec.threads());
+        let counts: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        let parts = merged.split(&counts)?;
+        let mut shards = Vec::with_capacity(ranges.len());
+        for (range, part) in ranges.into_iter().zip(&parts) {
+            let lanes: Vec<usize> = range.clone().collect();
+            let noise = parent_noise.select(&lanes);
+            let mut st = stepper::make_stepper(&cfg, &wl.schedule);
+            st.restore(part, dim)?;
+            shards.push(Shard {
+                lanes,
+                x: x[range.start * dim..range.end * dim].to_vec(),
+                stepper: st,
+                noise,
+                evals,
+            });
+        }
+        Ok(BatchRun {
+            model,
+            wl,
+            cfg,
+            grid,
+            dim,
+            requests,
+            shards,
+            parent_noise,
+            next_step,
+            sw: Stopwatch::start(),
+        })
     }
 
     /// Advance every lane by one grid step (shards run on `exec`'s
@@ -608,6 +809,122 @@ mod tests {
         assert!(run.cancel(7).is_some());
         assert!(run.is_done(), "no surviving requests → done");
         assert!(run.finish().is_empty());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        // Snapshot halfway, round-trip through the wire form (a simulated
+        // process boundary), restore at a different executor width, and the
+        // finished responses must equal the uninterrupted run bitwise.
+        let wl = workloads::latent_analog();
+        let cfg = SamplerConfig { nfe: 9, ..SamplerConfig::sa_default() };
+        let reqs = [req(0, 3, 999), req(1, 2, 111)];
+        let model = wl.model();
+        let want = run_batch(&*model, &wl, &cfg, &reqs);
+        for (threads_before, threads_after) in [(1usize, 4usize), (4, 1), (2, 2)] {
+            let exec = Executor::new(threads_before);
+            let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+            let mut run = BatchRun::new(model, &wl, &cfg, reqs.to_vec(), &exec);
+            for _ in 0..4 {
+                run.step(&exec);
+            }
+            let line = crate::jsonlite::to_string(&run.snapshot());
+            drop(run); // the "killed" process
+
+            let v = crate::jsonlite::parse(&line).unwrap();
+            let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+            let exec2 = Executor::new(threads_after);
+            let mut resumed = BatchRun::restore(&v, model, &exec2).unwrap();
+            assert_eq!(resumed.progress().0, 4);
+            while !resumed.step(&exec2) {}
+            let got = resumed.finish();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(
+                    a.samples, b.samples,
+                    "restore {threads_before}→{threads_after} diverged (id={})",
+                    a.id
+                );
+                assert_eq!(a.nfe, b.nfe, "NFE accounting diverged across restore");
+                assert_eq!((a.id, a.n, a.dim), (b.id, b.n, b.dim));
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_after_cancel_keeps_survivor_streams() {
+        // Cancel punches holes into the lane set; a snapshot taken after
+        // must carry each survivor's original noise stream so the resumed
+        // run still matches the survivors' solo runs.
+        let wl = workloads::latent_analog();
+        let cfg = SamplerConfig { nfe: 10, ..SamplerConfig::sa_default() };
+        let reqs = [req(0, 3, 999), req(1, 4, 111), req(2, 2, 222)];
+        let model = wl.model();
+        let solo_a = run_batch(&*model, &wl, &cfg, &reqs[0..1]);
+        let solo_c = run_batch(&*model, &wl, &cfg, &reqs[2..3]);
+        let exec = Executor::new(3);
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let mut run = BatchRun::new(model, &wl, &cfg, reqs.to_vec(), &exec);
+        for _ in 0..5 {
+            run.step(&exec);
+        }
+        run.cancel(1).expect("ticket 1 in flight");
+        let v = run.snapshot();
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let exec2 = Executor::new(2);
+        let mut resumed = BatchRun::restore(&v, model, &exec2).unwrap();
+        assert_eq!(resumed.tickets(), vec![0, 2]);
+        assert_eq!(resumed.lanes(), 5);
+        while !resumed.step(&exec2) {}
+        let got = resumed.finish();
+        assert_eq!(got[0].samples, solo_a[0].samples, "survivor A corrupted");
+        assert_eq!(got[1].samples, solo_c[0].samples, "survivor C corrupted");
+    }
+
+    #[test]
+    fn restore_rejects_newer_schema_and_garbage() {
+        let wl = workloads::latent_analog();
+        let cfg = SamplerConfig { nfe: 6, ..SamplerConfig::sa_default() };
+        let exec = Executor::sequential();
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let run = BatchRun::new(model, &wl, &cfg, vec![req(5, 2, 4)], &exec);
+        let mut v = run.snapshot();
+        if let Value::Object(fields) = &mut v {
+            for (k, val) in fields.iter_mut() {
+                if k == "schema_version" {
+                    *val = Value::Num(99.0);
+                }
+            }
+        }
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let err = BatchRun::restore(&v, model, &exec).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        assert!(BatchRun::restore(&Value::obj(vec![]), model, &exec).is_err());
+    }
+
+    #[test]
+    fn composite_from_streams_matches_original() {
+        let parent = CompositeNormal::new(&[(7, 2), (9, 3)]);
+        let streams: Vec<(u64, u64)> = (0..5).map(|l| parent.stream_of(l)).collect();
+        assert_eq!(streams[0], (7, 0));
+        assert_eq!(streams[4], (9, 2));
+        let mut rebuilt = CompositeNormal::from_streams(&streams);
+        let mut direct = CompositeNormal::new(&[(7, 2), (9, 3)]);
+        let mut a = [0.0; 6];
+        let mut b = [0.0; 6];
+        for lane in 0..5u64 {
+            rebuilt.fill(lane, 3, &mut a);
+            direct.fill(lane, 3, &mut b);
+            assert_eq!(a, b, "lane {lane}");
+        }
+        // Non-contiguous survivor subset, as after a cancel.
+        let subset: Vec<(u64, u64)> = [0usize, 3, 4].iter().map(|&l| parent.stream_of(l)).collect();
+        let mut view = CompositeNormal::from_streams(&subset);
+        for (new_lane, old_lane) in [(0u64, 0u64), (1, 3), (2, 4)] {
+            view.fill(new_lane, 8, &mut a);
+            direct.fill(old_lane, 8, &mut b);
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

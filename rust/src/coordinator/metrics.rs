@@ -36,6 +36,12 @@ pub struct ServingMetrics {
     inflight_groups: AtomicU64,
     /// Gauge: lanes currently in flight across all workers.
     inflight_lanes: AtomicU64,
+    /// Counter: checkpoint files written (each write covers the full
+    /// in-flight set); written via [`Self::observe_checkpoint`].
+    checkpoints_written: AtomicU64,
+    /// Counter: in-flight groups resumed from a checkpoint after a restart;
+    /// written via [`Self::observe_recovered`].
+    groups_recovered: AtomicU64,
     latency_buckets: [AtomicU64; 13],
     latency_sum_us: AtomicU64,
 }
@@ -86,6 +92,16 @@ impl ServingMetrics {
     pub fn observe_cancel(&self, lanes: usize) {
         self.cancelled.fetch_add(1, Ordering::Relaxed);
         self.inflight_lanes.fetch_sub(lanes as u64, Ordering::Relaxed);
+    }
+
+    /// One checkpoint file written.
+    pub fn observe_checkpoint(&self) {
+        self.checkpoints_written.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One checkpointed group resumed into a worker's in-flight set.
+    pub fn observe_recovered(&self) {
+        self.groups_recovered.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn observe_batch(&self, group_size: usize, total_samples: usize, nfe: usize) {
@@ -142,6 +158,8 @@ impl ServingMetrics {
             ("cancelled", load(&self.cancelled)),
             ("inflight_groups", load(&self.inflight_groups)),
             ("inflight_lanes", load(&self.inflight_lanes)),
+            ("checkpoints_written", load(&self.checkpoints_written)),
+            ("groups_recovered", load(&self.groups_recovered)),
             ("mean_batch_occupancy", Value::Num(occupancy)),
             ("latency_p50_ms", Value::Num(self.latency_percentile_ms(0.5))),
             ("latency_p95_ms", Value::Num(self.latency_percentile_ms(0.95))),
@@ -210,6 +228,20 @@ mod tests {
         assert_eq!(s.req_f64("cancelled").unwrap(), 1.0);
         assert_eq!(s.req_f64("inflight_groups").unwrap(), 0.0);
         assert_eq!(s.req_f64("inflight_lanes").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn checkpoint_and_recovery_counters() {
+        let m = ServingMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("checkpoints_written").unwrap(), 0.0);
+        assert_eq!(s.req_f64("groups_recovered").unwrap(), 0.0);
+        m.observe_checkpoint();
+        m.observe_checkpoint();
+        m.observe_recovered();
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("checkpoints_written").unwrap(), 2.0);
+        assert_eq!(s.req_f64("groups_recovered").unwrap(), 1.0);
     }
 
     #[test]

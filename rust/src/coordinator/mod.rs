@@ -13,12 +13,14 @@
 //! requests, and report per-step progress.
 
 pub mod batcher;
+pub mod checkpoint;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
 pub use batcher::{BatchKey, Batcher};
+pub use checkpoint::{GroupCheckpoint, ServerCheckpoint};
 pub use engine::{sample, BatchRun, EvalRow};
 pub use request::{cancel_line, SampleRequest, SampleResponse};
 pub use server::{Server, ServerHandle};

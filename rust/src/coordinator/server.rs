@@ -26,8 +26,24 @@
 //!   unaffected). Each cancelled request's waiting connection receives an
 //!   `{"error":"cancelled"}` reply;
 //! * `{"cmd": "presets"}` → summary of the loaded preset registry;
+//! * `{"cmd": "recover"}` → ids of checkpoint-recovered results ready to
+//!   fetch (plus the count still resuming); `{"cmd": "recover", "id": N}`
+//!   returns the recovered response for client id `N`. Recovered results
+//!   exist because a restarted server resumes checkpointed groups whose
+//!   original connections died with the previous process;
 //! * `{"cmd": "ping"}` → `{"ok": true}`;
 //! * `{"cmd": "shutdown"}` → stops accepting and drains workers.
+//!
+//! With `ServerConfig.checkpoint_path` set (`serve --checkpoint-path`),
+//! every worker rewrites the in-flight set — as [`BatchRun`] snapshots —
+//! at step boundaries: every `checkpoint_every` scheduler steps and on any
+//! change to the in-flight set. On startup the file (if present) is loaded
+//! and its groups are requeued to resume exactly where they stopped; the
+//! resumed steps are bit-identical to an uninterrupted run (per-lane
+//! Philox streams + serialized stepper history). Recovery is at-least-once:
+//! a crash after a result was delivered but before the next checkpoint
+//! rewrite re-runs that group on restart, landing a duplicate (identical)
+//! result in the recover store.
 //!
 //! Every malformed line — bad JSON, invalid UTF-8, unknown command — gets
 //! a reply with an `"error"` field; the connection is never silently
@@ -35,6 +51,7 @@
 
 use crate::config::ServerConfig;
 use crate::coordinator::batcher::Batcher;
+use crate::coordinator::checkpoint::{GroupCheckpoint, ServerCheckpoint};
 use crate::coordinator::engine::BatchRun;
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::request::{cancel_line, SampleRequest, SampleResponse};
@@ -60,6 +77,10 @@ struct Shared {
     metrics: ServingMetrics,
     cfg: ServerConfig,
     shutdown: AtomicBool,
+    /// Hard-kill flag ([`ServerHandle::kill`]): workers exit at their next
+    /// boundary check WITHOUT draining — the crash-simulation path the
+    /// checkpoint recovery tests restart from.
+    abort: AtomicBool,
     /// Bound address, for self-pokes that unblock the accept loop.
     addr: SocketAddr,
     /// Lane-parallel executor used inside each batch's solver loop
@@ -69,6 +90,9 @@ struct Shared {
     presets: Option<PresetRegistry>,
     /// Lazily started PJRT runtime host (only if a request needs it).
     runtime: Mutex<Option<Arc<RuntimeHost>>>,
+    /// Per-worker in-flight snapshots, merged into the checkpoint file on
+    /// every write (workers only ever replace their own slice).
+    checkpoint_sink: Mutex<HashMap<usize, Vec<GroupCheckpoint>>>,
 }
 
 struct QueueState {
@@ -80,16 +104,36 @@ struct QueueState {
     /// Tickets flagged for cancellation while in flight; the owning worker
     /// applies them at its next step boundary.
     cancel_flags: HashSet<u64>,
+    /// Checkpointed groups loaded at startup, awaiting a worker slot.
+    restored: Vec<GroupCheckpoint>,
+    /// Restored groups claimed by a worker but not yet reflected in that
+    /// worker's in-flight checkpoint slice, keyed by worker id. Checkpoint
+    /// rewrites include these (and `restored`) so a backlog of resumed
+    /// groups survives a second crash — groups leave the file only once a
+    /// worker's own slice carries them (or they complete).
+    restoring: HashMap<usize, GroupCheckpoint>,
+    /// Ticket → client id for requests resumed from a checkpoint (their
+    /// connections died with the previous process).
+    recovered_clients: HashMap<u64, u64>,
+    /// Finished recovered responses, keyed by client-visible id and served
+    /// by the `recover` protocol command.
+    recovered_results: HashMap<u64, SampleResponse>,
     /// Monotone internal ticket for reply routing (client ids may collide).
     next_ticket: u64,
 }
 
 /// Route one response to its waiting connection and drop its bookkeeping.
+/// A response whose connection is gone because it was resumed from a
+/// checkpoint lands in the recover store instead.
 fn route_reply(q: &mut QueueState, resp: SampleResponse) {
     q.client_of.remove(&resp.id);
     q.cancel_flags.remove(&resp.id);
     if let Some(tx) = q.replies.remove(&resp.id) {
         let _ = tx.send(resp);
+    } else if let Some(client) = q.recovered_clients.remove(&resp.id) {
+        let mut resp = resp;
+        resp.id = client;
+        q.recovered_results.insert(client, resp);
     }
 }
 
@@ -113,6 +157,19 @@ impl ServerHandle {
     /// handle that was already shut down is a no-op (`Drop` relies on
     /// this).
     pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    /// Simulate a crash: every worker exits at its next boundary check
+    /// WITHOUT draining the queue or finishing in-flight groups, exactly as
+    /// `kill -9` would abandon them. The checkpoint file (when enabled)
+    /// keeps its last written state — the state a restarted server resumes
+    /// from. Waiting connections never get replies; recovery tests restart
+    /// a server on the same `checkpoint_path` and fetch results through
+    /// the `recover` protocol command.
+    pub fn kill(mut self) {
+        self.shared.abort.store(true, Ordering::SeqCst);
+        self.shared.cond.notify_all();
         self.shutdown_impl();
     }
 
@@ -147,6 +204,32 @@ impl Server {
     /// preset registry from `cfg.presets_path` when set.
     pub fn bind(cfg: ServerConfig) -> Result<Server> {
         let presets = cfg.presets_path.as_deref().map(PresetRegistry::load).transpose()?;
+        // Crash-safe resume: load the previous process's in-flight set (if
+        // a checkpoint exists) before any worker starts. Tickets of the
+        // dead process stay reserved so fresh requests cannot collide with
+        // them in the reply-routing maps.
+        let mut restored: Vec<GroupCheckpoint> = Vec::new();
+        let mut recovered_clients: HashMap<u64, u64> = HashMap::new();
+        let mut next_ticket = 1u64;
+        if let Some(path) = cfg.checkpoint_path.as_deref() {
+            if std::path::Path::new(path).exists() {
+                let ck = ServerCheckpoint::load(path)?;
+                for g in ck.groups {
+                    for (t, c) in &g.clients {
+                        recovered_clients.insert(*t, *c);
+                        next_ticket = next_ticket.max(t + 1);
+                    }
+                    restored.push(g);
+                }
+                if !restored.is_empty() {
+                    crate::log_info!(
+                        "server",
+                        "checkpoint {path}: resuming {} in-flight group(s)",
+                        restored.len()
+                    );
+                }
+            }
+        }
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| Error::runtime(format!("bind {}: {e}", cfg.addr)))?;
         let addr = listener
@@ -161,16 +244,22 @@ impl Server {
                 replies: HashMap::new(),
                 client_of: HashMap::new(),
                 cancel_flags: HashSet::new(),
-                next_ticket: 1,
+                restored,
+                restoring: HashMap::new(),
+                recovered_clients,
+                recovered_results: HashMap::new(),
+                next_ticket,
             }),
             cond: Condvar::new(),
             metrics: ServingMetrics::new(),
             exec: Executor::new(cfg.threads),
             cfg,
             shutdown: AtomicBool::new(false),
+            abort: AtomicBool::new(false),
             addr,
             presets,
             runtime: Mutex::new(None),
+            checkpoint_sink: Mutex::new(HashMap::new()),
         });
         Ok(Server { shared, listener })
     }
@@ -183,7 +272,7 @@ impl Server {
             let shared = self.shared.clone();
             std::thread::Builder::new()
                 .name(format!("sadiff-worker-{w}"))
-                .spawn(move || worker_loop(shared))
+                .spawn(move || worker_loop(shared, w))
                 .map_err(|e| Error::runtime(format!("spawn worker: {e}")))?;
         }
         let shared = self.shared.clone();
@@ -270,6 +359,34 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
                 Some(reg) => to_string(&reg.summary()),
                 None => r#"{"ok":false,"error":"no preset registry loaded"}"#.to_string(),
             },
+            "recover" => {
+                let q = shared.queue.lock().expect("queue lock");
+                match v.get("id").and_then(Value::as_u64) {
+                    Some(id) => match q.recovered_results.get(&id) {
+                        Some(resp) => resp.to_line(),
+                        None if q.recovered_clients.values().any(|c| *c == id) => {
+                            format!(r#"{{"ok":false,"id":{id},"error":"recovery pending"}}"#)
+                        }
+                        None => {
+                            SampleResponse::err(id, "no recovered result for this id").to_line()
+                        }
+                    },
+                    None => {
+                        let mut ready: Vec<u64> = q.recovered_results.keys().copied().collect();
+                        ready.sort_unstable();
+                        to_string(&Value::obj(vec![
+                            ("ok", Value::Bool(true)),
+                            (
+                                "ready",
+                                Value::Array(
+                                    ready.iter().map(|id| Value::Num(*id as f64)).collect(),
+                                ),
+                            ),
+                            ("pending", Value::Num(q.recovered_clients.len() as f64)),
+                        ]))
+                    }
+                }
+            }
             "ping" => r#"{"ok":true}"#.to_string(),
             "shutdown" => {
                 shared.shutdown.store(true, Ordering::SeqCst);
@@ -348,9 +465,13 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
 fn handle_cancel(shared: &Arc<Shared>, target: u64) -> String {
     let (queued, pending) = {
         let mut q = shared.queue.lock().expect("queue lock");
+        // Both routing maps: fresh requests live in client_of, checkpoint-
+        // recovered ones in recovered_clients (their connections died with
+        // the previous process, but their lanes are just as cancellable).
         let tickets: Vec<u64> = q
             .client_of
             .iter()
+            .chain(q.recovered_clients.iter())
             .filter(|(_, c)| **c == target)
             .map(|(t, _)| *t)
             .collect();
@@ -381,30 +502,63 @@ fn handle_cancel(shared: &Arc<Shared>, target: u64) -> String {
 /// therefore starts making progress at the next boundary instead of
 /// waiting for the drain — and its samples are identical either way,
 /// because every lane draws from its own request-seeded Philox stream.
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, worker: usize) {
     let mut active: Vec<BatchRun> = Vec::new();
     let mut rr = 0usize;
     // Tolerate a programmatically-built config with max_inflight 0 (the
     // JSON/CLI ingress clamps, direct struct literals may not): 0 would
     // admit nothing and hang shutdown on a non-empty queue.
     let max_inflight = shared.cfg.max_inflight.max(1);
+    let checkpointing = shared.cfg.checkpoint_path.is_some();
+    // Scheduler steps since this worker last wrote a checkpoint.
+    let mut ckpt_steps = 0u64;
     loop {
+        // Hard kill (simulated crash): abandon everything immediately —
+        // no drain, no final checkpoint rewrite.
+        if shared.abort.load(Ordering::SeqCst) {
+            return;
+        }
         // --- Step boundary bookkeeping under the queue lock.
         let mut admitted: Vec<Vec<SampleRequest>> = Vec::new();
+        let mut restored_take: Option<GroupCheckpoint> = None;
         let mut flagged: Vec<u64> = Vec::new();
+        let mut drained = false;
         {
             let mut q = shared.queue.lock().expect("queue lock");
             loop {
-                let draining = shared.shutdown.load(Ordering::SeqCst);
-                if draining && q.batcher.is_empty() && active.is_empty() && admitted.is_empty() {
+                if shared.abort.load(Ordering::SeqCst) {
                     return;
+                }
+                let draining = shared.shutdown.load(Ordering::SeqCst);
+                if draining
+                    && q.batcher.is_empty()
+                    && q.restored.is_empty()
+                    && active.is_empty()
+                    && admitted.is_empty()
+                    && restored_take.is_none()
+                {
+                    drained = true;
+                    break;
+                }
+                // Resume checkpointed groups ahead of fresh admissions —
+                // they were already in flight before the restart. The
+                // claimed group is parked in `restoring` so checkpoint
+                // rewrites keep carrying it until this worker's own
+                // in-flight slice does.
+                if restored_take.is_none() && active.len() + admitted.len() < max_inflight {
+                    if let Some(g) = q.restored.pop() {
+                        q.restoring.insert(worker, g.clone());
+                        restored_take = Some(g);
+                    }
                 }
                 // Admit at most ONE ready group per boundary ("ready" =
                 // full batch, aged past the batching deadline, or drain);
                 // taking one at a time leaves further ready groups for
                 // idle sibling workers (see the hand-off notify below)
                 // instead of one worker hoarding the whole queue.
-                if active.len() + admitted.len() < max_inflight && !q.batcher.is_empty() {
+                let slots =
+                    active.len() + admitted.len() + usize::from(restored_take.is_some());
+                if slots < max_inflight && !q.batcher.is_empty() {
                     let deadline = Duration::from_millis(shared.cfg.batch_deadline_ms);
                     let age = q.batcher.oldest_age().unwrap_or_default();
                     let ready =
@@ -422,7 +576,7 @@ fn worker_loop(shared: Arc<Shared>) {
                     }
                 }
                 shared.metrics.set_queued_samples(q.batcher.queued_samples());
-                if !admitted.is_empty() || !active.is_empty() {
+                if !admitted.is_empty() || restored_take.is_some() || !active.is_empty() {
                     break;
                 }
                 // Idle: wait for work, bounded so the deadline clock and
@@ -437,7 +591,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 q = qq;
             }
             // Claim the cancel flags that belong to this worker's groups.
-            if !q.cancel_flags.is_empty() {
+            if !drained && !q.cancel_flags.is_empty() {
                 for run in &active {
                     for t in run.tickets() {
                         if q.cancel_flags.remove(&t) {
@@ -447,6 +601,43 @@ fn worker_loop(shared: Arc<Shared>) {
                 }
             }
         }
+        if drained {
+            // Graceful drain with nothing in flight: leave an empty
+            // checkpoint so a restart does not resurrect finished work.
+            if checkpointing {
+                write_checkpoint(&shared, worker, &active);
+            }
+            return;
+        }
+        // Whether the in-flight set changed at this boundary (admission,
+        // recovery, cancellation, retirement) — those force a checkpoint
+        // rewrite regardless of the periodic step counter.
+        let mut set_changed = false;
+        // --- Materialize a recovered group (model resolution + state
+        // rebuild run outside the lock).
+        if let Some(g) = restored_take {
+            match restore_group(&shared, &g.group) {
+                Ok(run) => {
+                    shared.metrics.group_admitted(run.lanes());
+                    shared.metrics.observe_recovered();
+                    active.push(run);
+                }
+                Err(e) => {
+                    // No connection to answer; park typed errors in the
+                    // recover store so `recover` queries see the failure,
+                    // and drop the claim — this group is not coming back.
+                    let mut q = shared.queue.lock().expect("queue lock");
+                    q.restoring.remove(&worker);
+                    for (t, _) in &g.clients {
+                        route_reply(
+                            &mut q,
+                            SampleResponse::err(*t, format!("recovery failed: {e}")),
+                        );
+                    }
+                }
+            }
+            set_changed = true;
+        }
         // --- Materialize admissions (model resolution + stepper warm-up
         // run outside the lock).
         for g in admitted {
@@ -454,6 +645,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 Ok(run) => {
                     shared.metrics.group_admitted(run.lanes());
                     active.push(run);
+                    set_changed = true;
                 }
                 Err(responses) => {
                     let mut q = shared.queue.lock().expect("queue lock");
@@ -471,12 +663,17 @@ fn worker_loop(shared: Arc<Shared>) {
                     shared.metrics.observe_cancel(before - run.lanes());
                     let mut q = shared.queue.lock().expect("queue lock");
                     route_reply(&mut q, resp);
+                    set_changed = true;
                     break;
                 }
             }
         }
         // --- Advance one group by one solver step (round-robin).
         if active.is_empty() {
+            if checkpointing && set_changed {
+                write_checkpoint(&shared, worker, &active);
+                ckpt_steps = 0;
+            }
             continue;
         }
         if rr >= active.len() {
@@ -488,6 +685,7 @@ fn worker_loop(shared: Arc<Shared>) {
         let done = active[rr].step(&shared.exec);
         if !was_done {
             shared.metrics.observe_step(active[rr].lanes());
+            ckpt_steps += 1;
         }
         if done {
             let run = active.swap_remove(rr);
@@ -502,10 +700,90 @@ fn worker_loop(shared: Arc<Shared>) {
             for resp in responses {
                 route_reply(&mut q, resp);
             }
+            set_changed = true;
         } else {
             rr += 1;
         }
+        if checkpointing && (set_changed || ckpt_steps >= shared.cfg.checkpoint_every) {
+            write_checkpoint(&shared, worker, &active);
+            ckpt_steps = 0;
+        }
     }
+}
+
+/// Rewrite this worker's slice of the checkpoint file: snapshot every
+/// in-flight group at the current step boundary, merge with the other
+/// workers' slices, and atomically replace the file. Lock order is queue →
+/// sink; nothing takes them in the other order.
+fn write_checkpoint(shared: &Arc<Shared>, worker: usize, active: &[BatchRun]) {
+    let Some(path) = shared.cfg.checkpoint_path.as_deref() else {
+        return;
+    };
+    let live: Vec<&BatchRun> = active.iter().filter(|r| !r.is_done()).collect();
+    // Ticket → client-id maps under the queue lock; the (pure CPU) state
+    // snapshots and the file write happen outside it. The same lock visit
+    // retires this worker's `restoring` claim (its group is in `active`
+    // now, so this write's slice carries it) and collects every restored
+    // group no worker has materialized yet — those must keep riding in the
+    // file or a second crash would silently drop the resume backlog.
+    let (client_maps, waiting): (Vec<Vec<(u64, u64)>>, Vec<GroupCheckpoint>) = {
+        let mut q = shared.queue.lock().expect("queue lock");
+        q.restoring.remove(&worker);
+        let maps = live
+            .iter()
+            .map(|r| {
+                r.tickets()
+                    .iter()
+                    .map(|t| {
+                        let client = q
+                            .client_of
+                            .get(t)
+                            .or_else(|| q.recovered_clients.get(t))
+                            .copied()
+                            .unwrap_or(*t);
+                        (*t, client)
+                    })
+                    .collect()
+            })
+            .collect();
+        let waiting =
+            q.restored.iter().cloned().chain(q.restoring.values().cloned()).collect();
+        (maps, waiting)
+    };
+    let groups: Vec<GroupCheckpoint> = live
+        .iter()
+        .zip(client_maps)
+        .map(|(r, clients)| GroupCheckpoint { group: r.snapshot(), clients })
+        .collect();
+    let mut sink = shared.checkpoint_sink.lock().expect("checkpoint sink lock");
+    sink.insert(worker, groups);
+    let merged = ServerCheckpoint {
+        groups: sink.values().flatten().cloned().chain(waiting).collect(),
+    };
+    match merged.save(path) {
+        Ok(()) => shared.metrics.observe_checkpoint(),
+        Err(e) => crate::log_warn!("server", "checkpoint write failed: {e}"),
+    }
+}
+
+/// Rebuild a checkpointed group as an in-flight [`BatchRun`], resolving its
+/// workload + model exactly as fresh admission does.
+fn restore_group(shared: &Arc<Shared>, group: &Value) -> Result<BatchRun> {
+    let model_name = group
+        .get("requests")
+        .and_then(Value::as_array)
+        .and_then(|a| a.first())
+        .map(|r| r.opt_str("model", "gmm").to_string())
+        .unwrap_or_else(|| "gmm".to_string());
+    let model: Arc<dyn ModelEval> = if let Some(name) = model_name.strip_prefix("artifact:") {
+        Arc::from(artifact_model(shared, name)?)
+    } else {
+        let wl_name = group.req_str("workload")?;
+        let wl = workloads::by_name(wl_name)
+            .ok_or_else(|| Error::protocol(format!("unknown workload '{wl_name}'")))?;
+        Arc::from(wl.model())
+    };
+    BatchRun::restore(group, model, &shared.exec)
 }
 
 /// Resolve a group's workload + model and admit it as an in-flight
@@ -590,5 +868,18 @@ impl Client {
     pub fn cancel(&mut self, id: u64) -> Result<Value> {
         let line = self.round_trip(&cancel_line(id))?;
         parse(&line)
+    }
+
+    /// Query the recover store: results of solves that were resumed from a
+    /// checkpoint after a restart (their original connections died with the
+    /// previous process). `None` lists ready ids + the pending count;
+    /// `Some(id)` fetches one recovered response.
+    pub fn recover(&mut self, id: Option<u64>) -> Result<Value> {
+        let line = match id {
+            Some(id) => format!(r#"{{"cmd":"recover","id":{id}}}"#),
+            None => r#"{"cmd":"recover"}"#.to_string(),
+        };
+        let reply = self.round_trip(&line)?;
+        parse(&reply)
     }
 }

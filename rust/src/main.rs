@@ -1,9 +1,13 @@
 //! `sadiff` CLI — the Layer-3 entry point.
 //!
 //! Subcommands:
-//!   serve        start the sampling server (`--presets` loads a registry)
+//!   serve        start the sampling server (`--presets` loads a registry;
+//!                `--checkpoint-path`/`--checkpoint-every` enable crash-safe
+//!                in-flight checkpointing and resume-on-start)
 //!   sample       run one sampling job locally and report metrics
-//!   client       send a request to a running server
+//!   client       send a request to a running server (`--resume <id|all>`
+//!                queries checkpoint-recovered results)
+//!   checkpoint   inspect a serving checkpoint file
 //!   tune         search solver configs per (workload, NFE budget) and
 //!                write a preset registry
 //!   exp <id>     regenerate a paper table/figure (see `exp list`)
@@ -53,6 +57,21 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "refine", help: "tuner refinement rounds", takes_value: true },
         FlagSpec { name: "presets", help: "preset registry path (serve)", takes_value: true },
         FlagSpec { name: "preset", help: "preset name or 'auto' (client)", takes_value: true },
+        FlagSpec {
+            name: "checkpoint-path",
+            help: "serving checkpoint file; resume on start (serve)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "checkpoint-every",
+            help: "steps between checkpoint rewrites (serve)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "resume",
+            help: "fetch a checkpoint-recovered result: id or 'all' (client)",
+            takes_value: true,
+        },
     ]
 }
 
@@ -71,7 +90,9 @@ fn main() {
             "{}",
             render_help("sadiff", "SA-Solver diffusion sampling framework", &spec)
         );
-        println!("\nSubcommands: serve | sample | client | tune | exp <id|list> | artifacts | info");
+        println!(
+            "\nSubcommands: serve | sample | client | checkpoint <path> | tune | exp <id|list> | artifacts | info"
+        );
         return;
     }
     let cmd = args.positionals[0].clone();
@@ -79,6 +100,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
+        "checkpoint" => cmd_checkpoint(&args),
         "tune" => cmd_tune(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
@@ -125,6 +147,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.get("presets") {
         cfg.presets_path = Some(path.to_string());
     }
+    if let Some(path) = args.get("checkpoint-path") {
+        cfg.checkpoint_path = Some(path.to_string());
+    }
+    cfg.checkpoint_every =
+        args.get_u64("checkpoint-every", cfg.checkpoint_every)?.max(1);
     let handle = Server::bind(cfg)?.spawn()?;
     println!("sadiff server on {} — Ctrl-C to stop", handle.addr);
     // Block forever; the handle's workers do the serving.
@@ -160,6 +187,18 @@ fn cmd_sample(args: &Args) -> Result<()> {
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let mut client = Client::connect(addr)?;
+    if let Some(spec) = args.get("resume") {
+        let id = if spec == "all" {
+            None
+        } else {
+            Some(spec.parse::<u64>().map_err(|_| {
+                Error::config(format!("--resume: '{spec}' is not a request id (or 'all')"))
+            })?)
+        };
+        let reply = client.recover(id)?;
+        println!("{}", jsonlite::to_string(&reply));
+        return Ok(());
+    }
     if let Some(id) = args.get("cancel") {
         let id: u64 = id
             .parse()
@@ -183,6 +222,19 @@ fn cmd_client(args: &Args) -> Result<()> {
     println!("{}", resp.to_line());
     let stats = client.stats()?;
     println!("stats: {}", jsonlite::to_string(&stats));
+    Ok(())
+}
+
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| Error::config("usage: sadiff checkpoint <path>"))?;
+    let ck = sadiff::coordinator::ServerCheckpoint::load(path)?;
+    println!("checkpoint {path}:");
+    for line in ck.describe() {
+        println!("  {line}");
+    }
     Ok(())
 }
 

@@ -27,6 +27,15 @@ impl Philox4x32 {
         Philox4x32 { key: [key as u32, (key >> 32) as u32] }
     }
 
+    /// The 64-bit key this generator was constructed with. Philox is
+    /// counter-based, so the key IS the whole stream state: together with a
+    /// `(stream, step)` coordinate it fully determines every draw — which
+    /// is what makes noise streams checkpointable without any mutable
+    /// cursor to serialize.
+    pub fn key_u64(&self) -> u64 {
+        self.key[0] as u64 | ((self.key[1] as u64) << 32)
+    }
+
     /// One 10-round Philox block: counter -> 4 random u32.
     pub fn block(&self, counter: [u32; 4]) -> [u32; 4] {
         let mut c = counter;
@@ -116,6 +125,13 @@ mod tests {
             Philox4x32::new(1).block([0; 4]),
             Philox4x32::new(2).block([0; 4])
         );
+    }
+
+    #[test]
+    fn key_roundtrips() {
+        for key in [0u64, 1, 0xDEAD_BEEF, u64::MAX, 1 << 53, (1 << 53) + 1] {
+            assert_eq!(Philox4x32::new(key).key_u64(), key);
+        }
     }
 
     #[test]

@@ -7,11 +7,14 @@
 //!   exactly the 2-step SA-Predictor at τ ≡ 0 — `integration_equivalence`
 //!   checks our SA implementation against this independent one.
 
+use crate::jsonlite::Value;
 use crate::models::{EvalCtx, ModelEval};
 use crate::rng::normal::NormalSource;
 use crate::schedule::NoiseSchedule;
+use crate::solvers::snapshot::{f64_to_hex, hex_to_f64, StepperState};
 use crate::solvers::stepper::{ensure_len, retain_rows, Stepper};
 use crate::solvers::Grid;
+use crate::util::error::{Error, Result};
 
 /// DPM-Solver-2 (singlestep, midpoint in λ, noise prediction).
 ///
@@ -214,6 +217,41 @@ impl Stepper for Pp2mStepper {
         // x0 is pure scratch between steps (its content moves into
         // x0_prev); it may still be unallocated if no step has run yet.
         self.x0.clear();
+    }
+
+    /// Carried state: the one-entry x₀̂ history plus the previous step size
+    /// h (an f64 whose exact bits feed the next step's coefficients — it is
+    /// serialized as a hex bit pattern like every float payload).
+    fn snapshot(&self, lanes: usize, dim: usize) -> StepperState {
+        StepperState {
+            lanes,
+            dim,
+            scalars: Value::obj(vec![
+                ("h_prev", Value::Str(f64_to_hex(self.h_prev))),
+                ("has_prev", Value::Bool(self.x0_prev.is_some())),
+            ]),
+            mats: match &self.x0_prev {
+                Some(prev) => vec![("x0_prev".to_string(), prev.clone())],
+                None => Vec::new(),
+            },
+        }
+    }
+
+    fn restore(&mut self, state: &StepperState, _dim: usize) -> Result<()> {
+        self.h_prev = hex_to_f64(
+            state
+                .scalars
+                .get("h_prev")
+                .and_then(Value::as_str)
+                .ok_or_else(|| Error::config("dpm++2m snapshot missing 'h_prev'"))?,
+        )?;
+        self.x0_prev = if state.scalars.opt_bool("has_prev", false) {
+            Some(state.mat("x0_prev")?.to_vec())
+        } else {
+            None
+        };
+        self.x0.clear();
+        Ok(())
     }
 }
 

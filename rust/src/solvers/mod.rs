@@ -19,6 +19,7 @@ pub mod dpm;
 pub mod edm;
 pub mod euler;
 pub mod sa;
+pub mod snapshot;
 pub mod stepper;
 pub mod unipc;
 

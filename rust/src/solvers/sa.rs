@@ -9,12 +9,15 @@
 //! single pass per buffer entry.
 
 use crate::config::{Prediction, SamplerConfig};
+use crate::jsonlite::Value;
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
 use crate::solvers::coeffs::{coefficients, StepCoeffs, StepEnds};
+use crate::solvers::snapshot::StepperState;
 use crate::solvers::stepper::{retain_rows, Stepper};
 use crate::solvers::{step_noise, Grid};
 use crate::tau::TauFn;
+use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
 
 /// SA-Solver options.
@@ -302,6 +305,67 @@ impl Stepper for SaStepper {
         retain_rows(&mut self.xi, keep, dim);
         retain_rows(&mut self.x_pred, keep, dim);
         retain_rows(&mut self.f_new, keep, dim);
+    }
+
+    /// The carried state is the history buffer (values + grid indices) and
+    /// the `xi_dirty` flag. ξ itself is NOT serialized: its contents are
+    /// only ever read on steps that inject no noise, and on those the
+    /// uninterrupted run guarantees it is all zeros (either never filled or
+    /// re-zeroed by the dirty check) — so restoring a zeroed ξ with the
+    /// saved flag is bit-identical. `x_pred`/`f_new` are pure scratch,
+    /// fully rewritten every step; only their lengths matter.
+    fn snapshot(&self, lanes: usize, dim: usize) -> StepperState {
+        StepperState {
+            lanes,
+            dim,
+            scalars: Value::obj(vec![
+                ("xi_dirty", Value::Bool(self.xi_dirty)),
+                (
+                    "buf_idx",
+                    Value::Array(
+                        self.buffer
+                            .iter()
+                            .map(|e| Value::Num(e.idx as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            mats: self
+                .buffer
+                .iter()
+                .enumerate()
+                .map(|(j, e)| (format!("buf{j}"), e.f.clone()))
+                .collect(),
+        }
+    }
+
+    fn restore(&mut self, state: &StepperState, dim: usize) -> Result<()> {
+        let idxs: Vec<usize> = state
+            .scalars
+            .get("buf_idx")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::config("sa snapshot missing 'buf_idx'"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::config("sa 'buf_idx' entry not an index")))
+            .collect::<Result<_>>()?;
+        if idxs.len() != state.mats.len() {
+            return Err(Error::config(format!(
+                "sa snapshot has {} buffer indices but {} matrices",
+                idxs.len(),
+                state.mats.len()
+            )));
+        }
+        self.buffer.clear();
+        for (j, idx) in idxs.iter().enumerate() {
+            // Front-to-back order, exactly as snapshotted.
+            self.buffer.push_back(Entry { idx: *idx, f: state.mat(&format!("buf{j}"))?.to_vec() });
+        }
+        self.xi_dirty = state.scalars.opt_bool("xi_dirty", false);
+        let len = state.lanes * dim;
+        self.xi = vec![0.0; len];
+        self.x_pred = vec![0.0; len];
+        self.f_new = vec![0.0; len];
+        Ok(())
     }
 }
 

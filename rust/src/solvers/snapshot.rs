@@ -1,0 +1,369 @@
+//! Snapshot/restore for the stepper core: a versioned, self-describing
+//! serialization of every solver's between-step state.
+//!
+//! SA-Solver's recurrence — and the whole predictor/corrector family — is a
+//! small explicit state machine: a history buffer of past model evaluations,
+//! a handful of shared scalars, and a position on the grid. [`StepperState`]
+//! captures exactly that, which turns every in-flight solve into a
+//! *preemptible, migratable* unit: the coordinator can checkpoint a batch at
+//! any step boundary, a restarted process can resume it, and the remaining
+//! steps are bit-identical to the uninterrupted run (the contract asserted
+//! by `integration_snapshot`).
+//!
+//! Wire shape (schema_version 1, the `registry.rs` provenance pattern):
+//! ```json
+//! {"schema_version": 1, "lanes": 3, "dim": 2,
+//!  "scalars": {"xi_dirty": false, "buf_idx": [2, 1, 0]},
+//!  "mats": [{"name": "buf0", "hex": "3ff0000000000000..."}]}
+//! ```
+//!
+//! All floating-point payloads are encoded as IEEE-754 bit patterns (16 hex
+//! chars per f64) rather than decimal text: the bit-identity contract covers
+//! every value a solver can produce, including `-0.0`, which a decimal
+//! round-trip through the integer fast path of the JSON writer would
+//! silently rewrite to `+0.0`.
+
+use crate::jsonlite::Value;
+use crate::util::error::{Error, Result};
+
+/// Newest snapshot schema this build reads and writes (stepper states,
+/// batch-run checkpoints and server checkpoint files all share it). Newer
+/// files are rejected with a typed error, never a panic.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+/// Reject a value whose `schema_version` is missing or newer than this
+/// build supports. `what` names the container for the error message.
+pub fn check_schema_version(v: &Value, what: &str) -> Result<u64> {
+    let version = v
+        .get("schema_version")
+        .and_then(Value::as_u64)
+        .ok_or_else(|| Error::config(format!("{what} missing 'schema_version'")))?;
+    if version > SNAPSHOT_SCHEMA_VERSION {
+        return Err(Error::config(format!(
+            "{what} schema_version {version} is newer than supported {SNAPSHOT_SCHEMA_VERSION}"
+        )));
+    }
+    Ok(version)
+}
+
+/// Encode f64s as concatenated big-endian IEEE-754 bit patterns (16 lowercase
+/// hex chars each) — exact for every value, including -0.0 and subnormals.
+pub fn f64s_to_hex(xs: &[f64]) -> String {
+    let mut out = String::with_capacity(xs.len() * 16);
+    for x in xs {
+        out.push_str(&format!("{:016x}", x.to_bits()));
+    }
+    out
+}
+
+/// Inverse of [`f64s_to_hex`].
+pub fn hex_to_f64s(s: &str) -> Result<Vec<f64>> {
+    if s.len() % 16 != 0 {
+        return Err(Error::config(format!(
+            "f64 hex payload length {} is not a multiple of 16",
+            s.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(s.len() / 16);
+    for chunk in s.as_bytes().chunks(16) {
+        let txt = std::str::from_utf8(chunk)
+            .map_err(|_| Error::config("f64 hex payload is not ascii"))?;
+        let bits = u64::from_str_radix(txt, 16)
+            .map_err(|_| Error::config(format!("invalid f64 hex chunk '{txt}'")))?;
+        out.push(f64::from_bits(bits));
+    }
+    Ok(out)
+}
+
+/// One f64 as its 16-char hex bit pattern.
+pub fn f64_to_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_to_hex`].
+pub fn hex_to_f64(s: &str) -> Result<f64> {
+    let v = hex_to_f64s(s)?;
+    if v.len() != 1 {
+        return Err(Error::config(format!("expected one f64, got {}", v.len())));
+    }
+    Ok(v[0])
+}
+
+/// A u64 (noise-stream key or cursor) as 16 hex chars — JSON numbers are
+/// f64 in this crate's jsonlite, which cannot hold all u64s exactly.
+pub fn u64_to_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Inverse of [`u64_to_hex`].
+pub fn hex_to_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|_| Error::config(format!("invalid u64 hex '{s}'")))
+}
+
+/// Required field `key` of `v`: an array of hex-encoded u64 strings (the
+/// shape every checkpoint container uses for id and noise-key lists).
+pub fn hex_u64_array(v: &Value, key: &str) -> Result<Vec<u64>> {
+    v.get(key)
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::config(format!("missing '{key}' array")))?
+        .iter()
+        .map(|s| {
+            hex_to_u64(
+                s.as_str().ok_or_else(|| Error::config(format!("'{key}' entry not a string")))?,
+            )
+        })
+        .collect()
+}
+
+/// The between-step state of one stepper over `lanes` lanes: shared
+/// (lane-independent) scalars plus named per-lane `lanes × dim` matrices.
+/// Memoryless schemes (DDIM, DDPM, Euler–Maruyama, DPM-Solver-2, Heun,
+/// EDM-SDE) have an empty state — their scratch buffers are fully rewritten
+/// each step. The split between scalars and matrices is what lets the
+/// coordinator re-shard a restored batch across a different thread count:
+/// matrices are split/merged by lane rows, scalars must agree across shards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepperState {
+    pub lanes: usize,
+    pub dim: usize,
+    /// Solver-specific shared fields (a JSON object; empty when stateless).
+    pub scalars: Value,
+    /// Named per-lane matrices, row-major `lanes × dim`, in a fixed
+    /// solver-defined order.
+    pub mats: Vec<(String, Vec<f64>)>,
+}
+
+impl StepperState {
+    /// The empty state of a memoryless stepper.
+    pub fn stateless(lanes: usize, dim: usize) -> StepperState {
+        StepperState { lanes, dim, scalars: Value::obj(vec![]), mats: Vec::new() }
+    }
+
+    /// Look up a matrix by name.
+    pub fn mat(&self, name: &str) -> Result<&[f64]> {
+        self.mats
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, m)| m.as_slice())
+            .ok_or_else(|| Error::config(format!("stepper state missing matrix '{name}'")))
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("schema_version", Value::Num(SNAPSHOT_SCHEMA_VERSION as f64)),
+            ("lanes", Value::Num(self.lanes as f64)),
+            ("dim", Value::Num(self.dim as f64)),
+            ("scalars", self.scalars.clone()),
+            (
+                "mats",
+                Value::Array(
+                    self.mats
+                        .iter()
+                        .map(|(name, m)| {
+                            Value::obj(vec![
+                                ("name", Value::Str(name.clone())),
+                                ("hex", Value::Str(f64s_to_hex(m))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<StepperState> {
+        check_schema_version(v, "stepper state")?;
+        let lanes = v.req_usize("lanes")?;
+        let dim = v.req_usize("dim")?;
+        let scalars = v.get("scalars").cloned().unwrap_or_else(|| Value::obj(vec![]));
+        let mats = v
+            .get("mats")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::config("stepper state missing 'mats' array"))?
+            .iter()
+            .map(|m| {
+                let name = m.req_str("name")?.to_string();
+                let xs = hex_to_f64s(m.req_str("hex")?)?;
+                if xs.len() != lanes * dim {
+                    return Err(Error::config(format!(
+                        "stepper state matrix '{name}' has {} values, expected {}×{}",
+                        xs.len(),
+                        lanes,
+                        dim
+                    )));
+                }
+                Ok((name, xs))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepperState { lanes, dim, scalars, mats })
+    }
+
+    /// Merge per-shard states (ascending disjoint lane sets, in order) into
+    /// one combined state: matrices concatenate by rows, scalars must be
+    /// identical across shards — shards of one batch step in lockstep, so a
+    /// disagreement means per-shard state drifted (a bug worth failing on).
+    pub fn merge(parts: &[StepperState]) -> Result<StepperState> {
+        let first = parts
+            .first()
+            .ok_or_else(|| Error::config("cannot merge zero stepper states"))?;
+        let mut merged = first.clone();
+        for p in &parts[1..] {
+            if p.scalars != first.scalars || p.dim != first.dim {
+                return Err(Error::config(
+                    "shard stepper states disagree on shared scalars — cannot merge",
+                ));
+            }
+            if p.mats.len() != first.mats.len() {
+                return Err(Error::config("shard stepper states disagree on matrix set"));
+            }
+            for ((name, acc), (pname, pm)) in merged.mats.iter_mut().zip(&p.mats) {
+                if name != pname {
+                    return Err(Error::config(format!(
+                        "shard stepper states disagree on matrix order: '{name}' vs '{pname}'"
+                    )));
+                }
+                acc.extend_from_slice(pm);
+            }
+            merged.lanes += p.lanes;
+        }
+        Ok(merged)
+    }
+
+    /// Split a combined state back into per-shard states of `counts` lanes
+    /// each (the restore-side shard layout — free to differ from the layout
+    /// the snapshot was taken under).
+    pub fn split(&self, counts: &[usize]) -> Result<Vec<StepperState>> {
+        if counts.iter().sum::<usize>() != self.lanes {
+            return Err(Error::config(format!(
+                "shard lane counts {:?} do not sum to {} lanes",
+                counts, self.lanes
+            )));
+        }
+        let mut out = Vec::with_capacity(counts.len());
+        let mut row = 0usize;
+        for &c in counts {
+            let mats = self
+                .mats
+                .iter()
+                .map(|(name, m)| (name.clone(), m[row * self.dim..(row + c) * self.dim].to_vec()))
+                .collect();
+            out.push(StepperState {
+                lanes: c,
+                dim: self.dim,
+                scalars: self.scalars.clone(),
+                mats,
+            });
+            row += c;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite::{parse, to_string};
+
+    #[test]
+    fn hex_codec_is_bit_exact() {
+        let xs = vec![
+            0.0,
+            -0.0,
+            1.5,
+            -1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            4.9e-324, // smallest subnormal
+            std::f64::consts::PI,
+        ];
+        let back = hex_to_f64s(&f64s_to_hex(&xs)).unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} changed bits");
+        }
+        // -0.0 specifically: plain JSON numbers would lose the sign.
+        assert_eq!(hex_to_f64(&f64_to_hex(-0.0)).unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(hex_to_u64(&u64_to_hex(u64::MAX)).unwrap(), u64::MAX);
+        assert!(hex_to_f64s("123").is_err());
+        assert!(hex_to_f64s("zzzzzzzzzzzzzzzz").is_err());
+    }
+
+    #[test]
+    fn hex_u64_array_parses_and_rejects() {
+        let v = parse(r#"{"ids": ["0000000000000001", "ffffffffffffffff"]}"#).unwrap();
+        assert_eq!(hex_u64_array(&v, "ids").unwrap(), vec![1, u64::MAX]);
+        assert!(hex_u64_array(&v, "missing").is_err());
+        let bad = parse(r#"{"ids": [7]}"#).unwrap();
+        assert!(hex_u64_array(&bad, "ids").is_err(), "non-string entry must be rejected");
+    }
+
+    fn state() -> StepperState {
+        StepperState {
+            lanes: 3,
+            dim: 2,
+            scalars: Value::obj(vec![("flag", Value::Bool(true))]),
+            mats: vec![
+                ("a".into(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                ("b".into(), vec![-0.0, 0.5, 1.5, 2.5, 3.5, 4.5]),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_bitwise() {
+        let st = state();
+        let parsed = StepperState::from_json(&parse(&to_string(&st.to_json())).unwrap()).unwrap();
+        assert_eq!(st, parsed);
+        assert_eq!(parsed.mat("b").unwrap()[0].to_bits(), (-0.0f64).to_bits());
+        assert!(parsed.mat("missing").is_err());
+    }
+
+    #[test]
+    fn newer_schema_rejected_with_typed_error() {
+        let mut j = state().to_json();
+        if let Value::Object(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "schema_version" {
+                    *v = Value::Num((SNAPSHOT_SCHEMA_VERSION + 1) as f64);
+                }
+            }
+        }
+        let err = StepperState::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        // Missing version is also a typed error, not a default.
+        let v = parse(r#"{"lanes": 1, "dim": 1, "mats": []}"#).unwrap();
+        assert!(StepperState::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn merge_then_split_roundtrips() {
+        let st = state();
+        let parts = st.split(&[1, 2]).unwrap();
+        assert_eq!(parts[0].lanes, 1);
+        assert_eq!(parts[0].mat("a").unwrap(), &[1.0, 2.0]);
+        assert_eq!(parts[1].mat("b").unwrap(), &[1.5, 2.5, 3.5, 4.5]);
+        let merged = StepperState::merge(&parts).unwrap();
+        assert_eq!(merged, st);
+        // A different split layout also merges back (the re-shard case).
+        let merged2 = StepperState::merge(&st.split(&[2, 1]).unwrap()).unwrap();
+        assert_eq!(merged2, st);
+        assert!(st.split(&[1, 1]).is_err(), "counts must cover all lanes");
+    }
+
+    #[test]
+    fn merge_rejects_scalar_drift() {
+        let a = state();
+        let mut b = state();
+        b.scalars = Value::obj(vec![("flag", Value::Bool(false))]);
+        assert!(StepperState::merge(&[a, b]).is_err());
+        assert!(StepperState::merge(&[]).is_err());
+    }
+
+    #[test]
+    fn stateless_is_empty() {
+        let st = StepperState::stateless(4, 2);
+        assert!(st.mats.is_empty());
+        let back = StepperState::from_json(&st.to_json()).unwrap();
+        assert_eq!(st, back);
+    }
+}

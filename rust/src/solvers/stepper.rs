@@ -22,7 +22,9 @@ use crate::config::{SamplerConfig, SolverKind};
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
 use crate::schedule::NoiseSchedule;
+use crate::solvers::snapshot::StepperState;
 use crate::solvers::{ddim, ddpm, dpm, edm, euler, sa, unipc, Grid};
+use crate::util::error::{Error, Result};
 
 /// One solver as an incremental per-step recurrence. All methods take the
 /// state `x` (row-major `n × dim`, evolved in place) plus the shared grid;
@@ -62,6 +64,33 @@ pub trait Stepper: Send {
     /// today; part of the API so a scheme with a final transform can add it
     /// without changing the driver.
     fn finish(&mut self, _x: &mut [f64]) {}
+
+    /// Serialize the between-step state at a step boundary. The default is
+    /// the empty state — correct for every memoryless scheme whose scratch
+    /// buffers are fully rewritten each step (DDIM, DDPM, Euler–Maruyama,
+    /// DPM-Solver-2, Heun, EDM-SDE). History-buffer solvers (SA, UniPC,
+    /// DPM-Solver++(2M)) override both this and [`Stepper::restore`].
+    ///
+    /// Contract (asserted in `integration_snapshot` for every
+    /// [`SolverKind`]): `restore(snapshot())` on a fresh stepper from the
+    /// same config resumes bit-identically to the uninterrupted run, at any
+    /// boundary, across serialize/deserialize round-trips, and under a
+    /// different lane-shard layout (states merge/split by lane rows).
+    fn snapshot(&self, lanes: usize, dim: usize) -> StepperState {
+        StepperState::stateless(lanes, dim)
+    }
+
+    /// Restore a state captured by [`Stepper::snapshot`] into a freshly
+    /// constructed stepper (replaces `init`; call before the next `step`).
+    fn restore(&mut self, state: &StepperState, _dim: usize) -> Result<()> {
+        if !state.mats.is_empty() {
+            return Err(Error::config(
+                "this stepper is memoryless but the snapshot carries per-lane state \
+                 (solver/config mismatch?)",
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Build the stepper for a config. `sch` is captured by value (it is

@@ -8,12 +8,15 @@
 //! quadrature rather than the closed-form moment recursion used by
 //! `solvers::coeffs`, so the equivalence tests cross-validate both paths.
 
+use crate::jsonlite::Value;
 use crate::lagrange::{lagrange_basis_coeffs, poly_eval};
 use crate::models::ModelEval;
 use crate::quad::adaptive_simpson;
 use crate::rng::normal::NormalSource;
+use crate::solvers::snapshot::StepperState;
 use crate::solvers::stepper::{ensure_len, retain_rows, Stepper};
 use crate::solvers::Grid;
+use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
 
 /// ODE Adams coefficients via quadrature: b_j = α_t ∫ e^{λ−λ_t} l_j dλ.
@@ -206,6 +209,55 @@ impl Stepper for UniPcStepper {
         }
         retain_rows(&mut self.x_pred, keep, dim);
         retain_rows(&mut self.f_new, keep, dim);
+    }
+
+    /// Carried state: the AB/AM history buffer (values + grid indices).
+    /// Coefficients are recomputed per step from the grid; `x_pred`/`f_new`
+    /// are scratch, fully rewritten every step.
+    fn snapshot(&self, lanes: usize, dim: usize) -> StepperState {
+        StepperState {
+            lanes,
+            dim,
+            scalars: Value::obj(vec![(
+                "buf_idx",
+                Value::Array(self.buffer.iter().map(|(j, _)| Value::Num(*j as f64)).collect()),
+            )]),
+            mats: self
+                .buffer
+                .iter()
+                .enumerate()
+                .map(|(j, (_, f))| (format!("buf{j}"), f.clone()))
+                .collect(),
+        }
+    }
+
+    fn restore(&mut self, state: &StepperState, dim: usize) -> Result<()> {
+        let idxs: Vec<usize> = state
+            .scalars
+            .get("buf_idx")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::config("unipc snapshot missing 'buf_idx'"))?
+            .iter()
+            .map(|v| {
+                v.as_usize().ok_or_else(|| Error::config("unipc 'buf_idx' entry not an index"))
+            })
+            .collect::<Result<_>>()?;
+        if idxs.len() != state.mats.len() {
+            return Err(Error::config(format!(
+                "unipc snapshot has {} buffer indices but {} matrices",
+                idxs.len(),
+                state.mats.len()
+            )));
+        }
+        self.buffer.clear();
+        for (j, idx) in idxs.iter().enumerate() {
+            // Front-to-back order, exactly as snapshotted.
+            self.buffer.push_back((*idx, state.mat(&format!("buf{j}"))?.to_vec()));
+        }
+        let len = state.lanes * dim;
+        self.x_pred = vec![0.0; len];
+        self.f_new = vec![0.0; len];
+        Ok(())
     }
 }
 

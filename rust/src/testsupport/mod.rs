@@ -2,7 +2,9 @@
 //! vendor set): seeded generators over a fixed number of cases with
 //! first-failure reporting. Deterministic per seed so failures reproduce.
 
+use crate::config::{SamplerConfig, SolverKind};
 use crate::rng::Xoshiro256pp;
+use crate::schedule::StepSelector;
 
 /// Configuration for a property run.
 #[derive(Debug, Clone, Copy)]
@@ -69,6 +71,118 @@ pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(cfg: PropConfig, mut prop
     }
 }
 
+/// Like [`check`], but every case (and, on failure, the shrunk repro line)
+/// is appended to a seed-log file so CI can upload the trail as an artifact
+/// when the property fails. The failing `Gen` seed in the log/panic is the
+/// full repro: rerun with `PropConfig { cases: case + 1, seed }` and only
+/// the last case matters.
+pub fn check_logged<F: FnMut(&mut Gen) -> Result<(), String>>(
+    cfg: PropConfig,
+    log_path: &str,
+    mut prop: F,
+) {
+    truncate_log(log_path);
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Xoshiro256pp::new(case_seed), case };
+        if let Err(msg) = prop(&mut g) {
+            let line = format!(
+                "FAIL case {case}: run seed {} (case seed {case_seed}): {msg}",
+                cfg.seed
+            );
+            append_log(log_path, &line);
+            panic!("property failed at case {case} (seed {}): {msg}", cfg.seed);
+        }
+        append_log(log_path, &format!("ok case {case}: case seed {case_seed}"));
+    }
+}
+
+fn truncate_log(path: &str) {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let _ = std::fs::write(path, "");
+}
+
+fn append_log(path: &str, line: &str) {
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// One sampled configuration of the snapshot/restore property sweep: a
+/// random point in (solver, grid kind, NFE, co-batch layout, snapshot
+/// boundary, executor widths on both sides of the restore).
+#[derive(Debug, Clone)]
+pub struct SnapshotCase {
+    pub solver: SolverKind,
+    pub selector: StepSelector,
+    pub nfe: usize,
+    /// Lane count per co-batched request (1..=3 requests).
+    pub lane_counts: Vec<usize>,
+    /// Per-request noise seeds.
+    pub seeds: Vec<u64>,
+    /// Where to snapshot, as a fraction of the grid (0 = right after the
+    /// warm-up `init`, 1 = the final boundary, after the last step).
+    pub boundary_frac: f64,
+    /// Executor width driving the run up to the snapshot.
+    pub threads_before: usize,
+    /// Executor width after the restore (the migrated process).
+    pub threads_after: usize,
+}
+
+impl SnapshotCase {
+    pub fn sample(g: &mut Gen) -> SnapshotCase {
+        let solver = *g.choice(SolverKind::all());
+        let selector = *g.choice(StepSelector::all());
+        let nfe = g.usize_in(1, 20);
+        let n_requests = g.usize_in(1, 3);
+        let lane_counts: Vec<usize> = (0..n_requests).map(|_| g.usize_in(1, 5)).collect();
+        let seeds: Vec<u64> =
+            (0..n_requests).map(|_| g.usize_in(0, 1_000_000) as u64).collect();
+        SnapshotCase {
+            solver,
+            selector,
+            nfe,
+            lane_counts,
+            seeds,
+            boundary_frac: g.f64_in(0.0, 1.0),
+            threads_before: *g.choice(&[1usize, 2, 4]),
+            threads_after: *g.choice(&[1usize, 4]),
+        }
+    }
+
+    /// The sampled solver config (selector + NFE applied to the solver's
+    /// family defaults).
+    pub fn config(&self) -> SamplerConfig {
+        let mut cfg = SamplerConfig::for_solver(self.solver);
+        cfg.nfe = self.nfe;
+        cfg.selector = self.selector;
+        cfg
+    }
+
+    /// The snapshot boundary as a step index in `0..=m`.
+    pub fn boundary(&self, m: usize) -> usize {
+        ((self.boundary_frac * m as f64).round() as usize).min(m)
+    }
+
+    /// One-line description for the seed log / failure message.
+    pub fn describe(&self) -> String {
+        format!(
+            "solver={} selector={} nfe={} lanes={:?} seeds={:?} frac={:.3} threads {}→{}",
+            self.solver.name(),
+            self.selector.name(),
+            self.nfe,
+            self.lane_counts,
+            self.seeds,
+            self.boundary_frac,
+            self.threads_before,
+            self.threads_after
+        )
+    }
+}
+
 /// Helper for building failure messages in properties.
 #[macro_export]
 macro_rules! prop_assert {
@@ -111,6 +225,52 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn snapshot_case_sampling_is_deterministic_and_in_range() {
+        let mut first: Vec<String> = Vec::new();
+        check(PropConfig { cases: 12, seed: 5 }, |g| {
+            let c = SnapshotCase::sample(g);
+            prop_assert!((1..=20).contains(&c.nfe), "nfe={}", c.nfe);
+            prop_assert!(!c.lane_counts.is_empty(), "no requests");
+            prop_assert!(c.lane_counts.iter().all(|n| (1..=5).contains(n)), "{:?}", c.lane_counts);
+            prop_assert!((0.0..=1.0).contains(&c.boundary_frac), "{}", c.boundary_frac);
+            let m = c.config().steps_for_nfe();
+            prop_assert!(c.boundary(m) <= m, "boundary past the grid");
+            first.push(c.describe());
+            Ok(())
+        });
+        let mut second: Vec<String> = Vec::new();
+        check(PropConfig { cases: 12, seed: 5 }, |g| {
+            second.push(SnapshotCase::sample(g).describe());
+            Ok(())
+        });
+        assert_eq!(first, second, "sampling must be deterministic per seed");
+    }
+
+    #[test]
+    fn check_logged_writes_the_trail() {
+        let path = std::env::temp_dir()
+            .join(format!("sadiff_seedlog_{}.log", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        check_logged(PropConfig { cases: 3, seed: 8 }, &path, |_| Ok(()));
+        let log = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(log.lines().count(), 3, "{log}");
+        assert!(log.contains("ok case 2"));
+        let failed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_logged(PropConfig { cases: 2, seed: 8 }, &path, |g| {
+                if g.case == 1 {
+                    Err("boom".into())
+                } else {
+                    Ok(())
+                }
+            });
+        }));
+        assert!(failed.is_err());
+        let log = std::fs::read_to_string(&path).unwrap();
+        assert!(log.contains("FAIL case 1"), "{log}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -23,6 +23,8 @@ fn spawn_server_threads(max_batch: usize, workers: usize, threads: usize) -> Spa
         threads,
         max_inflight: 4,
         presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -224,6 +226,8 @@ fn cancel_frees_lanes_without_corrupting_cobatched_requests() {
         threads: 1,
         max_inflight: 2,
         presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -283,6 +287,76 @@ fn cancel_frees_lanes_without_corrupting_cobatched_requests() {
     let stats = client.stats().unwrap();
     assert!(stats.req_f64("cancelled").unwrap() >= 1.0);
     assert_eq!(stats.req_f64("inflight_lanes").unwrap(), 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn cancelling_every_queued_request_drops_the_group_entirely() {
+    // A generous batching window keeps the pair queued; cancelling both
+    // must empty their would-be group before admission — the scheduler must
+    // never admit a zero-lane group (steps stay 0), both connections get
+    // {"error":"cancelled"}, and the server keeps serving afterwards.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        batch_deadline_ms: 1000,
+        workers: 1,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 2,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut waiters = Vec::new();
+    for seed in [701u64, 702] {
+        let addr = addr.clone();
+        waiters.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            client.request(&request(2, seed, 2000)).unwrap()
+        }));
+    }
+    // Let both enqueue, then cancel them inside the batching window.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let mut canceller = Client::connect(&addr).unwrap();
+    let mut removed = 0.0;
+    for seed in [701u64, 702] {
+        let v = canceller.cancel(seed).unwrap();
+        assert!(v.opt_bool("ok", false));
+        removed += v.req_f64("cancelled_queued").unwrap();
+    }
+    assert_eq!(removed, 2.0, "both requests should be cancelled while queued");
+    for w in waiters {
+        let resp = w.join().unwrap();
+        assert!(!resp.ok);
+        assert_eq!(resp.error.as_deref(), Some("cancelled"));
+    }
+    // The emptied group was dropped, not scheduled with zero lanes.
+    let resp = canceller.request(&request(2, 9, 6)).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    let stats = canceller.stats().unwrap();
+    assert_eq!(stats.req_f64("cancelled").unwrap(), 2.0);
+    assert_eq!(stats.req_f64("inflight_groups").unwrap(), 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn double_cancel_of_the_same_id_is_a_clean_zero_count() {
+    let (handle, addr) = spawn_server(4, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client.request(&request(2, 77, 6)).unwrap();
+    assert!(resp.ok);
+    // The request already completed: both cancels find nothing, both get
+    // clean ok replies with zero counts (no error, no crash, no hang).
+    for _ in 0..2 {
+        let v = client.cancel(77).unwrap();
+        assert!(v.opt_bool("ok", false));
+        assert_eq!(v.req_f64("cancelled_queued").unwrap(), 0.0);
+        assert_eq!(v.req_f64("cancel_pending").unwrap(), 0.0);
+    }
     handle.shutdown();
 }
 
@@ -352,6 +426,8 @@ fn load_shedding_under_queue_cap() {
         threads: 1,
         max_inflight: 1,
         presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();

@@ -1,0 +1,510 @@
+//! The snapshot/restore contract, end to end: for every `SolverKind`, a
+//! solve snapshotted at ANY step boundary, serialized to the wire form (a
+//! simulated process boundary), and restored — same or different executor
+//! width — must finish bit-identically to the uninterrupted run.
+//!
+//! Three layers of evidence:
+//! * a `Gen`-driven property sweep over (solver, grid kind, NFE, co-batch
+//!   layout, boundary, thread counts), with every case's seed logged to
+//!   `target/snapshot_prop_seeds.log` (uploaded as a CI artifact on
+//!   failure; the failing `Gen` seed in the panic reproduces the case);
+//! * fixed edge cases: NFE=1, snapshot right after `init`, snapshot on the
+//!   final boundary, and restore after `retain_lanes` dropped lanes;
+//! * checked-in golden fixtures per solver (schema-gated), plus the
+//!   kill-and-restart server e2e against a real checkpoint file.
+
+use sadiff::config::{SamplerConfig, ServerConfig, SolverKind};
+use sadiff::coordinator::engine::{run_batch, BatchRun};
+use sadiff::coordinator::server::{Client, Server};
+use sadiff::coordinator::{SampleRequest, ServerCheckpoint};
+use sadiff::exec::Executor;
+use sadiff::jsonlite::{self, Value};
+use sadiff::models::ModelEval;
+use sadiff::prop_assert;
+use sadiff::solvers::snapshot::{hex_to_f64s, StepperState};
+use sadiff::testsupport::{check_logged, PropConfig, SnapshotCase};
+use sadiff::workloads;
+use std::sync::Arc;
+
+const SEED_LOG: &str = "target/snapshot_prop_seeds.log";
+const GOLDEN_PATH: &str = "rust/tests/fixtures/snapshot_golden.json";
+
+fn req(id: u64, n: usize, seed: u64, cfg: &SamplerConfig) -> SampleRequest {
+    SampleRequest {
+        id,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: cfg.clone(),
+        n,
+        seed,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+    }
+}
+
+/// Run a group to boundary `k` on `exec_before`, snapshot, round-trip the
+/// snapshot through its wire form, restore on `exec_after`, finish, and
+/// return the responses.
+fn snapshot_roundtrip_run(
+    cfg: &SamplerConfig,
+    reqs: &[SampleRequest],
+    k: usize,
+    exec_before: &Executor,
+    exec_after: &Executor,
+) -> Vec<sadiff::coordinator::SampleResponse> {
+    let wl = workloads::latent_analog();
+    let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+    let mut run = BatchRun::new(model, &wl, cfg, reqs.to_vec(), exec_before);
+    for _ in 0..k {
+        run.step(exec_before);
+    }
+    let line = jsonlite::to_string(&run.snapshot());
+    drop(run); // the "killed" process
+
+    let v = jsonlite::parse(&line).expect("snapshot line parses");
+    let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+    let mut resumed = BatchRun::restore(&v, model, exec_after).expect("restore");
+    while !resumed.step(exec_after) {}
+    resumed.finish()
+}
+
+#[test]
+fn property_sweep_snapshot_restore_bit_identity() {
+    // Per iteration: sample a point in (solver, grid kind, NFE 1..=20,
+    // lane layout, snapshot boundary, restore-side thread count), assert
+    // restore == uninterrupted bitwise. The failing Gen seed prints in the
+    // panic and lands in the seed log.
+    let cases = std::env::var("SADIFF_SNAPSHOT_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    check_logged(PropConfig { cases, seed: 0x5AD1FF }, SEED_LOG, |g| {
+        let case = SnapshotCase::sample(g);
+        let cfg = case.config();
+        let reqs: Vec<SampleRequest> = case
+            .lane_counts
+            .iter()
+            .zip(&case.seeds)
+            .enumerate()
+            .map(|(i, (n, seed))| req(i as u64, *n, *seed, &cfg))
+            .collect();
+
+        let wl = workloads::latent_analog();
+        let model = wl.model();
+        let want = run_batch(&*model, &wl, &cfg, &reqs);
+
+        let m = cfg.steps_for_nfe();
+        let k = case.boundary(m);
+        let got = snapshot_roundtrip_run(
+            &cfg,
+            &reqs,
+            k,
+            &Executor::new(case.threads_before),
+            &Executor::new(case.threads_after),
+        );
+        prop_assert!(got.len() == want.len(), "{}: response count", case.describe());
+        for (a, b) in want.iter().zip(&got) {
+            prop_assert!(
+                a.samples == b.samples,
+                "{}: boundary {k}/{m} diverged for id {}",
+                case.describe(),
+                a.id
+            );
+            prop_assert!(
+                a.nfe == b.nfe,
+                "{}: NFE {} != {} after restore",
+                case.describe(),
+                a.nfe,
+                b.nfe
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn edge_nfe_1_and_snapshot_before_any_step() {
+    // NFE=1 (no history beyond the warm-up) and snapshot immediately after
+    // `init`, before any step — for every solver, at both restore widths.
+    let wl = workloads::latent_analog();
+    for kind in SolverKind::all() {
+        for nfe in [1usize, 8] {
+            let mut cfg = SamplerConfig::for_solver(*kind);
+            cfg.nfe = nfe;
+            let reqs = [req(0, 3, 900, &cfg), req(1, 2, 901, &cfg)];
+            let model = wl.model();
+            let want = run_batch(&*model, &wl, &cfg, &reqs);
+            for threads_after in [1usize, 4] {
+                let got = snapshot_roundtrip_run(
+                    &cfg,
+                    &reqs,
+                    0,
+                    &Executor::sequential(),
+                    &Executor::new(threads_after),
+                );
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(
+                        a.samples, b.samples,
+                        "{kind:?} nfe={nfe}: snapshot-after-init diverged (threads_after={threads_after})"
+                    );
+                    assert_eq!(a.nfe, b.nfe, "{kind:?} nfe={nfe}: NFE diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn edge_snapshot_on_the_final_boundary() {
+    // Snapshot after the LAST step: restore runs zero steps, only
+    // `finish`, and must still reproduce the uninterrupted output.
+    let wl = workloads::latent_analog();
+    for kind in SolverKind::all() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 9;
+        let reqs = [req(0, 4, 77, &cfg)];
+        let model = wl.model();
+        let want = run_batch(&*model, &wl, &cfg, &reqs);
+        let m = cfg.steps_for_nfe();
+        let got =
+            snapshot_roundtrip_run(&cfg, &reqs, m, &Executor::new(2), &Executor::new(4));
+        assert_eq!(want[0].samples, got[0].samples, "{kind:?}: final-boundary snapshot");
+        assert_eq!(want[0].nfe, got[0].nfe, "{kind:?}: NFE diverged");
+    }
+}
+
+#[test]
+fn edge_cancel_then_snapshot_then_resume() {
+    // Cancel the middle request halfway through (exercising every
+    // stepper's `retain_lanes`), snapshot the survivors, restore at a
+    // different width, resume: both survivors must equal their solo runs.
+    let wl = workloads::latent_analog();
+    for kind in SolverKind::all() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 10;
+        let reqs = [req(0, 3, 41, &cfg), req(1, 4, 42, &cfg), req(2, 2, 43, &cfg)];
+        let model = wl.model();
+        let solo_a = run_batch(&*model, &wl, &cfg, &reqs[0..1]);
+        let solo_c = run_batch(&*model, &wl, &cfg, &reqs[2..3]);
+
+        let exec = Executor::new(3);
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let mut run = BatchRun::new(model, &wl, &cfg, reqs.to_vec(), &exec);
+        let half = run.progress().1 / 2;
+        for _ in 0..half {
+            run.step(&exec);
+        }
+        run.cancel(1).expect("middle request in flight");
+        let line = jsonlite::to_string(&run.snapshot());
+        drop(run);
+
+        let v = jsonlite::parse(&line).unwrap();
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let exec2 = Executor::new(4);
+        let mut resumed = BatchRun::restore(&v, model, &exec2).unwrap();
+        assert_eq!(resumed.tickets(), vec![0, 2], "{kind:?}");
+        while !resumed.step(&exec2) {}
+        let got = resumed.finish();
+        assert_eq!(got.len(), 2, "{kind:?}");
+        assert_eq!(got[0].samples, solo_a[0].samples, "{kind:?}: survivor A after restore");
+        assert_eq!(got[1].samples, solo_c[0].samples, "{kind:?}: survivor C after restore");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixtures: a tiny checked-in checkpoint per solver. The fixtures
+// pin the schema — if a field is renamed, a buffer reordered, or the hex
+// encoding changed, restore (or the restore∘snapshot identity) breaks.
+// ---------------------------------------------------------------------------
+
+fn fixture_field<'a>(ck: &'a Value, key: &str) -> &'a Value {
+    ck.get(key).unwrap_or_else(|| panic!("fixture checkpoint missing '{key}'"))
+}
+
+#[test]
+fn golden_fixtures_restore_for_every_solver() {
+    let text = std::fs::read_to_string(GOLDEN_PATH)
+        .unwrap_or_else(|e| panic!("cannot read {GOLDEN_PATH}: {e}"));
+    let file = jsonlite::parse(&text).unwrap();
+    assert_eq!(
+        file.req_usize("schema_version").unwrap() as u64,
+        sadiff::solvers::snapshot::SNAPSHOT_SCHEMA_VERSION
+    );
+    let fixtures = file.get("fixtures").and_then(Value::as_array).expect("fixtures array");
+    let mut seen: Vec<String> = Vec::new();
+    for fx in fixtures {
+        let name = fx.req_str("name").unwrap().to_string();
+        let ck = fixture_field(fx, "checkpoint");
+        let wl = workloads::by_name(ck.req_str("workload").unwrap()).unwrap();
+
+        // Restore must succeed, at two executor widths, and both resumed
+        // runs must agree bitwise (the migration contract, driven from a
+        // checked-in artifact rather than a same-process snapshot).
+        let mut outs = Vec::new();
+        for threads in [1usize, 4] {
+            let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+            let exec = Executor::new(threads);
+            let mut run = BatchRun::restore(ck, model, &exec)
+                .unwrap_or_else(|e| panic!("fixture '{name}' failed to restore: {e}"));
+            while !run.step(&exec) {}
+            let responses = run.finish();
+            assert!(!responses.is_empty(), "{name}: no responses");
+            let samples = responses[0].samples.clone().expect("samples returned");
+            assert!(
+                samples.iter().all(|v| v.is_finite()),
+                "{name}: non-finite samples after restore"
+            );
+            outs.push(samples);
+        }
+        assert_eq!(outs[0], outs[1], "{name}: restored runs disagree across widths");
+
+        // restore ∘ snapshot is the identity on the serialized state: the
+        // re-taken snapshot must carry exactly the fixture's stepper state,
+        // evolved x, grid position and noise streams.
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let run = BatchRun::restore(ck, model, &Executor::sequential()).unwrap();
+        let resnap = run.snapshot();
+        assert_eq!(
+            StepperState::from_json(fixture_field(&resnap, "stepper")).unwrap(),
+            StepperState::from_json(fixture_field(ck, "stepper")).unwrap(),
+            "{name}: stepper state changed across restore∘snapshot"
+        );
+        for key in ["x", "next_step", "evals"] {
+            assert_eq!(
+                fixture_field(&resnap, key),
+                fixture_field(ck, key),
+                "{name}: '{key}' changed across restore∘snapshot"
+            );
+        }
+        for key in ["stream_keys", "stream_locals"] {
+            assert_eq!(
+                fixture_field(&resnap, key),
+                fixture_field(ck, key),
+                "{name}: '{key}' changed across restore∘snapshot"
+            );
+        }
+        // The embedded x payload decodes to the advertised shape.
+        let lanes = fixture_field(ck, "stream_keys").as_array().unwrap().len();
+        let dim = ck.req_usize("dim").unwrap();
+        assert_eq!(
+            hex_to_f64s(ck.req_str("x").unwrap()).unwrap().len(),
+            lanes * dim,
+            "{name}: x payload shape"
+        );
+        seen.push(name);
+    }
+    // Every solver in the zoo has a fixture.
+    for kind in SolverKind::all() {
+        assert!(
+            seen.iter().any(|s| s == kind.name()),
+            "no golden fixture for solver '{}'",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn golden_fixture_schema_gate_is_a_typed_error() {
+    let text = std::fs::read_to_string(GOLDEN_PATH).unwrap();
+    let file = jsonlite::parse(&text).unwrap();
+    let fixtures = file.get("fixtures").and_then(Value::as_array).unwrap();
+    let mut ck = fixture_field(&fixtures[0], "checkpoint").clone();
+    if let Value::Object(fields) = &mut ck {
+        for (k, v) in fields.iter_mut() {
+            if k == "schema_version" {
+                *v = Value::Num(999.0);
+            }
+        }
+    }
+    let wl = workloads::latent_analog();
+    let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+    let err = BatchRun::restore(&ck, model, &Executor::sequential()).unwrap_err();
+    assert!(err.to_string().contains("newer"), "want a typed schema error, got: {err}");
+}
+
+/// Regenerate the golden fixture file from REAL mid-run snapshots (one per
+/// solver, snapshotted at step 2 of an NFE=6 solve). Run manually after an
+/// intentional schema or solver change:
+/// `cargo test -q --test integration_snapshot -- --ignored regenerate`
+#[test]
+#[ignore]
+fn regenerate_golden_fixtures() {
+    let wl = workloads::latent_analog();
+    let exec = Executor::sequential();
+    let mut fixtures = Vec::new();
+    for (i, kind) in SolverKind::all().iter().enumerate() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 6;
+        let reqs = vec![req(31337 + i as u64, 2, 4242 + i as u64, &cfg)];
+        let model: Arc<dyn ModelEval> = Arc::from(wl.model());
+        let mut run = BatchRun::new(model, &wl, &cfg, reqs, &exec);
+        for _ in 0..2 {
+            run.step(&exec);
+        }
+        fixtures.push(Value::obj(vec![
+            ("name", Value::Str(kind.name().into())),
+            ("checkpoint", run.snapshot()),
+        ]));
+    }
+    let file = Value::obj(vec![
+        (
+            "schema_version",
+            Value::Num(sadiff::solvers::snapshot::SNAPSHOT_SCHEMA_VERSION as f64),
+        ),
+        ("fixtures", Value::Array(fixtures)),
+    ]);
+    std::fs::write(GOLDEN_PATH, format!("{}\n", jsonlite::to_string(&file))).unwrap();
+    println!("rewrote {GOLDEN_PATH}");
+}
+
+// ---------------------------------------------------------------------------
+// Kill-and-restart e2e: a server with an in-flight group is hard-killed
+// mid-solve; a second server on the same checkpoint path resumes it and the
+// recovered result is bit-identical to an uninterrupted run.
+// ---------------------------------------------------------------------------
+
+fn checkpointing_config(path: &str) -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        batch_deadline_ms: 3,
+        workers: 1,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 2,
+        presets_path: None,
+        checkpoint_path: Some(path.to_string()),
+        checkpoint_every: 20,
+    }
+}
+
+#[test]
+fn kill_and_restart_recovers_bit_identical_results() {
+    let dir = std::env::temp_dir().join(format!("sadiff_killtest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck_path = dir.join("serve.ck.json");
+    let ck_path = ck_path.to_str().unwrap().to_string();
+
+    // The uninterrupted reference, computed engine-side (the server's
+    // batch path is bit-identical to run_batch by the engine's contract).
+    let cfg = SamplerConfig { nfe: 2500, ..SamplerConfig::sa_default() };
+    let long_req = req(31337, 512, 31337, &cfg);
+    let wl = workloads::by_name(&long_req.workload).unwrap();
+    let model = wl.model();
+    let want = run_batch(&*model, &wl, &cfg, &[long_req.clone()]);
+
+    // --- Server A: admit the long solve, wait for a couple of checkpoint
+    // writes, then hard-kill it mid-flight (simulated crash).
+    let handle_a = Server::bind(checkpointing_config(&ck_path)).unwrap().spawn().unwrap();
+    let addr_a = handle_a.addr.to_string();
+    {
+        // The requesting connection never gets a reply (the server dies);
+        // detach it rather than joining.
+        let addr = addr_a.clone();
+        let r = long_req.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let _ = client.request(&r);
+        });
+    }
+    let mut killed_mid_flight = false;
+    for _ in 0..600 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let mut client = Client::connect(&addr_a).unwrap();
+        let stats = client.stats().unwrap();
+        if stats.req_f64("checkpoints_written").unwrap() >= 3.0
+            && stats.req_f64("inflight_lanes").unwrap() >= 512.0
+        {
+            killed_mid_flight = true;
+            break;
+        }
+    }
+    assert!(killed_mid_flight, "server never checkpointed the in-flight group");
+    handle_a.kill();
+    // Give A's worker thread a moment to observe the abort flag and stop
+    // touching the checkpoint file before B takes it over.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // The checkpoint file survived the crash and names our group.
+    let ck = ServerCheckpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.groups.len(), 1, "expected exactly the in-flight group");
+    assert!(
+        ck.groups[0].clients.iter().any(|(_, c)| *c == 31337),
+        "checkpoint lost the client id"
+    );
+
+    // --- Server B: same checkpoint path; it must resume the group and park
+    // the finished result in the recover store under the client id.
+    let handle_b = Server::bind(checkpointing_config(&ck_path)).unwrap().spawn().unwrap();
+    let addr_b = handle_b.addr.to_string();
+    let mut recovered: Option<sadiff::coordinator::SampleResponse> = None;
+    for _ in 0..1200 {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        let mut client = Client::connect(&addr_b).unwrap();
+        let v = client.recover(Some(31337)).unwrap();
+        if v.opt_bool("ok", false) {
+            recovered = Some(sadiff::coordinator::SampleResponse::from_json(&v).unwrap());
+            break;
+        }
+        let msg = v.opt_str("error", "");
+        assert!(
+            msg.contains("pending") || msg.contains("no recovered result"),
+            "unexpected recover reply: {}",
+            jsonlite::to_string(&v)
+        );
+    }
+    let recovered = recovered.expect("recovery never completed");
+    assert_eq!(recovered.id, 31337);
+    assert!(recovered.ok, "{:?}", recovered.error);
+    assert_eq!(
+        recovered.samples, want[0].samples,
+        "recovered samples are not bit-identical to the uninterrupted run"
+    );
+    assert_eq!(recovered.nfe, want[0].nfe, "recovered NFE accounting diverged");
+
+    // The recover listing names the id, and the metrics saw the recovery.
+    let mut client = Client::connect(&addr_b).unwrap();
+    let listing = client.recover(None).unwrap();
+    assert!(listing.opt_bool("ok", false));
+    let ready = listing.get("ready").and_then(Value::as_array).unwrap();
+    assert!(
+        ready.iter().any(|v| v.as_u64() == Some(31337)),
+        "recover listing missing the id"
+    );
+    let stats = client.stats().unwrap();
+    assert!(stats.req_f64("groups_recovered").unwrap() >= 1.0);
+    assert!(stats.req_f64("checkpoints_written").unwrap() >= 1.0);
+
+    // A graceful drain leaves an empty checkpoint behind — a further
+    // restart must not resurrect finished work. The worker threads drain
+    // asynchronously after shutdown() returns, so poll for the rewrite.
+    handle_b.shutdown();
+    let mut drained_empty = false;
+    for _ in 0..200 {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        if ServerCheckpoint::load(&ck_path).unwrap().groups.is_empty() {
+            drained_empty = true;
+            break;
+        }
+    }
+    assert!(drained_empty, "drained server left in-flight groups in the checkpoint");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn recover_on_a_fresh_server_is_clean() {
+    // No checkpoint involved: the recover verbs answer cleanly instead of
+    // erroring or hanging.
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+    let v = client.recover(None).unwrap();
+    assert!(v.opt_bool("ok", false));
+    assert_eq!(v.req_f64("pending").unwrap(), 0.0);
+    assert!(v.get("ready").and_then(Value::as_array).unwrap().is_empty());
+    let v = client.recover(Some(42)).unwrap();
+    assert!(!v.opt_bool("ok", true));
+    assert!(v.req_str("error").unwrap().contains("no recovered result"));
+    handle.shutdown();
+}
