@@ -16,8 +16,20 @@
 //!   * artifact execute round-trip (channel + PJRT) for the GMM denoiser
 //!     and the fused sa_update kernel vs the native Rust update.
 //!
+//! Steps/sec + allocations-per-step (counting allocator; this binary
+//! installs `testsupport::alloc::CountingAlloc` as the global allocator —
+//! note for trajectory readers: every section in this binary therefore
+//! pays one relaxed atomic per allocation from this PR on, a small
+//! constant bias vs older `BENCH_stepper.json` artifacts):
+//!   * monolithic reference loop vs the allocation-free stepper driver on
+//!     a model-free solve — the "before/after" of the scratch-arena hot
+//!     path, emitted as `BENCH_perf.json` (a CI artifact), including the
+//!     headline `stepper_allocs_per_step_after_init` (asserted 0 in
+//!     `integration_alloc`, reported here for the perf trajectory).
+//!
 //! Flags: `--quick` (smaller shapes), `--out <path>` for the stepper
-//! report (default `BENCH_stepper.json`).
+//! report (default `BENCH_stepper.json`), `--perf-out <path>` for the
+//! steps/sec + allocations report (default `BENCH_perf.json`).
 
 use sadiff::config::{Prediction, SamplerConfig};
 use sadiff::coordinator::batcher::Batcher;
@@ -31,11 +43,16 @@ use sadiff::rng::normal::PhiloxNormal;
 use sadiff::schedule::{timesteps, NoiseSchedule, StepSelector};
 use sadiff::solvers::coeffs::{coefficients, StepEnds};
 use sadiff::solvers::sa::{SaSolver, SaSolverOpts};
-use sadiff::solvers::Grid;
+use sadiff::solvers::stepper::{make_stepper, Stepper};
+use sadiff::solvers::{prior_sample, Grid};
 use sadiff::tau::TauFn;
+use sadiff::testsupport::alloc::{alloc_count, CountingAlloc};
 use sadiff::util::timing::time_it;
 use sadiff::workloads;
 use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 /// A free model: measures pure coordinator overhead.
 struct NullModel {
@@ -60,6 +77,13 @@ fn main() {
         .map(String::as_str)
         .unwrap_or("BENCH_stepper.json")
         .to_string();
+    let perf_out_path = args
+        .iter()
+        .position(|a| a == "--perf-out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("BENCH_perf.json")
+        .to_string();
 
     println!("== bench_perf: L3 coordinator hot paths ==\n");
     let sch = NoiseSchedule::vp_linear();
@@ -68,6 +92,7 @@ fn main() {
         l3_sections(&sch);
     }
     stepper_section(quick, &out_path);
+    perf_section(quick, &perf_out_path);
 
     // --- 5. Artifact round-trips (skipped without `make artifacts`).
     artifact_section();
@@ -247,6 +272,109 @@ fn stepper_section(quick: bool, out_path: &str) {
     println!("wrote {out_path}");
     if !identical {
         eprintln!("FAIL: stepper paths are not bit-identical to the monolithic reference");
+        std::process::exit(1);
+    }
+}
+
+/// Steps/sec + allocations-per-step: the seed-era monolithic loop (the
+/// pre-change baseline, retained verbatim as `run_reference`) against the
+/// allocation-free stepper driver, on a free model so solver overhead —
+/// coefficients, fused updates, RNG, allocator traffic — is the whole
+/// measurement. Both numbers land in `BENCH_perf.json` so the perf
+/// trajectory records before AND after in the same run.
+fn perf_section(quick: bool, out_path: &str) {
+    let sch = NoiseSchedule::vp_linear();
+    let (n, dim, nfe, iters) =
+        if quick { (64usize, 16usize, 16usize, 3usize) } else { (256, 32, 32, 6) };
+    let model = NullModel { dim };
+    let cfg = SamplerConfig {
+        nfe,
+        tau: 1.0,
+        predictor_steps: 3,
+        corrector_steps: 3,
+        ..SamplerConfig::sa_default()
+    };
+    let m = cfg.steps_for_nfe();
+
+    // Bit-identity gate: the stepper driver must reproduce the monolithic
+    // baseline exactly — a perf report comparing diverging computations
+    // would be meaningless.
+    let want = sadiff::solvers::run_reference(&model, &sch, &cfg, n, 11);
+    let got = sadiff::solvers::run(&model, &sch, &cfg, n, 11);
+    let identical = want.samples == got.samples && want.nfe == got.nfe;
+
+    let (_, ref_min) = time_it(iters, || {
+        std::hint::black_box(sadiff::solvers::run_reference(&model, &sch, &cfg, n, 11));
+    });
+    let (_, drv_min) = time_it(iters, || {
+        std::hint::black_box(sadiff::solvers::run(&model, &sch, &cfg, n, 11));
+    });
+    let ref_steps_per_sec = m as f64 / ref_min;
+    let drv_steps_per_sec = m as f64 / drv_min;
+
+    // Whole-solve allocation counts (grid + prior + init + steps)...
+    let ref_allocs = {
+        let before = alloc_count();
+        std::hint::black_box(sadiff::solvers::run_reference(&model, &sch, &cfg, n, 11));
+        alloc_count() - before
+    };
+    let drv_allocs = {
+        let before = alloc_count();
+        std::hint::black_box(sadiff::solvers::run(&model, &sch, &cfg, n, 11));
+        alloc_count() - before
+    };
+    // ...and the headline: allocations across the step loop alone, after
+    // init (the integration_alloc test asserts this is exactly 0 for all
+    // nine solvers; the bench records it in the trajectory).
+    let step_allocs = {
+        let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+        let mut noise = PhiloxNormal::new(11);
+        let mut x = prior_sample(&grid, dim, n, &mut noise);
+        let mut st = make_stepper(&cfg, &sch);
+        st.init(&model, &grid, &mut x, n, &mut noise);
+        let before = alloc_count();
+        for i in 0..m {
+            st.step(&model, &grid, i, &mut x, n, &mut noise);
+        }
+        st.finish(&mut x);
+        alloc_count() - before
+    };
+
+    println!(
+        "\nperf (n={n}, dim={dim}, NFE={nfe}): reference {:.0} steps/s, {:.1} allocs/step; \
+         stepper {:.0} steps/s, {:.1} allocs/step ({} across the step loop after init); \
+         speedup ×{:.2} (identical: {identical})",
+        ref_steps_per_sec,
+        ref_allocs as f64 / m as f64,
+        drv_steps_per_sec,
+        drv_allocs as f64 / m as f64,
+        step_allocs,
+        ref_min / drv_min
+    );
+
+    let report = Value::obj(vec![
+        ("bench", Value::Str("perf".into())),
+        ("lanes", Value::Num(n as f64)),
+        ("dim", Value::Num(dim as f64)),
+        ("nfe", Value::Num(nfe as f64)),
+        ("steps", Value::Num(m as f64)),
+        ("reference_min_ms", Value::Num(ref_min * 1e3)),
+        ("reference_steps_per_sec", Value::Num(ref_steps_per_sec)),
+        ("reference_allocs_per_step", Value::Num(ref_allocs as f64 / m as f64)),
+        ("stepper_min_ms", Value::Num(drv_min * 1e3)),
+        ("stepper_steps_per_sec", Value::Num(drv_steps_per_sec)),
+        ("stepper_allocs_per_step", Value::Num(drv_allocs as f64 / m as f64)),
+        ("stepper_allocs_per_step_after_init", Value::Num(step_allocs as f64 / m as f64)),
+        ("speedup", Value::Num(ref_min / drv_min)),
+        ("identical", Value::Bool(identical)),
+    ]);
+    if let Err(e) = std::fs::write(out_path, format!("{}\n", to_string(&report))) {
+        eprintln!("cannot write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out_path}");
+    if !identical {
+        eprintln!("FAIL: stepper driver is not bit-identical to the monolithic reference");
         std::process::exit(1);
     }
 }

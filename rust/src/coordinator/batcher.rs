@@ -14,13 +14,16 @@ use std::time::Instant;
 /// Batch compatibility key.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
+    /// Workload name.
     pub workload: String,
+    /// Model selector.
     pub model: String,
     /// Canonical JSON of the solver config (cheap structural hash).
     pub cfg_json: String,
 }
 
 impl BatchKey {
+    /// The compatibility key of one request.
     pub fn of(req: &SampleRequest) -> BatchKey {
         BatchKey {
             workload: req.workload.clone(),
@@ -35,7 +38,9 @@ impl BatchKey {
 /// not per comparison during group extraction; see bench_perf).
 #[derive(Debug)]
 pub struct Pending {
+    /// The queued request.
     pub request: SampleRequest,
+    /// When it was enqueued (drives the batching deadline).
     pub arrived: Instant,
     key: BatchKey,
 }
@@ -49,18 +54,22 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty queue.
     pub fn new() -> Batcher {
         Batcher::default()
     }
 
+    /// Number of queued requests.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// Total samples across queued requests (for shedding decisions).
     pub fn queued_samples(&self) -> usize {
         self.queued_samples
     }

@@ -36,6 +36,7 @@ pub struct GroupCheckpoint {
 }
 
 impl GroupCheckpoint {
+    /// Serialize to the wire form (hex-encoded u64 id lists).
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             (
@@ -54,6 +55,7 @@ impl GroupCheckpoint {
         ])
     }
 
+    /// Parse the wire form; ticket/client lists must align.
     pub fn from_json(v: &Value) -> Result<GroupCheckpoint> {
         let tickets = hex_u64_array(v, "tickets")?;
         let clients = hex_u64_array(v, "clients")?;
@@ -75,10 +77,12 @@ impl GroupCheckpoint {
 /// A whole serving checkpoint: every worker's in-flight groups.
 #[derive(Debug, Clone, Default)]
 pub struct ServerCheckpoint {
+    /// Every worker's in-flight groups, in no particular order.
     pub groups: Vec<GroupCheckpoint>,
 }
 
 impl ServerCheckpoint {
+    /// Serialize to the versioned wire form.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             (
@@ -96,6 +100,8 @@ impl ServerCheckpoint {
         ])
     }
 
+    /// Parse the wire form; newer schema versions are rejected with a
+    /// typed error.
     pub fn from_json(v: &Value) -> Result<ServerCheckpoint> {
         check_schema_version(v, "server checkpoint")?;
         let groups = v
@@ -118,6 +124,7 @@ impl ServerCheckpoint {
             .map_err(|e| Error::runtime(format!("cannot rename {tmp} -> {path}: {e}")))
     }
 
+    /// Load and parse a checkpoint file.
     pub fn load(path: &str) -> Result<ServerCheckpoint> {
         Self::from_json(&crate::config::load_json_file(path)?)
     }

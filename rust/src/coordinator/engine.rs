@@ -153,9 +153,13 @@ pub fn sample_with(
 /// One row of an experiment table: solver quality at a configuration.
 #[derive(Debug, Clone)]
 pub struct EvalRow {
+    /// Distribution metric vs the workload reference (lower is better).
     pub sim_fid: f64,
+    /// Sliced-Wasserstein-2 vs the workload reference.
     pub sliced_w2: f64,
+    /// Model evaluations spent.
     pub nfe: usize,
+    /// Wall-clock seconds of the solve.
     pub wall_s: f64,
 }
 
@@ -499,7 +503,7 @@ impl BatchRun {
             let lanes: Vec<usize> = range.clone().collect();
             let noise = parent_noise.select(&lanes);
             let mut st = stepper::make_stepper(&cfg, &wl.schedule);
-            st.restore(part, dim)?;
+            st.restore(part, &grid, dim)?;
             shards.push(Shard {
                 lanes,
                 x: x[range.start * dim..range.end * dim].to_vec(),
@@ -546,6 +550,7 @@ impl BatchRun {
         (self.next_step, self.grid.m())
     }
 
+    /// True once every step ran (or every request was cancelled).
     pub fn is_done(&self) -> bool {
         self.next_step >= self.grid.m() || self.requests.is_empty()
     }
@@ -570,19 +575,15 @@ impl BatchRun {
         let (req, range) = self.requests.remove(pos);
         let dim = self.dim;
         for shard in &mut self.shards {
-            let keep: Vec<bool> = shard.lanes.iter().map(|l| !range.contains(l)).collect();
-            if keep.iter().all(|k| *k) {
+            if !shard.lanes.iter().any(|l| range.contains(l)) {
                 continue;
             }
+            let keep: Vec<bool> = shard.lanes.iter().map(|l| !range.contains(l)).collect();
             shard.stepper.retain_lanes(&keep, dim);
             stepper::retain_rows(&mut shard.x, &keep, dim);
-            shard.lanes = shard
-                .lanes
-                .iter()
-                .zip(&keep)
-                .filter(|(_, k)| **k)
-                .map(|(l, _)| *l)
-                .collect();
+            // Compact the lane list in place (matching the row compaction
+            // the steppers do) instead of rebuilding it.
+            shard.lanes.retain(|l| !range.contains(l));
             shard.noise = self.parent_noise.select(&shard.lanes);
         }
         // A shard whose lanes were all cancelled has nothing left to

@@ -11,12 +11,19 @@ const BUCKET_BOUNDS_MS: [f64; 12] =
 /// Process-lifetime serving metrics.
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
+    /// Counter: sampling requests accepted at ingress.
     pub requests: AtomicU64,
+    /// Counter: successful responses routed back.
     pub responses_ok: AtomicU64,
+    /// Counter: error responses routed back.
     pub responses_err: AtomicU64,
+    /// Counter: requests shed because the queue was full.
     pub shed: AtomicU64,
+    /// Counter: sample lanes produced.
     pub samples: AtomicU64,
+    /// Counter: model evaluations spent (batched calls).
     pub model_evals: AtomicU64,
+    /// Counter: merged batches executed.
     pub batches: AtomicU64,
     /// Σ batch sizes, for mean occupancy.
     pub batched_requests: AtomicU64,
@@ -47,10 +54,12 @@ pub struct ServingMetrics {
 }
 
 impl ServingMetrics {
+    /// All-zero metrics.
     pub fn new() -> ServingMetrics {
         ServingMetrics::default()
     }
 
+    /// Record one end-to-end request latency in the histogram.
     pub fn observe_latency_ms(&self, ms: f64) {
         let mut idx = BUCKET_BOUNDS_MS.len();
         for (i, ub) in BUCKET_BOUNDS_MS.iter().enumerate() {
@@ -104,6 +113,7 @@ impl ServingMetrics {
         self.groups_recovered.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a finished batch: its request count, total lanes and NFE.
     pub fn observe_batch(&self, group_size: usize, total_samples: usize, nfe: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests

@@ -7,16 +7,19 @@ use crate::util::error::{Error, Result};
 /// A sampling request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SampleRequest {
+    /// Client-visible id (rides the internal routing ticket while queued).
     pub id: u64,
     /// Workload name (`workloads::by_name`) — fixes schedule + reference
     /// distribution.
     pub workload: String,
-    /// Model selector: "gmm" (exact analytic model) or "artifact:<name>"
+    /// Model selector: "gmm" (exact analytic model) or `artifact:<name>`
     /// (PJRT artifact from the registry).
     pub model: String,
+    /// Solver configuration (grid, orders, τ, …).
     pub cfg: SamplerConfig,
     /// Samples requested.
     pub n: usize,
+    /// Philox seed keying this request's noise streams.
     pub seed: u64,
     /// Include raw samples in the response (large!).
     pub return_samples: bool,
@@ -30,6 +33,7 @@ pub struct SampleRequest {
 }
 
 impl SampleRequest {
+    /// Parse a protocol request object; missing fields take defaults.
     pub fn from_json(v: &Value) -> Result<SampleRequest> {
         let cfg = match v.get("solver") {
             Some(sv) => SamplerConfig::from_json(sv)?,
@@ -52,6 +56,7 @@ impl SampleRequest {
         })
     }
 
+    /// Serialize to the protocol wire object.
     pub fn to_json(&self) -> Value {
         let mut fields = vec![
             ("id", Value::Num(self.id as f64)),
@@ -69,6 +74,7 @@ impl SampleRequest {
         Value::obj(fields)
     }
 
+    /// One protocol line (JSON, no trailing newline).
     pub fn to_line(&self) -> String {
         to_string(&self.to_json())
     }
@@ -85,19 +91,30 @@ pub fn cancel_line(id: u64) -> String {
 /// A sampling response.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SampleResponse {
+    /// Echo of the request id (ticket internally, client id on the wire).
     pub id: u64,
+    /// Whether the solve completed.
     pub ok: bool,
+    /// Error message when `ok` is false.
     pub error: Option<String>,
+    /// Lanes produced.
     pub n: usize,
+    /// Data dimension per lane.
     pub dim: usize,
+    /// Model evaluations spent on the solve.
     pub nfe: usize,
+    /// Wall-clock milliseconds of the (possibly batched) solve.
     pub wall_ms: f64,
+    /// Distribution metric vs the workload reference, when requested.
     pub sim_fid: Option<f64>,
+    /// Sliced-Wasserstein-2 vs the workload reference, when requested.
     pub sliced_w2: Option<f64>,
+    /// Raw samples (row-major `n × dim`), when requested.
     pub samples: Option<Vec<f64>>,
 }
 
 impl SampleResponse {
+    /// An error response carrying only `id` and the message.
     pub fn err(id: u64, msg: impl Into<String>) -> SampleResponse {
         SampleResponse {
             id,
@@ -113,6 +130,7 @@ impl SampleResponse {
         }
     }
 
+    /// Serialize to the protocol wire object (optional fields omitted).
     pub fn to_json(&self) -> Value {
         let mut fields = vec![
             ("id", Value::Num(self.id as f64)),
@@ -137,6 +155,7 @@ impl SampleResponse {
         Value::obj(fields)
     }
 
+    /// Parse a protocol response object.
     pub fn from_json(v: &Value) -> Result<SampleResponse> {
         Ok(SampleResponse {
             id: v.opt_usize("id", 0) as u64,
@@ -154,6 +173,7 @@ impl SampleResponse {
         })
     }
 
+    /// One protocol line (JSON, no trailing newline).
     pub fn to_line(&self) -> String {
         to_string(&self.to_json())
     }

@@ -145,6 +145,7 @@ pub struct Server {
 
 /// Handle returned by `spawn`: address + shutdown control.
 pub struct ServerHandle {
+    /// The bound listen address (useful with port 0 binds).
     pub addr: std::net::SocketAddr,
     shared: Arc<Shared>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -186,6 +187,7 @@ impl ServerHandle {
         let _ = t.join();
     }
 
+    /// The current serving-metrics snapshot (what `stats` returns).
     pub fn metrics_snapshot(&self) -> Value {
         self.shared.metrics.snapshot()
     }
@@ -833,6 +835,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving address (`host:port`).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| Error::runtime(format!("connect {addr}: {e}")))?;
@@ -852,11 +855,13 @@ impl Client {
         Ok(buf.trim_end().to_string())
     }
 
+    /// Submit a sampling request and wait for its response.
     pub fn request(&mut self, req: &SampleRequest) -> Result<SampleResponse> {
         let line = self.round_trip(&req.to_line())?;
         SampleResponse::from_json(&parse(&line)?)
     }
 
+    /// Fetch the `stats` metrics snapshot.
     pub fn stats(&mut self) -> Result<Value> {
         let line = self.round_trip(r#"{"cmd":"stats"}"#)?;
         parse(&line)

@@ -5,8 +5,11 @@ use crate::util::error::{Error, Result};
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major entries, `rows × cols`.
     pub data: Vec<f64>,
 }
 

@@ -1,13 +1,29 @@
-//! Dense linear algebra substrate: small symmetric problems only (metric
-//! computation needs Fréchet distances over d ≤ ~128 covariance matrices).
+//! Dense linear algebra substrate, in two tiers:
 //!
-//! Row-major `Mat` with Cholesky, a cyclic Jacobi symmetric eigensolver and
-//! the PSD matrix square root built from it. No external BLAS — sizes are
-//! tiny and exactness of tests matters more than throughput here.
+//! * **Small symmetric problems** — row-major [`Mat`] with Cholesky, a
+//!   cyclic Jacobi symmetric eigensolver and the PSD matrix square root
+//!   (metric computation needs Fréchet distances over d ≤ ~128 covariance
+//!   matrices). No external BLAS — sizes are tiny and exactness of tests
+//!   matters more than throughput here.
+//! * **In-place fused kernels for the solver hot path** — [`axpy_into`],
+//!   [`sub_into`], [`scale_add`], [`fma_noise`], and the history-buffer
+//!   combination kernels [`lincomb_into`] / [`lincomb_inplace`] that the
+//!   stochastic Adams steppers are built on, plus the [`Scratch`] arena
+//!   that lets a stepper run with **zero heap allocations per step** after
+//!   its `init` (asserted by a counting-allocator test).
+//!
+//! All hot-path kernels operate on caller-provided slices and never
+//! allocate. Aliasing preconditions are the ones Rust's borrow rules
+//! enforce: output slices are exclusive borrows, so they cannot overlap
+//! any input. The only extra precondition is on the history kernels:
+//! every `offsets[j] + out.len()` must be in bounds for `hist` (the
+//! kernels index `hist[offsets[j] + k]` for `k < out.len()`).
 
 pub mod mat;
+pub mod scratch;
 
 pub use mat::Mat;
+pub use scratch::Scratch;
 
 /// Dot product.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
@@ -25,17 +41,253 @@ pub fn norm2(a: &[f64]) -> f64 {
     norm2_sq(a).sqrt()
 }
 
-/// `y += alpha * x`.
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+/// `y[k] += alpha · x[k]`, in place on a caller-provided output slice.
+pub fn axpy_into(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
 }
 
-/// Elementwise `out = a - b`.
+/// `y += alpha · x` — alias retained for existing callers; the canonical
+/// name is [`axpy_into`].
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_into(alpha, x, y);
+}
+
+/// Elementwise `out[k] = a[k] − b[k]`, in place on a caller-provided
+/// output slice.
+///
+/// ```
+/// let mut out = [0.0; 3];
+/// sadiff::linalg::sub_into(&[4.0, 5.0, 6.0], &[1.0, 2.0, 3.0], &mut out);
+/// assert_eq!(out, [3.0, 3.0, 3.0]);
+/// ```
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// Elementwise `a − b` into a fresh `Vec`.
+///
+/// Thin wrapper over [`sub_into`] kept for tests and one-off call sites;
+/// anything on a per-step path must use [`sub_into`] with a reused buffer
+/// instead (this function allocates on every call).
 pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
-    a.iter().zip(b).map(|(x, y)| x - y).collect()
+    let mut out = vec![0.0; a.len()];
+    sub_into(a, b, &mut out);
+    out
+}
+
+/// Fused scale-and-accumulate: `y[k] = a · y[k] + b · x[k]` in a single
+/// pass (one read and one write of `y`, one read of `x`).
+pub fn scale_add(y: &mut [f64], a: f64, b: f64, x: &[f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * *yi + b * xi;
+    }
+}
+
+/// Stochastic-term update: `x[k] += sigma · xi[k]` — the `σ̃ ξ` injection
+/// of an SDE step applied to an already-computed deterministic part.
+///
+/// The in-tree steppers fuse their noise term into a single-pass update
+/// ([`lincomb_into`]'s `noise` parameter, or a bespoke fused loop) rather
+/// than paying a second sweep; this kernel is for compositions that
+/// already have the deterministic part in place.
+pub fn fma_noise(x: &mut [f64], sigma: f64, xi: &[f64]) {
+    debug_assert_eq!(x.len(), xi.len());
+    for (v, z) in x.iter_mut().zip(xi) {
+        *v += sigma * z;
+    }
+}
+
+/// The fused stochastic-Adams combination kernel:
+///
+/// `out[k] = c0 · x[k]  [+ sigma · xi[k]]  + Σ_j b[j] · hist[offsets[j] + k]`
+///
+/// in a **single pass** over the state — one read of each operand, one
+/// write of `out`. This is the per-step update of SA-Solver's predictor
+/// and corrector (Eqs. (14)/(17)) with the history buffers living in one
+/// contiguous arena (`hist`) addressed by element offsets, so applying an
+/// s-step combination costs no allocation and no gather indirection
+/// beyond `s` base offsets. The multi-pass alternative costs `2 + s`
+/// extra state-sized memory sweeps (bench_perf, §Perf).
+///
+/// The per-element evaluation order is fixed — `c0·x`, then the noise
+/// term, then the history terms in `offsets` order — because downstream
+/// bit-identity contracts (stepper ≡ reference, snapshot golden fixtures)
+/// pin the exact floating-point result.
+///
+/// Preconditions: `b.len() == offsets.len()`, `x.len() == out.len()`
+/// (likewise `xi` when present), and `offsets[j] + out.len() ≤
+/// hist.len()` for every `j`.
+///
+/// ```
+/// // out = 0.5·x + 2·h0 + 3·h1 over a 2-slot history arena.
+/// let hist = [1.0, 1.0, 10.0, 10.0]; // two slots of length 2
+/// let x = [4.0, 8.0];
+/// let mut out = [0.0; 2];
+/// sadiff::linalg::lincomb_into(0.5, &x, None, &[2.0, 3.0], &hist, &[0, 2], &mut out);
+/// assert_eq!(out, [34.0, 36.0]);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn lincomb_into(
+    c0: f64,
+    x: &[f64],
+    noise: Option<(f64, &[f64])>,
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(b.len(), offsets.len());
+    debug_assert_eq!(x.len(), out.len());
+    match noise {
+        Some((sigma, xi)) => {
+            debug_assert_eq!(xi.len(), out.len());
+            match b.len() {
+                1 => noise_pass::<1>(c0, x, sigma, xi, b, hist, offsets, out),
+                2 => noise_pass::<2>(c0, x, sigma, xi, b, hist, offsets, out),
+                3 => noise_pass::<3>(c0, x, sigma, xi, b, hist, offsets, out),
+                4 => noise_pass::<4>(c0, x, sigma, xi, b, hist, offsets, out),
+                _ => noise_pass_dyn(c0, x, sigma, xi, b, hist, offsets, out),
+            }
+        }
+        None => match b.len() {
+            1 => ode_pass::<1>(c0, x, b, hist, offsets, out),
+            2 => ode_pass::<2>(c0, x, b, hist, offsets, out),
+            3 => ode_pass::<3>(c0, x, b, hist, offsets, out),
+            4 => ode_pass::<4>(c0, x, b, hist, offsets, out),
+            _ => ode_pass_dyn(c0, x, b, hist, offsets, out),
+        },
+    }
+}
+
+/// In-place variant of [`lincomb_into`] without a noise term:
+/// `x[k] = c0 · x[k] + Σ_j b[j] · hist[offsets[j] + k]`. Used by corrector
+/// updates that overwrite the carried state directly (`x` is read exactly
+/// once per element before it is written).
+pub fn lincomb_inplace(c0: f64, x: &mut [f64], b: &[f64], hist: &[f64], offsets: &[usize]) {
+    debug_assert_eq!(b.len(), offsets.len());
+    match b.len() {
+        1 => inplace_pass::<1>(c0, x, b, hist, offsets),
+        2 => inplace_pass::<2>(c0, x, b, hist, offsets),
+        3 => inplace_pass::<3>(c0, x, b, hist, offsets),
+        4 => inplace_pass::<4>(c0, x, b, hist, offsets),
+        _ => inplace_pass_dyn(c0, x, b, hist, offsets),
+    }
+}
+
+/// Monomorphized fused pass with the noise term, for the common small
+/// orders (lets the compiler unroll the history loop).
+#[allow(clippy::too_many_arguments)]
+fn noise_pass<const S: usize>(
+    c0: f64,
+    x: &[f64],
+    sigma: f64,
+    xi: &[f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    let mut bb = [0.0f64; S];
+    bb.copy_from_slice(&b[..S]);
+    let mut off = [0usize; S];
+    off.copy_from_slice(&offsets[..S]);
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k] + sigma * xi[k];
+        for j in 0..S {
+            acc += bb[j] * hist[off[j] + k];
+        }
+        out[k] = acc;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn noise_pass_dyn(
+    c0: f64,
+    x: &[f64],
+    sigma: f64,
+    xi: &[f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k] + sigma * xi[k];
+        for (bj, oj) in b.iter().zip(offsets) {
+            acc += bj * hist[oj + k];
+        }
+        out[k] = acc;
+    }
+}
+
+/// Monomorphized fused pass without a noise term.
+fn ode_pass<const S: usize>(
+    c0: f64,
+    x: &[f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    let mut bb = [0.0f64; S];
+    bb.copy_from_slice(&b[..S]);
+    let mut off = [0usize; S];
+    off.copy_from_slice(&offsets[..S]);
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k];
+        for j in 0..S {
+            acc += bb[j] * hist[off[j] + k];
+        }
+        out[k] = acc;
+    }
+}
+
+fn ode_pass_dyn(c0: f64, x: &[f64], b: &[f64], hist: &[f64], offsets: &[usize], out: &mut [f64]) {
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k];
+        for (bj, oj) in b.iter().zip(offsets) {
+            acc += bj * hist[oj + k];
+        }
+        out[k] = acc;
+    }
+}
+
+fn inplace_pass<const S: usize>(
+    c0: f64,
+    x: &mut [f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+) {
+    let mut bb = [0.0f64; S];
+    bb.copy_from_slice(&b[..S]);
+    let mut off = [0usize; S];
+    off.copy_from_slice(&offsets[..S]);
+    for k in 0..x.len() {
+        let mut acc = c0 * x[k];
+        for j in 0..S {
+            acc += bb[j] * hist[off[j] + k];
+        }
+        x[k] = acc;
+    }
+}
+
+fn inplace_pass_dyn(c0: f64, x: &mut [f64], b: &[f64], hist: &[f64], offsets: &[usize]) {
+    for k in 0..x.len() {
+        let mut acc = c0 * x[k];
+        for (bj, oj) in b.iter().zip(offsets) {
+            acc += bj * hist[oj + k];
+        }
+        x[k] = acc;
+    }
 }
 
 #[cfg(test)]
@@ -53,5 +305,69 @@ mod tests {
         axpy(2.0, &a, &mut y);
         assert_eq!(y, vec![6.0, 9.0, 12.0]);
         assert_eq!(sub(&b, &a), vec![3.0, 3.0, 3.0]);
+        let mut out = [0.0; 3];
+        sub_into(&b, &a, &mut out);
+        assert_eq!(out, [3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn scale_add_and_fma_noise() {
+        let mut y = [1.0, 2.0];
+        scale_add(&mut y, 2.0, 3.0, &[10.0, 20.0]);
+        assert_eq!(y, [32.0, 64.0]);
+        let mut x = [1.0, 1.0];
+        fma_noise(&mut x, 0.5, &[2.0, 4.0]);
+        assert_eq!(x, [2.0, 3.0]);
+    }
+
+    #[test]
+    fn lincomb_matches_reference_loops() {
+        // A 3-entry history arena with an awkward slot order; compare the
+        // fused kernels against a straightforward multi-pass evaluation,
+        // bitwise, with and without the noise term, across the
+        // monomorphized and dynamic dispatch arms.
+        let n = 7usize;
+        let hist: Vec<f64> = (0..5 * n).map(|k| (k as f64 * 0.37).sin()).collect();
+        let x: Vec<f64> = (0..n).map(|k| (k as f64 * 0.11).cos()).collect();
+        let xi: Vec<f64> = (0..n).map(|k| (k as f64 * 0.71).sin()).collect();
+        for s in [1usize, 2, 3, 4, 5] {
+            let offsets: Vec<usize> = (0..s).map(|j| ((j * 2 + 1) % 5) * n).collect();
+            let b: Vec<f64> = (0..s).map(|j| 0.3 + j as f64).collect();
+            let mut want = vec![0.0; n];
+            for k in 0..n {
+                let mut acc = 0.9 * x[k] + 0.2 * xi[k];
+                for j in 0..s {
+                    acc += b[j] * hist[offsets[j] + k];
+                }
+                want[k] = acc;
+            }
+            let mut got = vec![0.0; n];
+            lincomb_into(0.9, &x, Some((0.2, &xi)), &b, &hist, &offsets, &mut got);
+            assert_eq!(got, want, "s={s} with noise");
+
+            let mut want_ode = vec![0.0; n];
+            for k in 0..n {
+                let mut acc = 0.9 * x[k];
+                for j in 0..s {
+                    acc += b[j] * hist[offsets[j] + k];
+                }
+                want_ode[k] = acc;
+            }
+            let mut got_ode = vec![0.0; n];
+            lincomb_into(0.9, &x, None, &b, &hist, &offsets, &mut got_ode);
+            assert_eq!(got_ode, want_ode, "s={s} ode");
+
+            let mut got_inplace = x.clone();
+            lincomb_inplace(0.9, &mut got_inplace, &b, &hist, &offsets);
+            assert_eq!(got_inplace, want_ode, "s={s} inplace");
+        }
+    }
+
+    #[test]
+    fn lincomb_empty_history_is_scale_only() {
+        let x = [2.0, -4.0];
+        let mut out = [0.0; 2];
+        lincomb_into(0.5, &x, None, &[], &[], &[], &mut out);
+        assert_eq!(out, [1.0, -2.0]);
     }
 }

@@ -1,0 +1,138 @@
+//! The per-stepper scratch arena: one contiguous allocation, handed out
+//! as disjoint equally-sized slots, so a solver step can use any number
+//! of temporary state-sized buffers without a single heap allocation.
+//!
+//! Every stepper in the zoo sizes its arena once at `Stepper::init` (the
+//! allocation-free-after-init contract is asserted by a counting-allocator
+//! test); the arena is *not* serialized by snapshot/restore — scratch
+//! contents are fully rewritten every step, so a restored stepper simply
+//! re-sizes a fresh arena on its first step.
+
+/// A slot-based scratch arena over one contiguous `Vec<f64>`.
+///
+/// Slots all have the same capacity (`chunk` elements); [`Scratch::split`]
+/// borrows `K` disjoint slots at the caller's current active length,
+/// which may shrink over the arena's lifetime (lane cancellation drops
+/// rows, and scratch contents carry no cross-step state, so no compaction
+/// is needed — callers just ask for shorter slices).
+///
+/// ```
+/// use sadiff::linalg::Scratch;
+/// let mut scr = Scratch::new(2, 4);
+/// let [a, b] = scr.split(3);
+/// a.fill(1.0);
+/// b.fill(2.0);
+/// assert_eq!(a.len(), 3);
+/// assert_eq!(b.len(), 3);
+/// ```
+#[derive(Debug, Default)]
+pub struct Scratch {
+    buf: Vec<f64>,
+    chunk: usize,
+    /// Largest slot count this arena has been asked for; the arena never
+    /// shrinks below `slots × chunk`, so a `split` with a smaller `K`
+    /// cannot truncate slots another call site still uses.
+    slots: usize,
+}
+
+impl Scratch {
+    /// An arena of `slots` buffers of `chunk` elements each, zeroed.
+    pub fn new(slots: usize, chunk: usize) -> Scratch {
+        Scratch { buf: vec![0.0; slots * chunk], chunk, slots }
+    }
+
+    /// Capacity of each slot, in elements.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Borrow `K` disjoint slots of `len` active elements each.
+    ///
+    /// Grows the arena if it is too small for `K` slots of `len` — the
+    /// steady state never grows (steppers size the arena at `init` and
+    /// lane counts only shrink afterwards); the growth path exists so a
+    /// stepper rebuilt by `restore`, which skips `init`, self-sizes on
+    /// its first step. Growth never truncates the arena, but growing the
+    /// slot capacity relocates slot bases, so contents are only
+    /// meaningful between same-shape splits — which is all scratch
+    /// semantics promise.
+    pub fn split<const K: usize>(&mut self, len: usize) -> [&mut [f64]; K] {
+        self.slots = self.slots.max(K);
+        if self.chunk < len {
+            self.chunk = len;
+        }
+        let need = self.slots * self.chunk;
+        if self.buf.len() < need {
+            self.buf.resize(need, 0.0);
+        }
+        let chunk = self.chunk;
+        let mut out: [&mut [f64]; K] = std::array::from_fn(|_| Default::default());
+        let mut rest: &mut [f64] = &mut self.buf;
+        for slot in out.iter_mut() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(chunk);
+            let (active, _) = head.split_at_mut(len);
+            *slot = active;
+            rest = tail;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_disjoint_and_persistent() {
+        let mut scr = Scratch::new(3, 4);
+        {
+            let [a, b, c] = scr.split(4);
+            a.fill(1.0);
+            b.fill(2.0);
+            c.fill(3.0);
+        }
+        // Contents persist between splits (same backing arena).
+        let [a, b, c] = scr.split(4);
+        assert_eq!(a, &[1.0; 4]);
+        assert_eq!(b, &[2.0; 4]);
+        assert_eq!(c, &[3.0; 4]);
+    }
+
+    #[test]
+    fn shorter_active_length_reuses_the_same_slots() {
+        let mut scr = Scratch::new(2, 6);
+        {
+            let [a, _] = scr.split(6);
+            a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        }
+        let [a, b] = scr.split(2);
+        assert_eq!(a, &[1.0, 2.0], "slot base must not move when len shrinks");
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn grows_when_undersized() {
+        let mut scr = Scratch::default();
+        let [a, b] = scr.split(5);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(scr.chunk(), 5);
+    }
+
+    #[test]
+    fn smaller_split_never_truncates_other_slots() {
+        // A K smaller than the constructed slot count, even with a larger
+        // len, must not shrink the arena under the wider call site.
+        let mut scr = Scratch::new(3, 4);
+        {
+            let [_, _, c] = scr.split(4);
+            c.copy_from_slice(&[7.0, 8.0, 9.0, 10.0]);
+        }
+        {
+            let [a, _] = scr.split(5); // grows chunk, keeps all 3 slots
+            assert_eq!(a.len(), 5);
+        }
+        let [_, _, c] = scr.split(5);
+        assert_eq!(c.len(), 5, "third slot must survive the narrower split");
+    }
+}

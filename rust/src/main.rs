@@ -10,7 +10,7 @@
 //!   checkpoint   inspect a serving checkpoint file
 //!   tune         search solver configs per (workload, NFE budget) and
 //!                write a preset registry
-//!   exp <id>     regenerate a paper table/figure (see `exp list`)
+//!   `exp <id>`   regenerate a paper table/figure (see `exp list`)
 //!   artifacts    list compiled artifacts from the manifest
 //!   info         print build/workload/solver inventory
 

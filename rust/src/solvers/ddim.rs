@@ -9,9 +9,10 @@
 //! SA-Predictor at τ_η² = −ln(1 − η²(1 − e^{−2h}))/(2h) (Corollary 5.3) —
 //! covered by `integration_equivalence`.
 
+use crate::linalg::Scratch;
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
-use crate::solvers::stepper::{ensure_len, Stepper};
+use crate::solvers::stepper::Stepper;
 use crate::solvers::{step_noise, Grid};
 
 /// Monolithic seed-era loop, retained as the reference implementation for
@@ -45,20 +46,32 @@ pub fn solve(
 }
 
 /// DDIM-η as an incremental [`Stepper`]: memoryless scheme, the only state
-/// is the scratch for x₀̂ and ξ.
+/// is a two-slot [`Scratch`] arena for x₀̂ and ξ, sized at `init` so the
+/// step path never allocates.
 pub struct DdimStepper {
     eta: f64,
-    x0: Vec<f64>,
-    xi: Vec<f64>,
+    scr: Scratch,
 }
 
 impl DdimStepper {
+    /// A stepper with stochasticity `eta` (0 = deterministic DDIM).
     pub fn new(eta: f64) -> Self {
-        DdimStepper { eta, x0: Vec::new(), xi: Vec::new() }
+        DdimStepper { eta, scr: Scratch::default() }
     }
 }
 
 impl Stepper for DdimStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        self.scr = Scratch::new(2, n * model.dim());
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -69,18 +82,17 @@ impl Stepper for DdimStepper {
         noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        ensure_len(&mut self.x0, n * dim);
-        ensure_len(&mut self.xi, n * dim);
-        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
-        step_noise(noise, i, dim, n, &mut self.xi);
+        let [x0, xi] = self.scr.split(n * dim);
+        model.eval_batch(x, &grid.ctx(i), x0);
+        step_noise(noise, i, dim, n, xi);
         let h = grid.lams[i + 1] - grid.lams[i];
         let (a_s, a_t) = (grid.alphas[i], grid.alphas[i + 1]);
         let (s_s, s_t) = (grid.sigmas[i], grid.sigmas[i + 1]);
         let sig_hat = self.eta * s_t * crate::util::one_minus_exp_neg(2.0 * h).max(0.0).sqrt();
         let det = (s_t * s_t - sig_hat * sig_hat).max(0.0).sqrt();
         for k in 0..n * dim {
-            let eps = (x[k] - a_s * self.x0[k]) / s_s;
-            x[k] = a_t * self.x0[k] + det * eps + sig_hat * self.xi[k];
+            let eps = (x[k] - a_s * x0[k]) / s_s;
+            x[k] = a_t * x0[k] + det * eps + sig_hat * xi[k];
         }
     }
 }

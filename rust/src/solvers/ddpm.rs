@@ -12,9 +12,10 @@
 //! "small" posterior variance; it is also DDIM-η at η = 1 up to the σ̂
 //! parameterization.
 
+use crate::linalg::Scratch;
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
-use crate::solvers::stepper::{ensure_len, Stepper};
+use crate::solvers::stepper::Stepper;
 use crate::solvers::{step_noise, Grid};
 
 /// Monolithic seed-era loop, retained as the reference implementation for
@@ -47,20 +48,33 @@ pub fn solve(
     }
 }
 
-/// Ancestral DDPM as an incremental [`Stepper`] (memoryless).
+/// Ancestral DDPM as an incremental [`Stepper`] (memoryless): the only
+/// state is a two-slot [`Scratch`] arena, sized at `init` so the step
+/// path never allocates.
 #[derive(Default)]
 pub struct DdpmStepper {
-    x0: Vec<f64>,
-    xi: Vec<f64>,
+    scr: Scratch,
 }
 
 impl DdpmStepper {
+    /// A fresh stepper; sized at [`Stepper::init`].
     pub fn new() -> Self {
         DdpmStepper::default()
     }
 }
 
 impl Stepper for DdpmStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        self.scr = Scratch::new(2, n * model.dim());
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -71,10 +85,9 @@ impl Stepper for DdpmStepper {
         noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        ensure_len(&mut self.x0, n * dim);
-        ensure_len(&mut self.xi, n * dim);
-        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
-        step_noise(noise, i, dim, n, &mut self.xi);
+        let [x0, xi] = self.scr.split(n * dim);
+        model.eval_batch(x, &grid.ctx(i), x0);
+        step_noise(noise, i, dim, n, xi);
         let (a_t, a_s) = (grid.alphas[i], grid.alphas[i + 1]);
         let (s_t, s_s) = (grid.sigmas[i], grid.sigmas[i + 1]);
         let ratio = a_t / a_s;
@@ -82,8 +95,8 @@ impl Stepper for DdpmStepper {
         let gain = ratio * s_s * s_s / (s_t * s_t);
         let post_std = (s_s * s_s * sig_ts2 / (s_t * s_t)).max(0.0).sqrt();
         for k in 0..n * dim {
-            let mean = a_s * self.x0[k] + gain * (x[k] - a_t * self.x0[k]);
-            x[k] = mean + post_std * self.xi[k];
+            let mean = a_s * x0[k] + gain * (x[k] - a_t * x0[k]);
+            x[k] = mean + post_std * xi[k];
         }
     }
 }

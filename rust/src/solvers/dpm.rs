@@ -8,11 +8,12 @@
 //!   checks our SA implementation against this independent one.
 
 use crate::jsonlite::Value;
+use crate::linalg::Scratch;
 use crate::models::{EvalCtx, ModelEval};
 use crate::rng::normal::NormalSource;
 use crate::schedule::NoiseSchedule;
 use crate::solvers::snapshot::{f64_to_hex, hex_to_f64, StepperState};
-use crate::solvers::stepper::{ensure_len, retain_rows, Stepper};
+use crate::solvers::stepper::{retain_rows, Stepper};
 use crate::solvers::Grid;
 use crate::util::error::{Error, Result};
 
@@ -101,21 +102,32 @@ pub fn solve_pp2m(model: &dyn ModelEval, grid: &Grid, x: &mut [f64], n: usize) {
 }
 
 /// DPM-Solver-2 as an incremental [`Stepper`] (memoryless; 2 NFE/step).
-/// Holds the schedule by value for the λ-midpoint inversion.
+/// Holds the schedule by value for the λ-midpoint inversion; a three-slot
+/// [`Scratch`] arena sized at `init` keeps the step path allocation-free.
 pub struct Dpm2Stepper {
     sch: NoiseSchedule,
-    x0: Vec<f64>,
-    u: Vec<f64>,
-    x0_mid: Vec<f64>,
+    scr: Scratch,
 }
 
 impl Dpm2Stepper {
+    /// A stepper over `sch`; sized at [`Stepper::init`].
     pub fn new(sch: NoiseSchedule) -> Self {
-        Dpm2Stepper { sch, x0: Vec::new(), u: Vec::new(), x0_mid: Vec::new() }
+        Dpm2Stepper { sch, scr: Scratch::default() }
     }
 }
 
 impl Stepper for Dpm2Stepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        self.scr = Scratch::new(3, n * model.dim());
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -126,9 +138,7 @@ impl Stepper for Dpm2Stepper {
         _noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        ensure_len(&mut self.x0, n * dim);
-        ensure_len(&mut self.u, n * dim);
-        ensure_len(&mut self.x0_mid, n * dim);
+        let [x0, u, x0_mid] = self.scr.split(n * dim);
         let (lam_s, lam_t) = (grid.lams[i], grid.lams[i + 1]);
         let h = lam_t - lam_s;
         let lam_mid = 0.5 * (lam_s + lam_t);
@@ -137,38 +147,58 @@ impl Stepper for Dpm2Stepper {
         let (a_s, s_s) = (grid.alphas[i], grid.sigmas[i]);
         let (a_t, s_t) = (grid.alphas[i + 1], grid.sigmas[i + 1]);
 
-        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        model.eval_batch(x, &grid.ctx(i), x0);
         let c_mid = s_mid * ((0.5 * h).exp() - 1.0);
         for k in 0..n * dim {
-            let eps = (x[k] - a_s * self.x0[k]) / s_s;
-            self.u[k] = a_mid / a_s * x[k] - c_mid * eps;
+            let eps = (x[k] - a_s * x0[k]) / s_s;
+            u[k] = a_mid / a_s * x[k] - c_mid * eps;
         }
         let mid_ctx = EvalCtx { t: t_mid, alpha: a_mid, sigma: s_mid };
-        model.eval_batch(&self.u, &mid_ctx, &mut self.x0_mid);
+        model.eval_batch(u, &mid_ctx, x0_mid);
         let c_t = s_t * (h.exp() - 1.0);
         for k in 0..n * dim {
-            let eps_mid = (self.u[k] - a_mid * self.x0_mid[k]) / s_mid;
+            let eps_mid = (u[k] - a_mid * x0_mid[k]) / s_mid;
             x[k] = a_t / a_s * x[k] - c_t * eps_mid;
         }
     }
 }
 
 /// DPM-Solver++(2M) as an incremental [`Stepper`]: the one-entry x₀̂
-/// history and the previous step size are the carried state.
+/// history and the previous step size are the carried state. Both the
+/// history buffer and the eval scratch are pre-allocated at `init` and
+/// rotated by `mem::swap`, so the step path never allocates.
 #[derive(Default)]
 pub struct Pp2mStepper {
-    x0_prev: Option<Vec<f64>>,
+    /// Whether `x0_prev` holds a committed history entry yet.
+    has_prev: bool,
     h_prev: f64,
+    x0_prev: Vec<f64>,
     x0: Vec<f64>,
 }
 
 impl Pp2mStepper {
+    /// A fresh stepper; sized at [`Stepper::init`].
     pub fn new() -> Self {
         Pp2mStepper::default()
     }
 }
 
 impl Stepper for Pp2mStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        let len = n * model.dim();
+        self.has_prev = false;
+        self.h_prev = 0.0;
+        self.x0_prev = vec![0.0; len];
+        self.x0 = vec![0.0; len];
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -179,44 +209,39 @@ impl Stepper for Pp2mStepper {
         _noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        ensure_len(&mut self.x0, n * dim);
+        debug_assert_eq!(self.x0.len(), n * dim);
         model.eval_batch(x, &grid.ctx(i), &mut self.x0);
         let h = grid.lams[i + 1] - grid.lams[i];
         let (s_s, s_t) = (grid.sigmas[i], grid.sigmas[i + 1]);
         let a_t = grid.alphas[i + 1];
         let ratio = s_t / s_s;
         let phi = 1.0 - (-h).exp();
-        match &self.x0_prev {
-            None => {
-                // First step: DPM-Solver++(1) == deterministic DDIM.
-                for k in 0..n * dim {
-                    x[k] = ratio * x[k] + a_t * phi * self.x0[k];
-                }
-            }
-            Some(prev) => {
-                let r = self.h_prev / h;
-                let c_cur = 1.0 + 1.0 / (2.0 * r);
-                let c_prev = -1.0 / (2.0 * r);
-                for k in 0..n * dim {
-                    let d = c_cur * self.x0[k] + c_prev * prev[k];
-                    x[k] = ratio * x[k] + a_t * phi * d;
-                }
+        if !self.has_prev {
+            // First step: DPM-Solver++(1) == deterministic DDIM, a single
+            // fused scale-and-accumulate.
+            crate::linalg::scale_add(x, ratio, a_t * phi, &self.x0);
+        } else {
+            let prev = &self.x0_prev;
+            let r = self.h_prev / h;
+            let c_cur = 1.0 + 1.0 / (2.0 * r);
+            let c_prev = -1.0 / (2.0 * r);
+            for k in 0..n * dim {
+                let d = c_cur * self.x0[k] + c_prev * prev[k];
+                x[k] = ratio * x[k] + a_t * phi * d;
             }
         }
         self.h_prev = h;
-        // Swap the old history buffer in as the next step's scratch (it is
-        // fully overwritten by the next eval) — no per-step allocation.
-        let next = self.x0_prev.take().unwrap_or_else(|| vec![0.0; n * dim]);
-        self.x0_prev = Some(std::mem::replace(&mut self.x0, next));
+        // Rotate the fresh eval into the history slot; the old history
+        // buffer becomes the next step's eval scratch (fully overwritten).
+        std::mem::swap(&mut self.x0_prev, &mut self.x0);
+        self.has_prev = true;
     }
 
     fn retain_lanes(&mut self, keep: &[bool], dim: usize) {
-        if let Some(prev) = &mut self.x0_prev {
-            retain_rows(prev, keep, dim);
-        }
-        // x0 is pure scratch between steps (its content moves into
-        // x0_prev); it may still be unallocated if no step has run yet.
-        self.x0.clear();
+        retain_rows(&mut self.x0_prev, keep, dim);
+        // x0 is pure scratch between steps (its content moved into
+        // x0_prev); only its length must track the surviving lanes.
+        retain_rows(&mut self.x0, keep, dim);
     }
 
     /// Carried state: the one-entry x₀̂ history plus the previous step size
@@ -228,16 +253,17 @@ impl Stepper for Pp2mStepper {
             dim,
             scalars: Value::obj(vec![
                 ("h_prev", Value::Str(f64_to_hex(self.h_prev))),
-                ("has_prev", Value::Bool(self.x0_prev.is_some())),
+                ("has_prev", Value::Bool(self.has_prev)),
             ]),
-            mats: match &self.x0_prev {
-                Some(prev) => vec![("x0_prev".to_string(), prev.clone())],
-                None => Vec::new(),
+            mats: if self.has_prev {
+                vec![("x0_prev".to_string(), self.x0_prev.clone())]
+            } else {
+                Vec::new()
             },
         }
     }
 
-    fn restore(&mut self, state: &StepperState, _dim: usize) -> Result<()> {
+    fn restore(&mut self, state: &StepperState, _grid: &Grid, dim: usize) -> Result<()> {
         self.h_prev = hex_to_f64(
             state
                 .scalars
@@ -245,12 +271,14 @@ impl Stepper for Pp2mStepper {
                 .and_then(Value::as_str)
                 .ok_or_else(|| Error::config("dpm++2m snapshot missing 'h_prev'"))?,
         )?;
-        self.x0_prev = if state.scalars.opt_bool("has_prev", false) {
-            Some(state.mat("x0_prev")?.to_vec())
+        let len = state.lanes * dim;
+        self.has_prev = state.scalars.opt_bool("has_prev", false);
+        self.x0_prev = if self.has_prev {
+            state.mat("x0_prev")?.to_vec()
         } else {
-            None
+            vec![0.0; len]
         };
-        self.x0.clear();
+        self.x0 = vec![0.0; len];
         Ok(())
     }
 }

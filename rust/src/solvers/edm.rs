@@ -8,9 +8,10 @@
 //!   EDM(SDE) baseline; its 4 hyperparameters are exposed for the small
 //!   grid search mirrored from the paper's protocol (§E.2).
 
+use crate::linalg::Scratch;
 use crate::models::{EvalCtx, ModelEval};
 use crate::rng::normal::NormalSource;
-use crate::solvers::stepper::{ensure_len, Stepper};
+use crate::solvers::stepper::Stepper;
 use crate::solvers::{step_noise, Grid};
 
 /// EDM stochastic-sampler hyperparameters.
@@ -143,22 +144,32 @@ fn edm_sigma(grid: &Grid, i: usize) -> f64 {
 }
 
 /// Deterministic Heun as an incremental [`Stepper`] (memoryless; the
-/// trailing-Euler special case keys off `i + 1 == grid.m()`).
+/// trailing-Euler special case keys off `i + 1 == grid.m()`). A four-slot
+/// [`Scratch`] arena sized at `init` keeps the step path allocation-free.
 #[derive(Default)]
 pub struct HeunStepper {
-    x0: Vec<f64>,
-    x0b: Vec<f64>,
-    xb: Vec<f64>,
-    trial: Vec<f64>,
+    scr: Scratch,
 }
 
 impl HeunStepper {
+    /// A fresh stepper; sized at [`Stepper::init`].
     pub fn new() -> Self {
         HeunStepper::default()
     }
 }
 
 impl Stepper for HeunStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        self.scr = Scratch::new(4, n * model.dim());
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -170,36 +181,33 @@ impl Stepper for HeunStepper {
     ) {
         let dim = model.dim();
         let m = grid.m();
-        ensure_len(&mut self.x0, n * dim);
-        ensure_len(&mut self.x0b, n * dim);
-        ensure_len(&mut self.xb, n * dim);
-        ensure_len(&mut self.trial, n * dim);
+        let [x0, x0b, xb, trial] = self.scr.split(n * dim);
         let (sig_i, sig_j) = (edm_sigma(grid, i), edm_sigma(grid, i + 1));
         let (a_i, a_j) = (grid.alphas[i], grid.alphas[i + 1]);
         let dsig = sig_j - sig_i;
-        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
+        model.eval_batch(x, &grid.ctx(i), x0);
         if i + 1 == m || sig_j == 0.0 {
             // Trailing Euler step.
             for k in 0..n * dim {
                 let xbar = x[k] / a_i;
-                let d = (xbar - self.x0[k]) / sig_i;
+                let d = (xbar - x0[k]) / sig_i;
                 x[k] = a_j * (xbar + dsig * d);
             }
         } else {
             for k in 0..n * dim {
                 let xbar = x[k] / a_i;
-                let d = (xbar - self.x0[k]) / sig_i;
-                self.xb[k] = xbar + dsig * d;
+                let d = (xbar - x0[k]) / sig_i;
+                xb[k] = xbar + dsig * d;
             }
             for k in 0..n * dim {
-                self.trial[k] = a_j * self.xb[k];
+                trial[k] = a_j * xb[k];
             }
             let ctx_j = EvalCtx { t: grid.ts[i + 1], alpha: a_j, sigma: grid.sigmas[i + 1] };
-            model.eval_batch(&self.trial, &ctx_j, &mut self.x0b);
+            model.eval_batch(trial, &ctx_j, x0b);
             for k in 0..n * dim {
                 let xbar = x[k] / a_i;
-                let d = (xbar - self.x0[k]) / sig_i;
-                let d2 = (self.xb[k] - self.x0b[k]) / sig_j;
+                let d = (xbar - x0[k]) / sig_i;
+                let d2 = (xb[k] - x0b[k]) / sig_j;
                 x[k] = a_j * (xbar + dsig * 0.5 * (d + d2));
             }
         }
@@ -208,32 +216,33 @@ impl Stepper for HeunStepper {
 
 /// The stochastic churn sampler as an incremental [`Stepper`]. The churn
 /// band test and γ depend only on the grid (passed every step), so the
-/// stepper itself is memoryless.
+/// stepper itself is memoryless; a six-slot [`Scratch`] arena sized at
+/// `init` keeps the step path allocation-free.
 pub struct EdmSdeStepper {
     p: ChurnParams,
-    x0: Vec<f64>,
-    x0b: Vec<f64>,
-    xi: Vec<f64>,
-    xhat: Vec<f64>,
-    xb: Vec<f64>,
-    trial: Vec<f64>,
+    scr: Scratch,
 }
 
 impl EdmSdeStepper {
+    /// A stepper with churn hyperparameters `p`; sized at
+    /// [`Stepper::init`].
     pub fn new(p: ChurnParams) -> Self {
-        EdmSdeStepper {
-            p,
-            x0: Vec::new(),
-            x0b: Vec::new(),
-            xi: Vec::new(),
-            xhat: Vec::new(),
-            xb: Vec::new(),
-            trial: Vec::new(),
-        }
+        EdmSdeStepper { p, scr: Scratch::default() }
     }
 }
 
 impl Stepper for EdmSdeStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        self.scr = Scratch::new(6, n * model.dim());
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -245,13 +254,8 @@ impl Stepper for EdmSdeStepper {
     ) {
         let dim = model.dim();
         let m = grid.m();
-        ensure_len(&mut self.x0, n * dim);
-        ensure_len(&mut self.x0b, n * dim);
-        ensure_len(&mut self.xi, n * dim);
-        ensure_len(&mut self.xhat, n * dim);
-        ensure_len(&mut self.xb, n * dim);
-        ensure_len(&mut self.trial, n * dim);
         let p = self.p;
+        let [x0, x0b, xi, xhat, xb, trial] = self.scr.split(n * dim);
         let gamma_max = (2.0f64).sqrt() - 1.0;
         let (sig_i, sig_j) = (edm_sigma(grid, i), edm_sigma(grid, i + 1));
         let (a_i, a_j) = (grid.alphas[i], grid.alphas[i + 1]);
@@ -261,38 +265,36 @@ impl Stepper for EdmSdeStepper {
             0.0
         };
         let sig_hat = sig_i * (1.0 + gamma);
-        step_noise(noise, i, dim, n, &mut self.xi);
+        step_noise(noise, i, dim, n, xi);
         let extra = (sig_hat * sig_hat - sig_i * sig_i).max(0.0).sqrt() * p.s_noise;
-        let xhat = &mut self.xhat;
         for k in 0..n * dim {
-            xhat[k] = x[k] / a_i + extra * self.xi[k];
+            xhat[k] = x[k] / a_i + extra * xi[k];
         }
         let ctx_hat = EvalCtx { t: grid.ts[i], alpha: a_i, sigma: sig_hat * a_i };
         // `trial` doubles as the unscaled churned state for the first eval.
         for k in 0..n * dim {
-            self.trial[k] = xhat[k] * a_i;
+            trial[k] = xhat[k] * a_i;
         }
-        model.eval_batch(&self.trial, &ctx_hat, &mut self.x0);
+        model.eval_batch(trial, &ctx_hat, x0);
         let dsig = sig_j - sig_hat;
         if i + 1 == m || sig_j == 0.0 {
             for k in 0..n * dim {
-                let d = (xhat[k] - self.x0[k]) / sig_hat;
+                let d = (xhat[k] - x0[k]) / sig_hat;
                 x[k] = a_j * (xhat[k] + dsig * d);
             }
         } else {
-            let xb = &mut self.xb;
             for k in 0..n * dim {
-                let d = (xhat[k] - self.x0[k]) / sig_hat;
+                let d = (xhat[k] - x0[k]) / sig_hat;
                 xb[k] = xhat[k] + dsig * d;
             }
             for k in 0..n * dim {
-                self.trial[k] = xb[k] * a_j;
+                trial[k] = xb[k] * a_j;
             }
             let ctx_j = EvalCtx { t: grid.ts[i + 1], alpha: a_j, sigma: grid.sigmas[i + 1] };
-            model.eval_batch(&self.trial, &ctx_j, &mut self.x0b);
+            model.eval_batch(trial, &ctx_j, x0b);
             for k in 0..n * dim {
-                let d = (xhat[k] - self.x0[k]) / sig_hat;
-                let d2 = (xb[k] - self.x0b[k]) / sig_j;
+                let d = (xhat[k] - x0[k]) / sig_hat;
+                let d2 = (xb[k] - x0b[k]) / sig_j;
                 x[k] = a_j * (xhat[k] + dsig * 0.5 * (d + d2));
             }
         }

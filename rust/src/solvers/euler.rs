@@ -7,10 +7,11 @@
 //!
 //! with ŝ(x, t) = −(x − α x₀̂)/σ² the model-induced score and Δt < 0.
 
+use crate::linalg::Scratch;
 use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
 use crate::schedule::NoiseSchedule;
-use crate::solvers::stepper::{ensure_len, Stepper};
+use crate::solvers::stepper::Stepper;
 use crate::solvers::{step_noise, Grid};
 
 /// Monolithic seed-era loop, retained as the reference implementation for
@@ -49,21 +50,33 @@ pub fn solve(
 
 /// Euler–Maruyama as an incremental [`Stepper`]; holds the schedule by
 /// value (`NoiseSchedule` is `Copy`) because the drift terms f(t), g²(t)
-/// are evaluated off-grid.
+/// are evaluated off-grid. Memoryless: the only state is a two-slot
+/// [`Scratch`] arena, sized at `init` so the step path never allocates.
 pub struct EulerStepper {
     sch: NoiseSchedule,
     tau: f64,
-    x0: Vec<f64>,
-    xi: Vec<f64>,
+    scr: Scratch,
 }
 
 impl EulerStepper {
+    /// A stepper over `sch` with stochasticity `tau`.
     pub fn new(sch: NoiseSchedule, tau: f64) -> Self {
-        EulerStepper { sch, tau, x0: Vec::new(), xi: Vec::new() }
+        EulerStepper { sch, tau, scr: Scratch::default() }
     }
 }
 
 impl Stepper for EulerStepper {
+    fn init(
+        &mut self,
+        model: &dyn ModelEval,
+        _grid: &Grid,
+        _x: &mut [f64],
+        n: usize,
+        _noise: &mut dyn NormalSource,
+    ) {
+        self.scr = Scratch::new(2, n * model.dim());
+    }
+
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -74,11 +87,10 @@ impl Stepper for EulerStepper {
         noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        ensure_len(&mut self.x0, n * dim);
-        ensure_len(&mut self.xi, n * dim);
+        let [x0, xi] = self.scr.split(n * dim);
         let t = grid.ts[i];
-        model.eval_batch(x, &grid.ctx(i), &mut self.x0);
-        step_noise(noise, i, dim, n, &mut self.xi);
+        model.eval_batch(x, &grid.ctx(i), x0);
+        step_noise(noise, i, dim, n, xi);
         let dt = grid.ts[i + 1] - t; // negative
         let f = self.sch.dlog_alpha_dt(t);
         let g2 = self.sch.g2(t);
@@ -87,8 +99,8 @@ impl Stepper for EulerStepper {
         let noise_scale = self.tau * g2.sqrt() * (-dt).max(0.0).sqrt();
         let half = 0.5 * (1.0 + self.tau * self.tau) * g2;
         for k in 0..n * dim {
-            let score = (alpha * self.x0[k] - x[k]) / sigma2;
-            x[k] += (f * x[k] - half * score) * dt + noise_scale * self.xi[k];
+            let score = (alpha * x0[k] - x[k]) / sigma2;
+            x[k] += (f * x[k] - half * score) * dt + noise_scale * xi[k];
         }
     }
 }

@@ -11,20 +11,29 @@
 //! * per-sample noise comes from a counter RNG keyed by (stream = sample
 //!   lane, step), so results are independent of batch composition.
 
+#[allow(missing_docs)]
 pub mod adaptive;
+#[allow(missing_docs)]
 pub mod coeffs;
+#[allow(missing_docs)]
 pub mod ddim;
+#[allow(missing_docs)]
 pub mod ddpm;
+#[allow(missing_docs)]
 pub mod dpm;
+#[allow(missing_docs)]
 pub mod edm;
+#[allow(missing_docs)]
 pub mod euler;
+#[allow(missing_docs)]
 pub mod sa;
 pub mod snapshot;
 pub mod stepper;
+#[allow(missing_docs)]
 pub mod unipc;
 
 use crate::config::{SamplerConfig, SolverKind};
-use crate::exec::Executor;
+use crate::exec::{chunks, Executor};
 use crate::models::{CountingModel, EvalCtx, ModelEval};
 use crate::rng::normal::{NormalSource, PhiloxNormal, SplitNoise};
 use crate::schedule::{timesteps, NoiseSchedule};
@@ -34,7 +43,9 @@ use crate::schedule::{timesteps, NoiseSchedule};
 pub struct SolveOutput {
     /// Row-major `n × dim` samples at t_min.
     pub samples: Vec<f64>,
+    /// Number of sample lanes.
     pub n: usize,
+    /// Data dimension per lane.
     pub dim: usize,
     /// Model evaluations actually performed (batched calls).
     pub nfe: usize,
@@ -43,13 +54,18 @@ pub struct SolveOutput {
 /// Precomputed per-grid-point schedule quantities.
 #[derive(Debug, Clone)]
 pub struct Grid {
+    /// Timestep per grid point, decreasing along the reverse-time grid.
     pub ts: Vec<f64>,
+    /// α(t) per grid point.
     pub alphas: Vec<f64>,
+    /// σ(t) per grid point.
     pub sigmas: Vec<f64>,
+    /// λ(t) = log(α/σ) per grid point, increasing along the grid.
     pub lams: Vec<f64>,
 }
 
 impl Grid {
+    /// Evaluate the schedule at every timestep of `ts`.
     pub fn new(sch: &NoiseSchedule, ts: Vec<f64>) -> Self {
         let alphas = ts.iter().map(|t| sch.alpha(*t)).collect();
         let sigmas = ts.iter().map(|t| sch.sigma(*t)).collect();
@@ -57,10 +73,12 @@ impl Grid {
         Grid { ts, alphas, sigmas, lams }
     }
 
+    /// Number of solver steps (grid points minus one).
     pub fn m(&self) -> usize {
         self.ts.len() - 1
     }
 
+    /// Model-evaluation context at grid point `i`.
     pub fn ctx(&self, i: usize) -> EvalCtx {
         EvalCtx { t: self.ts[i], alpha: self.alphas[i], sigma: self.sigmas[i] }
     }
@@ -69,16 +87,29 @@ impl Grid {
 /// Noise stream id used for the prior draw (distinct from any step index).
 pub const PRIOR_STEP: u64 = u64::MAX;
 
-/// Draw the prior state x_T ~ N(0, σ_T² I), one Philox stream per lane.
-pub fn prior_sample(grid: &Grid, dim: usize, n: usize, noise: &mut dyn NormalSource) -> Vec<f64> {
+/// Draw the prior state x_T ~ N(0, σ_T² I) into a caller-provided
+/// `n × dim` buffer, one Philox stream per lane.
+pub fn prior_sample_into(
+    grid: &Grid,
+    dim: usize,
+    n: usize,
+    noise: &mut dyn NormalSource,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), n * dim);
     let sigma_t = grid.sigmas[0];
-    let mut x = vec![0.0; n * dim];
     for lane in 0..n {
-        noise.fill(lane as u64, PRIOR_STEP, &mut x[lane * dim..(lane + 1) * dim]);
+        noise.fill(lane as u64, PRIOR_STEP, &mut out[lane * dim..(lane + 1) * dim]);
     }
-    for v in x.iter_mut() {
+    for v in out.iter_mut() {
         *v *= sigma_t;
     }
+}
+
+/// Draw the prior state x_T ~ N(0, σ_T² I), one Philox stream per lane.
+pub fn prior_sample(grid: &Grid, dim: usize, n: usize, noise: &mut dyn NormalSource) -> Vec<f64> {
+    let mut x = vec![0.0; n * dim];
+    prior_sample_into(grid, dim, n, noise, &mut x);
     x
 }
 
@@ -121,11 +152,11 @@ pub fn run_parallel(
 }
 
 /// Lane-chunked execution path shared by the whole solver zoo: split the
-/// `n` lanes into contiguous chunks, run [`run_with_noise`] per chunk with
-/// a lane-offset slice of `noise`'s Philox streams, and concatenate. The
-/// per-lane stream keying makes the result bit-identical to the sequential
-/// run regardless of thread count (asserted in tests for every
-/// [`SolverKind`]).
+/// `n` lanes into contiguous chunks and run [`run_with_noise_into`] per
+/// chunk with a lane-offset slice of `noise`'s Philox streams, each chunk
+/// writing its slice of one shared output buffer. The per-lane stream
+/// keying makes the result bit-identical to the sequential run regardless
+/// of thread count (asserted in tests for every [`SolverKind`]).
 pub fn run_chunked(
     model: &dyn ModelEval,
     sch: &NoiseSchedule,
@@ -139,9 +170,22 @@ pub fn run_chunked(
         return run_with_noise(model, sch, cfg, n, &mut *local);
     }
     let dim = model.dim();
-    let outs = exec.run_chunks(n, |lanes| {
-        let mut local = noise.split_lanes(lanes.start);
-        run_with_noise(model, sch, cfg, lanes.len(), &mut *local)
+    // One output buffer for the whole batch, split into disjoint per-chunk
+    // slices the workers write straight into — no per-chunk result vectors
+    // and no concatenation copy on the join side.
+    let mut samples = vec![0.0; n * dim];
+    let mut parts: Vec<(std::ops::Range<usize>, &mut [f64], usize)> = Vec::new();
+    {
+        let mut rest: &mut [f64] = &mut samples;
+        for range in chunks(n, exec.threads()) {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(range.len() * dim);
+            parts.push((range, head, 0));
+            rest = tail;
+        }
+    }
+    exec.for_each_mut(&mut parts, |_, (range, out, nfe)| {
+        let mut local = noise.split_lanes(range.start);
+        *nfe = run_with_noise_into(model, sch, cfg, range.len(), &mut *local, out);
     });
     // NFE accounting invariant: model calls are per *step*, not per lane,
     // and every chunk walks the same grid, so all chunks must report the
@@ -149,16 +193,13 @@ pub fn run_chunked(
     // keeps batched-vs-parallel accounting equal to sequential). A chunk
     // disagreeing means a solver made its call pattern depend on lane
     // count — a bug worth failing loudly on in debug builds.
-    let nfe = outs.first().map_or(0, |o| o.nfe);
+    let nfe = parts.first().map_or(0, |p| p.2);
     debug_assert!(
-        outs.iter().all(|o| o.nfe == nfe),
+        parts.iter().all(|p| p.2 == nfe),
         "chunks disagree on NFE: {:?} (solver call pattern depends on lane count)",
-        outs.iter().map(|o| o.nfe).collect::<Vec<_>>()
+        parts.iter().map(|p| p.2).collect::<Vec<_>>()
     );
-    let mut samples = Vec::with_capacity(n * dim);
-    for o in &outs {
-        samples.extend_from_slice(&o.samples);
-    }
+    drop(parts);
     SolveOutput { samples, n, dim, nfe }
 }
 
@@ -177,13 +218,32 @@ pub fn run_with_noise(
     noise: &mut dyn NormalSource,
 ) -> SolveOutput {
     let dim = model.dim();
+    let mut samples = vec![0.0; n * dim];
+    let nfe = run_with_noise_into(model, sch, cfg, n, noise, &mut samples);
+    SolveOutput { samples, n, dim, nfe }
+}
+
+/// [`run_with_noise`] writing into a caller-provided `n × dim` buffer
+/// (the prior draw and every step happen in place); returns the NFE.
+/// This is what lets [`run_chunked`] hand workers disjoint slices of one
+/// batch-wide output buffer instead of allocating per chunk.
+pub fn run_with_noise_into(
+    model: &dyn ModelEval,
+    sch: &NoiseSchedule,
+    cfg: &SamplerConfig,
+    n: usize,
+    noise: &mut dyn NormalSource,
+    out: &mut [f64],
+) -> usize {
+    let dim = model.dim();
+    debug_assert_eq!(out.len(), n * dim);
     let m = cfg.steps_for_nfe();
     let grid = Grid::new(sch, timesteps(sch, cfg.selector, m));
     let counting = CountingModel::new(model);
-    let mut x = prior_sample(&grid, dim, n, noise);
+    prior_sample_into(&grid, dim, n, noise, out);
     let mut st = stepper::make_stepper(cfg, sch);
-    stepper::drive(&mut *st, &counting, &grid, &mut x, n, noise);
-    SolveOutput { samples: x, n, dim, nfe: counting.count() }
+    stepper::drive(&mut *st, &counting, &grid, out, n, noise);
+    counting.count()
 }
 
 /// The seed-era monolithic dispatch: every solver runs its own whole-grid

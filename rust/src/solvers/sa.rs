@@ -14,7 +14,7 @@ use crate::models::ModelEval;
 use crate::rng::normal::NormalSource;
 use crate::solvers::coeffs::{coefficients, StepCoeffs, StepEnds};
 use crate::solvers::snapshot::StepperState;
-use crate::solvers::stepper::{retain_rows, Stepper};
+use crate::solvers::stepper::{retain_rows, HistoryRing, Stepper};
 use crate::solvers::{step_noise, Grid};
 use crate::tau::TauFn;
 use crate::util::error::{Error, Result};
@@ -176,33 +176,86 @@ fn to_interp_space(
     }
 }
 
-/// SA-Solver as an incremental [`Stepper`]: the history buffer, the shared
-/// per-step ξ and the scratch buffers that `SaSolver::solve` keeps on its
-/// stack become fields, and each `step(i)` call is exactly one iteration
-/// of Algorithm 1's loop.
+/// Everything step `i` needs that depends only on the grid and the solver
+/// options — precomputed at `init`/`restore` so the step hot path does no
+/// coefficient work and no allocation.
+struct StepPlan {
+    /// Whether this step injects noise (τ² integrates to > 0 over it).
+    injects: bool,
+    /// Predictor coefficients (Eq. 14) for the history depth this step has.
+    pc: StepCoeffs,
+    /// Corrector coefficients (Eq. 17); `None` when the corrector is off.
+    cc: Option<StepCoeffs>,
+}
+
+/// Precompute the per-step coefficient plan. The history depth at entry to
+/// step `i` is `min(i + 1, keep)` by construction (the warm-up commits one
+/// entry, every step commits one more, capped at `keep`), so the
+/// interpolation nodes — λ of the buffered evals, newest first — are
+/// `grid.lams[i], grid.lams[i − 1], …` and the whole table is a pure
+/// function of (grid, opts).
+fn build_plan(opts: &SaSolverOpts, grid: &Grid, keep: usize) -> Vec<StepPlan> {
+    let m = grid.m();
+    let mut plans = Vec::with_capacity(m);
+    let mut nodes: Vec<f64> = Vec::with_capacity(keep + 1);
+    for i in 0..m {
+        let ends = step_ends(grid, i, i + 1);
+        let injects = opts.tau.int_tau2(ends.lam_s, ends.lam_t) > 0.0;
+        let hist_len = (i + 1).min(keep);
+        let s_eff = hist_len.min(opts.predictor_steps);
+        nodes.clear();
+        nodes.extend((0..s_eff).map(|j| grid.lams[i - j]));
+        let pc = coefficients(&nodes, &ends, &opts.tau, opts.prediction);
+        let cc = if opts.corrector_steps > 0 {
+            let sc_eff = hist_len.min(opts.corrector_steps);
+            nodes.clear();
+            nodes.push(grid.lams[i + 1]);
+            nodes.extend((0..sc_eff).map(|j| grid.lams[i - j]));
+            Some(coefficients(&nodes, &ends, &opts.tau, opts.prediction))
+        } else {
+            None
+        };
+        plans.push(StepPlan { injects, pc, cc });
+    }
+    plans
+}
+
+/// SA-Solver as an incremental [`Stepper`]: the history buffer becomes a
+/// contiguous [`HistoryRing`] arena, the per-step coefficients are
+/// precomputed into a `StepPlan` table at `init`/`restore`, and each
+/// `step(i)` call is exactly one iteration of Algorithm 1's loop — with
+/// the predictor/corrector coefficient application fused into a single
+/// [`crate::linalg::lincomb_into`] pass and **zero heap allocations**.
 pub struct SaStepper {
     opts: SaSolverOpts,
     /// History depth max(s, ŝ, 1).
     keep: usize,
-    buffer: VecDeque<Entry>,
+    /// Per-step coefficient table, indexed by grid step.
+    plan: Vec<StepPlan>,
+    /// History arena; the free slot doubles as the f_new eval target.
+    hist: HistoryRing,
+    /// Reused per-step entry-offset list for the fused kernel.
+    offsets: Vec<usize>,
     xi: Vec<f64>,
     xi_dirty: bool,
     x_pred: Vec<f64>,
-    f_new: Vec<f64>,
 }
 
 impl SaStepper {
+    /// A stepper for `opts`; sized and planned at [`Stepper::init`] (or
+    /// [`Stepper::restore`]).
     pub fn new(opts: SaSolverOpts) -> Self {
         assert!(opts.predictor_steps >= 1);
         let keep = opts.predictor_steps.max(opts.corrector_steps).max(1);
         SaStepper {
             opts,
             keep,
-            buffer: VecDeque::with_capacity(keep + 1),
+            plan: Vec::new(),
+            hist: HistoryRing::new(keep, 0),
+            offsets: Vec::new(),
             xi: Vec::new(),
             xi_dirty: false,
             x_pred: Vec::new(),
-            f_new: Vec::new(),
         }
     }
 }
@@ -218,15 +271,17 @@ impl Stepper for SaStepper {
     ) {
         let dim = model.dim();
         debug_assert_eq!(x.len(), n * dim);
-        // Warm-up eval at t₀ (line 1 of Algorithm 1).
-        let mut f0 = vec![0.0; n * dim];
-        model.eval_batch(x, &grid.ctx(0), &mut f0);
-        to_interp_space(self.opts.prediction, x, &mut f0, grid, 0);
-        self.buffer.push_front(Entry { idx: 0, f: f0 });
+        self.plan = build_plan(&self.opts, grid, self.keep);
+        self.hist = HistoryRing::new(self.keep, n * dim);
+        self.offsets = Vec::with_capacity(self.keep + 1);
+        // Warm-up eval at t₀ (line 1 of Algorithm 1) straight into the
+        // ring's free slot.
+        model.eval_batch(x, &grid.ctx(0), self.hist.free_mut());
+        to_interp_space(self.opts.prediction, x, self.hist.free_mut(), grid, 0);
+        self.hist.commit(0);
         self.xi = vec![0.0; n * dim];
         self.xi_dirty = false;
         self.x_pred = vec![0.0; n * dim];
-        self.f_new = vec![0.0; n * dim];
     }
 
     fn step(
@@ -240,80 +295,82 @@ impl Stepper for SaStepper {
     ) {
         let dim = model.dim();
         debug_assert_eq!(x.len(), n * dim);
-        let ends = step_ends(grid, i, i + 1);
+        let plan = &self.plan[i];
         // One ξ per step, shared by predictor and corrector (Alg. 1); skip
         // generation entirely on steps that inject none (see solve()).
-        let injects = self.opts.tau.int_tau2(ends.lam_s, ends.lam_t) > 0.0;
-        if injects {
+        if plan.injects {
             step_noise(noise, i, dim, n, &mut self.xi);
         } else if self.xi_dirty {
             self.xi.fill(0.0);
         }
-        let xi_was_filled = injects;
 
-        // --- Predictor (Eq. 14): s_eff most recent evals.
-        let s_eff = self.buffer.len().min(self.opts.predictor_steps);
-        let nodes: Vec<f64> = self.buffer.iter().take(s_eff).map(|e| grid.lams[e.idx]).collect();
-        let pc = coefficients(&nodes, &ends, &self.opts.tau, self.opts.prediction);
-        let fs = self.buffer.iter().take(s_eff).map(|e| e.f.as_slice());
-        apply_update(&pc, x, fs, &self.xi, &mut self.x_pred);
+        // --- Predictor (Eq. 14): s_eff most recent evals, combined in one
+        // fused pass (noise term included — exactly apply_update's order).
+        let s_eff = plan.pc.b.len();
+        debug_assert!(self.hist.len() >= s_eff);
+        // The plan assumed nodes λ_i, λ_{i−1}, …; the ring must agree, or
+        // precomputed coefficients would silently apply to wrong nodes.
+        debug_assert!(
+            self.hist.indices().take(s_eff).enumerate().all(|(j, idx)| idx == i - j),
+            "history ring indices diverged from the coefficient plan at step {i}"
+        );
+        self.offsets.clear();
+        self.offsets.extend(self.hist.offsets().take(s_eff));
+        crate::linalg::lincomb_into(
+            plan.pc.c0,
+            x,
+            Some((plan.pc.sigma_tilde, &self.xi)),
+            &plan.pc.b,
+            self.hist.data(),
+            &self.offsets,
+            &mut self.x_pred,
+        );
 
-        // --- Evaluate the model at the prediction (line 6/11).
-        model.eval_batch(&self.x_pred, &grid.ctx(i + 1), &mut self.f_new);
-        to_interp_space(self.opts.prediction, &self.x_pred, &mut self.f_new, grid, i + 1);
+        // --- Evaluate the model at the prediction (line 6/11), straight
+        // into the ring's free slot (the would-be f_new buffer).
+        model.eval_batch(&self.x_pred, &grid.ctx(i + 1), self.hist.free_mut());
+        to_interp_space(self.opts.prediction, &self.x_pred, self.hist.free_mut(), grid, i + 1);
 
         // --- Corrector (Eq. 17): prediction eval + ŝ_eff former evals.
-        if self.opts.corrector_steps > 0 {
-            let sc_eff = self.buffer.len().min(self.opts.corrector_steps);
-            let mut cnodes = Vec::with_capacity(sc_eff + 1);
-            cnodes.push(grid.lams[i + 1]);
-            cnodes.extend(self.buffer.iter().take(sc_eff).map(|e| grid.lams[e.idx]));
-            let cc = coefficients(&cnodes, &ends, &self.opts.tau, self.opts.prediction);
-            let fs = std::iter::once(self.f_new.as_slice())
-                .chain(self.buffer.iter().take(sc_eff).map(|e| e.f.as_slice()));
-            let mut x_next = std::mem::take(&mut self.x_pred);
-            apply_update(&cc, x, fs, &self.xi, &mut x_next);
-            x.copy_from_slice(&x_next);
-            self.x_pred = x_next;
-        } else {
-            x.copy_from_slice(&self.x_pred);
+        if let Some(cc) = &plan.cc {
+            let sc_eff = cc.b.len() - 1;
+            debug_assert!(self.hist.len() >= sc_eff);
+            self.offsets.clear();
+            self.offsets.push(self.hist.free_offset());
+            self.offsets.extend(self.hist.offsets().take(sc_eff));
+            crate::linalg::lincomb_into(
+                cc.c0,
+                x,
+                Some((cc.sigma_tilde, &self.xi)),
+                &cc.b,
+                self.hist.data(),
+                &self.offsets,
+                &mut self.x_pred,
+            );
         }
+        x.copy_from_slice(&self.x_pred);
 
-        self.xi_dirty = xi_was_filled;
-
-        // Recycle the evicted entry's allocation (as in solve()).
-        let recycled = if self.buffer.len() >= self.keep {
-            self.buffer.pop_back().map(|e| e.f)
-        } else {
-            None
-        };
-        let next = recycled.unwrap_or_else(|| vec![0.0; n * dim]);
-        let f = std::mem::replace(&mut self.f_new, next);
-        self.buffer.push_front(Entry { idx: i + 1, f });
-        while self.buffer.len() > self.keep {
-            self.buffer.pop_back();
-        }
+        self.xi_dirty = plan.injects;
+        self.hist.commit(i + 1);
     }
 
     fn retain_lanes(&mut self, keep: &[bool], dim: usize) {
-        for e in self.buffer.iter_mut() {
-            retain_rows(&mut e.f, keep, dim);
-        }
+        self.hist.retain_lanes(keep, dim);
         // ξ rows carry cross-step state only in the "stays zero" sense;
         // compacting survivor rows preserves both the zero and the filled
         // case bitwise.
         retain_rows(&mut self.xi, keep, dim);
         retain_rows(&mut self.x_pred, keep, dim);
-        retain_rows(&mut self.f_new, keep, dim);
     }
 
-    /// The carried state is the history buffer (values + grid indices) and
+    /// The carried state is the history ring (values + grid indices) and
     /// the `xi_dirty` flag. ξ itself is NOT serialized: its contents are
     /// only ever read on steps that inject no noise, and on those the
     /// uninterrupted run guarantees it is all zeros (either never filled or
     /// re-zeroed by the dirty check) — so restoring a zeroed ξ with the
-    /// saved flag is bit-identical. `x_pred`/`f_new` are pure scratch,
-    /// fully rewritten every step; only their lengths matter.
+    /// saved flag is bit-identical. `x_pred` and the ring's free slot are
+    /// pure scratch, fully rewritten every step; the coefficient table is
+    /// a pure function of (grid, opts) and is rebuilt on restore.
     fn snapshot(&self, lanes: usize, dim: usize) -> StepperState {
         StepperState {
             lanes,
@@ -322,24 +379,16 @@ impl Stepper for SaStepper {
                 ("xi_dirty", Value::Bool(self.xi_dirty)),
                 (
                     "buf_idx",
-                    Value::Array(
-                        self.buffer
-                            .iter()
-                            .map(|e| Value::Num(e.idx as f64))
-                            .collect(),
-                    ),
+                    Value::Array(self.hist.indices().map(|idx| Value::Num(idx as f64)).collect()),
                 ),
             ]),
-            mats: self
-                .buffer
-                .iter()
-                .enumerate()
-                .map(|(j, e)| (format!("buf{j}"), e.f.clone()))
+            mats: (0..self.hist.len())
+                .map(|j| (format!("buf{j}"), self.hist.entry(j).to_vec()))
                 .collect(),
         }
     }
 
-    fn restore(&mut self, state: &StepperState, dim: usize) -> Result<()> {
+    fn restore(&mut self, state: &StepperState, grid: &Grid, dim: usize) -> Result<()> {
         let idxs: Vec<usize> = state
             .scalars
             .get("buf_idx")
@@ -355,18 +404,52 @@ impl Stepper for SaStepper {
                 state.mats.len()
             )));
         }
-        self.buffer.clear();
+        if idxs.len() > self.keep {
+            return Err(Error::config(format!(
+                "sa snapshot has {} history entries but this config keeps {}",
+                idxs.len(),
+                self.keep
+            )));
+        }
+        // The precomputed coefficient plan assumes the ring holds exactly
+        // the newest min(front + 1, keep) evals at indices front, front−1,
+        // …; reject any snapshot that breaks that shape (corruption or a
+        // foreign writer) instead of silently applying coefficients to the
+        // wrong interpolation nodes.
+        check_contiguous_history(&idxs, self.keep, "sa")?;
+        self.plan = build_plan(&self.opts, grid, self.keep);
+        let len = state.lanes * dim;
+        self.hist = HistoryRing::new(self.keep, len);
         for (j, idx) in idxs.iter().enumerate() {
             // Front-to-back order, exactly as snapshotted.
-            self.buffer.push_back(Entry { idx: *idx, f: state.mat(&format!("buf{j}"))?.to_vec() });
+            self.hist.restore_entry(*idx, state.mat(&format!("buf{j}"))?);
         }
+        self.offsets = Vec::with_capacity(self.keep + 1);
         self.xi_dirty = state.scalars.opt_bool("xi_dirty", false);
-        let len = state.lanes * dim;
         self.xi = vec![0.0; len];
         self.x_pred = vec![0.0; len];
-        self.f_new = vec![0.0; len];
         Ok(())
     }
+}
+
+/// Validate a restored history-index sequence against the shape the
+/// precomputed coefficient plans assume: the newest `min(front + 1, keep)`
+/// evaluations at contiguous descending grid indices `front, front − 1, …`.
+/// Shared by the SA and UniPC steppers' `restore` so an inconsistent
+/// snapshot is a typed error, never silently-wrong coefficients.
+pub(crate) fn check_contiguous_history(idxs: &[usize], keep: usize, what: &str) -> Result<()> {
+    let Some(&front) = idxs.first() else {
+        return Err(Error::config(format!("{what} snapshot has an empty history buffer")));
+    };
+    let want_len = (front + 1).min(keep);
+    let contiguous = idxs.iter().enumerate().all(|(j, &idx)| front >= j && idx == front - j);
+    if !contiguous || idxs.len() != want_len {
+        return Err(Error::config(format!(
+            "{what} snapshot history indices {idxs:?} are not the contiguous run the \
+             coefficient plan assumes ({want_len} entries descending from {front})"
+        )));
+    }
+    Ok(())
 }
 
 /// Schedule endpoints for the step grid[i] → grid[j].
@@ -606,6 +689,20 @@ mod tests {
         assert!(xd.iter().all(|v| v.is_finite()));
         assert!(xn.iter().all(|v| v.is_finite()));
         assert_ne!(xd, xn, "parameterizations are different numerical schemes");
+    }
+
+    #[test]
+    fn restore_history_shape_check() {
+        // Valid shapes: contiguous descending run of min(front + 1, keep).
+        assert!(check_contiguous_history(&[3, 2, 1], 3, "sa").is_ok());
+        assert!(check_contiguous_history(&[0], 3, "sa").is_ok());
+        assert!(check_contiguous_history(&[1], 1, "sa").is_ok());
+        // Corrupt shapes are typed errors, not silently-wrong coefficients.
+        assert!(check_contiguous_history(&[], 3, "sa").is_err(), "empty");
+        assert!(check_contiguous_history(&[3, 1], 3, "sa").is_err(), "gap");
+        assert!(check_contiguous_history(&[3, 2], 3, "sa").is_err(), "too short");
+        assert!(check_contiguous_history(&[1, 0], 1, "sa").is_err(), "too long");
+        assert!(check_contiguous_history(&[2, 3], 3, "sa").is_err(), "ascending");
     }
 
     #[test]

@@ -124,7 +124,9 @@ pub fn hex_u64_array(v: &Value, key: &str) -> Result<Vec<u64>> {
 /// matrices are split/merged by lane rows, scalars must agree across shards.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepperState {
+    /// Number of lanes this state covers.
     pub lanes: usize,
+    /// Data dimension per lane.
     pub dim: usize,
     /// Solver-specific shared fields (a JSON object; empty when stateless).
     pub scalars: Value,
@@ -148,6 +150,7 @@ impl StepperState {
             .ok_or_else(|| Error::config(format!("stepper state missing matrix '{name}'")))
     }
 
+    /// Serialize to the versioned wire form (hex-encoded f64 payloads).
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("schema_version", Value::Num(SNAPSHOT_SCHEMA_VERSION as f64)),
@@ -171,6 +174,8 @@ impl StepperState {
         ])
     }
 
+    /// Parse the wire form; rejects newer schema versions and shape
+    /// mismatches with typed errors.
     pub fn from_json(v: &Value) -> Result<StepperState> {
         check_schema_version(v, "stepper state")?;
         let lanes = v.req_usize("lanes")?;

@@ -11,6 +11,14 @@
 //! cancelled request's lanes mid-run, and report per-step progress — the
 //! same structural move that unlocked continuous batching for LLM serving.
 //!
+//! The step path is **allocation-free after `init`**: steppers hold their
+//! temporaries in a [`crate::linalg::Scratch`] arena and their model-eval
+//! history in a [`HistoryRing`] (one contiguous arena addressed by slot
+//! offsets), both sized once at `init`; per-step coefficients are
+//! precomputed from the grid at `init`/`restore`. A counting-allocator
+//! test asserts zero heap allocations per [`Stepper::step`] call for
+//! every [`SolverKind`].
+//!
 //! Contract (asserted for every [`SolverKind`] in the equivalence suite):
 //! driving a stepper one step at a time is bit-identical to the monolithic
 //! seed-era `solve()` loop ([`crate::solvers::run_reference`]), for any
@@ -25,13 +33,46 @@ use crate::schedule::NoiseSchedule;
 use crate::solvers::snapshot::StepperState;
 use crate::solvers::{ddim, ddpm, dpm, edm, euler, sa, unipc, Grid};
 use crate::util::error::{Error, Result};
+use std::collections::VecDeque;
 
 /// One solver as an incremental per-step recurrence. All methods take the
 /// state `x` (row-major `n × dim`, evolved in place) plus the shared grid;
 /// the stepper owns only its history/buffer state between calls.
+///
+/// The full `init` / `step` × M / `finish` round-trip (what
+/// [`drive`] does):
+///
+/// ```
+/// use sadiff::config::SamplerConfig;
+/// use sadiff::gmm::Gmm;
+/// use sadiff::models::{GmmAnalytic, ModelEval};
+/// use sadiff::rng::normal::PhiloxNormal;
+/// use sadiff::schedule::{timesteps, NoiseSchedule};
+/// use sadiff::solvers::stepper::{make_stepper, Stepper};
+/// use sadiff::solvers::{prior_sample, Grid};
+///
+/// let model = GmmAnalytic::new(Gmm::structured(2, 2, 1.5, 3));
+/// let sch = NoiseSchedule::vp_linear();
+/// let cfg = SamplerConfig { nfe: 8, ..SamplerConfig::sa_default() };
+/// let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, cfg.steps_for_nfe()));
+/// let n = 2;
+/// let mut noise = PhiloxNormal::new(7);
+/// let mut x = prior_sample(&grid, model.dim(), n, &mut noise);
+///
+/// let mut st = make_stepper(&cfg, &sch);
+/// st.init(&model, &grid, &mut x, n, &mut noise);
+/// for i in 0..grid.m() {
+///     st.step(&model, &grid, i, &mut x, n, &mut noise); // a step boundary
+/// }
+/// st.finish(&mut x);
+/// assert!(x.iter().all(|v| v.is_finite()));
+/// ```
 pub trait Stepper: Send {
-    /// Warm-up before the first step (multistep schemes evaluate the model
-    /// at grid point 0 here). Must be called exactly once, before `step`.
+    /// Warm-up before the first step: multistep schemes evaluate the model
+    /// at grid point 0 here, and every scheme sizes its scratch arena /
+    /// history ring and precomputes its per-step coefficients from the
+    /// grid. Must be called exactly once, before `step` (unless the
+    /// stepper is rebuilt through [`Stepper::restore`] instead).
     fn init(
         &mut self,
         _model: &dyn ModelEval,
@@ -42,7 +83,8 @@ pub trait Stepper: Send {
     ) {
     }
 
-    /// Advance `x` from grid point `i` to `i + 1`.
+    /// Advance `x` from grid point `i` to `i + 1`. Performs no heap
+    /// allocation (asserted by the counting-allocator test).
     fn step(
         &mut self,
         model: &dyn ModelEval,
@@ -82,7 +124,11 @@ pub trait Stepper: Send {
 
     /// Restore a state captured by [`Stepper::snapshot`] into a freshly
     /// constructed stepper (replaces `init`; call before the next `step`).
-    fn restore(&mut self, state: &StepperState, _dim: usize) -> Result<()> {
+    /// The grid is the one the resumed solve runs on — identical to the
+    /// snapshotting process's grid because it is derived from the same
+    /// config — and is what lets history-buffer steppers rebuild their
+    /// precomputed per-step coefficient tables.
+    fn restore(&mut self, state: &StepperState, _grid: &Grid, _dim: usize) -> Result<()> {
         if !state.mats.is_empty() {
             return Err(Error::config(
                 "this stepper is memoryless but the snapshot carries per-lane state \
@@ -151,10 +197,136 @@ pub fn retain_rows(v: &mut Vec<f64>, keep: &[bool], dim: usize) {
     v.truncate(w * dim);
 }
 
-/// Grow-or-shrink a scratch buffer to `len` (contents are overwritten by
-/// the next step; only the length matters after a lane-count change).
-pub(crate) fn ensure_len(v: &mut Vec<f64>, len: usize) {
-    v.resize(len, 0.0);
+/// The model-evaluation history of a multistep scheme as one contiguous
+/// arena: `keep + 1` equally-sized slots — up to `keep` committed history
+/// entries plus one *free* slot the next evaluation writes into — so
+/// committing a new entry is a slot-index rotation, never a copy or an
+/// allocation, and the fused combination kernels
+/// ([`crate::linalg::lincomb_into`]) address entries by element offset
+/// into [`HistoryRing::data`].
+///
+/// Entries are ordered newest-first, exactly like the `VecDeque` of the
+/// seed-era loops, and carry the grid index they were evaluated at.
+#[derive(Debug)]
+pub struct HistoryRing {
+    buf: Vec<f64>,
+    chunk: usize,
+    keep: usize,
+    /// (grid index, slot) per committed entry, newest first.
+    ring: VecDeque<(usize, usize)>,
+    /// Slot the next evaluation writes into (never in `ring`).
+    free: usize,
+}
+
+impl HistoryRing {
+    /// An empty ring holding up to `keep ≥ 1` entries of `chunk` elements.
+    pub fn new(keep: usize, chunk: usize) -> HistoryRing {
+        debug_assert!(keep >= 1);
+        HistoryRing {
+            buf: vec![0.0; (keep + 1) * chunk],
+            chunk,
+            keep,
+            ring: VecDeque::with_capacity(keep + 1),
+            free: 0,
+        }
+    }
+
+    /// Committed entry count (≤ `keep`).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// True before the first [`HistoryRing::commit`].
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The whole arena, for offset-addressed kernels.
+    pub fn data(&self) -> &[f64] {
+        &self.buf
+    }
+
+    /// The free slot, mutably — the target of the next model evaluation.
+    pub fn free_mut(&mut self) -> &mut [f64] {
+        let c = self.chunk;
+        &mut self.buf[self.free * c..(self.free + 1) * c]
+    }
+
+    /// Element offset of the free slot in [`HistoryRing::data`].
+    pub fn free_offset(&self) -> usize {
+        self.free * self.chunk
+    }
+
+    /// Element offsets of the committed entries, newest first.
+    pub fn offsets(&self) -> impl Iterator<Item = usize> + '_ {
+        let c = self.chunk;
+        self.ring.iter().map(move |&(_, slot)| slot * c)
+    }
+
+    /// Grid indices of the committed entries, newest first.
+    pub fn indices(&self) -> impl Iterator<Item = usize> + '_ {
+        self.ring.iter().map(|&(idx, _)| idx)
+    }
+
+    /// The `j`-th newest committed entry.
+    pub fn entry(&self, j: usize) -> &[f64] {
+        let (_, slot) = self.ring[j];
+        &self.buf[slot * self.chunk..(slot + 1) * self.chunk]
+    }
+
+    /// Commit the free slot as the newest entry, evaluated at grid index
+    /// `idx`; if the ring already held `keep` entries, the oldest is
+    /// evicted and its slot becomes the new free slot. Allocation-free.
+    pub fn commit(&mut self, idx: usize) {
+        self.ring.push_front((idx, self.free));
+        if self.ring.len() > self.keep {
+            let (_, old) = self.ring.pop_back().expect("ring is non-empty after push");
+            self.free = old;
+        } else {
+            // Slots 0..ring.len() are in use; the next virgin slot is free
+            // (the arena holds keep + 1 slots, so this index is in bounds).
+            self.free = self.ring.len();
+        }
+    }
+
+    /// Restore-path append: add `data` as the entry *behind* all current
+    /// ones (snapshots list entries newest-first, so restoring them in
+    /// order rebuilds the exact ring). Panics if `data` is not slot-sized
+    /// or the ring is full.
+    pub fn restore_entry(&mut self, idx: usize, data: &[f64]) {
+        assert!(self.ring.len() < self.keep, "history ring overflow on restore");
+        assert_eq!(data.len(), self.chunk, "history entry size mismatch on restore");
+        let slot = self.ring.len();
+        self.buf[slot * self.chunk..(slot + 1) * self.chunk].copy_from_slice(data);
+        self.ring.push_back((idx, slot));
+        self.free = self.ring.len().min(self.keep);
+    }
+
+    /// Compact every slot (committed and free) to the surviving lanes:
+    /// keep row `l` iff `keep_mask[l]`, preserving surviving rows bitwise.
+    /// The slot size shrinks to `survivors × dim`.
+    pub fn retain_lanes(&mut self, keep_mask: &[bool], dim: usize) {
+        let old_chunk = self.chunk;
+        debug_assert_eq!(old_chunk, keep_mask.len() * dim, "ring chunk / keep mask mismatch");
+        let survivors = keep_mask.iter().filter(|k| **k).count();
+        let new_chunk = survivors * dim;
+        if new_chunk == old_chunk {
+            return;
+        }
+        let slots = self.keep + 1;
+        let mut w = 0usize;
+        for s in 0..slots {
+            let base = s * old_chunk;
+            for (l, &k) in keep_mask.iter().enumerate() {
+                if k {
+                    self.buf.copy_within(base + l * dim..base + (l + 1) * dim, w);
+                    w += dim;
+                }
+            }
+        }
+        self.buf.truncate(slots * new_chunk);
+        self.chunk = new_chunk;
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +349,73 @@ mod tests {
         let mut none = vec![1.0, 2.0];
         retain_rows(&mut none, &[false], 2);
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn history_ring_rotates_like_a_deque() {
+        let mut ring = HistoryRing::new(2, 2);
+        ring.free_mut().copy_from_slice(&[0.0, 0.5]);
+        ring.commit(0);
+        assert_eq!(ring.len(), 1);
+        ring.free_mut().copy_from_slice(&[1.0, 1.5]);
+        ring.commit(1);
+        ring.free_mut().copy_from_slice(&[2.0, 2.5]);
+        ring.commit(2);
+        // Newest first, capped at keep = 2.
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.indices().collect::<Vec<_>>(), vec![2, 1]);
+        assert_eq!(ring.entry(0), &[2.0, 2.5]);
+        assert_eq!(ring.entry(1), &[1.0, 1.5]);
+        // Offsets address the same entries through the arena.
+        let offs: Vec<usize> = ring.offsets().collect();
+        assert_eq!(&ring.data()[offs[0]..offs[0] + 2], &[2.0, 2.5]);
+        // The evicted entry's slot was recycled as the free slot.
+        assert_eq!(ring.free_offset() % 2, 0);
+        assert!(ring.free_offset() / 2 <= 2);
+    }
+
+    #[test]
+    fn history_ring_restore_rebuilds_order() {
+        let mut a = HistoryRing::new(3, 2);
+        for i in 0..3 {
+            let v = i as f64;
+            a.free_mut().copy_from_slice(&[v, v + 0.5]);
+            a.commit(i);
+        }
+        let entries: Vec<(usize, Vec<f64>)> =
+            (0..a.len()).map(|j| (a.indices().nth(j).unwrap(), a.entry(j).to_vec())).collect();
+        let mut b = HistoryRing::new(3, 2);
+        for (idx, data) in &entries {
+            b.restore_entry(*idx, data);
+        }
+        assert_eq!(a.indices().collect::<Vec<_>>(), b.indices().collect::<Vec<_>>());
+        for j in 0..a.len() {
+            assert_eq!(a.entry(j), b.entry(j), "entry {j}");
+        }
+        // The restored ring keeps committing correctly.
+        b.free_mut().fill(9.0);
+        b.commit(3);
+        assert_eq!(b.indices().next(), Some(3));
+        assert_eq!(b.entry(0), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn history_ring_retain_lanes_compacts_every_slot() {
+        // chunk = 3 lanes × dim 2; drop the middle lane and check every
+        // committed entry keeps its surviving rows bitwise.
+        let mut ring = HistoryRing::new(2, 6);
+        ring.free_mut().copy_from_slice(&[0.0, 0.1, 1.0, 1.1, 2.0, 2.1]);
+        ring.commit(0);
+        ring.free_mut().copy_from_slice(&[10.0, 10.1, 11.0, 11.1, 12.0, 12.1]);
+        ring.commit(1);
+        ring.retain_lanes(&[true, false, true], 2);
+        assert_eq!(ring.entry(0), &[10.0, 10.1, 12.0, 12.1]);
+        assert_eq!(ring.entry(1), &[0.0, 0.1, 2.0, 2.1]);
+        // The ring still rotates correctly at the new width.
+        ring.free_mut().copy_from_slice(&[20.0, 20.1, 22.0, 22.1]);
+        ring.commit(2);
+        assert_eq!(ring.entry(0), &[20.0, 20.1, 22.0, 22.1]);
+        assert_eq!(ring.entry(1), &[10.0, 10.1, 12.0, 12.1]);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::models::ModelEval;
 use crate::quad::adaptive_simpson;
 use crate::rng::normal::NormalSource;
 use crate::solvers::snapshot::StepperState;
-use crate::solvers::stepper::{ensure_len, retain_rows, Stepper};
+use crate::solvers::stepper::{retain_rows, HistoryRing, Stepper};
 use crate::solvers::Grid;
 use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
@@ -102,22 +102,74 @@ pub fn solve(
     }
 }
 
-/// UniPC-p as an incremental [`Stepper`]: the AB/AM history buffer is the
-/// carried state; coefficients are recomputed per step from the grid.
+/// Precomputed per-step UniPC coefficients: the AB predictor weights and
+/// (when the corrector is on) the AM corrector weights. The history depth
+/// at entry to step `i` is `min(i + 1, keep)` by construction, so the
+/// node sets — λ of the buffered evals, newest first — are a pure
+/// function of the grid; quadrature runs once at `init`/`restore`, never
+/// on the step hot path.
+struct UniPlan {
+    b: Vec<f64>,
+    bc: Option<Vec<f64>>,
+}
+
+fn build_plan(p: usize, pc: usize, keep: usize, grid: &Grid) -> Vec<UniPlan> {
+    let m = grid.m();
+    let mut plans = Vec::with_capacity(m);
+    let mut nodes: Vec<f64> = Vec::with_capacity(keep + 1);
+    for i in 0..m {
+        let (lam_s, lam_t) = (grid.lams[i], grid.lams[i + 1]);
+        let a_t = grid.alphas[i + 1];
+        let hist_len = (i + 1).min(keep);
+        let p_eff = hist_len.min(p);
+        nodes.clear();
+        nodes.extend((0..p_eff).map(|j| grid.lams[i - j]));
+        let b = ode_coeffs(&nodes, lam_s, lam_t, a_t);
+        let bc = if pc > 0 {
+            let pc_eff = hist_len.min(pc);
+            nodes.clear();
+            nodes.push(lam_t);
+            nodes.extend((0..pc_eff).map(|j| grid.lams[i - j]));
+            Some(ode_coeffs(&nodes, lam_s, lam_t, a_t))
+        } else {
+            None
+        };
+        plans.push(UniPlan { b, bc });
+    }
+    plans
+}
+
+/// UniPC-p as an incremental [`Stepper`]: the AB/AM history buffer is a
+/// contiguous [`HistoryRing`] arena (the carried state), the quadrature
+/// coefficients are precomputed into a `UniPlan` table at
+/// `init`/`restore`, and each step applies them through the fused
+/// [`crate::linalg::lincomb_into`] / [`crate::linalg::lincomb_inplace`]
+/// kernels with zero heap allocations.
 pub struct UniPcStepper {
     p: usize,
     pc: usize,
     keep: usize,
-    buffer: VecDeque<(usize, Vec<f64>)>,
+    plan: Vec<UniPlan>,
+    hist: HistoryRing,
+    offsets: Vec<usize>,
     x_pred: Vec<f64>,
-    f_new: Vec<f64>,
 }
 
 impl UniPcStepper {
+    /// A stepper with predictor order `p` and corrector order `pc`
+    /// (`pc = 0` disables the corrector).
     pub fn new(p: usize, pc: usize) -> Self {
         let p = p.max(1);
         let keep = p.max(pc).max(1);
-        UniPcStepper { p, pc, keep, buffer: VecDeque::new(), x_pred: Vec::new(), f_new: Vec::new() }
+        UniPcStepper {
+            p,
+            pc,
+            keep,
+            plan: Vec::new(),
+            hist: HistoryRing::new(keep, 0),
+            offsets: Vec::new(),
+            x_pred: Vec::new(),
+        }
     }
 }
 
@@ -131,11 +183,12 @@ impl Stepper for UniPcStepper {
         _noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        let mut f0 = vec![0.0; n * dim];
-        model.eval_batch(x, &grid.ctx(0), &mut f0);
-        self.buffer.push_front((0, f0));
+        self.plan = build_plan(self.p, self.pc, self.keep, grid);
+        self.hist = HistoryRing::new(self.keep, n * dim);
+        self.offsets = Vec::with_capacity(self.keep + 1);
+        model.eval_batch(x, &grid.ctx(0), self.hist.free_mut());
+        self.hist.commit(0);
         self.x_pred = vec![0.0; n * dim];
-        self.f_new = vec![0.0; n * dim];
     }
 
     fn step(
@@ -148,90 +201,73 @@ impl Stepper for UniPcStepper {
         _noise: &mut dyn NormalSource,
     ) {
         let dim = model.dim();
-        ensure_len(&mut self.x_pred, n * dim);
-        ensure_len(&mut self.f_new, n * dim);
-        let (lam_s, lam_t) = (grid.lams[i], grid.lams[i + 1]);
+        debug_assert_eq!(x.len(), n * dim);
+        let plan = &self.plan[i];
         let ratio = grid.sigmas[i + 1] / grid.sigmas[i];
-        let a_t = grid.alphas[i + 1];
 
-        // Predictor: AB over the p_eff most recent evals.
-        let p_eff = self.buffer.len().min(self.p);
-        let nodes: Vec<f64> = self.buffer.iter().take(p_eff).map(|(j, _)| grid.lams[*j]).collect();
-        let b = ode_coeffs(&nodes, lam_s, lam_t, a_t);
-        for k in 0..n * dim {
-            self.x_pred[k] = ratio * x[k];
-        }
-        for (bj, (_, f)) in b.iter().zip(self.buffer.iter().take(p_eff)) {
-            for k in 0..n * dim {
-                self.x_pred[k] += bj * f[k];
-            }
-        }
+        // Predictor: AB over the p_eff most recent evals, one fused pass.
+        let p_eff = plan.b.len();
+        debug_assert!(self.hist.len() >= p_eff);
+        // The plan assumed nodes λ_i, λ_{i−1}, …; the ring must agree, or
+        // precomputed coefficients would silently apply to wrong nodes.
+        debug_assert!(
+            self.hist.indices().take(p_eff).enumerate().all(|(j, idx)| idx == i - j),
+            "history ring indices diverged from the coefficient plan at step {i}"
+        );
+        self.offsets.clear();
+        self.offsets.extend(self.hist.offsets().take(p_eff));
+        crate::linalg::lincomb_into(
+            ratio,
+            x,
+            None,
+            &plan.b,
+            self.hist.data(),
+            &self.offsets,
+            &mut self.x_pred,
+        );
 
-        model.eval_batch(&self.x_pred, &grid.ctx(i + 1), &mut self.f_new);
+        model.eval_batch(&self.x_pred, &grid.ctx(i + 1), self.hist.free_mut());
 
-        if self.pc > 0 {
-            // Corrector: AM over {λ_{i+1}} ∪ pc_eff former evals.
-            let pc_eff = self.buffer.len().min(self.pc);
-            let mut cnodes = vec![lam_t];
-            cnodes.extend(self.buffer.iter().take(pc_eff).map(|(j, _)| grid.lams[*j]));
-            let bc = ode_coeffs(&cnodes, lam_s, lam_t, a_t);
-            for k in 0..n * dim {
-                x[k] = ratio * x[k] + bc[0] * self.f_new[k];
-            }
-            for (bj, (_, f)) in bc[1..].iter().zip(self.buffer.iter().take(pc_eff)) {
-                for k in 0..n * dim {
-                    x[k] += bj * f[k];
-                }
-            }
+        if let Some(bc) = &plan.bc {
+            // Corrector: AM over {λ_{i+1}} ∪ pc_eff former evals, applied
+            // in place on the carried state.
+            let pc_eff = bc.len() - 1;
+            debug_assert!(self.hist.len() >= pc_eff);
+            self.offsets.clear();
+            self.offsets.push(self.hist.free_offset());
+            self.offsets.extend(self.hist.offsets().take(pc_eff));
+            crate::linalg::lincomb_inplace(ratio, x, bc, self.hist.data(), &self.offsets);
         } else {
             x.copy_from_slice(&self.x_pred);
         }
 
-        // Recycle the evicted entry's allocation for the next step's
-        // f_new scratch (it is fully overwritten by the next eval), as
-        // SaStepper does — no steady-state allocation per step.
-        let recycled = if self.buffer.len() >= self.keep {
-            self.buffer.pop_back().map(|(_, f)| f)
-        } else {
-            None
-        };
-        let next = recycled.unwrap_or_else(|| vec![0.0; n * dim]);
-        let f = std::mem::replace(&mut self.f_new, next);
-        self.buffer.push_front((i + 1, f));
-        while self.buffer.len() > self.keep {
-            self.buffer.pop_back();
-        }
+        self.hist.commit(i + 1);
     }
 
     fn retain_lanes(&mut self, keep: &[bool], dim: usize) {
-        for (_, f) in self.buffer.iter_mut() {
-            retain_rows(f, keep, dim);
-        }
+        self.hist.retain_lanes(keep, dim);
         retain_rows(&mut self.x_pred, keep, dim);
-        retain_rows(&mut self.f_new, keep, dim);
     }
 
-    /// Carried state: the AB/AM history buffer (values + grid indices).
-    /// Coefficients are recomputed per step from the grid; `x_pred`/`f_new`
-    /// are scratch, fully rewritten every step.
+    /// Carried state: the AB/AM history ring (values + grid indices).
+    /// Coefficients are a pure function of the grid (rebuilt on restore);
+    /// `x_pred` and the ring's free slot are scratch, fully rewritten
+    /// every step.
     fn snapshot(&self, lanes: usize, dim: usize) -> StepperState {
         StepperState {
             lanes,
             dim,
             scalars: Value::obj(vec![(
                 "buf_idx",
-                Value::Array(self.buffer.iter().map(|(j, _)| Value::Num(*j as f64)).collect()),
+                Value::Array(self.hist.indices().map(|idx| Value::Num(idx as f64)).collect()),
             )]),
-            mats: self
-                .buffer
-                .iter()
-                .enumerate()
-                .map(|(j, (_, f))| (format!("buf{j}"), f.clone()))
+            mats: (0..self.hist.len())
+                .map(|j| (format!("buf{j}"), self.hist.entry(j).to_vec()))
                 .collect(),
         }
     }
 
-    fn restore(&mut self, state: &StepperState, dim: usize) -> Result<()> {
+    fn restore(&mut self, state: &StepperState, grid: &Grid, dim: usize) -> Result<()> {
         let idxs: Vec<usize> = state
             .scalars
             .get("buf_idx")
@@ -249,14 +285,26 @@ impl Stepper for UniPcStepper {
                 state.mats.len()
             )));
         }
-        self.buffer.clear();
+        if idxs.len() > self.keep {
+            return Err(Error::config(format!(
+                "unipc snapshot has {} history entries but this config keeps {}",
+                idxs.len(),
+                self.keep
+            )));
+        }
+        // The precomputed plan assumes the ring shape min(front + 1, keep)
+        // at indices front, front−1, … — reject inconsistent snapshots
+        // (see the same check in the SA stepper).
+        crate::solvers::sa::check_contiguous_history(&idxs, self.keep, "unipc")?;
+        self.plan = build_plan(self.p, self.pc, self.keep, grid);
+        let len = state.lanes * dim;
+        self.hist = HistoryRing::new(self.keep, len);
         for (j, idx) in idxs.iter().enumerate() {
             // Front-to-back order, exactly as snapshotted.
-            self.buffer.push_back((*idx, state.mat(&format!("buf{j}"))?.to_vec()));
+            self.hist.restore_entry(*idx, state.mat(&format!("buf{j}"))?);
         }
-        let len = state.lanes * dim;
+        self.offsets = Vec::with_capacity(self.keep + 1);
         self.x_pred = vec![0.0; len];
-        self.f_new = vec![0.0; len];
         Ok(())
     }
 }

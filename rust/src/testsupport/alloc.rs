@@ -1,0 +1,60 @@
+//! A counting global allocator for allocation-budget assertions: tests and
+//! benches install [`CountingAlloc`] with `#[global_allocator]` and read
+//! the process-wide allocation counter around a region of interest.
+//!
+//! This is what enforces the stepper hot-path contract — **zero heap
+//! allocations per `Stepper::step` call after `init`** — and what
+//! `bench_perf` uses to report allocations-per-step for the monolithic
+//! reference loop vs the stepper driver in `BENCH_perf.json`.
+//!
+//! The counter is a single relaxed atomic incremented on `alloc`,
+//! `alloc_zeroed` and `realloc` (deallocations are free and not counted),
+//! so readings taken while *other* threads allocate include their traffic:
+//! keep measured regions single-threaded (the allocation-budget test runs
+//! as the only test in its binary).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of heap allocations (alloc / alloc_zeroed / realloc calls) made
+/// process-wide since startup, when [`CountingAlloc`] is installed as the
+/// global allocator. Always 0 otherwise.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// A [`System`]-backed allocator that counts allocation calls. Install in
+/// a test or bench binary with:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: sadiff::testsupport::alloc::CountingAlloc =
+///     sadiff::testsupport::alloc::CountingAlloc;
+/// ```
+pub struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// `GlobalAlloc` contract; the counter increment has no effect on layout or
+// pointer validity.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

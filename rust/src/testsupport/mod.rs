@@ -1,6 +1,10 @@
 //! A miniature property-testing harness (proptest is not in the offline
 //! vendor set): seeded generators over a fixed number of cases with
 //! first-failure reporting. Deterministic per seed so failures reproduce.
+//! Also home to the counting global allocator ([`alloc`]) behind the
+//! allocation-budget assertions.
+
+pub mod alloc;
 
 use crate::config::{SamplerConfig, SolverKind};
 use crate::rng::Xoshiro256pp;

@@ -1,0 +1,107 @@
+//! The allocation-free hot-path contract: after `Stepper::init`, stepping
+//! any solver in the zoo performs ZERO heap allocations — the history
+//! ring, scratch arena, noise buffer and per-step coefficient tables are
+//! all sized at `init`, and the fused `linalg` kernels operate in place.
+//!
+//! Asserted with a counting global allocator, which counts process-wide:
+//! everything lives in ONE `#[test]` so no concurrent test pollutes the
+//! counter (this binary is registered with its own `[[test]] `target).
+
+use sadiff::config::{Prediction, SamplerConfig, SolverKind, TauKind};
+use sadiff::models::{EvalCtx, ModelEval};
+use sadiff::rng::normal::PhiloxNormal;
+use sadiff::schedule::{timesteps, NoiseSchedule};
+use sadiff::solvers::stepper::{make_stepper, Stepper};
+use sadiff::solvers::{prior_sample, Grid};
+use sadiff::testsupport::alloc::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// A model that predicts x₀̂ = x (pure copy): evaluates without touching
+/// the heap, so the measurement isolates the *stepper's* allocations.
+struct CopyModel {
+    dim: usize,
+}
+
+impl ModelEval for CopyModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn eval_batch(&self, xs: &[f64], _ctx: &EvalCtx, out: &mut [f64]) {
+        out.copy_from_slice(xs);
+    }
+}
+
+/// Drive `cfg` for `m` steps after `init` and return the allocation count
+/// across the step loop (plus `finish`).
+fn allocs_across_steps(cfg: &SamplerConfig, n: usize, dim: usize) -> u64 {
+    let sch = NoiseSchedule::vp_linear();
+    let model = CopyModel { dim };
+    let m = cfg.steps_for_nfe();
+    let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+    let mut noise = PhiloxNormal::new(7);
+    let mut x = prior_sample(&grid, dim, n, &mut noise);
+    let mut st = make_stepper(cfg, &sch);
+    st.init(&model, &grid, &mut x, n, &mut noise);
+    let before = alloc_count();
+    for i in 0..m {
+        st.step(&model, &grid, i, &mut x, n, &mut noise);
+    }
+    st.finish(&mut x);
+    let allocs = alloc_count() - before;
+    assert!(x.iter().all(|v| v.is_finite()), "{:?}: non-finite output", cfg.solver);
+    allocs
+}
+
+#[test]
+fn stepper_step_allocates_nothing_after_init_for_every_solver() {
+    // Per-solver defaults first: all nine SolverKinds.
+    for kind in SolverKind::all() {
+        let mut cfg = SamplerConfig::for_solver(*kind);
+        cfg.nfe = 14;
+        let allocs = allocs_across_steps(&cfg, 6, 4);
+        assert_eq!(allocs, 0, "{kind:?}: {allocs} heap allocations across the step loop");
+    }
+
+    // Config-dependent branches: SA with an interval τ (ξ refilled on some
+    // steps, re-zeroed on others), SA noise prediction, SA predictor-only
+    // ODE, deep history (s = ŝ = 4), and UniPC predictor-only.
+    let mut sa_interval = SamplerConfig::sa_default();
+    sa_interval.nfe = 16;
+    sa_interval.tau_kind = TauKind::IntervalSigma { sigma_lo: 0.05, sigma_hi: 1.0 };
+    sa_interval.predictor_steps = 2;
+    sa_interval.corrector_steps = 2;
+
+    let mut sa_noise = SamplerConfig::sa_default();
+    sa_noise.nfe = 12;
+    sa_noise.prediction = Prediction::Noise;
+    sa_noise.tau = 0.4;
+    sa_noise.corrector_steps = 1;
+
+    let mut sa_ode = SamplerConfig::sa_default();
+    sa_ode.nfe = 12;
+    sa_ode.tau = 0.0;
+    sa_ode.corrector_steps = 0;
+
+    let mut sa_deep = SamplerConfig::sa_default();
+    sa_deep.nfe = 16;
+    sa_deep.predictor_steps = 4;
+    sa_deep.corrector_steps = 4;
+
+    let mut unipc_p = SamplerConfig::for_solver(SolverKind::UniPc);
+    unipc_p.nfe = 12;
+    unipc_p.predictor_steps = 2;
+    unipc_p.corrector_steps = 0;
+
+    for (name, cfg) in [
+        ("sa interval-tau", sa_interval),
+        ("sa noise-prediction", sa_noise),
+        ("sa predictor-only ODE", sa_ode),
+        ("sa deep history", sa_deep),
+        ("unipc corrector-off", unipc_p),
+    ] {
+        let allocs = allocs_across_steps(&cfg, 5, 3);
+        assert_eq!(allocs, 0, "{name}: {allocs} heap allocations across the step loop");
+    }
+}
