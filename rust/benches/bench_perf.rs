@@ -27,6 +27,17 @@
 //!     headline `stepper_allocs_per_step_after_init` (asserted 0 in
 //!     `integration_alloc`, reported here for the perf trajectory).
 //!
+//! Kernel roofline microbench (always runs, `--quick` shrinks shapes):
+//!   * every fused `linalg` kernel measured on the scalar reference tier
+//!     vs the dispatched wide tier (docs/KERNELS.md), reporting bytes
+//!     moved, FLOPs, kernel calls ("steps") per second, GB/s and GFLOP/s
+//!     per tier, plus which dispatch was chosen and why — emitted as the
+//!     `kernels` section of `BENCH_perf.json`. The fused kernels are
+//!     gated on scalar == wide **bitwise**; the opt-in tolerance lane
+//!     (`dot_relaxed`) is gated on its documented error bound. CI fails
+//!     the lane if the dispatch or a fallback reason is missing from the
+//!     report (no silent scalar fallback).
+//!
 //! Flags: `--quick` (smaller shapes), `--out <path>` for the stepper
 //! report (default `BENCH_stepper.json`), `--perf-out <path>` for the
 //! steps/sec + allocations report (default `BENCH_perf.json`).
@@ -38,6 +49,7 @@ use sadiff::coordinator::SampleRequest;
 use sadiff::exec::Executor;
 use sadiff::gmm::Gmm;
 use sadiff::jsonlite::{to_string, Value};
+use sadiff::linalg::simd::{self, Dispatch};
 use sadiff::models::{EvalCtx, GmmAnalytic, ModelEval};
 use sadiff::rng::normal::PhiloxNormal;
 use sadiff::schedule::{timesteps, NoiseSchedule, StepSelector};
@@ -92,7 +104,8 @@ fn main() {
         l3_sections(&sch);
     }
     stepper_section(quick, &out_path);
-    perf_section(quick, &perf_out_path);
+    let kernels = kernel_section(quick);
+    perf_section(quick, &perf_out_path, kernels);
 
     // --- 5. Artifact round-trips (skipped without `make artifacts`).
     artifact_section();
@@ -276,13 +289,233 @@ fn stepper_section(quick: bool, out_path: &str) {
     }
 }
 
+/// Time one kernel call: `min` over `iters` timed batches of `reps`
+/// calls, in nanoseconds per call.
+fn bench_ns<F: FnMut()>(iters: usize, reps: usize, mut f: F) -> f64 {
+    let (_, min) = time_it(iters, || {
+        for _ in 0..reps {
+            f();
+        }
+    });
+    min / reps as f64 * 1e9
+}
+
+/// Roofline-style kernel microbench: every fused `linalg` kernel on the
+/// scalar reference tier vs the dispatched wide tier, at a streaming
+/// (cache-exceeding) state size. One kernel call is one solver-step
+/// update of a state this size, so calls/sec is reported as
+/// `steps_per_sec`. Returns the `kernels` object merged into
+/// `BENCH_perf.json` by [`perf_section`].
+fn kernel_section(quick: bool) -> Value {
+    let wide = simd::dispatch();
+    let fallback = simd::fallback_reason();
+    println!(
+        "\nkernel tier dispatch: {} ({}){}",
+        wide.label(),
+        simd::dispatch_source(),
+        fallback.map(|r| format!(" — fallback: {r}")).unwrap_or_default()
+    );
+
+    let n = if quick { 1usize << 16 } else { 1 << 20 };
+    let (iters, reps) = if quick { (3usize, 20usize) } else { (5, 60) };
+    let nf = n as f64;
+    let x: Vec<f64> = (0..n).map(|k| (k as f64 * 0.37).sin() + 0.1).collect();
+    let xi: Vec<f64> = (0..n).map(|k| (k as f64 * 0.71).cos()).collect();
+    let y0: Vec<f64> = (0..n).map(|k| (k as f64 * 0.11).cos()).collect();
+    let max_s = 6usize;
+    let hist: Vec<f64> = (0..max_s * n).map(|k| (k as f64 * 0.13).sin()).collect();
+    let all_offsets: Vec<usize> = (0..max_s).map(|j| j * n).collect();
+    let all_b: Vec<f64> = (0..max_s).map(|j| 0.3 - 0.07 * j as f64).collect();
+
+    let mut rows: Vec<Value> = Vec::new();
+    let mut all_identical = true;
+    let mut push_row = |name: &str,
+                        s: usize,
+                        bytes: f64,
+                        flops: f64,
+                        scalar_ns: f64,
+                        wide_ns: f64,
+                        identical: bool| {
+        println!(
+            "kernel {name:<22} s={s}: scalar {:>7.0} ns/step ({:>5.1} GB/s), {} {:>7.0} ns/step \
+             ({:>5.1} GB/s), speedup ×{:.2} (identical: {identical})",
+            scalar_ns,
+            bytes / scalar_ns,
+            wide.label(),
+            wide_ns,
+            bytes / wide_ns,
+            scalar_ns / wide_ns
+        );
+        rows.push(Value::obj(vec![
+            ("kernel", Value::Str(name.into())),
+            ("history_terms", Value::Num(s as f64)),
+            ("bytes_per_call", Value::Num(bytes)),
+            ("flops_per_call", Value::Num(flops)),
+            ("scalar_ns_per_call", Value::Num(scalar_ns)),
+            ("wide_ns_per_call", Value::Num(wide_ns)),
+            ("scalar_steps_per_sec", Value::Num(1e9 / scalar_ns)),
+            ("wide_steps_per_sec", Value::Num(1e9 / wide_ns)),
+            ("scalar_gbps", Value::Num(bytes / scalar_ns)),
+            ("wide_gbps", Value::Num(bytes / wide_ns)),
+            ("scalar_gflops", Value::Num(flops / scalar_ns)),
+            ("wide_gflops", Value::Num(flops / wide_ns)),
+            ("speedup", Value::Num(scalar_ns / wide_ns)),
+            ("identical", Value::Bool(identical)),
+        ]));
+    };
+
+    // axpy_into: read x + read/write y = 24 B/elem, 2 flops/elem.
+    {
+        let mut ys = y0.clone();
+        let sc = bench_ns(iters, reps, || {
+            simd::axpy_into_with(Dispatch::Scalar, 1e-3, &x, &mut ys)
+        });
+        let mut yw = y0.clone();
+        let wd = bench_ns(iters, reps, || simd::axpy_into_with(wide, 1e-3, &x, &mut yw));
+        let mut a = y0.clone();
+        simd::axpy_into_with(Dispatch::Scalar, 0.3, &x, &mut a);
+        let mut b = y0.clone();
+        simd::axpy_into_with(wide, 0.3, &x, &mut b);
+        all_identical &= a == b;
+        push_row("axpy_into", 0, 24.0 * nf, 2.0 * nf, sc, wd, a == b);
+    }
+
+    // sub_into: read a + b, write out = 24 B/elem, 1 flop/elem.
+    {
+        let mut out = vec![0.0; n];
+        let sc = bench_ns(iters, reps, || simd::sub_into_with(Dispatch::Scalar, &x, &xi, &mut out));
+        let wd = bench_ns(iters, reps, || simd::sub_into_with(wide, &x, &xi, &mut out));
+        let mut a = vec![0.0; n];
+        simd::sub_into_with(Dispatch::Scalar, &x, &xi, &mut a);
+        let mut b = vec![0.0; n];
+        simd::sub_into_with(wide, &x, &xi, &mut b);
+        all_identical &= a == b;
+        push_row("sub_into", 0, 24.0 * nf, nf, sc, wd, a == b);
+    }
+
+    // scale_add: read/write y + read x = 24 B/elem, 3 flops/elem.
+    {
+        let mut ys = y0.clone();
+        let sc = bench_ns(iters, reps, || {
+            simd::scale_add_with(Dispatch::Scalar, &mut ys, 0.999, 1e-3, &x)
+        });
+        let mut yw = y0.clone();
+        let wd = bench_ns(iters, reps, || simd::scale_add_with(wide, &mut yw, 0.999, 1e-3, &x));
+        let mut a = y0.clone();
+        simd::scale_add_with(Dispatch::Scalar, &mut a, 0.9, 0.2, &x);
+        let mut b = y0.clone();
+        simd::scale_add_with(wide, &mut b, 0.9, 0.2, &x);
+        all_identical &= a == b;
+        push_row("scale_add", 0, 24.0 * nf, 3.0 * nf, sc, wd, a == b);
+    }
+
+    // fma_noise: read/write x + read xi = 24 B/elem, 2 flops/elem.
+    {
+        let mut ys = y0.clone();
+        let sc =
+            bench_ns(iters, reps, || simd::fma_noise_with(Dispatch::Scalar, &mut ys, 1e-3, &xi));
+        let mut yw = y0.clone();
+        let wd = bench_ns(iters, reps, || simd::fma_noise_with(wide, &mut yw, 1e-3, &xi));
+        let mut a = y0.clone();
+        simd::fma_noise_with(Dispatch::Scalar, &mut a, 0.4, &xi);
+        let mut b = y0.clone();
+        simd::fma_noise_with(wide, &mut b, 0.4, &xi);
+        all_identical &= a == b;
+        push_row("fma_noise", 0, 24.0 * nf, 2.0 * nf, sc, wd, a == b);
+    }
+
+    // lincomb_into with noise, orders 1–4 (monomorphized reference arms)
+    // plus 6 (dynamic/blocked arm): read x + xi + s·hist, write out =
+    // (3 + s)·8 B/elem; c0·x + σ·ξ + add + s·(mul + add) = 3 + 2s flops.
+    for s in [1usize, 2, 3, 4, 6] {
+        let b_s = &all_b[..s];
+        let off_s = &all_offsets[..s];
+        let noise = Some((0.02, &xi[..]));
+        let mut out = vec![0.0; n];
+        let sc = bench_ns(iters, reps, || {
+            simd::lincomb_into_with(Dispatch::Scalar, 0.9, &x, noise, b_s, &hist, off_s, &mut out)
+        });
+        let wd = bench_ns(iters, reps, || {
+            simd::lincomb_into_with(wide, 0.9, &x, noise, b_s, &hist, off_s, &mut out)
+        });
+        let mut a = vec![0.0; n];
+        simd::lincomb_into_with(Dispatch::Scalar, 0.9, &x, noise, b_s, &hist, off_s, &mut a);
+        let mut w = vec![0.0; n];
+        simd::lincomb_into_with(wide, 0.9, &x, noise, b_s, &hist, off_s, &mut w);
+        all_identical &= a == w;
+        let name = format!("lincomb_into_s{s}");
+        let bytes = (3.0 + s as f64) * 8.0 * nf;
+        push_row(&name, s, bytes, (3.0 + 2.0 * s as f64) * nf, sc, wd, a == w);
+    }
+
+    // lincomb_inplace, order 3: read/write x + s·hist = (2 + s)·8 B/elem,
+    // 1 + 2s flops.
+    {
+        let s = 3usize;
+        let b_s = &all_b[..s];
+        let off_s = &all_offsets[..s];
+        let mut ys = y0.clone();
+        let sc = bench_ns(iters, reps, || {
+            simd::lincomb_inplace_with(Dispatch::Scalar, 0.99, &mut ys, b_s, &hist, off_s)
+        });
+        let mut yw = y0.clone();
+        let wd = bench_ns(iters, reps, || {
+            simd::lincomb_inplace_with(wide, 0.99, &mut yw, b_s, &hist, off_s)
+        });
+        let mut a = y0.clone();
+        simd::lincomb_inplace_with(Dispatch::Scalar, 0.9, &mut a, b_s, &hist, off_s);
+        let mut w = y0.clone();
+        simd::lincomb_inplace_with(wide, 0.9, &mut w, b_s, &hist, off_s);
+        all_identical &= a == w;
+        push_row("lincomb_inplace_s3", s, (2.0 + s as f64) * 8.0 * nf, 7.0 * nf, sc, wd, a == w);
+    }
+
+    // dot_relaxed — the tolerance lane: 16 B/elem read, 2 flops/elem.
+    // Not bit-identical by design; gated on the documented error bound.
+    {
+        let sc = bench_ns(iters, reps, || {
+            std::hint::black_box(simd::dot_relaxed_with(Dispatch::Scalar, &x, &xi));
+        });
+        let wd = bench_ns(iters, reps, || {
+            std::hint::black_box(simd::dot_relaxed_with(wide, &x, &xi));
+        });
+        let exact = simd::dot_relaxed_with(Dispatch::Scalar, &x, &xi);
+        let relaxed = simd::dot_relaxed_with(wide, &x, &xi);
+        let scale: f64 = x.iter().zip(&xi).map(|(a, b)| (a * b).abs()).sum();
+        let in_bound = (relaxed - exact).abs() <= 1e-12 * scale.max(1.0);
+        all_identical &= in_bound;
+        push_row("dot_relaxed", 0, 16.0 * nf, 2.0 * nf, sc, wd, in_bound);
+    }
+
+    if !all_identical {
+        eprintln!("FAIL: a wide-tier kernel diverged from the scalar reference tier");
+        std::process::exit(1);
+    }
+
+    Value::obj(vec![
+        ("dispatch", Value::Str(wide.label().into())),
+        ("dispatch_source", Value::Str(simd::dispatch_source().into())),
+        (
+            "fallback",
+            match fallback {
+                Some(r) => Value::Str(r.into()),
+                None => Value::Null,
+            },
+        ),
+        ("block_elems", Value::Num(simd::BLOCK as f64)),
+        ("len", Value::Num(nf)),
+        ("roofline", Value::Array(rows)),
+    ])
+}
+
 /// Steps/sec + allocations-per-step: the seed-era monolithic loop (the
 /// pre-change baseline, retained verbatim as `run_reference`) against the
 /// allocation-free stepper driver, on a free model so solver overhead —
 /// coefficients, fused updates, RNG, allocator traffic — is the whole
 /// measurement. Both numbers land in `BENCH_perf.json` so the perf
-/// trajectory records before AND after in the same run.
-fn perf_section(quick: bool, out_path: &str) {
+/// trajectory records before AND after in the same run, alongside the
+/// `kernels` roofline section from [`kernel_section`].
+fn perf_section(quick: bool, out_path: &str, kernels: Value) {
     let sch = NoiseSchedule::vp_linear();
     let (n, dim, nfe, iters) =
         if quick { (64usize, 16usize, 16usize, 3usize) } else { (256, 32, 32, 6) };
@@ -367,6 +600,7 @@ fn perf_section(quick: bool, out_path: &str) {
         ("stepper_allocs_per_step_after_init", Value::Num(step_allocs as f64 / m as f64)),
         ("speedup", Value::Num(ref_min / drv_min)),
         ("identical", Value::Bool(identical)),
+        ("kernels", kernels),
     ]);
     if let Err(e) = std::fs::write(out_path, format!("{}\n", to_string(&report))) {
         eprintln!("cannot write {out_path}: {e}");

@@ -12,6 +12,19 @@
 //!   that lets a stepper run with **zero heap allocations per step** after
 //!   its `init` (asserted by a counting-allocator test).
 //!
+//! The hot-path kernels are themselves tiered (normative reference:
+//! docs/KERNELS.md). The functions in this module are **transparent
+//! dispatch entry points**: they route to the widest kernel tier the
+//! host supports — explicit `std::arch` f64×4 SIMD on x86_64 with AVX2,
+//! a cache-blocked portable wide tier elsewhere — as resolved once per
+//! process by [`simd::dispatch`]. Every tier is **bit-identical** to
+//! the pinned-FP-order reference implementations in [`scalar`] (the
+//! wide tiers run the same per-element operation sequence, just
+//! lane-parallel), so the system's bit-identity contracts are
+//! unaffected by dispatch. The one deliberately non-identical kernel,
+//! the reduction [`simd::dot_relaxed`], is opt-in by name at the call
+//! site and never routed through these entry points.
+//!
 //! All hot-path kernels operate on caller-provided slices and never
 //! allocate. Aliasing preconditions are the ones Rust's borrow rules
 //! enforce: output slices are exclusive borrows, so they cannot overlap
@@ -20,15 +33,18 @@
 //! kernels index `hist[offsets[j] + k]` for `k < out.len()`).
 
 pub mod mat;
+pub mod scalar;
 pub mod scratch;
+pub mod simd;
 
 pub use mat::Mat;
 pub use scratch::Scratch;
 
-/// Dot product.
+/// Dot product, sequential left-to-right accumulation (the pinned
+/// reference order; see [`simd::dot_relaxed`] for the opt-in tolerance
+/// lane).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    scalar::dot(a, b)
 }
 
 /// Squared Euclidean norm.
@@ -42,11 +58,10 @@ pub fn norm2(a: &[f64]) -> f64 {
 }
 
 /// `y[k] += alpha · x[k]`, in place on a caller-provided output slice.
+/// Dispatches to the active kernel tier ([`simd::dispatch`]);
+/// bit-identical to [`scalar::axpy_into`] on every tier.
 pub fn axpy_into(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy_into_with(simd::dispatch(), alpha, x, y);
 }
 
 /// `y += alpha · x` — alias retained for existing callers; the canonical
@@ -56,7 +71,8 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 }
 
 /// Elementwise `out[k] = a[k] − b[k]`, in place on a caller-provided
-/// output slice.
+/// output slice. Dispatches to the active kernel tier; bit-identical to
+/// [`scalar::sub_into`] on every tier.
 ///
 /// ```
 /// let mut out = [0.0; 3];
@@ -64,11 +80,7 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 /// assert_eq!(out, [3.0, 3.0, 3.0]);
 /// ```
 pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(a.len(), b.len());
-    debug_assert_eq!(a.len(), out.len());
-    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
-        *o = x - y;
-    }
+    simd::sub_into_with(simd::dispatch(), a, b, out);
 }
 
 /// Elementwise `a − b` into a fresh `Vec`.
@@ -83,44 +95,45 @@ pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
 }
 
 /// Fused scale-and-accumulate: `y[k] = a · y[k] + b · x[k]` in a single
-/// pass (one read and one write of `y`, one read of `x`).
+/// pass (one read and one write of `y`, one read of `x`). Dispatches to
+/// the active kernel tier; bit-identical to [`scalar::scale_add`] on
+/// every tier.
 pub fn scale_add(y: &mut [f64], a: f64, b: f64, x: &[f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi = a * *yi + b * xi;
-    }
+    simd::scale_add_with(simd::dispatch(), y, a, b, x);
 }
 
 /// Stochastic-term update: `x[k] += sigma · xi[k]` — the `σ̃ ξ` injection
 /// of an SDE step applied to an already-computed deterministic part.
+/// Dispatches to the active kernel tier; bit-identical to
+/// [`scalar::fma_noise`] on every tier.
 ///
 /// The in-tree steppers fuse their noise term into a single-pass update
 /// ([`lincomb_into`]'s `noise` parameter, or a bespoke fused loop) rather
 /// than paying a second sweep; this kernel is for compositions that
 /// already have the deterministic part in place.
 pub fn fma_noise(x: &mut [f64], sigma: f64, xi: &[f64]) {
-    debug_assert_eq!(x.len(), xi.len());
-    for (v, z) in x.iter_mut().zip(xi) {
-        *v += sigma * z;
-    }
+    simd::fma_noise_with(simd::dispatch(), x, sigma, xi);
 }
 
 /// The fused stochastic-Adams combination kernel:
 ///
 /// `out[k] = c0 · x[k]  [+ sigma · xi[k]]  + Σ_j b[j] · hist[offsets[j] + k]`
 ///
-/// in a **single pass** over the state — one read of each operand, one
-/// write of `out`. This is the per-step update of SA-Solver's predictor
-/// and corrector (Eqs. (14)/(17)) with the history buffers living in one
-/// contiguous arena (`hist`) addressed by element offsets, so applying an
-/// s-step combination costs no allocation and no gather indirection
-/// beyond `s` base offsets. The multi-pass alternative costs `2 + s`
-/// extra state-sized memory sweeps (bench_perf, §Perf).
+/// with one read of each operand and one write of `out`. This is the
+/// per-step update of SA-Solver's predictor and corrector (Eqs.
+/// (14)/(17)) with the history buffers living in one contiguous arena
+/// (`hist`) addressed by element offsets, so applying an s-step
+/// combination costs no allocation and no gather indirection beyond `s`
+/// base offsets. The multi-pass alternative costs `2 + s` extra
+/// state-sized memory sweeps (bench_perf, §Perf; the wide tiers hide
+/// exactly that cost behind L1-resident cache blocks — see
+/// docs/KERNELS.md).
 ///
 /// The per-element evaluation order is fixed — `c0·x`, then the noise
 /// term, then the history terms in `offsets` order — because downstream
 /// bit-identity contracts (stepper ≡ reference, snapshot golden fixtures)
-/// pin the exact floating-point result.
+/// pin the exact floating-point result. Dispatches to the active kernel
+/// tier; bit-identical to [`scalar::lincomb_into`] on every tier.
 ///
 /// Preconditions: `b.len() == offsets.len()`, `x.len() == out.len()`
 /// (likewise `xi` when present), and `offsets[j] + out.len() ≤
@@ -144,150 +157,17 @@ pub fn lincomb_into(
     offsets: &[usize],
     out: &mut [f64],
 ) {
-    debug_assert_eq!(b.len(), offsets.len());
-    debug_assert_eq!(x.len(), out.len());
-    match noise {
-        Some((sigma, xi)) => {
-            debug_assert_eq!(xi.len(), out.len());
-            match b.len() {
-                1 => noise_pass::<1>(c0, x, sigma, xi, b, hist, offsets, out),
-                2 => noise_pass::<2>(c0, x, sigma, xi, b, hist, offsets, out),
-                3 => noise_pass::<3>(c0, x, sigma, xi, b, hist, offsets, out),
-                4 => noise_pass::<4>(c0, x, sigma, xi, b, hist, offsets, out),
-                _ => noise_pass_dyn(c0, x, sigma, xi, b, hist, offsets, out),
-            }
-        }
-        None => match b.len() {
-            1 => ode_pass::<1>(c0, x, b, hist, offsets, out),
-            2 => ode_pass::<2>(c0, x, b, hist, offsets, out),
-            3 => ode_pass::<3>(c0, x, b, hist, offsets, out),
-            4 => ode_pass::<4>(c0, x, b, hist, offsets, out),
-            _ => ode_pass_dyn(c0, x, b, hist, offsets, out),
-        },
-    }
+    simd::lincomb_into_with(simd::dispatch(), c0, x, noise, b, hist, offsets, out);
 }
 
 /// In-place variant of [`lincomb_into`] without a noise term:
 /// `x[k] = c0 · x[k] + Σ_j b[j] · hist[offsets[j] + k]`. Used by corrector
 /// updates that overwrite the carried state directly (`x` is read exactly
-/// once per element before it is written).
+/// once per element before it is written). Dispatches to the active
+/// kernel tier; bit-identical to [`scalar::lincomb_inplace`] on every
+/// tier.
 pub fn lincomb_inplace(c0: f64, x: &mut [f64], b: &[f64], hist: &[f64], offsets: &[usize]) {
-    debug_assert_eq!(b.len(), offsets.len());
-    match b.len() {
-        1 => inplace_pass::<1>(c0, x, b, hist, offsets),
-        2 => inplace_pass::<2>(c0, x, b, hist, offsets),
-        3 => inplace_pass::<3>(c0, x, b, hist, offsets),
-        4 => inplace_pass::<4>(c0, x, b, hist, offsets),
-        _ => inplace_pass_dyn(c0, x, b, hist, offsets),
-    }
-}
-
-/// Monomorphized fused pass with the noise term, for the common small
-/// orders (lets the compiler unroll the history loop).
-#[allow(clippy::too_many_arguments)]
-fn noise_pass<const S: usize>(
-    c0: f64,
-    x: &[f64],
-    sigma: f64,
-    xi: &[f64],
-    b: &[f64],
-    hist: &[f64],
-    offsets: &[usize],
-    out: &mut [f64],
-) {
-    let mut bb = [0.0f64; S];
-    bb.copy_from_slice(&b[..S]);
-    let mut off = [0usize; S];
-    off.copy_from_slice(&offsets[..S]);
-    for k in 0..out.len() {
-        let mut acc = c0 * x[k] + sigma * xi[k];
-        for j in 0..S {
-            acc += bb[j] * hist[off[j] + k];
-        }
-        out[k] = acc;
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn noise_pass_dyn(
-    c0: f64,
-    x: &[f64],
-    sigma: f64,
-    xi: &[f64],
-    b: &[f64],
-    hist: &[f64],
-    offsets: &[usize],
-    out: &mut [f64],
-) {
-    for k in 0..out.len() {
-        let mut acc = c0 * x[k] + sigma * xi[k];
-        for (bj, oj) in b.iter().zip(offsets) {
-            acc += bj * hist[oj + k];
-        }
-        out[k] = acc;
-    }
-}
-
-/// Monomorphized fused pass without a noise term.
-fn ode_pass<const S: usize>(
-    c0: f64,
-    x: &[f64],
-    b: &[f64],
-    hist: &[f64],
-    offsets: &[usize],
-    out: &mut [f64],
-) {
-    let mut bb = [0.0f64; S];
-    bb.copy_from_slice(&b[..S]);
-    let mut off = [0usize; S];
-    off.copy_from_slice(&offsets[..S]);
-    for k in 0..out.len() {
-        let mut acc = c0 * x[k];
-        for j in 0..S {
-            acc += bb[j] * hist[off[j] + k];
-        }
-        out[k] = acc;
-    }
-}
-
-fn ode_pass_dyn(c0: f64, x: &[f64], b: &[f64], hist: &[f64], offsets: &[usize], out: &mut [f64]) {
-    for k in 0..out.len() {
-        let mut acc = c0 * x[k];
-        for (bj, oj) in b.iter().zip(offsets) {
-            acc += bj * hist[oj + k];
-        }
-        out[k] = acc;
-    }
-}
-
-fn inplace_pass<const S: usize>(
-    c0: f64,
-    x: &mut [f64],
-    b: &[f64],
-    hist: &[f64],
-    offsets: &[usize],
-) {
-    let mut bb = [0.0f64; S];
-    bb.copy_from_slice(&b[..S]);
-    let mut off = [0usize; S];
-    off.copy_from_slice(&offsets[..S]);
-    for k in 0..x.len() {
-        let mut acc = c0 * x[k];
-        for j in 0..S {
-            acc += bb[j] * hist[off[j] + k];
-        }
-        x[k] = acc;
-    }
-}
-
-fn inplace_pass_dyn(c0: f64, x: &mut [f64], b: &[f64], hist: &[f64], offsets: &[usize]) {
-    for k in 0..x.len() {
-        let mut acc = c0 * x[k];
-        for (bj, oj) in b.iter().zip(offsets) {
-            acc += bj * hist[oj + k];
-        }
-        x[k] = acc;
-    }
+    simd::lincomb_inplace_with(simd::dispatch(), c0, x, b, hist, offsets);
 }
 
 #[cfg(test)]
@@ -323,9 +203,10 @@ mod tests {
     #[test]
     fn lincomb_matches_reference_loops() {
         // A 3-entry history arena with an awkward slot order; compare the
-        // fused kernels against a straightforward multi-pass evaluation,
-        // bitwise, with and without the noise term, across the
-        // monomorphized and dynamic dispatch arms.
+        // fused kernels (through whatever tier the dispatch selected)
+        // against a straightforward multi-pass evaluation, bitwise, with
+        // and without the noise term, across the monomorphized and
+        // dynamic reference arms.
         let n = 7usize;
         let hist: Vec<f64> = (0..5 * n).map(|k| (k as f64 * 0.37).sin()).collect();
         let x: Vec<f64> = (0..n).map(|k| (k as f64 * 0.11).cos()).collect();

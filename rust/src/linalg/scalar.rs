@@ -1,0 +1,230 @@
+//! The **scalar reference tier** of the fused-kernel layer: the pinned
+//! floating-point-evaluation-order implementations every other tier is
+//! measured against.
+//!
+//! These are the normative kernels (docs/KERNELS.md): for each element
+//! `k`, the exact sequence of IEEE-754 operations — multiplies, adds, and
+//! their association — is part of the public contract, because the
+//! system's bit-identity suites (stepper ≡ reference, snapshot goldens,
+//! threads ≡ sequential) pin the exact `f64` results. A wide tier
+//! ([`crate::linalg::simd`]) may only replace a scalar kernel if it
+//! performs the *same per-element operation sequence* — lane-parallel
+//! across elements, never reassociated within one — or if the call site
+//! explicitly opts into the documented tolerance lane
+//! ([`crate::linalg::simd::dot_relaxed`]).
+//!
+//! Call these directly to force the reference tier regardless of what the
+//! runtime dispatch selected (tests and the roofline microbench do); the
+//! public entry points in [`crate::linalg`] dispatch automatically.
+
+/// Scalar reference `y[k] += alpha · x[k]`.
+///
+/// Per-element order: one multiply, one add, in index order.
+pub fn axpy_into(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Scalar reference `out[k] = a[k] − b[k]`.
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// Scalar reference fused scale-and-accumulate:
+/// `y[k] = a · y[k] + b · x[k]`.
+///
+/// Per-element order: `a·y`, then `b·x`, then their sum (left to right, no
+/// fused multiply-add).
+pub fn scale_add(y: &mut [f64], a: f64, b: f64, x: &[f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * *yi + b * xi;
+    }
+}
+
+/// Scalar reference stochastic-term update `x[k] += sigma · xi[k]`.
+pub fn fma_noise(x: &mut [f64], sigma: f64, xi: &[f64]) {
+    debug_assert_eq!(x.len(), xi.len());
+    for (v, z) in x.iter_mut().zip(xi) {
+        *v += sigma * z;
+    }
+}
+
+/// Scalar reference left-to-right dot product `Σ_k a[k] · b[k]`.
+///
+/// The accumulation order is a single accumulator in index order — the
+/// sequential sum every tolerance bound in the wide tier is stated
+/// against.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Scalar reference fused stochastic-Adams combination:
+///
+/// `out[k] = c0 · x[k]  [+ sigma · xi[k]]  + Σ_j b[j] · hist[offsets[j] + k]`
+///
+/// Pinned per-element order: `c0·x[k]`, then the noise term when present,
+/// then the history terms in ascending `j` — each as a separate multiply
+/// and add (no reassociation, no fused multiply-add). Preconditions as on
+/// [`crate::linalg::lincomb_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn lincomb_into(
+    c0: f64,
+    x: &[f64],
+    noise: Option<(f64, &[f64])>,
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(b.len(), offsets.len());
+    debug_assert_eq!(x.len(), out.len());
+    match noise {
+        Some((sigma, xi)) => {
+            debug_assert_eq!(xi.len(), out.len());
+            match b.len() {
+                1 => noise_pass::<1>(c0, x, sigma, xi, b, hist, offsets, out),
+                2 => noise_pass::<2>(c0, x, sigma, xi, b, hist, offsets, out),
+                3 => noise_pass::<3>(c0, x, sigma, xi, b, hist, offsets, out),
+                4 => noise_pass::<4>(c0, x, sigma, xi, b, hist, offsets, out),
+                _ => noise_pass_dyn(c0, x, sigma, xi, b, hist, offsets, out),
+            }
+        }
+        None => match b.len() {
+            1 => ode_pass::<1>(c0, x, b, hist, offsets, out),
+            2 => ode_pass::<2>(c0, x, b, hist, offsets, out),
+            3 => ode_pass::<3>(c0, x, b, hist, offsets, out),
+            4 => ode_pass::<4>(c0, x, b, hist, offsets, out),
+            _ => ode_pass_dyn(c0, x, b, hist, offsets, out),
+        },
+    }
+}
+
+/// Scalar reference in-place combination
+/// `x[k] = c0 · x[k] + Σ_j b[j] · hist[offsets[j] + k]` (same pinned order
+/// as [`lincomb_into`]; `x[k]` is read exactly once before it is written).
+pub fn lincomb_inplace(c0: f64, x: &mut [f64], b: &[f64], hist: &[f64], offsets: &[usize]) {
+    debug_assert_eq!(b.len(), offsets.len());
+    match b.len() {
+        1 => inplace_pass::<1>(c0, x, b, hist, offsets),
+        2 => inplace_pass::<2>(c0, x, b, hist, offsets),
+        3 => inplace_pass::<3>(c0, x, b, hist, offsets),
+        4 => inplace_pass::<4>(c0, x, b, hist, offsets),
+        _ => inplace_pass_dyn(c0, x, b, hist, offsets),
+    }
+}
+
+/// Monomorphized fused pass with the noise term, for the common small
+/// orders (lets the compiler unroll the history loop).
+#[allow(clippy::too_many_arguments)]
+fn noise_pass<const S: usize>(
+    c0: f64,
+    x: &[f64],
+    sigma: f64,
+    xi: &[f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    let mut bb = [0.0f64; S];
+    bb.copy_from_slice(&b[..S]);
+    let mut off = [0usize; S];
+    off.copy_from_slice(&offsets[..S]);
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k] + sigma * xi[k];
+        for j in 0..S {
+            acc += bb[j] * hist[off[j] + k];
+        }
+        out[k] = acc;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn noise_pass_dyn(
+    c0: f64,
+    x: &[f64],
+    sigma: f64,
+    xi: &[f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k] + sigma * xi[k];
+        for (bj, oj) in b.iter().zip(offsets) {
+            acc += bj * hist[oj + k];
+        }
+        out[k] = acc;
+    }
+}
+
+/// Monomorphized fused pass without a noise term.
+fn ode_pass<const S: usize>(
+    c0: f64,
+    x: &[f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    let mut bb = [0.0f64; S];
+    bb.copy_from_slice(&b[..S]);
+    let mut off = [0usize; S];
+    off.copy_from_slice(&offsets[..S]);
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k];
+        for j in 0..S {
+            acc += bb[j] * hist[off[j] + k];
+        }
+        out[k] = acc;
+    }
+}
+
+fn ode_pass_dyn(c0: f64, x: &[f64], b: &[f64], hist: &[f64], offsets: &[usize], out: &mut [f64]) {
+    for k in 0..out.len() {
+        let mut acc = c0 * x[k];
+        for (bj, oj) in b.iter().zip(offsets) {
+            acc += bj * hist[oj + k];
+        }
+        out[k] = acc;
+    }
+}
+
+fn inplace_pass<const S: usize>(
+    c0: f64,
+    x: &mut [f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+) {
+    let mut bb = [0.0f64; S];
+    bb.copy_from_slice(&b[..S]);
+    let mut off = [0usize; S];
+    off.copy_from_slice(&offsets[..S]);
+    for k in 0..x.len() {
+        let mut acc = c0 * x[k];
+        for j in 0..S {
+            acc += bb[j] * hist[off[j] + k];
+        }
+        x[k] = acc;
+    }
+}
+
+fn inplace_pass_dyn(c0: f64, x: &mut [f64], b: &[f64], hist: &[f64], offsets: &[usize]) {
+    for k in 0..x.len() {
+        let mut acc = c0 * x[k];
+        for (bj, oj) in b.iter().zip(offsets) {
+            acc += bj * hist[oj + k];
+        }
+        x[k] = acc;
+    }
+}

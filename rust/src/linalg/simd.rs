@@ -1,0 +1,829 @@
+//! The **wide kernel tier**: explicitly vectorized (f64×4 via
+//! `std::arch`) and cache-blocked implementations of the fused kernels,
+//! behind a runtime-detected dispatch.
+//!
+//! Tier structure (normative reference: docs/KERNELS.md):
+//!
+//! * [`Dispatch::Scalar`] — the pinned-FP-order reference tier
+//!   ([`crate::linalg::scalar`]). Never removed; every other tier is
+//!   gated on producing **bit-identical** results to it.
+//! * [`Dispatch::Portable`] — cache-blocked loops restructured into
+//!   per-term streaming passes that LLVM autovectorizes to the widest
+//!   lanes the build target allows (f64×8 under `-C target-cpu=native`
+//!   on an AVX-512 host). Same per-element operation sequence as
+//!   scalar, so bit-identical by construction.
+//! * [`Dispatch::Avx2`] — `std::arch::x86_64` 4-lane `f64` kernels
+//!   (256-bit loads, separate multiply and add — **never** a fused
+//!   multiply-add, which would change the rounding) selected when the
+//!   host supports AVX2: at compile time under `-C target-cpu`, by
+//!   runtime CPUID detection otherwise. Each SIMD lane executes exactly
+//!   the scalar per-element operation sequence, so this tier is also
+//!   bit-identical to the reference.
+//!
+//! The only kernel that is *not* bit-identical across tiers is the
+//! explicitly opt-in reduction [`dot_relaxed`], which reassociates the
+//! accumulation into per-lane partial sums. It is the **tolerance
+//! lane**: call sites choose it by name, never through the transparent
+//! dispatch, and its error bound is documented on the function. Nothing
+//! on a bit-identity path (steppers, `run_reference`, snapshot
+//! fixtures) uses it.
+//!
+//! Dispatch is resolved once per process ([`dispatch`]) and cached; the
+//! `SADIFF_SIMD` environment variable (`scalar` | `portable` | `avx2` |
+//! `auto`) overrides detection for A/B testing and for forcing the
+//! reference tier in benchmarks. The first call reads the environment
+//! (which may allocate), so [`crate::solvers::stepper::make_stepper`]
+//! warms the cache at construction time — keeping the per-step path's
+//! zero-allocation contract intact.
+
+use crate::linalg::scalar;
+use std::sync::OnceLock;
+
+/// Elements per cache block: every per-term pass re-reads the output
+/// tile while it is still resident in L1 (16 KiB per `f64` tile, half a
+/// typical 32 KiB L1d, leaving room for the streaming history operand).
+pub const BLOCK: usize = 2048;
+
+/// Lane width of the portable tier's reduction ([`dot_relaxed`]) —
+/// f64×8: one AVX-512 vector, two AVX vectors, or four NEON vectors.
+pub const PORTABLE_WIDTH: usize = 8;
+
+/// Which kernel tier the transparent entry points in [`crate::linalg`]
+/// route to. All variants produce bit-identical results for the fused
+/// kernels; they differ only in speed ([`dot_relaxed`] is the lone,
+/// opt-in exception).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The pinned-FP-order reference tier ([`crate::linalg::scalar`]).
+    Scalar,
+    /// Cache-blocked autovectorizable streaming passes (any target).
+    Portable,
+    /// Explicit 4-lane `f64` kernels via `std::arch` (x86_64 + AVX2).
+    Avx2,
+}
+
+impl Dispatch {
+    /// Stable lowercase name, used in logs and `BENCH_perf.json`
+    /// (`"scalar"` / `"portable"` / `"avx2"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Portable => "portable",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this tier can run on the current host. `Scalar` and
+    /// `Portable` always can; `Avx2` requires an x86_64 host with AVX2
+    /// (compile-time enabled or CPUID-detected).
+    pub fn available(self) -> bool {
+        match self {
+            Dispatch::Scalar | Dispatch::Portable => true,
+            Dispatch::Avx2 => avx2_available(),
+        }
+    }
+
+    /// Every tier that can run on this host, reference tier first.
+    /// Tests sweep this to assert cross-tier bit-identity.
+    pub fn all_available() -> Vec<Dispatch> {
+        let mut tiers = vec![Dispatch::Scalar, Dispatch::Portable];
+        if Dispatch::Avx2.available() {
+            tiers.push(Dispatch::Avx2);
+        }
+        tiers
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    cfg!(target_feature = "avx2") || is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// (tier, how it was selected, why the wide tier was skipped, if it was).
+static DISPATCH: OnceLock<(Dispatch, &'static str, Option<&'static str>)> = OnceLock::new();
+
+fn resolve() -> (Dispatch, &'static str, Option<&'static str>) {
+    if let Ok(forced) = std::env::var("SADIFF_SIMD") {
+        match forced.as_str() {
+            "scalar" => {
+                return (Dispatch::Scalar, "env", Some("SADIFF_SIMD forced the reference tier"));
+            }
+            "portable" => return (Dispatch::Portable, "env", None),
+            "avx2" => {
+                if avx2_available() {
+                    return (Dispatch::Avx2, "env", None);
+                }
+                return (Dispatch::Portable, "env", Some("SADIFF_SIMD=avx2 but host lacks AVX2"));
+            }
+            // Anything else (including "auto") falls through to detection.
+            _ => {}
+        }
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> (Dispatch, &'static str, Option<&'static str>) {
+    if cfg!(target_feature = "avx2") {
+        (Dispatch::Avx2, "compile-time", None)
+    } else if is_x86_feature_detected!("avx2") {
+        (Dispatch::Avx2, "runtime", None)
+    } else {
+        (Dispatch::Portable, "runtime", Some("x86_64 host without AVX2"))
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_arch() -> (Dispatch, &'static str, Option<&'static str>) {
+    (Dispatch::Portable, "compile-time", Some("no std::arch wide tier for this target arch"))
+}
+
+/// The tier the transparent [`crate::linalg`] entry points route to on
+/// this host, resolved once and cached for the process lifetime.
+///
+/// Selection order: the `SADIFF_SIMD` environment variable if set to a
+/// tier name, else compile-time `target_feature` (a `-C
+/// target-cpu=native` build dispatches statically), else runtime CPUID
+/// detection, else the portable tier. The returned tier is always
+/// [`Dispatch::available`].
+///
+/// ```
+/// use sadiff::linalg::simd::{dispatch, Dispatch};
+/// let d = dispatch();
+/// assert!(d.available());
+/// assert!(["scalar", "portable", "avx2"].contains(&d.label()));
+/// assert!(Dispatch::all_available().contains(&d));
+/// ```
+pub fn dispatch() -> Dispatch {
+    DISPATCH.get_or_init(resolve).0
+}
+
+/// How [`dispatch`] was decided: `"env"`, `"compile-time"` or
+/// `"runtime"`. Logged into `BENCH_perf.json` so CI can prove the
+/// selection was recorded, not silently defaulted.
+pub fn dispatch_source() -> &'static str {
+    DISPATCH.get_or_init(resolve).1
+}
+
+/// Why the widest tier was *not* selected, when it wasn't (e.g.
+/// `"x86_64 host without AVX2"`). `None` when the AVX2 tier is active
+/// or the portable tier was explicitly requested. CI fails the
+/// kernel-bench lane if the dispatch fell back to a narrower tier
+/// without this reason being logged.
+pub fn fallback_reason() -> Option<&'static str> {
+    DISPATCH.get_or_init(resolve).2
+}
+
+/// `y[k] += alpha · x[k]` on an explicit tier. Panics if `d` is not
+/// [`Dispatch::available`] or on length mismatch.
+pub fn axpy_into_with(d: Dispatch, alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(x.len(), y.len(), "axpy_into: length mismatch");
+    match d {
+        // The scalar form is already the optimal streaming shape for
+        // the autovectorizer; the portable tier adds nothing here.
+        Dispatch::Scalar | Dispatch::Portable => scalar::axpy_into(alpha, x, y),
+        Dispatch::Avx2 => avx2_call::axpy_into(alpha, x, y),
+    }
+}
+
+/// `out[k] = a[k] − b[k]` on an explicit tier. Panics if `d` is not
+/// [`Dispatch::available`] or on length mismatch.
+pub fn sub_into_with(d: Dispatch, a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(a.len(), b.len(), "sub_into: length mismatch");
+    assert_eq!(a.len(), out.len(), "sub_into: length mismatch");
+    match d {
+        Dispatch::Scalar | Dispatch::Portable => scalar::sub_into(a, b, out),
+        Dispatch::Avx2 => avx2_call::sub_into(a, b, out),
+    }
+}
+
+/// `y[k] = a · y[k] + b · x[k]` on an explicit tier. Panics if `d` is
+/// not [`Dispatch::available`] or on length mismatch.
+pub fn scale_add_with(d: Dispatch, y: &mut [f64], a: f64, b: f64, x: &[f64]) {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(x.len(), y.len(), "scale_add: length mismatch");
+    match d {
+        Dispatch::Scalar | Dispatch::Portable => scalar::scale_add(y, a, b, x),
+        Dispatch::Avx2 => avx2_call::scale_add(y, a, b, x),
+    }
+}
+
+/// `x[k] += sigma · xi[k]` on an explicit tier. Panics if `d` is not
+/// [`Dispatch::available`] or on length mismatch.
+pub fn fma_noise_with(d: Dispatch, x: &mut [f64], sigma: f64, xi: &[f64]) {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(x.len(), xi.len(), "fma_noise: length mismatch");
+    match d {
+        Dispatch::Scalar | Dispatch::Portable => scalar::fma_noise(x, sigma, xi),
+        Dispatch::Avx2 => avx2_call::fma_noise(x, sigma, xi),
+    }
+}
+
+/// The fused stochastic-Adams combination
+/// (`out[k] = c0·x[k] [+ σ·ξ[k]] + Σ_j b[j]·hist[offsets[j]+k]`) on an
+/// explicit tier, bit-identical to
+/// [`crate::linalg::scalar::lincomb_into`] on every tier. Panics if
+/// `d` is not [`Dispatch::available`] or a precondition fails.
+///
+/// ```
+/// use sadiff::linalg::{scalar, simd};
+/// let hist = [1.0, 1.0, 10.0, 10.0]; // two slots of length 2
+/// let x = [4.0, 8.0];
+/// let (b, offs) = ([2.0, 3.0], [0usize, 2]);
+/// let mut want = [0.0; 2];
+/// scalar::lincomb_into(0.5, &x, None, &b, &hist, &offs, &mut want);
+/// for d in simd::Dispatch::all_available() {
+///     let mut got = [0.0; 2];
+///     simd::lincomb_into_with(d, 0.5, &x, None, &b, &hist, &offs, &mut got);
+///     assert_eq!(got, want, "tier {} must be bit-identical", d.label());
+/// }
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn lincomb_into_with(
+    d: Dispatch,
+    c0: f64,
+    x: &[f64],
+    noise: Option<(f64, &[f64])>,
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+    out: &mut [f64],
+) {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(b.len(), offsets.len(), "lincomb_into: coefficient / offset mismatch");
+    assert_eq!(x.len(), out.len(), "lincomb_into: length mismatch");
+    if let Some((_, xi)) = noise {
+        assert_eq!(xi.len(), out.len(), "lincomb_into: noise length mismatch");
+    }
+    for &o in offsets {
+        assert!(o + out.len() <= hist.len(), "lincomb_into: history offset out of bounds");
+    }
+    match d {
+        Dispatch::Scalar => scalar::lincomb_into(c0, x, noise, b, hist, offsets, out),
+        Dispatch::Portable => portable::lincomb_into(c0, x, noise, b, hist, offsets, out),
+        Dispatch::Avx2 => avx2_call::lincomb_into(c0, x, noise, b, hist, offsets, out),
+    }
+}
+
+/// In-place fused combination
+/// (`x[k] = c0·x[k] + Σ_j b[j]·hist[offsets[j]+k]`) on an explicit
+/// tier, bit-identical to [`crate::linalg::scalar::lincomb_inplace`]
+/// on every tier. Panics if `d` is not [`Dispatch::available`] or a
+/// precondition fails.
+pub fn lincomb_inplace_with(
+    d: Dispatch,
+    c0: f64,
+    x: &mut [f64],
+    b: &[f64],
+    hist: &[f64],
+    offsets: &[usize],
+) {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(b.len(), offsets.len(), "lincomb_inplace: coefficient / offset mismatch");
+    for &o in offsets {
+        assert!(o + x.len() <= hist.len(), "lincomb_inplace: history offset out of bounds");
+    }
+    match d {
+        Dispatch::Scalar => scalar::lincomb_inplace(c0, x, b, hist, offsets),
+        Dispatch::Portable => portable::lincomb_inplace(c0, x, b, hist, offsets),
+        Dispatch::Avx2 => avx2_call::lincomb_inplace(c0, x, b, hist, offsets),
+    }
+}
+
+/// **Tolerance-lane** dot product `Σ_k a[k] · b[k]` — the one wide
+/// kernel that is *not* bit-identical to the reference tier.
+///
+/// The wide tiers accumulate into per-lane partial sums (4 lanes on
+/// AVX2, [`PORTABLE_WIDTH`] on the portable tier) and combine them in
+/// a fixed order, so the result is deterministic *per tier* but
+/// differs from the sequential left-to-right sum of
+/// [`crate::linalg::scalar::dot`] by reassociation error only. The
+/// standard bound covers both orderings: for `n`-element inputs,
+///
+/// `|dot_relaxed(a, b) − dot(a, b)| ≤ 2 · γ(n) · Σ_k |a[k]·b[k]|`
+/// with `γ(n) = n·ε / (1 − n·ε)`, `ε = 2⁻⁵³`
+///
+/// — a relative error (w.r.t. `Σ|a·b|`) below `1e-9` for any
+/// `n ≤ 2²⁰`, and far smaller in practice. Call sites that feed a
+/// bit-identity contract must use [`crate::linalg::dot`]; this lane is
+/// for throughput-bound reductions that tolerate the bound above, and
+/// is selected **by name at the call site**, never by the transparent
+/// dispatch.
+///
+/// ```
+/// use sadiff::linalg::{scalar, simd};
+/// let a: Vec<f64> = (0..1000).map(|k| (k as f64 * 0.37).sin()).collect();
+/// let b: Vec<f64> = (0..1000).map(|k| (k as f64 * 0.11).cos()).collect();
+/// let exact = scalar::dot(&a, &b);
+/// let relaxed = simd::dot_relaxed(&a, &b);
+/// let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+/// assert!((relaxed - exact).abs() <= 1e-12 * scale.max(1.0));
+/// ```
+pub fn dot_relaxed(a: &[f64], b: &[f64]) -> f64 {
+    dot_relaxed_with(dispatch(), a, b)
+}
+
+/// [`dot_relaxed`] on an explicit tier ([`Dispatch::Scalar`] gives the
+/// exact sequential sum). Panics if `d` is not [`Dispatch::available`]
+/// or on length mismatch.
+pub fn dot_relaxed_with(d: Dispatch, a: &[f64], b: &[f64]) -> f64 {
+    assert!(d.available(), "kernel tier {} unavailable on this host", d.label());
+    assert_eq!(a.len(), b.len(), "dot_relaxed: length mismatch");
+    match d {
+        Dispatch::Scalar => scalar::dot(a, b),
+        Dispatch::Portable => portable::dot_relaxed(a, b),
+        Dispatch::Avx2 => avx2_call::dot_relaxed(a, b),
+    }
+}
+
+/// Portable wide tier: the fused combination restructured into
+/// cache-blocked per-term streaming passes. Each pass is a two-operand
+/// unit-stride loop with no cross-iteration dependency — the shape LLVM
+/// reliably autovectorizes — while the per-element operation sequence
+/// (`c0·x`, noise, history terms in ascending `j`) is exactly the
+/// scalar reference order, so results are bit-identical.
+mod portable {
+    use super::{BLOCK, PORTABLE_WIDTH};
+
+    pub(super) fn lincomb_into(
+        c0: f64,
+        x: &[f64],
+        noise: Option<(f64, &[f64])>,
+        b: &[f64],
+        hist: &[f64],
+        offsets: &[usize],
+        out: &mut [f64],
+    ) {
+        let n = out.len();
+        let mut base = 0usize;
+        while base < n {
+            let end = (base + BLOCK).min(n);
+            // Pass 1: out ← c0·x (+ σ·ξ) over the block.
+            match noise {
+                Some((sigma, xi)) => {
+                    for k in base..end {
+                        out[k] = c0 * x[k] + sigma * xi[k];
+                    }
+                }
+                None => {
+                    for k in base..end {
+                        out[k] = c0 * x[k];
+                    }
+                }
+            }
+            // One streaming pass per history term; the out tile stays
+            // in L1 across all of them. Ascending j preserves the
+            // pinned per-element accumulation order.
+            for (bj, oj) in b.iter().zip(offsets) {
+                let h = &hist[oj + base..oj + end];
+                let o = &mut out[base..end];
+                for (ok, hk) in o.iter_mut().zip(h) {
+                    *ok += bj * hk;
+                }
+            }
+            base = end;
+        }
+    }
+
+    pub(super) fn lincomb_inplace(
+        c0: f64,
+        x: &mut [f64],
+        b: &[f64],
+        hist: &[f64],
+        offsets: &[usize],
+    ) {
+        let n = x.len();
+        let mut base = 0usize;
+        while base < n {
+            let end = (base + BLOCK).min(n);
+            // x[k]'s original value only feeds the c0·x term, so
+            // scaling the block first is exact.
+            for k in base..end {
+                x[k] *= c0;
+            }
+            for (bj, oj) in b.iter().zip(offsets) {
+                let h = &hist[oj + base..oj + end];
+                let o = &mut x[base..end];
+                for (ok, hk) in o.iter_mut().zip(h) {
+                    *ok += bj * hk;
+                }
+            }
+            base = end;
+        }
+    }
+
+    /// Tolerance lane: `PORTABLE_WIDTH` interleaved partial sums, a
+    /// left-to-right combine, then the tail terms in index order.
+    pub(super) fn dot_relaxed(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; PORTABLE_WIDTH];
+        let mut ca = a.chunks_exact(PORTABLE_WIDTH);
+        let mut cb = b.chunks_exact(PORTABLE_WIDTH);
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            for l in 0..PORTABLE_WIDTH {
+                acc[l] += xa[l] * xb[l];
+            }
+        }
+        let mut s = 0.0;
+        for v in acc {
+            s += v;
+        }
+        for (xa, xb) in ca.remainder().iter().zip(cb.remainder()) {
+            s += xa * xb;
+        }
+        s
+    }
+}
+
+/// Safe shims over the [`avx2`] kernels so the dispatch arms above stay
+/// target-independent.
+///
+/// Invariant: these are only reached through a `Dispatch::Avx2` arm,
+/// and every `_with` entry point asserts `Dispatch::available()` first
+/// — so on x86_64 AVX2 is known present, and on other architectures the
+/// arm is unreachable.
+#[cfg(target_arch = "x86_64")]
+mod avx2_call {
+    use super::avx2;
+
+    pub(super) fn axpy_into(alpha: f64, x: &[f64], y: &mut [f64]) {
+        // SAFETY: AVX2 availability asserted by the `_with` caller.
+        unsafe { avx2::axpy_into(alpha, x, y) }
+    }
+    pub(super) fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+        // SAFETY: as above.
+        unsafe { avx2::sub_into(a, b, out) }
+    }
+    pub(super) fn scale_add(y: &mut [f64], a: f64, b: f64, x: &[f64]) {
+        // SAFETY: as above.
+        unsafe { avx2::scale_add(y, a, b, x) }
+    }
+    pub(super) fn fma_noise(x: &mut [f64], sigma: f64, xi: &[f64]) {
+        // SAFETY: as above.
+        unsafe { avx2::fma_noise(x, sigma, xi) }
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn lincomb_into(
+        c0: f64,
+        x: &[f64],
+        noise: Option<(f64, &[f64])>,
+        b: &[f64],
+        hist: &[f64],
+        offsets: &[usize],
+        out: &mut [f64],
+    ) {
+        // SAFETY: as above.
+        unsafe { avx2::lincomb_into(c0, x, noise, b, hist, offsets, out) }
+    }
+    pub(super) fn lincomb_inplace(
+        c0: f64,
+        x: &mut [f64],
+        b: &[f64],
+        hist: &[f64],
+        offsets: &[usize],
+    ) {
+        // SAFETY: as above.
+        unsafe { avx2::lincomb_inplace(c0, x, b, hist, offsets) }
+    }
+    pub(super) fn dot_relaxed(a: &[f64], b: &[f64]) -> f64 {
+        // SAFETY: as above.
+        unsafe { avx2::dot_relaxed(a, b) }
+    }
+}
+
+/// Unreachable stand-ins for non-x86_64 targets: `Dispatch::Avx2` is
+/// never [`Dispatch::available`] there, and every entry point asserts
+/// availability before matching.
+#[cfg(not(target_arch = "x86_64"))]
+mod avx2_call {
+    pub(super) fn axpy_into(_: f64, _: &[f64], _: &mut [f64]) {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+    pub(super) fn sub_into(_: &[f64], _: &[f64], _: &mut [f64]) {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+    pub(super) fn scale_add(_: &mut [f64], _: f64, _: f64, _: &[f64]) {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+    pub(super) fn fma_noise(_: &mut [f64], _: f64, _: &[f64]) {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn lincomb_into(
+        _: f64,
+        _: &[f64],
+        _: Option<(f64, &[f64])>,
+        _: &[f64],
+        _: &[f64],
+        _: &[usize],
+        _: &mut [f64],
+    ) {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+    pub(super) fn lincomb_inplace(_: f64, _: &mut [f64], _: &[f64], _: &[f64], _: &[usize]) {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+    pub(super) fn dot_relaxed(_: &[f64], _: &[f64]) -> f64 {
+        unreachable!("AVX2 tier on a non-x86_64 target");
+    }
+}
+
+/// AVX 256-bit (f64×4) kernels. Every kernel uses separate
+/// multiply/add/subtract intrinsics — never an FMA — so each SIMD lane
+/// performs exactly the scalar per-element operation sequence and the
+/// results are bit-identical to the reference tier; tails shorter than
+/// one vector run the scalar loop. Gated on AVX2 by [`dispatch`].
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::BLOCK;
+    use std::arch::x86_64::*;
+
+    const LANES: usize = 4;
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_into(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let va = _mm256_set1_pd(alpha);
+        let mut k = 0usize;
+        while k + LANES <= n {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(k));
+            let r = _mm256_add_pd(vy, _mm256_mul_pd(va, vx));
+            _mm256_storeu_pd(y.as_mut_ptr().add(k), r);
+            k += LANES;
+        }
+        while k < n {
+            y[k] += alpha * x[k];
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+        let n = out.len();
+        let mut k = 0usize;
+        while k + LANES <= n {
+            let va = _mm256_loadu_pd(a.as_ptr().add(k));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(k));
+            _mm256_storeu_pd(out.as_mut_ptr().add(k), _mm256_sub_pd(va, vb));
+            k += LANES;
+        }
+        while k < n {
+            out[k] = a[k] - b[k];
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_add(y: &mut [f64], a: f64, b: f64, x: &[f64]) {
+        let n = y.len();
+        let va = _mm256_set1_pd(a);
+        let vb = _mm256_set1_pd(b);
+        let mut k = 0usize;
+        while k + LANES <= n {
+            let vy = _mm256_loadu_pd(y.as_ptr().add(k));
+            let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+            let r = _mm256_add_pd(_mm256_mul_pd(va, vy), _mm256_mul_pd(vb, vx));
+            _mm256_storeu_pd(y.as_mut_ptr().add(k), r);
+            k += LANES;
+        }
+        while k < n {
+            y[k] = a * y[k] + b * x[k];
+            k += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fma_noise(x: &mut [f64], sigma: f64, xi: &[f64]) {
+        let n = x.len();
+        let vs = _mm256_set1_pd(sigma);
+        let mut k = 0usize;
+        while k + LANES <= n {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+            let vz = _mm256_loadu_pd(xi.as_ptr().add(k));
+            let r = _mm256_add_pd(vx, _mm256_mul_pd(vs, vz));
+            _mm256_storeu_pd(x.as_mut_ptr().add(k), r);
+            k += LANES;
+        }
+        while k < n {
+            x[k] += sigma * xi[k];
+            k += 1;
+        }
+    }
+
+    /// Cache-blocked fused combination: pass 1 writes `c0·x (+ σ·ξ)`
+    /// into the out block, then one 4-lane streaming pass per history
+    /// term accumulates in ascending `j` — the scalar per-element
+    /// order, with the out tile L1-resident across all `s + 1` passes.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn lincomb_into(
+        c0: f64,
+        x: &[f64],
+        noise: Option<(f64, &[f64])>,
+        b: &[f64],
+        hist: &[f64],
+        offsets: &[usize],
+        out: &mut [f64],
+    ) {
+        let n = out.len();
+        let vc0 = _mm256_set1_pd(c0);
+        let mut base = 0usize;
+        while base < n {
+            let end = (base + BLOCK).min(n);
+            match noise {
+                Some((sigma, xi)) => {
+                    let vs = _mm256_set1_pd(sigma);
+                    let mut k = base;
+                    while k + LANES <= end {
+                        let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+                        let vz = _mm256_loadu_pd(xi.as_ptr().add(k));
+                        let r = _mm256_add_pd(_mm256_mul_pd(vc0, vx), _mm256_mul_pd(vs, vz));
+                        _mm256_storeu_pd(out.as_mut_ptr().add(k), r);
+                        k += LANES;
+                    }
+                    while k < end {
+                        out[k] = c0 * x[k] + sigma * xi[k];
+                        k += 1;
+                    }
+                }
+                None => {
+                    let mut k = base;
+                    while k + LANES <= end {
+                        let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+                        _mm256_storeu_pd(out.as_mut_ptr().add(k), _mm256_mul_pd(vc0, vx));
+                        k += LANES;
+                    }
+                    while k < end {
+                        out[k] = c0 * x[k];
+                        k += 1;
+                    }
+                }
+            }
+            for (bj, oj) in b.iter().zip(offsets) {
+                let vb = _mm256_set1_pd(*bj);
+                let h = hist.as_ptr().add(*oj);
+                let mut k = base;
+                while k + LANES <= end {
+                    let vo = _mm256_loadu_pd(out.as_ptr().add(k));
+                    let vh = _mm256_loadu_pd(h.add(k));
+                    let r = _mm256_add_pd(vo, _mm256_mul_pd(vb, vh));
+                    _mm256_storeu_pd(out.as_mut_ptr().add(k), r);
+                    k += LANES;
+                }
+                while k < end {
+                    out[k] += bj * hist[oj + k];
+                    k += 1;
+                }
+            }
+            base = end;
+        }
+    }
+
+    /// In-place variant of [`lincomb_into`]: `x ← c0·x` over the
+    /// block, then the history passes (same pinned order; `x[k]`'s
+    /// original value only feeds the `c0·x` term, so overwriting it
+    /// first is exact).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lincomb_inplace(
+        c0: f64,
+        x: &mut [f64],
+        b: &[f64],
+        hist: &[f64],
+        offsets: &[usize],
+    ) {
+        let n = x.len();
+        let vc0 = _mm256_set1_pd(c0);
+        let mut base = 0usize;
+        while base < n {
+            let end = (base + BLOCK).min(n);
+            let mut k = base;
+            while k + LANES <= end {
+                let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+                _mm256_storeu_pd(x.as_mut_ptr().add(k), _mm256_mul_pd(vc0, vx));
+                k += LANES;
+            }
+            while k < end {
+                x[k] *= c0;
+                k += 1;
+            }
+            for (bj, oj) in b.iter().zip(offsets) {
+                let vb = _mm256_set1_pd(*bj);
+                let h = hist.as_ptr().add(*oj);
+                let mut k = base;
+                while k + LANES <= end {
+                    let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+                    let vh = _mm256_loadu_pd(h.add(k));
+                    let r = _mm256_add_pd(vx, _mm256_mul_pd(vb, vh));
+                    _mm256_storeu_pd(x.as_mut_ptr().add(k), r);
+                    k += LANES;
+                }
+                while k < end {
+                    x[k] += bj * hist[oj + k];
+                    k += 1;
+                }
+            }
+            base = end;
+        }
+    }
+
+    /// Tolerance lane: one 4-lane accumulator vector, combined
+    /// `(l0 + l1) + (l2 + l3)`, then the tail terms in index order.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_relaxed(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut k = 0usize;
+        while k + LANES <= n {
+            let va = _mm256_loadu_pd(a.as_ptr().add(k));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(k));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+            k += LANES;
+        }
+        let mut lanes = [0.0f64; LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        while k < n {
+            s += a[k] * b[k];
+            k += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(n: usize, mul: f64) -> Vec<f64> {
+        (0..n).map(|k| (k as f64 * mul).sin() + 0.1).collect()
+    }
+
+    #[test]
+    fn dispatch_is_cached_and_available() {
+        let d = dispatch();
+        assert!(d.available());
+        assert_eq!(d, dispatch(), "dispatch must be stable across calls");
+        assert!(!dispatch_source().is_empty());
+        // A non-wide selection must never be silent: either the widest
+        // tier is active or a fallback reason is recorded (the CI lane
+        // enforces the same rule on the emitted BENCH_perf.json).
+        if d != Dispatch::Avx2 && std::env::var("SADIFF_SIMD").is_err() {
+            assert!(fallback_reason().is_some(), "narrow dispatch without a logged reason");
+        }
+    }
+
+    #[test]
+    fn every_available_tier_matches_scalar_bitwise() {
+        // Unit-scope smoke (integration_simd runs the full sweep): odd
+        // lengths exercise the tails, s spans the monomorphized and
+        // dynamic reference arms.
+        for n in [1usize, 3, 5, 17, 100] {
+            let x = probe(n, 0.37);
+            let xi = probe(n, 0.71);
+            for s in [1usize, 2, 4, 5] {
+                let hist = probe((s + 1) * n, 0.13);
+                let offsets: Vec<usize> = (0..s).map(|j| j * n).collect();
+                let b: Vec<f64> = (0..s).map(|j| 0.3 - 0.2 * j as f64).collect();
+                let noise = Some((0.2, &xi[..]));
+                let mut want = vec![0.0; n];
+                scalar::lincomb_into(0.9, &x, noise, &b, &hist, &offsets, &mut want);
+                for d in Dispatch::all_available() {
+                    let mut got = vec![0.0; n];
+                    lincomb_into_with(d, 0.9, &x, noise, &b, &hist, &offsets, &mut got);
+                    assert_eq!(got, want, "lincomb_into n={n} s={s} tier={}", d.label());
+
+                    let mut gi = x.clone();
+                    lincomb_inplace_with(d, 0.9, &mut gi, &b, &hist, &offsets);
+                    let mut wi = x.clone();
+                    scalar::lincomb_inplace(0.9, &mut wi, &b, &hist, &offsets);
+                    assert_eq!(gi, wi, "lincomb_inplace n={n} s={s} tier={}", d.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_relaxed_is_within_the_documented_bound() {
+        for n in [1usize, 4, 7, 64, 1000, 4099] {
+            let a = probe(n, 0.37);
+            let b = probe(n, 0.11);
+            let exact = scalar::dot(&a, &b);
+            let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            for d in Dispatch::all_available() {
+                let relaxed = dot_relaxed_with(d, &a, &b);
+                assert!(
+                    (relaxed - exact).abs() <= 1e-12 * scale.max(1.0),
+                    "dot_relaxed n={n} tier={}: {relaxed} vs {exact}",
+                    d.label()
+                );
+            }
+        }
+    }
+}

@@ -19,6 +19,14 @@
 //! test asserts zero heap allocations per [`Stepper::step`] call for
 //! every [`SolverKind`].
 //!
+//! Every per-step update runs through the fused [`crate::linalg`]
+//! kernels, which transparently dispatch to the widest **kernel tier**
+//! the host supports (scalar reference / portable wide / AVX2 — see
+//! docs/KERNELS.md). All tiers are bit-identical for these kernels, so
+//! the contract below is tier-independent; [`make_stepper`] resolves the
+//! dispatch eagerly so its one-time environment probe never lands inside
+//! the zero-allocation step loop.
+//!
 //! Contract (asserted for every [`SolverKind`] in the equivalence suite):
 //! driving a stepper one step at a time is bit-identical to the monolithic
 //! seed-era `solve()` loop ([`crate::solvers::run_reference`]), for any
@@ -142,6 +150,11 @@ pub trait Stepper: Send {
 /// Build the stepper for a config. `sch` is captured by value (it is
 /// `Copy`) by the schemes that evaluate the schedule off-grid.
 pub fn make_stepper(cfg: &SamplerConfig, sch: &NoiseSchedule) -> Box<dyn Stepper> {
+    // Resolve the kernel-tier dispatch now: its first call reads the
+    // environment (which may allocate), and every construction path goes
+    // through here — so by the time `step` runs, the per-step kernels hit
+    // a cached, allocation-free lookup (integration_alloc asserts this).
+    crate::linalg::simd::dispatch();
     match cfg.solver {
         SolverKind::Sa => Box::new(sa::SaStepper::new(sa::SaSolverOpts::from_config(cfg))),
         SolverKind::Ddim => Box::new(ddim::DdimStepper::new(cfg.eta)),

@@ -8,6 +8,7 @@
 //! counter (this binary is registered with its own `[[test]] `target).
 
 use sadiff::config::{Prediction, SamplerConfig, SolverKind, TauKind};
+use sadiff::linalg::simd::{self, Dispatch};
 use sadiff::models::{EvalCtx, ModelEval};
 use sadiff::rng::normal::PhiloxNormal;
 use sadiff::schedule::{timesteps, NoiseSchedule};
@@ -54,8 +55,42 @@ fn allocs_across_steps(cfg: &SamplerConfig, n: usize, dim: usize) -> u64 {
     allocs
 }
 
+/// Raw kernel-tier preamble: every tier available on this host (so on an
+/// AVX2 machine the SIMD path itself, not just whatever `dispatch()`
+/// picked) runs every fused kernel with zero heap allocations. The first
+/// `dispatch()` call is warmed outside the counted region — it reads the
+/// `SADIFF_SIMD` environment variable once, which may allocate, which is
+/// exactly why `make_stepper` resolves it before `init` returns.
+fn kernels_allocate_nothing_on_any_tier() {
+    simd::dispatch();
+    let n = 3 * simd::BLOCK + 7; // straddle cache blocks, non-trivial tail
+    let x = vec![0.25; n];
+    let xi = vec![0.5; n];
+    let mut y = vec![1.0; n];
+    let hist = vec![0.125; 4 * n];
+    let offsets = [0usize, n, 2 * n, 3 * n];
+    let b = [0.3, 0.2, 0.1, 0.05];
+    for d in Dispatch::all_available() {
+        let before = alloc_count();
+        simd::axpy_into_with(d, 0.5, &x, &mut y);
+        simd::sub_into_with(d, &hist[..n], &xi, &mut y);
+        simd::scale_add_with(d, &mut y, 0.9, 0.1, &x);
+        simd::fma_noise_with(d, &mut y, 0.2, &xi);
+        simd::lincomb_into_with(d, 0.9, &x, Some((0.1, &xi)), &b, &hist, &offsets, &mut y);
+        simd::lincomb_inplace_with(d, 0.9, &mut y, &b, &hist, &offsets);
+        std::hint::black_box(simd::dot_relaxed_with(d, &x, &xi));
+        let allocs = alloc_count() - before;
+        assert_eq!(allocs, 0, "{}: {allocs} heap allocations in the kernel layer", d.label());
+    }
+}
+
 #[test]
 fn stepper_step_allocates_nothing_after_init_for_every_solver() {
+    // The kernel layer first, on every tier — if the stepper loop below
+    // regressed, this localizes whether the kernels themselves leaked an
+    // allocation or the driver did.
+    kernels_allocate_nothing_on_any_tier();
+
     // Per-solver defaults first: all nine SolverKinds.
     for kind in SolverKind::all() {
         let mut cfg = SamplerConfig::for_solver(*kind);

@@ -1,0 +1,192 @@
+//! Cross-tier bit-identity property suite for the kernel layer
+//! (docs/KERNELS.md): every kernel tier the host can run must produce
+//! **bitwise identical** results to the pinned-FP-order scalar reference
+//! tier, across lane counts, dimensions, unaligned/remainder tails and
+//! history orders — the proof obligation that lets the transparent
+//! dispatch in `sadiff::linalg` sit underneath the system's bit-identity
+//! contracts (stepper ≡ reference, snapshot goldens) without weakening
+//! them. The one deliberate exception, the opt-in tolerance lane
+//! `dot_relaxed`, is tested against its documented error bound instead.
+
+use sadiff::linalg::simd::{self, Dispatch};
+
+/// Deterministic non-trivial fill (no `rand` dependency): varied signs
+/// and magnitudes so reassociation or FMA contraction in a wide tier
+/// would actually change low-order bits.
+fn fill(n: usize, seed: f64) -> Vec<f64> {
+    (0..n).map(|k| ((k as f64 + seed) * 0.7310588).sin() * (1.0 + 0.01 * (k % 13) as f64)).collect()
+}
+
+/// Dimensions exercising every code-path shape: sub-lane lengths, exact
+/// multiples of the 4-lane AVX2 width and the 8-wide portable reduction,
+/// off-by-one remainder tails around both, and lengths that straddle the
+/// cache-block boundary (`BLOCK` = 2048) on the blocked kernels.
+fn dims() -> Vec<usize> {
+    let mut d = vec![1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100];
+    for around in [simd::BLOCK, 2 * simd::BLOCK] {
+        d.extend([around - 1, around, around + 1, around + 5]);
+    }
+    d
+}
+
+/// Run `check` on every non-reference tier available on this host, on
+/// both an aligned slice of length `n` and a deliberately misaligned
+/// view (`&v[1..]` of an `n + 1` buffer shifts the base pointer by 8
+/// bytes off any 16/32-byte vector alignment), so the unaligned-load
+/// paths and scalar tails are covered for every (tier, dim) pair.
+fn for_each_tier_and_alignment(n: usize, mut check: impl FnMut(Dispatch, &[f64], &[f64], &[f64])) {
+    let xa = fill(n, 0.3);
+    let ya = fill(n, 7.1);
+    let za = fill(n, 2.9);
+    let xu = fill(n + 1, 0.3);
+    let yu = fill(n + 1, 7.1);
+    let zu = fill(n + 1, 2.9);
+    for d in Dispatch::all_available() {
+        if d == Dispatch::Scalar {
+            continue;
+        }
+        check(d, &xa, &ya, &za);
+        check(d, &xu[1..], &yu[1..], &zu[1..]);
+    }
+}
+
+#[test]
+fn elementwise_kernels_are_bitwise_identical_across_tiers() {
+    for n in dims() {
+        for_each_tier_and_alignment(n, |d, x, y, z| {
+            let tier = d.label();
+
+            let mut want = y.to_vec();
+            simd::axpy_into_with(Dispatch::Scalar, 0.37, x, &mut want);
+            let mut got = y.to_vec();
+            simd::axpy_into_with(d, 0.37, x, &mut got);
+            assert_eq!(got, want, "axpy_into: {tier} != scalar at n={n}");
+
+            let mut want = vec![0.0; n];
+            simd::sub_into_with(Dispatch::Scalar, x, y, &mut want);
+            let mut got = vec![0.0; n];
+            simd::sub_into_with(d, x, y, &mut got);
+            assert_eq!(got, want, "sub_into: {tier} != scalar at n={n}");
+
+            let mut want = y.to_vec();
+            simd::scale_add_with(Dispatch::Scalar, &mut want, 0.93, -0.21, x);
+            let mut got = y.to_vec();
+            simd::scale_add_with(d, &mut got, 0.93, -0.21, x);
+            assert_eq!(got, want, "scale_add: {tier} != scalar at n={n}");
+
+            let mut want = z.to_vec();
+            simd::fma_noise_with(Dispatch::Scalar, &mut want, 0.41, x);
+            let mut got = z.to_vec();
+            simd::fma_noise_with(d, &mut got, 0.41, x);
+            assert_eq!(got, want, "fma_noise: {tier} != scalar at n={n}");
+        });
+    }
+}
+
+#[test]
+fn lincomb_kernels_are_bitwise_identical_across_tiers_and_orders() {
+    // Orders 1–4 hit the monomorphized scalar reference arms; 5 and 6
+    // hit the dynamic arm. Offsets are deliberately out of slot order.
+    let max_s = 6usize;
+    for n in dims() {
+        let hist = fill(max_s * (n + 1), 4.2);
+        for s in 1..=max_s {
+            let offsets: Vec<usize> = (0..s).map(|j| ((j * 2 + 3) % max_s) * n).collect();
+            let b: Vec<f64> = (0..s).map(|j| 0.31 - 0.17 * j as f64).collect();
+            for_each_tier_and_alignment(n, |d, x, xi, y| {
+                let tier = d.label();
+
+                for noise in [None, Some((0.23, xi))] {
+                    let mut want = vec![0.0; n];
+                    simd::lincomb_into_with(
+                        Dispatch::Scalar,
+                        0.91,
+                        x,
+                        noise,
+                        &b,
+                        &hist,
+                        &offsets,
+                        &mut want,
+                    );
+                    let mut got = vec![0.0; n];
+                    simd::lincomb_into_with(d, 0.91, x, noise, &b, &hist, &offsets, &mut got);
+                    let kind = if noise.is_some() { "noise" } else { "ode" };
+                    assert_eq!(got, want, "lincomb_into({kind}): {tier} != scalar at n={n} s={s}");
+                }
+
+                let mut want = y.to_vec();
+                simd::lincomb_inplace_with(Dispatch::Scalar, 0.91, &mut want, &b, &hist, &offsets);
+                let mut got = y.to_vec();
+                simd::lincomb_inplace_with(d, 0.91, &mut got, &b, &hist, &offsets);
+                assert_eq!(got, want, "lincomb_inplace: {tier} != scalar at n={n} s={s}");
+            });
+        }
+    }
+}
+
+#[test]
+fn empty_history_and_empty_slices_are_handled_on_every_tier() {
+    for d in Dispatch::all_available() {
+        let x = [2.0, -4.0, 6.0];
+        let mut out = [0.0; 3];
+        simd::lincomb_into_with(d, 0.5, &x, None, &[], &[], &[], &mut out);
+        assert_eq!(out, [1.0, -2.0, 3.0], "{}: s=0 is a pure scale", d.label());
+
+        let mut empty_out: [f64; 0] = [];
+        simd::lincomb_into_with(d, 0.5, &[], None, &[1.0], &[], &[0], &mut empty_out);
+        simd::axpy_into_with(d, 1.0, &[], &mut empty_out);
+        assert_eq!(simd::dot_relaxed_with(d, &[], &[]), 0.0, "{}: empty dot", d.label());
+    }
+}
+
+#[test]
+fn dot_relaxed_stays_within_its_documented_bound_on_every_tier() {
+    // The tolerance lane: deterministic per tier, within the documented
+    // reassociation bound of the sequential reference sum — far tighter
+    // in practice, so the asserted 1e-12 relative slack is generous.
+    for n in dims() {
+        for_each_tier_and_alignment(n, |d, x, y, _| {
+            let exact = simd::dot_relaxed_with(Dispatch::Scalar, x, y);
+            let relaxed = simd::dot_relaxed_with(d, x, y);
+            let scale: f64 = x.iter().zip(y).map(|(a, b)| (a * b).abs()).sum();
+            assert!(
+                (relaxed - exact).abs() <= 1e-12 * scale.max(1.0),
+                "dot_relaxed: {} out of bound at n={n}: {relaxed} vs {exact}",
+                d.label()
+            );
+            let again = simd::dot_relaxed_with(d, x, y);
+            assert_eq!(relaxed, again, "dot_relaxed must be deterministic per tier");
+        });
+    }
+}
+
+#[test]
+fn dispatch_selection_is_cached_consistent_and_reportable() {
+    let d = simd::dispatch();
+    assert!(d.available(), "dispatch() returned an unavailable tier");
+    assert_eq!(d, simd::dispatch(), "dispatch() must be stable for the process");
+    assert!(Dispatch::all_available().contains(&d));
+    assert!(["env", "compile-time", "runtime"].contains(&simd::dispatch_source()));
+    // The no-silent-fallback contract: a host that cannot run the widest
+    // tier must say why (CI checks the same invariant on the bench
+    // report); selecting AVX2 by detection means nothing was skipped.
+    if d == Dispatch::Avx2 {
+        assert!(simd::fallback_reason().is_none(), "avx2 selected but a fallback was recorded");
+    } else if std::env::var("SADIFF_SIMD").is_err() {
+        assert!(
+            simd::fallback_reason().is_some(),
+            "{} selected by detection without a logged fallback reason",
+            d.label()
+        );
+    }
+
+    // The reference tier and the portable tier run everywhere; the
+    // transparent entry points must agree with whatever was selected.
+    assert!(Dispatch::Scalar.available() && Dispatch::Portable.available());
+    let x = fill(1000, 0.5);
+    let mut via_dispatch = vec![0.0; 1000];
+    sadiff::linalg::sub_into(&x, &x, &mut via_dispatch);
+    let mut via_tier = vec![1.0; 1000];
+    simd::sub_into_with(d, &x, &x, &mut via_tier);
+    assert_eq!(via_dispatch, via_tier);
+}
