@@ -44,6 +44,7 @@ fn main() {
         presets_path: None,
         checkpoint_path: None,
         checkpoint_every: 16,
+        ..ServerConfig::default()
     };
     let handle = Server::bind(server_cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();

@@ -38,6 +38,13 @@
 //!     the lane if the dispatch or a fallback reason is missing from the
 //!     report (no silent scalar fallback).
 //!
+//! Tracing overhead gate (always runs):
+//!   * the `obs` span recorder measured at both load points — a disabled
+//!     tracer must keep the stepper hot loop at exactly zero allocations
+//!     (hard failure here) and an enabled tracer's `BatchRun` steps/sec
+//!     is reported next to the disabled number — emitted as the
+//!     `tracing` section of `BENCH_perf.json` and gated by jq in CI.
+//!
 //! Flags: `--quick` (smaller shapes), `--out <path>` for the stepper
 //! report (default `BENCH_stepper.json`), `--perf-out <path>` for the
 //! steps/sec + allocations report (default `BENCH_perf.json`).
@@ -105,7 +112,8 @@ fn main() {
     }
     stepper_section(quick, &out_path);
     let kernels = kernel_section(quick);
-    perf_section(quick, &perf_out_path, kernels);
+    let tracing = tracing_section(quick);
+    perf_section(quick, &perf_out_path, kernels, tracing);
 
     // --- 5. Artifact round-trips (skipped without `make artifacts`).
     artifact_section();
@@ -508,6 +516,106 @@ fn kernel_section(quick: bool) -> Value {
     ])
 }
 
+/// Tracing overhead: the third cross-cutting contract ("observable, and
+/// free when off" — docs/OBSERVABILITY.md) measured at both load points.
+/// Disabled: a stepper hot loop with a span opened around every step must
+/// stay at exactly zero allocations (the zero-allocs-per-step contract
+/// with tracing compiled in — hard failure here, and CI re-checks the
+/// reported number). Enabled: the `BatchRun` scheduler loop — which
+/// records batch_step, shard_step and model_eval spans — timed against
+/// the same loop with the recorder off; CI gates the throughput ratio
+/// from the `tracing` section of `BENCH_perf.json`.
+fn tracing_section(quick: bool) -> Value {
+    let sch = NoiseSchedule::vp_linear();
+    let (n, dim, nfe, iters) =
+        if quick { (64usize, 16usize, 16usize, 3usize) } else { (256, 32, 32, 6) };
+    let cfg = SamplerConfig {
+        nfe,
+        tau: 1.0,
+        predictor_steps: 3,
+        corrector_steps: 3,
+        ..SamplerConfig::sa_default()
+    };
+    let m = cfg.steps_for_nfe();
+
+    // Disabled-mode allocation gate: the recorder off, a span opened
+    // around every step of the allocation-free stepper loop.
+    sadiff::obs::trace::stop();
+    let model = NullModel { dim };
+    let disabled_allocs = {
+        let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+        let mut noise = PhiloxNormal::new(13);
+        let mut x = prior_sample(&grid, dim, n, &mut noise);
+        let mut st = make_stepper(&cfg, &sch);
+        st.init(&model, &grid, &mut x, n, &mut noise);
+        let before = alloc_count();
+        for i in 0..m {
+            let _span = sadiff::obs::trace::span("bench_step", "bench");
+            st.step(&model, &grid, i, &mut x, n, &mut noise);
+        }
+        st.finish(&mut x);
+        alloc_count() - before
+    };
+
+    // Steps/sec with the recorder off vs on, on the BatchRun scheduler
+    // loop (the loop the serving workers drive).
+    let wl = workloads::latent_analog();
+    let bmodel: Arc<dyn ModelEval> = Arc::new(GmmAnalytic::new(wl.gmm.clone()));
+    let exec = Executor::sequential();
+    let mk_req = |id: u64| SampleRequest {
+        id,
+        workload: wl.name.into(),
+        model: "gmm".into(),
+        cfg: cfg.clone(),
+        n,
+        seed: 13,
+        return_samples: false,
+        want_metrics: false,
+        preset: None,
+    };
+    let (_, off_min) = time_it(iters, || {
+        let mut br = BatchRun::new(bmodel.clone(), &wl, &cfg, vec![mk_req(1)], &exec);
+        while !br.step(&exec) {}
+        std::hint::black_box(br.finish());
+    });
+    sadiff::obs::trace::start();
+    let (_, on_min) = time_it(iters, || {
+        let mut br = BatchRun::new(bmodel.clone(), &wl, &cfg, vec![mk_req(1)], &exec);
+        while !br.step(&exec) {}
+        std::hint::black_box(br.finish());
+    });
+    sadiff::obs::trace::stop();
+    let events: usize = sadiff::obs::trace::dump().iter().map(|l| l.events.len()).sum();
+
+    let steps = m as f64;
+    let disabled_steps_per_sec = steps / off_min;
+    let enabled_steps_per_sec = steps / on_min;
+    println!(
+        "\ntracing (n={n}, NFE={nfe}): disabled {:.0} steps/s ({disabled_allocs} allocs across \
+         the step loop), enabled {:.0} steps/s (×{:.3} of disabled, {events} events captured)",
+        disabled_steps_per_sec,
+        enabled_steps_per_sec,
+        enabled_steps_per_sec / disabled_steps_per_sec
+    );
+    if disabled_allocs != 0 {
+        eprintln!("FAIL: disabled-tracer step loop allocated {disabled_allocs} times (must be 0)");
+        std::process::exit(1);
+    }
+    Value::obj(vec![
+        ("lanes", Value::Num(n as f64)),
+        ("nfe", Value::Num(nfe as f64)),
+        ("steps", Value::Num(steps)),
+        ("disabled_steps_per_sec", Value::Num(disabled_steps_per_sec)),
+        ("enabled_steps_per_sec", Value::Num(enabled_steps_per_sec)),
+        (
+            "enabled_over_disabled",
+            Value::Num(enabled_steps_per_sec / disabled_steps_per_sec),
+        ),
+        ("disabled_allocs_per_step", Value::Num(disabled_allocs as f64 / steps)),
+        ("events_recorded", Value::Num(events as f64)),
+    ])
+}
+
 /// Steps/sec + allocations-per-step: the seed-era monolithic loop (the
 /// pre-change baseline, retained verbatim as `run_reference`) against the
 /// allocation-free stepper driver, on a free model so solver overhead —
@@ -515,7 +623,7 @@ fn kernel_section(quick: bool) -> Value {
 /// measurement. Both numbers land in `BENCH_perf.json` so the perf
 /// trajectory records before AND after in the same run, alongside the
 /// `kernels` roofline section from [`kernel_section`].
-fn perf_section(quick: bool, out_path: &str, kernels: Value) {
+fn perf_section(quick: bool, out_path: &str, kernels: Value, tracing: Value) {
     let sch = NoiseSchedule::vp_linear();
     let (n, dim, nfe, iters) =
         if quick { (64usize, 16usize, 16usize, 3usize) } else { (256, 32, 32, 6) };
@@ -601,6 +709,7 @@ fn perf_section(quick: bool, out_path: &str, kernels: Value) {
         ("speedup", Value::Num(ref_min / drv_min)),
         ("identical", Value::Bool(identical)),
         ("kernels", kernels),
+        ("tracing", tracing),
     ]);
     if let Err(e) = std::fs::write(out_path, format!("{}\n", to_string(&report))) {
         eprintln!("cannot write {out_path}: {e}");

@@ -342,6 +342,15 @@ pub struct ServerConfig {
     /// retirement, cancellation). Clamped to ≥ 1; only meaningful with
     /// `checkpoint_path` set.
     pub checkpoint_every: u64,
+    /// Default path for trace dumps (`obs::chrome` Chrome Trace Event
+    /// JSON). When set, the span recorder starts capturing at bind time
+    /// and `{"cmd":"trace","action":"dump"}` writes here unless the
+    /// command carries its own `"path"`. `None` leaves tracing off until
+    /// a client sends `{"cmd":"trace","action":"start"}`.
+    pub trace_path: Option<String>,
+    /// Per-thread trace ring capacity, in events (`obs::trace`). Applied
+    /// at bind time; the recorder clamps it to ≥ 16.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -357,6 +366,8 @@ impl Default for ServerConfig {
             presets_path: None,
             checkpoint_path: None,
             checkpoint_every: 16,
+            trace_path: None,
+            trace_capacity: crate::obs::trace::DEFAULT_CAPACITY,
         }
     }
 }
@@ -378,6 +389,8 @@ impl ServerConfig {
             checkpoint_every: v
                 .opt_usize("checkpoint_every", d.checkpoint_every as usize)
                 .max(1) as u64,
+            trace_path: v.get("trace").and_then(Value::as_str).map(String::from),
+            trace_capacity: v.opt_usize("trace_capacity", d.trace_capacity),
         })
     }
 }

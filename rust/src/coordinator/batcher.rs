@@ -108,17 +108,24 @@ impl Batcher {
     /// requests (FIFO order preserved within the group; incompatible
     /// requests keep their positions).
     pub fn pop_group(&mut self, max_batch: usize) -> Vec<SampleRequest> {
+        self.pop_group_pending(max_batch).into_iter().map(|p| p.request).collect()
+    }
+
+    /// [`Batcher::pop_group`] keeping each request's queue metadata
+    /// (arrival time), so the server can attribute queue-wait latency at
+    /// admission.
+    pub fn pop_group_pending(&mut self, max_batch: usize) -> Vec<Pending> {
         let Some(first) = self.queue.pop_front() else {
             return Vec::new();
         };
         self.queued_samples -= first.request.n;
-        let key = first.key;
-        let mut group = vec![first.request];
+        let key = first.key.clone();
+        let mut group = vec![first];
         let mut kept = VecDeque::with_capacity(self.queue.len());
         while let Some(p) = self.queue.pop_front() {
             if group.len() < max_batch && p.key == key {
                 self.queued_samples -= p.request.n;
-                group.push(p.request);
+                group.push(p);
             } else {
                 kept.push_back(p);
             }

@@ -115,8 +115,11 @@ impl ServerCheckpoint {
     }
 
     /// Write atomically: temp file in the same directory, then rename over
-    /// the target, so readers only ever see a complete checkpoint.
+    /// the target, so readers only ever see a complete checkpoint. The
+    /// write (serialize + fs) is recorded as a `checkpoint_write` trace
+    /// span on the calling worker's lane.
     pub fn save(&self, path: &str) -> Result<()> {
+        let _span = crate::obs::trace::span("checkpoint_write", "io");
         let tmp = format!("{path}.tmp");
         std::fs::write(&tmp, format!("{}\n", to_string(&self.to_json())))
             .map_err(|e| Error::runtime(format!("cannot write {tmp}: {e}")))?;

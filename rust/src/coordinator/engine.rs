@@ -6,7 +6,7 @@ use crate::config::SamplerConfig;
 use crate::coordinator::request::{SampleRequest, SampleResponse};
 use crate::exec::{chunks, Executor};
 use crate::jsonlite::Value;
-use crate::models::{CountingModel, ModelEval};
+use crate::models::{EvalCtx, ModelEval};
 use crate::rng::normal::{NormalSource, SplitNoise};
 use crate::rng::Philox4x32;
 use crate::schedule::timesteps;
@@ -257,6 +257,54 @@ pub fn run_batch_with(
     responses
 }
 
+/// NFE-counting model wrapper that also accumulates evaluation wall time
+/// and records each batched call as a `model_eval` trace span on the
+/// calling (exec pool) thread. Stack-allocated per shard per step, so it
+/// adds nothing to the zero-allocs-per-step contract; the timing is two
+/// monotonic clock reads per batched eval.
+struct TimedModel<'a> {
+    inner: &'a dyn ModelEval,
+    count: std::sync::atomic::AtomicUsize,
+    wall_us: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> TimedModel<'a> {
+    fn new(inner: &'a dyn ModelEval) -> Self {
+        TimedModel {
+            inner,
+            count: std::sync::atomic::AtomicUsize::new(0),
+            wall_us: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn count(&self) -> usize {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn wall_us(&self) -> u64 {
+        self.wall_us.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl ModelEval for TimedModel<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_batch(&self, xs: &[f64], ctx: &EvalCtx, out: &mut [f64]) {
+        let _span = crate::obs::trace::span("model_eval", "engine");
+        let t0 = std::time::Instant::now();
+        self.inner.eval_batch(xs, ctx, out);
+        self.wall_us
+            .fetch_add(t0.elapsed().as_micros() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
 /// One lane shard of an in-flight batch: a contiguous-at-admission slice
 /// of the merged batch's lanes, with its own stepper state and noise view.
 /// Cancellation can punch holes into `lanes`; the `select`ed noise view
@@ -271,6 +319,8 @@ struct Shard {
     /// Model evaluations this shard has spent (identical across shards —
     /// calls are per step, not per lane; see `solvers::run_chunked`).
     evals: usize,
+    /// Model-eval wall time of this shard's most recent step, µs.
+    step_eval_us: u64,
 }
 
 /// A merged batch as a *step-level* primitive: the scheduler advances it
@@ -339,17 +389,17 @@ impl BatchRun {
                 let lanes: Vec<usize> = range.collect();
                 let noise = parent_noise.select(&lanes);
                 let stepper = stepper::make_stepper(cfg, &wl.schedule);
-                Shard { lanes, x: Vec::new(), stepper, noise, evals: 0 }
+                Shard { lanes, x: Vec::new(), stepper, noise, evals: 0, step_eval_us: 0 }
             })
             .collect();
         let model_ref = &*model;
         let grid_ref = &grid;
         exec.for_each_mut(&mut shards, |_, shard| {
-            let counting = CountingModel::new(model_ref);
+            let timed = TimedModel::new(model_ref);
             let n = shard.lanes.len();
             shard.x = prior_sample(grid_ref, dim, n, &mut shard.noise);
-            shard.stepper.init(&counting, grid_ref, &mut shard.x, n, &mut shard.noise);
-            shard.evals = counting.count();
+            shard.stepper.init(&timed, grid_ref, &mut shard.x, n, &mut shard.noise);
+            shard.evals = timed.count();
         });
         BatchRun {
             model,
@@ -374,6 +424,7 @@ impl BatchRun {
     /// steps are bit-identical either way (asserted in
     /// `integration_snapshot` for every `SolverKind`).
     pub fn snapshot(&self) -> Value {
+        let _span = crate::obs::trace::span("snapshot", "engine");
         debug_assert!(!self.requests.is_empty(), "snapshot of a drained group");
         let mut x = Vec::with_capacity(self.lanes() * self.dim);
         let mut keys = Vec::with_capacity(self.lanes());
@@ -418,6 +469,7 @@ impl BatchRun {
     /// `model` is the resolved model for the group's requests (the caller
     /// resolves it the same way admission does).
     pub fn restore(v: &Value, model: Arc<dyn ModelEval>, exec: &Executor) -> Result<BatchRun> {
+        let _span = crate::obs::trace::span("restore", "engine");
         check_schema_version(v, "batch checkpoint")?;
         let wl_name = v.req_str("workload")?;
         let wl = crate::workloads::by_name(wl_name)
@@ -510,6 +562,7 @@ impl BatchRun {
                 stepper: st,
                 noise,
                 evals,
+                step_eval_us: 0,
             });
         }
         Ok(BatchRun {
@@ -532,17 +585,27 @@ impl BatchRun {
         if self.is_done() {
             return true;
         }
+        let _span = crate::obs::trace::span("batch_step", "engine");
         let i = self.next_step;
         let model = &*self.model;
         let grid = &self.grid;
         exec.for_each_mut(&mut self.shards, |_, shard| {
-            let counting = CountingModel::new(model);
+            let _shard_span = crate::obs::trace::span("shard_step", "engine");
+            let timed = TimedModel::new(model);
             let n = shard.lanes.len();
-            shard.stepper.step(&counting, grid, i, &mut shard.x, n, &mut shard.noise);
-            shard.evals += counting.count();
+            shard.stepper.step(&timed, grid, i, &mut shard.x, n, &mut shard.noise);
+            shard.evals += timed.count();
+            shard.step_eval_us = timed.wall_us();
         });
         self.next_step += 1;
         self.is_done()
+    }
+
+    /// Model-evaluation wall time of the most recent [`BatchRun::step`],
+    /// in milliseconds: the maximum across shards (the critical path —
+    /// shards run in parallel). 0 before the first step.
+    pub fn last_eval_ms(&self) -> f64 {
+        self.shards.iter().map(|s| s.step_eval_us).max().unwrap_or(0) as f64 / 1000.0
     }
 
     /// Steps completed / total steps (per-step progress reporting).

@@ -1,5 +1,11 @@
-//! Serving metrics: lock-free counters plus a log-bucketed latency
-//! histogram, snapshotted to JSON for the `stats` protocol command.
+//! Serving metrics: lock-free counters plus log-bucketed latency
+//! histograms — one end-to-end request histogram and one per pipeline
+//! [`Stage`] (queue wait, batch merge, solver step, model eval,
+//! checkpoint write, response write) — snapshotted to JSON for the
+//! `stats` protocol command. Percentiles are linearly interpolated
+//! within the bucket containing the quantile; observations above the
+//! top bound land in a dedicated overflow bucket and report as
+//! `Infinity` (serialized as JSON `null` by `jsonlite`).
 
 use crate::jsonlite::Value;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -7,6 +13,149 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Latency histogram buckets (upper bounds, ms). Log-spaced.
 const BUCKET_BOUNDS_MS: [f64; 12] =
     [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 5000.0];
+
+/// Bucket count: one per bound plus the over-the-top-bound overflow
+/// bucket. The const assertion pins the invariant that an observation
+/// above the last bound is *counted* (in the overflow bucket), never
+/// silently dropped.
+const BUCKETS: usize = BUCKET_BOUNDS_MS.len() + 1;
+const _: () = assert!(BUCKETS == BUCKET_BOUNDS_MS.len() + 1);
+
+/// A measured stage of the serving pipeline. Each stage gets its own
+/// latency histogram in [`ServingMetrics`], reported under `stages.<key>`
+/// in the `stats` snapshot with interpolated p50/p90/p99.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Request enqueue → admission into an in-flight group.
+    QueueWait,
+    /// Admission work: merging a compatible group, drawing priors and
+    /// warming its steppers (`BatchRun::new`), or restoring a checkpoint.
+    BatchMerge,
+    /// One scheduler step of one in-flight group (`BatchRun::step`).
+    SolverStep,
+    /// Model-evaluation wall time inside a step (critical-path shard).
+    ModelEval,
+    /// One atomic server-checkpoint write.
+    CheckpointWrite,
+    /// Serializing and writing one protocol reply line.
+    ResponseWrite,
+}
+
+impl Stage {
+    /// Every stage, in snapshot order.
+    pub const ALL: [Stage; 6] = [
+        Stage::QueueWait,
+        Stage::BatchMerge,
+        Stage::SolverStep,
+        Stage::ModelEval,
+        Stage::CheckpointWrite,
+        Stage::ResponseWrite,
+    ];
+
+    /// The stage's key in the `stats` snapshot (`stages.<key>`) and its
+    /// span name in a trace dump.
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchMerge => "batch_merge",
+            Stage::SolverStep => "solver_step",
+            Stage::ModelEval => "model_eval",
+            Stage::CheckpointWrite => "checkpoint_write",
+            Stage::ResponseWrite => "response_write",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::BatchMerge => 1,
+            Stage::SolverStep => 2,
+            Stage::ModelEval => 3,
+            Stage::CheckpointWrite => 4,
+            Stage::ResponseWrite => 5,
+        }
+    }
+}
+
+/// Lock-free log-bucketed latency histogram over [`BUCKET_BOUNDS_MS`]
+/// with an overflow bucket.
+#[derive(Debug, Default)]
+struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    fn observe_ms(&self, ms: f64) {
+        let mut idx = BUCKET_BOUNDS_MS.len();
+        for (i, ub) in BUCKET_BOUNDS_MS.iter().enumerate() {
+            if ms <= *ub {
+                idx = i;
+                break;
+            }
+        }
+        debug_assert!(idx < BUCKETS, "histogram index past the overflow bucket");
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((ms * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    fn overflow(&self) -> u64 {
+        self.buckets[BUCKET_BOUNDS_MS.len()].load(Ordering::Relaxed)
+    }
+
+    fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1000.0 / n as f64
+    }
+
+    /// Quantile `q` ∈ [0, 1], linearly interpolated inside the bucket
+    /// containing the quantile (bucket lower bound → upper bound by the
+    /// fraction of the bucket's mass below the target rank). Returns 0
+    /// for an empty histogram and `f64::INFINITY` when the quantile
+    /// falls in the overflow bucket.
+    fn percentile_ms(&self, q: f64) -> f64 {
+        let counts: [u64; BUCKETS] =
+            std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            let prev = acc as f64;
+            acc += c;
+            if *c > 0 && acc as f64 >= target {
+                if i == BUCKET_BOUNDS_MS.len() {
+                    return f64::INFINITY;
+                }
+                let lb = if i == 0 { 0.0 } else { BUCKET_BOUNDS_MS[i - 1] };
+                let ub = BUCKET_BOUNDS_MS[i];
+                let frac = ((target - prev) / *c as f64).clamp(0.0, 1.0);
+                return lb + (ub - lb) * frac;
+            }
+        }
+        f64::INFINITY
+    }
+
+    fn snapshot(&self) -> Value {
+        Value::obj(vec![
+            ("count", Value::Num(self.count() as f64)),
+            ("overflow", Value::Num(self.overflow() as f64)),
+            ("mean_ms", Value::Num(self.mean_ms())),
+            ("p50_ms", Value::Num(self.percentile_ms(0.50))),
+            ("p90_ms", Value::Num(self.percentile_ms(0.90))),
+            ("p99_ms", Value::Num(self.percentile_ms(0.99))),
+        ])
+    }
+}
 
 /// Process-lifetime serving metrics.
 #[derive(Debug, Default)]
@@ -49,8 +198,10 @@ pub struct ServingMetrics {
     /// Counter: in-flight groups resumed from a checkpoint after a restart;
     /// written via [`Self::observe_recovered`].
     groups_recovered: AtomicU64,
-    latency_buckets: [AtomicU64; 13],
-    latency_sum_us: AtomicU64,
+    /// End-to-end request latency.
+    latency: Histogram,
+    /// Per-stage latency, indexed by [`Stage::index`].
+    stages: [Histogram; 6],
 }
 
 impl ServingMetrics {
@@ -61,16 +212,12 @@ impl ServingMetrics {
 
     /// Record one end-to-end request latency in the histogram.
     pub fn observe_latency_ms(&self, ms: f64) {
-        let mut idx = BUCKET_BOUNDS_MS.len();
-        for (i, ub) in BUCKET_BOUNDS_MS.iter().enumerate() {
-            if ms <= *ub {
-                idx = i;
-                break;
-            }
-        }
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us
-            .fetch_add((ms * 1000.0) as u64, Ordering::Relaxed);
+        self.latency.observe_ms(ms);
+    }
+
+    /// Record one latency observation for a pipeline stage.
+    pub fn observe_stage(&self, stage: Stage, ms: f64) {
+        self.stages[stage.index()].observe_ms(ms);
     }
 
     /// Record the batcher's current queue depth (in samples).
@@ -122,27 +269,17 @@ impl ServingMetrics {
         self.model_evals.fetch_add(nfe as u64, Ordering::Relaxed);
     }
 
-    /// Approximate latency percentile from the histogram (upper bound of
-    /// the bucket containing the quantile).
+    /// End-to-end latency percentile, linearly interpolated within the
+    /// histogram bucket containing the quantile (`Infinity` when the
+    /// quantile sits in the overflow bucket; 0 when empty).
     pub fn latency_percentile_ms(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self
-            .latency_buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, c) in counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return BUCKET_BOUNDS_MS.get(i).copied().unwrap_or(f64::INFINITY);
-            }
-        }
-        f64::INFINITY
+        self.latency.percentile_ms(q)
+    }
+
+    /// A stage's latency percentile (same interpolation as
+    /// [`Self::latency_percentile_ms`]).
+    pub fn stage_percentile_ms(&self, stage: Stage, q: f64) -> f64 {
+        self.stages[stage.index()].percentile_ms(q)
     }
 
     /// JSON snapshot for the `stats` command.
@@ -154,6 +291,10 @@ impl ServingMetrics {
         } else {
             0.0
         };
+        let stages: Vec<(String, Value)> = Stage::ALL
+            .iter()
+            .map(|s| (s.key().to_string(), self.stages[s.index()].snapshot()))
+            .collect();
         Value::obj(vec![
             ("requests", load(&self.requests)),
             ("responses_ok", load(&self.responses_ok)),
@@ -173,6 +314,9 @@ impl ServingMetrics {
             ("mean_batch_occupancy", Value::Num(occupancy)),
             ("latency_p50_ms", Value::Num(self.latency_percentile_ms(0.5))),
             ("latency_p95_ms", Value::Num(self.latency_percentile_ms(0.95))),
+            ("latency_p99_ms", Value::Num(self.latency_percentile_ms(0.99))),
+            ("latency_overflow", Value::Num(self.latency.overflow() as f64)),
+            ("stages", Value::Object(stages)),
         ])
     }
 }
@@ -181,23 +325,30 @@ impl ServingMetrics {
 mod tests {
     use super::*;
 
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-9
+    }
+
     #[test]
     fn percentiles_from_buckets() {
         let m = ServingMetrics::new();
         for _ in 0..90 {
-            m.observe_latency_ms(1.5); // bucket ≤ 2ms
+            m.observe_latency_ms(1.5); // bucket (1, 2] ms
         }
         for _ in 0..10 {
-            m.observe_latency_ms(80.0); // bucket ≤ 100ms
+            m.observe_latency_ms(80.0); // bucket (50, 100] ms
         }
-        assert_eq!(m.latency_percentile_ms(0.5), 2.0);
-        assert_eq!(m.latency_percentile_ms(0.95), 100.0);
+        // Interpolated: target rank 50 falls 50/90 into the (1, 2] bucket.
+        assert!(close(m.latency_percentile_ms(0.5), 1.0 + 50.0 / 90.0));
+        // Target rank 95 falls 5/10 into the (50, 100] bucket.
+        assert!(close(m.latency_percentile_ms(0.95), 75.0));
     }
 
     #[test]
     fn empty_percentile_zero() {
         let m = ServingMetrics::new();
         assert_eq!(m.latency_percentile_ms(0.9), 0.0);
+        assert_eq!(m.stage_percentile_ms(Stage::QueueWait, 0.9), 0.0);
     }
 
     #[test]
@@ -257,7 +408,77 @@ mod tests {
     #[test]
     fn overflow_bucket() {
         let m = ServingMetrics::new();
-        m.observe_latency_ms(99999.0);
+        m.observe_latency_ms(99999.0); // above the 5000 ms top bound
         assert_eq!(m.latency_percentile_ms(1.0), f64::INFINITY);
+        assert_eq!(m.snapshot().req_f64("latency_overflow").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn bucket_boundary_edge_cases() {
+        // Exactly on a bound lands in that bound's bucket (bounds are
+        // upper-inclusive): p100 of a single 2.0 ms observation is 2.0.
+        let m = ServingMetrics::new();
+        m.observe_stage(Stage::SolverStep, 2.0);
+        assert!(close(m.stage_percentile_ms(Stage::SolverStep, 1.0), 2.0));
+
+        // Zero lands in the first bucket [0, 0.5].
+        let m = ServingMetrics::new();
+        m.observe_stage(Stage::QueueWait, 0.0);
+        assert!(close(m.stage_percentile_ms(Stage::QueueWait, 1.0), 0.5));
+        assert!(close(m.stage_percentile_ms(Stage::QueueWait, 0.0), 0.0));
+
+        // Above the last bound: counted in overflow, reported Infinity.
+        let m = ServingMetrics::new();
+        m.observe_stage(Stage::CheckpointWrite, 6000.0);
+        assert_eq!(m.stage_percentile_ms(Stage::CheckpointWrite, 0.99), f64::INFINITY);
+    }
+
+    #[test]
+    fn stage_percentile_interpolation_known_distribution() {
+        // 90 observations in (1, 2], 10 in (50, 100]:
+        //   p50 → 50/90 into (1, 2]        = 1.5555…
+        //   p90 → 90/90 into (1, 2]        = 2.0
+        //   p99 → (99−90)/10 into (50,100] = 95.0
+        let m = ServingMetrics::new();
+        for _ in 0..90 {
+            m.observe_stage(Stage::ModelEval, 1.5);
+        }
+        for _ in 0..10 {
+            m.observe_stage(Stage::ModelEval, 80.0);
+        }
+        assert!(close(m.stage_percentile_ms(Stage::ModelEval, 0.50), 1.0 + 50.0 / 90.0));
+        assert!(close(m.stage_percentile_ms(Stage::ModelEval, 0.90), 2.0));
+        assert!(close(m.stage_percentile_ms(Stage::ModelEval, 0.99), 95.0));
+        // Uniform mass in one bucket: the median interpolates to the
+        // middle of (1, 2].
+        let m = ServingMetrics::new();
+        for _ in 0..100 {
+            m.observe_stage(Stage::BatchMerge, 1.5);
+        }
+        assert!(close(m.stage_percentile_ms(Stage::BatchMerge, 0.5), 1.5));
+    }
+
+    #[test]
+    fn snapshot_stage_shape() {
+        let m = ServingMetrics::new();
+        m.observe_stage(Stage::QueueWait, 1.5);
+        m.observe_stage(Stage::ResponseWrite, 0.1);
+        let s = m.snapshot();
+        let stages = s.get("stages").expect("stages object");
+        for stage in Stage::ALL {
+            let entry = stages.get(stage.key()).expect("every stage present");
+            for field in ["count", "overflow", "mean_ms", "p50_ms", "p90_ms", "p99_ms"] {
+                assert!(
+                    entry.req_f64(field).is_ok(),
+                    "stage {} missing field {field}",
+                    stage.key()
+                );
+            }
+        }
+        assert_eq!(stages.get("queue_wait").unwrap().req_f64("count").unwrap(), 1.0);
+        assert!(close(
+            stages.get("queue_wait").unwrap().req_f64("mean_ms").unwrap(),
+            1.5
+        ));
     }
 }

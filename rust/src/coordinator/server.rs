@@ -32,6 +32,11 @@
 //!   exist because a restarted server resumes checkpointed groups whose
 //!   original connections died with the previous process;
 //! * `{"cmd": "ping"}` → `{"ok": true}`;
+//! * `{"cmd": "trace", "action": "start"|"stop"|"dump"}` → controls the
+//!   process-wide span recorder ([`crate::obs`]). `dump` writes a Chrome
+//!   Trace Event file to the command's `"path"` (falling back to
+//!   `ServerConfig.trace_path`), or returns the trace inline when neither
+//!   is set;
 //! * `{"cmd": "shutdown"}` → stops accepting and drains workers.
 //!
 //! With `ServerConfig.checkpoint_path` set (`serve --checkpoint-path`),
@@ -50,14 +55,15 @@
 //! dropped on bad input.
 
 use crate::config::ServerConfig;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, Pending};
 use crate::coordinator::checkpoint::{GroupCheckpoint, ServerCheckpoint};
 use crate::coordinator::engine::BatchRun;
-use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::metrics::{ServingMetrics, Stage};
 use crate::coordinator::request::{cancel_line, SampleRequest, SampleResponse};
 use crate::exec::Executor;
 use crate::jsonlite::{parse, to_string, Value};
 use crate::models::ModelEval;
+use crate::obs::trace;
 use crate::runtime::{HloModel, RuntimeHost};
 use crate::tuner::PresetRegistry;
 use crate::util::error::{Error, Result};
@@ -68,7 +74,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Shared server state.
 struct Shared {
@@ -240,6 +246,14 @@ impl Server {
         if let Some(reg) = &presets {
             crate::log_info!("server", "loaded {} presets", reg.presets.len());
         }
+        // Tracing: the ring capacity applies to threads registering from
+        // here on (workers have not spawned yet); a configured dump path
+        // means "capture from startup", so the recorder starts now.
+        trace::set_capacity(cfg.trace_capacity);
+        if let Some(path) = cfg.trace_path.as_deref() {
+            trace::start();
+            crate::log_info!("server", "tracing enabled (default dump path {path})");
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState {
                 batcher: Batcher::new(),
@@ -295,6 +309,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         }
         match stream {
             Ok(s) => {
+                let _span = trace::span("accept", "server");
                 let shared = shared.clone();
                 let _ = std::thread::Builder::new()
                     .name("sadiff-conn".into())
@@ -331,10 +346,16 @@ fn connection_loop(stream: TcpStream, shared: Arc<Shared>) {
             Ok(line) => handle_line(line.trim_end_matches(&['\r', '\n'][..]), &shared),
             Err(_) => SampleResponse::err(0, "request line is not valid utf-8").to_line(),
         };
-        if writer
-            .write_all(format!("{reply_line}\n").as_bytes())
-            .is_err()
-        {
+        let wrote = {
+            let _span = trace::span("response_write", "server");
+            let t0 = Instant::now();
+            let r = writer.write_all(format!("{reply_line}\n").as_bytes());
+            shared
+                .metrics
+                .observe_stage(Stage::ResponseWrite, t0.elapsed().as_secs_f64() * 1e3);
+            r
+        };
+        if wrote.is_err() {
             break;
         }
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -390,6 +411,7 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
                 }
             }
             "ping" => r#"{"ok":true}"#.to_string(),
+            "trace" => handle_trace(shared, &v),
             "shutdown" => {
                 shared.shutdown.store(true, Ordering::SeqCst);
                 shared.cond.notify_all();
@@ -460,11 +482,63 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
     }
 }
 
+/// The `trace` protocol command: control the process-wide span recorder.
+/// `start` clears previous captures and begins recording; `stop` freezes
+/// the capture; `dump` exports it as Chrome Trace Event JSON — to the
+/// command's `"path"`, else to `ServerConfig.trace_path`, else inline in
+/// the reply under `"trace"`.
+fn handle_trace(shared: &Arc<Shared>, v: &Value) -> String {
+    let Some(action) = v.get("action").and_then(Value::as_str) else {
+        return SampleResponse::err(0, "trace needs an \"action\" (start|stop|dump)").to_line();
+    };
+    match action {
+        "start" => {
+            trace::start();
+            r#"{"ok":true,"tracing":true}"#.to_string()
+        }
+        "stop" => {
+            trace::stop();
+            r#"{"ok":true,"tracing":false}"#.to_string()
+        }
+        "dump" => {
+            let path = v
+                .get("path")
+                .and_then(Value::as_str)
+                .map(String::from)
+                .or_else(|| shared.cfg.trace_path.clone());
+            match path {
+                Some(p) => match crate::obs::chrome::write_file(&p) {
+                    Ok(events) => to_string(&Value::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("path", Value::Str(p)),
+                        ("events", Value::Num(events as f64)),
+                    ])),
+                    Err(e) => SampleResponse::err(0, format!("trace dump: {e}")).to_line(),
+                },
+                None => {
+                    let dump = crate::obs::chrome::export_current();
+                    let spans = dump
+                        .get("traceEvents")
+                        .and_then(Value::as_array)
+                        .map_or(0, |a| a.len());
+                    to_string(&Value::obj(vec![
+                        ("ok", Value::Bool(true)),
+                        ("events", Value::Num(spans as f64)),
+                        ("trace", dump),
+                    ]))
+                }
+            }
+        }
+        other => SampleResponse::err(0, format!("unknown trace action '{other}'")).to_line(),
+    }
+}
+
 /// The `cancel` protocol command: cancel every queued or in-flight request
 /// with client-visible id `target`. Queued requests are removed and
 /// answered immediately; in-flight tickets are flagged for the owning
 /// worker's next step boundary.
 fn handle_cancel(shared: &Arc<Shared>, target: u64) -> String {
+    let _span = trace::span("cancel", "server");
     let (queued, pending) = {
         let mut q = shared.queue.lock().expect("queue lock");
         // Both routing maps: fresh requests live in client_of, checkpoint-
@@ -521,7 +595,7 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
             return;
         }
         // --- Step boundary bookkeeping under the queue lock.
-        let mut admitted: Vec<Vec<SampleRequest>> = Vec::new();
+        let mut admitted: Vec<Vec<Pending>> = Vec::new();
         let mut restored_take: Option<GroupCheckpoint> = None;
         let mut flagged: Vec<u64> = Vec::new();
         let mut drained = false;
@@ -566,7 +640,7 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
                     let ready =
                         q.batcher.len() >= shared.cfg.max_batch || age >= deadline || draining;
                     if ready {
-                        let g = q.batcher.pop_group(shared.cfg.max_batch);
+                        let g = q.batcher.pop_group_pending(shared.cfg.max_batch);
                         if !g.is_empty() {
                             admitted.push(g);
                         }
@@ -641,9 +715,23 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
             set_changed = true;
         }
         // --- Materialize admissions (model resolution + stepper warm-up
-        // run outside the lock).
+        // run outside the lock). Queue wait is attributed per request here
+        // — enqueue-to-admission, measured from the batcher's arrival
+        // stamp — then the merge + warm-up itself is the batch_merge stage.
         for g in admitted {
-            match admit_group(&shared, g) {
+            let _span = trace::span("batch_merge", "server");
+            let merge_t0 = Instant::now();
+            let mut group = Vec::with_capacity(g.len());
+            for p in g {
+                let wait_ms = p.arrived.elapsed().as_secs_f64() * 1e3;
+                shared.metrics.observe_stage(Stage::QueueWait, wait_ms);
+                if trace::is_enabled() {
+                    let start = trace::now_us().saturating_sub((wait_ms * 1e3) as u64);
+                    trace::record_since("queue_wait", "server", start);
+                }
+                group.push(p.request);
+            }
+            match admit_group(&shared, group) {
                 Ok(run) => {
                     shared.metrics.group_admitted(run.lanes());
                     active.push(run);
@@ -656,9 +744,13 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
                     }
                 }
             }
+            shared
+                .metrics
+                .observe_stage(Stage::BatchMerge, merge_t0.elapsed().as_secs_f64() * 1e3);
         }
         // --- Apply cancellations at this step boundary.
         for t in flagged {
+            let _span = trace::span("cancel", "server");
             for run in active.iter_mut() {
                 let before = run.lanes();
                 if let Some(resp) = run.cancel(t) {
@@ -684,8 +776,16 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
         // A group whose last request was cancelled is already done —
         // retire it without counting a phantom scheduler step.
         let was_done = active[rr].is_done();
-        let done = active[rr].step(&shared.exec);
+        let step_t0 = Instant::now();
+        let done = {
+            let _span = trace::span("step", "server");
+            active[rr].step(&shared.exec)
+        };
         if !was_done {
+            shared
+                .metrics
+                .observe_stage(Stage::SolverStep, step_t0.elapsed().as_secs_f64() * 1e3);
+            shared.metrics.observe_stage(Stage::ModelEval, active[rr].last_eval_ms());
             shared.metrics.observe_step(active[rr].lanes());
             ckpt_steps += 1;
         }
@@ -762,8 +862,14 @@ fn write_checkpoint(shared: &Arc<Shared>, worker: usize, active: &[BatchRun]) {
     let merged = ServerCheckpoint {
         groups: sink.values().flatten().cloned().chain(waiting).collect(),
     };
+    let ckpt_t0 = Instant::now();
     match merged.save(path) {
-        Ok(()) => shared.metrics.observe_checkpoint(),
+        Ok(()) => {
+            shared.metrics.observe_checkpoint();
+            shared
+                .metrics
+                .observe_stage(Stage::CheckpointWrite, ckpt_t0.elapsed().as_secs_f64() * 1e3);
+        }
         Err(e) => crate::log_warn!("server", "checkpoint write failed: {e}"),
     }
 }
@@ -872,6 +978,21 @@ impl Client {
     /// were flagged for their owning worker's next step boundary.
     pub fn cancel(&mut self, id: u64) -> Result<Value> {
         let line = self.round_trip(&cancel_line(id))?;
+        parse(&line)
+    }
+
+    /// Control the server's span recorder: `action` is `"start"`, `"stop"`
+    /// or `"dump"`; `path` overrides the server's default dump path for a
+    /// `dump`. Returns the server's JSON reply.
+    pub fn trace(&mut self, action: &str, path: Option<&str>) -> Result<Value> {
+        let mut fields = vec![
+            ("cmd", Value::Str("trace".into())),
+            ("action", Value::Str(action.into())),
+        ];
+        if let Some(p) = path {
+            fields.push(("path", Value::Str(p.into())));
+        }
+        let line = self.round_trip(&to_string(&Value::obj(fields)))?;
         parse(&line)
     }
 

@@ -101,7 +101,10 @@ impl Executor {
                 .map(|r| {
                     std::thread::Builder::new()
                         .name(format!("sadiff-exec-{}", r.start))
-                        .spawn_scoped(s, move || f(r))
+                        .spawn_scoped(s, move || {
+                            let _span = crate::obs::trace::span("exec_chunk", "exec");
+                            f(r)
+                        })
                         .expect("spawn exec worker")
                 })
                 .collect();
@@ -136,7 +139,10 @@ impl Executor {
             for (i, item) in items.iter_mut().enumerate() {
                 std::thread::Builder::new()
                     .name(format!("sadiff-step-{i}"))
-                    .spawn_scoped(s, move || f(i, item))
+                    .spawn_scoped(s, move || {
+                        let _span = crate::obs::trace::span("exec_chunk", "exec");
+                        f(i, item)
+                    })
                     .expect("spawn step worker");
             }
         });

@@ -42,8 +42,8 @@
     clippy::uninlined_format_args
 )]
 // Rustdoc gate: every public item in the documented core — `linalg`,
-// `solvers` (the stepper/snapshot layer), `coordinator`, `exec` — carries
-// a doc comment; CI enforces it via `RUSTDOCFLAGS="-D warnings" cargo doc
+// `solvers` (the stepper/snapshot layer), `coordinator`, `exec`, `obs` —
+// carries a doc comment; CI enforces it via `RUSTDOCFLAGS="-D warnings" cargo doc
 // --no-deps`. Modules still outside the documented core opt out
 // explicitly below so the warning stays meaningful where it is on.
 #![warn(missing_docs)]
@@ -67,6 +67,7 @@ pub mod linalg;
 pub mod metrics;
 #[allow(missing_docs)]
 pub mod models;
+pub mod obs;
 #[allow(missing_docs)]
 pub mod quad;
 #[allow(missing_docs)]

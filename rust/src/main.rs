@@ -6,8 +6,11 @@
 //!                in-flight checkpointing and resume-on-start)
 //!   sample       run one sampling job locally and report metrics
 //!   client       send a request to a running server (`--resume <id|all>`
-//!                queries checkpoint-recovered results)
+//!                queries checkpoint-recovered results; `--stats` prints a
+//!                human-readable metrics table; `--trace start|stop|dump`
+//!                drives the server's span recorder)
 //!   checkpoint   inspect a serving checkpoint file
+//!   trace        inspect a Chrome Trace Event dump written by the server
 //!   tune         search solver configs per (workload, NFE budget) and
 //!                write a preset registry
 //!   `exp <id>`   regenerate a paper table/figure (see `exp list`)
@@ -53,7 +56,11 @@ fn flag_spec() -> Vec<FlagSpec> {
         FlagSpec { name: "quick", help: "small quick run", takes_value: false },
         FlagSpec { name: "log", help: "log level", takes_value: true },
         FlagSpec { name: "budgets", help: "NFE budgets to tune, e.g. 5,10,20", takes_value: true },
-        FlagSpec { name: "out", help: "output path (tune registry)", takes_value: true },
+        FlagSpec {
+            name: "out",
+            help: "output path (tune registry, trace dump)",
+            takes_value: true,
+        },
         FlagSpec { name: "refine", help: "tuner refinement rounds", takes_value: true },
         FlagSpec { name: "presets", help: "preset registry path (serve)", takes_value: true },
         FlagSpec { name: "preset", help: "preset name or 'auto' (client)", takes_value: true },
@@ -72,6 +79,26 @@ fn flag_spec() -> Vec<FlagSpec> {
             help: "fetch a checkpoint-recovered result: id or 'all' (client)",
             takes_value: true,
         },
+        FlagSpec {
+            name: "trace-path",
+            help: "enable tracing; default trace dump path (serve)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "trace-capacity",
+            help: "per-thread trace ring capacity, events (serve)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "trace",
+            help: "span recorder control: start|stop|dump (client)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "stats",
+            help: "print a human-readable server metrics table (client)",
+            takes_value: false,
+        },
     ]
 }
 
@@ -84,14 +111,17 @@ fn main() {
             std::process::exit(2);
         }
     };
-    sadiff::util::log::set_level_by_name(args.get_str("log", "info"));
+    if let Err(e) = sadiff::util::log::set_level_by_name(args.get_str("log", "info")) {
+        eprintln!("--log: {e}");
+        std::process::exit(2);
+    }
     if args.has("help") || args.positionals.is_empty() {
         print!(
             "{}",
             render_help("sadiff", "SA-Solver diffusion sampling framework", &spec)
         );
         println!(
-            "\nSubcommands: serve | sample | client | checkpoint <path> | tune | exp <id|list> | artifacts | info"
+            "\nSubcommands: serve | sample | client | checkpoint <path> | trace <path> | tune | exp <id|list> | artifacts | info"
         );
         return;
     }
@@ -101,6 +131,7 @@ fn main() {
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
         "checkpoint" => cmd_checkpoint(&args),
+        "trace" => cmd_trace(&args),
         "tune" => cmd_tune(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
@@ -152,6 +183,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.checkpoint_every =
         args.get_u64("checkpoint-every", cfg.checkpoint_every)?.max(1);
+    if let Some(path) = args.get("trace-path") {
+        cfg.trace_path = Some(path.to_string());
+    }
+    cfg.trace_capacity = args.get_usize("trace-capacity", cfg.trace_capacity)?;
     let handle = Server::bind(cfg)?.spawn()?;
     println!("sadiff server on {} — Ctrl-C to stop", handle.addr);
     // Block forever; the handle's workers do the serving.
@@ -187,6 +222,15 @@ fn cmd_sample(args: &Args) -> Result<()> {
 fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7878");
     let mut client = Client::connect(addr)?;
+    if let Some(action) = args.get("trace") {
+        let reply = client.trace(action, args.get("out"))?;
+        println!("{}", jsonlite::to_string(&reply));
+        return Ok(());
+    }
+    if args.has("stats") {
+        print_stats_table(&client.stats()?);
+        return Ok(());
+    }
     if let Some(spec) = args.get("resume") {
         let id = if spec == "all" {
             None
@@ -236,6 +280,70 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
         println!("  {line}");
     }
     Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| Error::config("usage: sadiff trace <path>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::config(format!("cannot read {path}: {e}")))?;
+    println!("trace {path}:");
+    for line in sadiff::obs::chrome::describe(&text)? {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
+/// Render the `stats` snapshot as a table: headline counters, then one
+/// row per pipeline stage with interpolated latency percentiles. An
+/// overflow-bucket percentile serializes as JSON `null` and prints `inf`.
+fn print_stats_table(stats: &Value) {
+    let num = |k: &str| stats.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+    let ms = |v: &Value, k: &str| match v.get(k).and_then(Value::as_f64) {
+        Some(x) => format!("{x:.3}"),
+        None => "inf".to_string(),
+    };
+    println!("requests              {}", num("requests"));
+    println!(
+        "  ok / err / shed     {} / {} / {}",
+        num("responses_ok"),
+        num("responses_err"),
+        num("shed")
+    );
+    println!("  cancelled           {}", num("cancelled"));
+    println!("queued samples        {}", num("queued_samples"));
+    println!("inflight groups/lanes {} / {}", num("inflight_groups"), num("inflight_lanes"));
+    println!("steps (lane-steps)    {} ({})", num("steps"), num("step_lanes"));
+    println!("batches               {}", num("batches"));
+    println!("mean batch occupancy  {:.2}", num("mean_batch_occupancy"));
+    println!("checkpoints written   {}", num("checkpoints_written"));
+    println!("groups recovered      {}", num("groups_recovered"));
+    println!(
+        "latency ms            p50 {} / p95 {} / p99 {}",
+        ms(stats, "latency_p50_ms"),
+        ms(stats, "latency_p95_ms"),
+        ms(stats, "latency_p99_ms")
+    );
+    let Some(stages) = stats.get("stages") else {
+        return;
+    };
+    println!();
+    println!("{:<18} {:>8} {:>10} {:>10} {:>10}", "stage", "count", "p50 ms", "p90 ms", "p99 ms");
+    for stage in sadiff::coordinator::metrics::Stage::ALL {
+        let Some(entry) = stages.get(stage.key()) else {
+            continue;
+        };
+        println!(
+            "{:<18} {:>8} {:>10} {:>10} {:>10}",
+            stage.key(),
+            entry.opt_f64("count", 0.0),
+            ms(entry, "p50_ms"),
+            ms(entry, "p90_ms"),
+            ms(entry, "p99_ms")
+        );
+    }
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {

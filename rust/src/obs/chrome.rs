@@ -1,0 +1,211 @@
+//! Chrome Trace Event Format export: turns a [`trace::dump`] into JSON
+//! that opens directly in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! The export is the "JSON Object Format" variant: a top-level
+//! `traceEvents` array of complete-duration events (`"ph":"X"`, `ts` and
+//! `dur` in microseconds) preceded by `thread_name` metadata events
+//! (`"ph":"M"`) so every recorded thread — the accept loop, each worker,
+//! and the exec pool — gets a named lane in the viewer. Span categories
+//! land in `cat`, so Perfetto can filter scheduler vs. engine vs. io
+//! spans.
+
+use crate::jsonlite::{parse, to_string, Value};
+use crate::obs::trace::{self, ThreadLane};
+use crate::util::error::{Error, Result};
+
+/// The process id stamped on every event (single-process trace).
+const PID: u64 = 1;
+
+/// Build the Chrome Trace Event JSON object for a set of captured lanes.
+pub fn export(lanes: &[ThreadLane]) -> Value {
+    let mut events: Vec<Value> = Vec::new();
+    events.push(Value::obj(vec![
+        ("ph", Value::Str("M".into())),
+        ("name", Value::Str("process_name".into())),
+        ("pid", Value::Num(PID as f64)),
+        ("tid", Value::Num(0.0)),
+        ("args", Value::obj(vec![("name", Value::Str("sadiff".into()))])),
+    ]));
+    for lane in lanes {
+        events.push(Value::obj(vec![
+            ("ph", Value::Str("M".into())),
+            ("name", Value::Str("thread_name".into())),
+            ("pid", Value::Num(PID as f64)),
+            ("tid", Value::Num(lane.tid as f64)),
+            ("args", Value::obj(vec![("name", Value::Str(lane.label.clone()))])),
+        ]));
+        for ev in &lane.events {
+            events.push(Value::obj(vec![
+                ("ph", Value::Str("X".into())),
+                ("name", Value::Str(ev.name.into())),
+                ("cat", Value::Str(ev.cat.into())),
+                ("ts", Value::Num(ev.start_us as f64)),
+                ("dur", Value::Num(ev.dur_us as f64)),
+                ("pid", Value::Num(PID as f64)),
+                ("tid", Value::Num(lane.tid as f64)),
+            ]));
+        }
+    }
+    let dropped: u64 = lanes.iter().map(|l| l.dropped).sum();
+    Value::obj(vec![
+        ("traceEvents", Value::Array(events)),
+        ("displayTimeUnit", Value::Str("ms".into())),
+        ("otherData", Value::obj(vec![("dropped_events", Value::Num(dropped as f64))])),
+    ])
+}
+
+/// [`export`] of the recorder's current capture ([`trace::dump`]).
+pub fn export_current() -> Value {
+    export(&trace::dump())
+}
+
+/// Write the current capture to `path` as Chrome Trace Event JSON.
+/// Atomic (tmp file + rename) like server checkpoints, so a dump never
+/// leaves a half-written file. Returns the number of span events written
+/// (metadata events excluded).
+pub fn write_file(path: &str) -> Result<usize> {
+    let lanes = trace::dump();
+    let n: usize = lanes.iter().map(|l| l.events.len()).sum();
+    let v = export(&lanes);
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, format!("{}\n", to_string(&v)))
+        .map_err(|e| Error::runtime(format!("cannot write {tmp}: {e}")))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| Error::runtime(format!("cannot rename {tmp} -> {path}: {e}")))?;
+    Ok(n)
+}
+
+/// Validate a Chrome Trace Event JSON string and summarize it: total span
+/// events, time extent, per-lane and per-name counts. This is what
+/// `sadiff trace <path>` prints.
+pub fn describe(text: &str) -> Result<Vec<String>> {
+    let v = parse(text).map_err(|e| Error::config(format!("trace is not valid JSON: {e}")))?;
+    let events = v
+        .get("traceEvents")
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::config("not a Chrome Trace Event dump: missing 'traceEvents'"))?;
+
+    let mut lane_names: Vec<(u64, String)> = Vec::new();
+    // (name, cat) -> (count, total dur us)
+    let mut by_name: Vec<(String, String, u64, f64)> = Vec::new();
+    let mut spans = 0u64;
+    let (mut t_min, mut t_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for ev in events {
+        let ph = ev.get("ph").and_then(Value::as_str).unwrap_or("");
+        if ph == "M" {
+            if ev.get("name").and_then(Value::as_str) == Some("thread_name") {
+                let tid = ev.get("tid").and_then(Value::as_u64).unwrap_or(0);
+                let label = ev
+                    .get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Value::as_str)
+                    .unwrap_or("?");
+                lane_names.push((tid, label.to_string()));
+            }
+            continue;
+        }
+        if ph != "X" {
+            return Err(Error::config(format!("unsupported event phase '{ph}' in trace")));
+        }
+        let ts = ev.req_f64("ts")?;
+        let dur = ev.req_f64("dur")?;
+        spans += 1;
+        t_min = t_min.min(ts);
+        t_max = t_max.max(ts + dur);
+        let name = ev.get("name").and_then(Value::as_str).unwrap_or("?").to_string();
+        let cat = ev.get("cat").and_then(Value::as_str).unwrap_or("?").to_string();
+        match by_name.iter_mut().find(|(n, c, _, _)| *n == name && *c == cat) {
+            Some(row) => {
+                row.2 += 1;
+                row.3 += dur;
+            }
+            None => by_name.push((name, cat, 1, dur)),
+        }
+    }
+
+    let mut lines = Vec::new();
+    let extent_ms = if spans > 0 { (t_max - t_min) / 1000.0 } else { 0.0 };
+    lines.push(format!(
+        "{spans} span events across {} lanes, {extent_ms:.3} ms extent",
+        lane_names.len()
+    ));
+    lane_names.sort();
+    for (tid, label) in &lane_names {
+        lines.push(format!("  lane tid={tid}: {label}"));
+    }
+    by_name.sort_by(|a, b| (&a.1, &a.0).cmp(&(&b.1, &b.0)));
+    for (name, cat, count, dur_us) in &by_name {
+        let mean_us = dur_us / *count as f64;
+        lines.push(format!(
+            "  {cat}/{name}: {count} spans, total {:.3} ms, mean {mean_us:.1} us",
+            dur_us / 1000.0
+        ));
+    }
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Event;
+
+    fn lane(tid: u64, label: &str, events: Vec<Event>) -> ThreadLane {
+        ThreadLane { tid, label: label.to_string(), events, dropped: 0 }
+    }
+
+    #[test]
+    fn export_emits_thread_metadata_and_complete_events() {
+        let lanes = vec![
+            lane(
+                1,
+                "sadiff-worker-0",
+                vec![Event { name: "step", cat: "scheduler", start_us: 10, dur_us: 5 }],
+            ),
+            lane(2, "sadiff-accept", vec![]),
+        ];
+        let v = export(&lanes);
+        let events = v.get("traceEvents").and_then(Value::as_array).unwrap();
+        // process_name + 2 thread_name metadata + 1 span.
+        assert_eq!(events.len(), 4);
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .expect("one complete event");
+        assert_eq!(span.get("name").and_then(Value::as_str), Some("step"));
+        assert_eq!(span.get("ts").and_then(Value::as_f64), Some(10.0));
+        assert_eq!(span.get("dur").and_then(Value::as_f64), Some(5.0));
+        assert_eq!(span.get("tid").and_then(Value::as_u64), Some(1));
+        let meta_labels: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Value::as_str) == Some("thread_name"))
+            .map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Value::as_str).unwrap())
+            .collect();
+        assert_eq!(meta_labels, vec!["sadiff-worker-0", "sadiff-accept"]);
+    }
+
+    #[test]
+    fn export_round_trips_through_describe() {
+        let lanes = vec![lane(
+            3,
+            "sadiff-worker-1",
+            vec![
+                Event { name: "step", cat: "scheduler", start_us: 0, dur_us: 100 },
+                Event { name: "step", cat: "scheduler", start_us: 200, dur_us: 100 },
+                Event { name: "model_eval", cat: "engine", start_us: 10, dur_us: 40 },
+            ],
+        )];
+        let text = to_string(&export(&lanes));
+        let lines = describe(&text).expect("valid dump");
+        assert!(lines[0].starts_with("3 span events across 1 lanes"));
+        assert!(lines.iter().any(|l| l.contains("sadiff-worker-1")));
+        assert!(lines.iter().any(|l| l.contains("scheduler/step: 2 spans")));
+        assert!(lines.iter().any(|l| l.contains("engine/model_eval: 1 spans")));
+    }
+
+    #[test]
+    fn describe_rejects_non_trace_json() {
+        assert!(describe("{\"not_a_trace\": true}").is_err());
+        assert!(describe("not json at all").is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability (Layer 3 cross-cutting): span tracing and trace export.
+//!
+//! This is the repo's third cross-cutting contract, after bit-identity
+//! and allocation-freedom: **observable, and free when off**. The
+//! serving stack is instrumented with spans (queue wait, admission,
+//! solver step, model eval, checkpoint write, response write) that cost
+//! one relaxed atomic load and zero allocations while tracing is
+//! disabled — cheap enough to live inside the allocation-free per-step
+//! hot path — and record into per-thread fixed-capacity ring buffers
+//! while enabled. A capture exports as Chrome Trace Event JSON that
+//! opens directly in Perfetto, with one lane per thread (accept loop,
+//! workers, exec pool).
+//!
+//! * [`trace`] — the recorder: enable flag, spans, ring buffers, dump.
+//! * [`chrome`] — Chrome Trace Event Format export and validation.
+//!
+//! Aggregate per-stage latency *histograms* (always on, independent of
+//! the tracer) live in [`crate::coordinator::metrics`]; this module is
+//! the event-level view. See docs/OBSERVABILITY.md for the span model,
+//! the ring drop policy, and the overhead contract as gated in CI.
+//!
+//! ```
+//! sadiff::obs::trace::start();
+//! {
+//!     let _s = sadiff::obs::trace::span("work", "demo");
+//! }
+//! sadiff::obs::trace::stop();
+//! let lanes = sadiff::obs::trace::dump();
+//! assert!(lanes.iter().flat_map(|l| &l.events).any(|e| e.name == "work"));
+//! ```
+
+pub mod chrome;
+pub mod trace;
+
+pub use trace::{span, Span, ThreadLane};

@@ -1,0 +1,303 @@
+//! Span recorder: per-thread fixed-capacity ring buffers behind one
+//! process-global enable flag.
+//!
+//! The contract (docs/OBSERVABILITY.md) is "observable, and free when
+//! off": a span on a disabled tracer costs exactly one relaxed atomic
+//! load and zero allocations, so the recorder can sit inside the
+//! allocation-free per-step hot path (`integration_alloc` proves the
+//! zero-allocs-per-step contract with this module compiled in). When
+//! enabled, recording is lock-cheap and allocation-free too *after* a
+//! thread's first span (registration allocates that thread's ring once);
+//! a full ring overwrites its oldest event and counts the overwrite in
+//! [`ThreadLane::dropped`].
+//!
+//! Timestamps are microseconds on a process-wide monotonic epoch
+//! (`std::time::Instant`), which is what the Chrome Trace Event export
+//! ([`crate::obs::chrome`]) emits directly.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity, in events.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+/// One recorded span: a named, categorized `[start, start+dur)` interval
+/// on the thread that recorded it. Names and categories are `&'static
+/// str` so recording never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Span name (e.g. `"step"`, `"model_eval"`).
+    pub name: &'static str,
+    /// Coarse grouping for trace viewers (e.g. `"scheduler"`, `"io"`).
+    pub cat: &'static str,
+    /// Start, microseconds since the process trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+}
+
+/// Fixed-capacity event ring. Full ring → overwrite the oldest event
+/// (newest events win; `dropped` counts the overwrites).
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    /// Write cursor once the ring has wrapped (`buf.len() == cap`).
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap), cap, next: 0, dropped: 0 }
+    }
+
+    /// Allocation-free: pushes within the preallocated capacity, then
+    /// overwrites in place.
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events oldest-first (un-wraps the ring).
+    fn snapshot(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        out
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.dropped = 0;
+    }
+}
+
+/// A registered thread's recorder state. Lives in the global registry for
+/// the life of the process so a worker's events survive its thread.
+#[derive(Debug)]
+struct ThreadBuf {
+    tid: u64,
+    label: String,
+    ring: Mutex<Ring>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<ThreadBuf>>> = const { RefCell::new(None) };
+}
+
+/// One thread's captured events, as returned by [`dump`].
+#[derive(Debug, Clone)]
+pub struct ThreadLane {
+    /// Stable per-process thread id (registration order, starting at 1).
+    pub tid: u64,
+    /// The OS thread name at registration (`"sadiff-worker-0"`,
+    /// `"sadiff-accept"`, `"sadiff-step-1"`, ...) or `"thread-{tid}"`.
+    pub label: String,
+    /// Captured events, oldest first.
+    pub events: Vec<Event>,
+    /// Events overwritten because the ring was full (newest-wins policy).
+    pub dropped: u64,
+}
+
+fn epoch() -> &'static Instant {
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (monotonic).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// True when the recorder is capturing. One relaxed load.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start a fresh capture: clears every registered ring, then enables
+/// recording.
+pub fn start() {
+    epoch();
+    for tb in REGISTRY.lock().unwrap().iter() {
+        tb.ring.lock().unwrap().clear();
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop capturing. Recorded events are kept until the next [`start`].
+pub fn stop() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Set the per-thread ring capacity (events). Applies to threads that
+/// register *after* the call; already-registered rings keep their size.
+pub fn set_capacity(cap: usize) {
+    CAPACITY.store(cap.max(16), Ordering::Relaxed);
+}
+
+/// The capacity newly registering threads will get.
+pub fn capacity() -> usize {
+    CAPACITY.load(Ordering::Relaxed)
+}
+
+fn register_thread() -> Arc<ThreadBuf> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let label = std::thread::current()
+        .name()
+        .map(String::from)
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let tb = Arc::new(ThreadBuf { tid, label, ring: Mutex::new(Ring::new(capacity())) });
+    REGISTRY.lock().unwrap().push(tb.clone());
+    tb
+}
+
+fn record(ev: Event) {
+    // `try_with` so a span dropped during thread teardown (TLS already
+    // destroyed) degrades to a dropped event instead of a panic.
+    let _ = LOCAL.try_with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let tb = slot.get_or_insert_with(register_thread);
+        tb.ring.lock().unwrap().push(ev);
+    });
+}
+
+/// RAII span guard: records an [`Event`] from construction to drop on the
+/// recording thread's lane. Constructed disabled, it is inert — see
+/// [`span`].
+#[must_use = "a span records its interval when dropped; binding it to _ drops it immediately"]
+#[derive(Debug)]
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    /// `u64::MAX` marks a span created while disabled (records nothing).
+    start_us: u64,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.start_us == u64::MAX {
+            return;
+        }
+        let dur_us = now_us().saturating_sub(self.start_us);
+        record(Event { name: self.name, cat: self.cat, start_us: self.start_us, dur_us });
+    }
+}
+
+/// Open a span. Disabled tracer: one relaxed load, no clock read, no
+/// allocation, and the returned guard's drop is a single branch.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !is_enabled() {
+        return Span { name, cat, start_us: u64::MAX };
+    }
+    Span { name, cat, start_us: now_us() }
+}
+
+/// Record a span that started at `start_us` (a [`now_us`] reading, possibly
+/// taken on another thread) and ends now, on the *calling* thread's lane.
+/// Used for cross-thread intervals like queue wait (enqueued on a
+/// connection thread, admitted on a worker).
+#[inline]
+pub fn record_since(name: &'static str, cat: &'static str, start_us: u64) {
+    if !is_enabled() {
+        return;
+    }
+    let dur_us = now_us().saturating_sub(start_us);
+    record(Event { name, cat, start_us, dur_us });
+}
+
+/// Snapshot every registered thread's captured events, ordered by thread
+/// id. Does not clear the rings and does not stop the capture.
+pub fn dump() -> Vec<ThreadLane> {
+    let mut lanes: Vec<ThreadLane> = REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|tb| {
+            let ring = tb.ring.lock().unwrap();
+            ThreadLane {
+                tid: tb.tid,
+                label: tb.label.clone(),
+                events: ring.snapshot(),
+                dropped: ring.dropped,
+            }
+        })
+        .collect();
+    lanes.sort_by_key(|l| l.tid);
+    lanes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_fills_then_overwrites_oldest() {
+        let mut r = Ring::new(3);
+        let ev = |i: u64| Event { name: "e", cat: "t", start_us: i, dur_us: 1 };
+        r.push(ev(1));
+        r.push(ev(2));
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.snapshot().iter().map(|e| e.start_us).collect::<Vec<_>>(), vec![1, 2]);
+        r.push(ev(3));
+        r.push(ev(4)); // wraps: overwrites 1
+        r.push(ev(5)); // overwrites 2
+        assert_eq!(r.dropped, 2);
+        assert_eq!(r.snapshot().iter().map(|e| e.start_us).collect::<Vec<_>>(), vec![3, 4, 5]);
+        r.clear();
+        assert_eq!(r.dropped, 0);
+        assert!(r.snapshot().is_empty());
+        r.push(ev(6));
+        assert_eq!(r.snapshot().len(), 1);
+    }
+
+    // Single test for the global recorder (the enable flag and registry
+    // are process-wide; keeping one test avoids cross-test interference
+    // in the parallel harness).
+    #[test]
+    fn global_recorder_lifecycle() {
+        // Disabled spans are inert.
+        {
+            let _s = span("obs_unit_disabled", "test");
+        }
+        start();
+        {
+            let _s = span("obs_unit_span", "test");
+        }
+        record_since("obs_unit_since", "test", now_us().saturating_sub(5));
+        stop();
+        let lanes = dump();
+        let mine: Vec<&Event> = lanes
+            .iter()
+            .flat_map(|l| &l.events)
+            .filter(|e| e.name.starts_with("obs_unit"))
+            .collect();
+        assert!(mine.iter().any(|e| e.name == "obs_unit_span"));
+        assert!(mine.iter().any(|e| e.name == "obs_unit_since"));
+        assert!(
+            !mine.iter().any(|e| e.name == "obs_unit_disabled"),
+            "a span opened while disabled must not be recorded"
+        );
+        // Spans opened after stop() record nothing.
+        {
+            let _s = span("obs_unit_after_stop", "test");
+        }
+        let after = dump();
+        assert!(!after.iter().flat_map(|l| &l.events).any(|e| e.name == "obs_unit_after_stop"));
+    }
+}

@@ -23,17 +23,25 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Parse a level name ("error".."trace"); unknown names leave Info.
-pub fn set_level_by_name(name: &str) {
+/// Parse a level name ("error".."trace") and set the global level. An
+/// unknown name is an error and leaves the level unchanged — a typo like
+/// `--log tracee` must be reported at the CLI, not silently mapped to
+/// Info.
+pub fn set_level_by_name(name: &str) -> Result<(), String> {
     let lvl = match name.to_ascii_lowercase().as_str() {
         "error" => Level::Error,
         "warn" => Level::Warn,
         "info" => Level::Info,
         "debug" => Level::Debug,
         "trace" => Level::Trace,
-        _ => Level::Info,
+        other => {
+            return Err(format!(
+                "unknown log level '{other}' (expected error|warn|info|debug|trace)"
+            ))
+        }
     };
     set_level(lvl);
+    Ok(())
 }
 
 /// Whether `level` is currently enabled.
@@ -98,9 +106,12 @@ mod tests {
 
     #[test]
     fn name_parse() {
-        set_level_by_name("debug");
+        assert!(set_level_by_name("debug").is_ok());
         assert!(enabled(Level::Debug));
-        set_level_by_name("nonsense");
-        assert!(enabled(Level::Info) && !enabled(Level::Debug));
+        // Unknown names error and leave the level exactly where it was.
+        let err = set_level_by_name("tracee").unwrap_err();
+        assert!(err.contains("tracee"), "{err}");
+        assert!(enabled(Level::Debug));
+        assert!(set_level_by_name("INFO").is_ok()); // case-insensitive; restore default
     }
 }

@@ -6,6 +6,12 @@
 //! Asserted with a counting global allocator, which counts process-wide:
 //! everything lives in ONE `#[test]` so no concurrent test pollutes the
 //! counter (this binary is registered with its own `[[test]] `target).
+//!
+//! Tracing (`sadiff::obs`) is compiled into the hot path from PR 7 on;
+//! the step loop below opens a span around every step with the recorder
+//! disabled (its default state), so this test also proves the
+//! observability contract's "free when off" half: a disabled span costs
+//! no allocations.
 
 use sadiff::config::{Prediction, SamplerConfig, SolverKind, TauKind};
 use sadiff::linalg::simd::{self, Dispatch};
@@ -47,6 +53,9 @@ fn allocs_across_steps(cfg: &SamplerConfig, n: usize, dim: usize) -> u64 {
     st.init(&model, &grid, &mut x, n, &mut noise);
     let before = alloc_count();
     for i in 0..m {
+        // Disabled span (the recorder is never started in this binary):
+        // must not allocate, or the assertion below localizes it here.
+        let _span = sadiff::obs::trace::span("step", "test");
         st.step(&model, &grid, i, &mut x, n, &mut noise);
     }
     st.finish(&mut x);
@@ -84,9 +93,27 @@ fn kernels_allocate_nothing_on_any_tier() {
     }
 }
 
+/// The "free when off" half of the observability contract in isolation:
+/// with the recorder disabled, opening spans and recording cross-thread
+/// intervals must never touch the heap.
+fn disabled_tracing_allocates_nothing() {
+    assert!(!sadiff::obs::trace::is_enabled(), "recorder must be off in this binary");
+    let before = alloc_count();
+    for _ in 0..1000 {
+        let _span = sadiff::obs::trace::span("alloc_probe", "test");
+        sadiff::obs::trace::record_since("alloc_probe_since", "test", 0);
+    }
+    let allocs = alloc_count() - before;
+    assert_eq!(allocs, 0, "disabled tracer: {allocs} heap allocations across 1000 spans");
+}
+
 #[test]
 fn stepper_step_allocates_nothing_after_init_for_every_solver() {
-    // The kernel layer first, on every tier — if the stepper loop below
+    // The tracer first, in isolation: a disabled span is one relaxed
+    // load, no clock read, no allocation.
+    disabled_tracing_allocates_nothing();
+
+    // The kernel layer next, on every tier — if the stepper loop below
     // regressed, this localizes whether the kernels themselves leaked an
     // allocation or the driver did.
     kernels_allocate_nothing_on_any_tier();

@@ -1,0 +1,136 @@
+//! End-to-end observability: a real served request leaves a valid Chrome
+//! Trace Event dump containing queue-wait, step, model-eval and
+//! checkpoint-write spans, and the `stats` snapshot carries per-stage
+//! latency histograms for the same request.
+//!
+//! Everything lives in ONE `#[test]`: the span recorder is process-global
+//! (started at server bind because `trace_path` is set), and the parallel
+//! test harness must not run two tests that start/stop/dump it.
+
+use sadiff::config::{SamplerConfig, ServerConfig};
+use sadiff::coordinator::server::{Client, Server};
+use sadiff::coordinator::SampleRequest;
+use sadiff::jsonlite::{self, Value};
+
+fn request(id: u64, n: usize, nfe: usize) -> SampleRequest {
+    SampleRequest {
+        id,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: SamplerConfig { nfe, ..SamplerConfig::sa_default() },
+        n,
+        seed: id,
+        return_samples: false,
+        want_metrics: false,
+        preset: None,
+    }
+}
+
+#[test]
+fn served_request_produces_chrome_trace_and_stage_histograms() {
+    let dir = std::env::temp_dir().join(format!("sadiff_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // The default dump lands in target/ so CI can upload it as a Perfetto
+    // artifact (the file is intentionally left behind on success).
+    std::fs::create_dir_all("target").unwrap();
+    let trace_path = "target/serve_trace.json";
+    let ck_path = dir.join("ck.json");
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        batch_deadline_ms: 3,
+        workers: 1,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 2,
+        checkpoint_path: Some(ck_path.to_str().unwrap().to_string()),
+        checkpoint_every: 4,
+        trace_path: Some(trace_path.to_string()),
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let mut client = Client::connect(&handle.addr.to_string()).unwrap();
+
+    let resp = client.request(&request(1, 4, 8)).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+
+    // The group's retirement forces a checkpoint rewrite at the worker's
+    // next boundary; wait for it so the dump below must contain the span.
+    let mut checkpoints = 0.0;
+    for _ in 0..200 {
+        checkpoints = client.stats().unwrap().req_f64("checkpoints_written").unwrap();
+        if checkpoints >= 1.0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(checkpoints >= 1.0, "no checkpoint written after a retired group");
+
+    // Per-stage latency histograms cover the served request.
+    let stats = client.stats().unwrap();
+    let stages = stats.get("stages").expect("stats must carry a stages object");
+    for key in ["queue_wait", "batch_merge", "solver_step", "model_eval", "checkpoint_write"] {
+        let count = stages
+            .get(key)
+            .unwrap_or_else(|| panic!("stage {key} missing from stats"))
+            .req_f64("count")
+            .unwrap();
+        assert!(count >= 1.0, "stage {key}: expected observations, got count {count}");
+    }
+    // One solver step per grid step at minimum, and a reply was written.
+    assert!(stages.get("solver_step").unwrap().req_f64("count").unwrap() >= 8.0);
+    assert!(stages.get("response_write").unwrap().req_f64("count").unwrap() >= 1.0);
+
+    // Dump to the configured default path via the protocol verb.
+    let reply = client.trace("dump", None).unwrap();
+    assert!(reply.opt_bool("ok", false), "{reply:?}");
+    assert_eq!(reply.req_str("path").unwrap(), trace_path);
+    assert!(reply.req_f64("events").unwrap() >= 1.0);
+
+    // The dump is valid Chrome Trace Event JSON with the promised spans.
+    let text = std::fs::read_to_string(trace_path).unwrap();
+    let v = jsonlite::parse(&text).unwrap();
+    let events = v.get("traceEvents").and_then(Value::as_array).unwrap();
+    let span_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+        .map(|e| e.get("name").and_then(Value::as_str).unwrap())
+        .collect();
+    for name in ["queue_wait", "step", "batch_step", "model_eval", "checkpoint_write"] {
+        assert!(
+            span_names.iter().any(|n| *n == name),
+            "span '{name}' missing from trace; got {span_names:?}"
+        );
+    }
+    let labels: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Value::as_str) == Some("M"))
+        .filter(|e| e.get("name").and_then(Value::as_str) == Some("thread_name"))
+        .map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Value::as_str).unwrap())
+        .collect();
+    assert!(
+        labels.iter().any(|l| l.starts_with("sadiff-worker")),
+        "worker lane missing from thread_name metadata: {labels:?}"
+    );
+    // The `sadiff trace` inspector accepts the same file.
+    let lines = sadiff::obs::chrome::describe(&text).unwrap();
+    assert!(lines[0].contains("span events"), "{}", lines[0]);
+
+    // stop / start / dump-to-override round-trip.
+    let r = client.trace("stop", None).unwrap();
+    assert_eq!(r.opt_bool("tracing", true), false);
+    let r = client.trace("start", None).unwrap();
+    assert!(r.opt_bool("tracing", false));
+    let alt = dir.join("alt_trace.json");
+    let r = client.trace("dump", Some(alt.to_str().unwrap())).unwrap();
+    assert!(r.opt_bool("ok", false), "{r:?}");
+    assert!(alt.exists(), "dump with an explicit path must write that path");
+    // Unknown action → error reply, never a dropped connection.
+    let r = client.trace("flush", None).unwrap();
+    assert!(r.get("error").is_some(), "{r:?}");
+    assert_eq!(client.round_trip(r#"{"cmd":"ping"}"#).unwrap(), r#"{"ok":true}"#);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    // target/serve_trace.json is left on disk for the CI artifact upload.
+}

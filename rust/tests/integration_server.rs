@@ -25,6 +25,7 @@ fn spawn_server_threads(max_batch: usize, workers: usize, threads: usize) -> Spa
         presets_path: None,
         checkpoint_path: None,
         checkpoint_every: 16,
+        ..ServerConfig::default()
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -228,6 +229,7 @@ fn cancel_frees_lanes_without_corrupting_cobatched_requests() {
         presets_path: None,
         checkpoint_path: None,
         checkpoint_every: 16,
+        ..ServerConfig::default()
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -307,6 +309,7 @@ fn cancelling_every_queued_request_drops_the_group_entirely() {
         presets_path: None,
         checkpoint_path: None,
         checkpoint_every: 16,
+        ..ServerConfig::default()
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();
@@ -428,6 +431,7 @@ fn load_shedding_under_queue_cap() {
         presets_path: None,
         checkpoint_path: None,
         checkpoint_every: 16,
+        ..ServerConfig::default()
     };
     let handle = Server::bind(cfg).unwrap().spawn().unwrap();
     let addr = handle.addr.to_string();

@@ -376,6 +376,7 @@ fn checkpointing_config(path: &str) -> ServerConfig {
         presets_path: None,
         checkpoint_path: Some(path.to_string()),
         checkpoint_every: 20,
+        ..ServerConfig::default()
     }
 }
 
