@@ -45,6 +45,14 @@
 //!     is reported next to the disabled number — emitted as the
 //!     `tracing` section of `BENCH_perf.json` and gated by jq in CI.
 //!
+//! Executor dispatch gate (always runs):
+//!   * per-dispatch overhead of the persistent parked worker pool vs the
+//!     seed-era scoped spawn-per-dispatch it replaced, at 1/2/4/8 shards
+//!     on a trivial task, plus `BatchRun` steps/sec at threads ∈ {1, 4}
+//!     gated on bit-identity with the sequential path — emitted as the
+//!     `exec` section of `BENCH_perf.json`; CI gates pool < spawn at 4
+//!     shards and the identity flag.
+//!
 //! Flags: `--quick` (smaller shapes), `--out <path>` for the stepper
 //! report (default `BENCH_stepper.json`), `--perf-out <path>` for the
 //! steps/sec + allocations report (default `BENCH_perf.json`).
@@ -113,7 +121,8 @@ fn main() {
     stepper_section(quick, &out_path);
     let kernels = kernel_section(quick);
     let tracing = tracing_section(quick);
-    perf_section(quick, &perf_out_path, kernels, tracing);
+    let exec = exec_section(quick);
+    perf_section(quick, &perf_out_path, kernels, tracing, exec);
 
     // --- 5. Artifact round-trips (skipped without `make artifacts`).
     artifact_section();
@@ -616,14 +625,146 @@ fn tracing_section(quick: bool) -> Value {
     ])
 }
 
+/// The seed-era executor dispatch this PR replaced, reproduced locally
+/// as the measurement baseline: one scoped thread per shard beyond the
+/// caller's, created and joined on every call. The task assignment
+/// (caller runs shard 0, spawned threads run the rest) matches the
+/// pool's, so the two sides of the comparison do identical work and
+/// differ only in dispatch machinery.
+fn legacy_spawn_for_each<T: Send>(items: &mut [T], f: impl Fn(usize, &mut T) + Sync) {
+    match items {
+        [] => {}
+        [only] => f(0, only),
+        [head, rest @ ..] => std::thread::scope(|s| {
+            for (k, item) in rest.iter_mut().enumerate() {
+                let f = &f;
+                s.spawn(move || f(k + 1, item));
+            }
+            f(0, head);
+        }),
+    }
+}
+
+/// Executor dispatch overhead: the persistent parked pool (publish an
+/// epoch, wake parked workers, wait out the completion latch) against
+/// the legacy scoped spawn-per-dispatch (create + join a thread per
+/// shard, every call), on a trivial task so the dispatch machinery is
+/// the whole measurement; then `BatchRun` steps/sec at threads ∈ {1, 4}
+/// on the GMM model, gated on bit-identity with the sequential path.
+/// Returns the `exec` object merged into `BENCH_perf.json` by
+/// [`perf_section`]; CI gates pool < spawn at 4 shards and `identical`.
+fn exec_section(quick: bool) -> Value {
+    let (iters, pool_reps, spawn_reps) =
+        if quick { (3usize, 200usize, 20usize) } else { (5, 1000, 50) };
+
+    // --- Per-dispatch overhead at 1/2/4/8 shards. The 8-wide pool is
+    // created once (that is the point); the spawn baseline pays its
+    // thread creation inside the timed region (that is also the point).
+    let pool_exec = Executor::new(8);
+    let mut rows: Vec<Value> = Vec::new();
+    let mut pool_us_at_4 = f64::NAN;
+    let mut spawn_us_at_4 = f64::NAN;
+    for shards in [1usize, 2, 4, 8] {
+        let mut items = vec![0u64; shards];
+        pool_exec.for_each_mut(&mut items, |i, v| *v = i as u64); // warm epoch
+        let pool_ns = bench_ns(iters, pool_reps, || {
+            pool_exec.for_each_mut(&mut items, |i, v| *v = v.wrapping_add(i as u64 + 1));
+        });
+        let spawn_ns = bench_ns(iters, spawn_reps, || {
+            legacy_spawn_for_each(&mut items, |i, v| *v = v.wrapping_add(i as u64 + 1));
+        });
+        std::hint::black_box(&items);
+        if shards == 4 {
+            pool_us_at_4 = pool_ns / 1e3;
+            spawn_us_at_4 = spawn_ns / 1e3;
+        }
+        println!(
+            "exec dispatch s={shards}: pool {:>8.0} ns, legacy spawn {:>8.0} ns (spawn/pool ×{:.1})",
+            pool_ns,
+            spawn_ns,
+            spawn_ns / pool_ns
+        );
+        rows.push(Value::obj(vec![
+            ("shards", Value::Num(shards as f64)),
+            ("pool_ns_per_dispatch", Value::Num(pool_ns)),
+            ("spawn_ns_per_dispatch", Value::Num(spawn_ns)),
+            ("spawn_over_pool", Value::Num(spawn_ns / pool_ns)),
+        ]));
+    }
+    drop(pool_exec);
+
+    // --- BatchRun steps/sec at threads ∈ {1, 4}, four requests so the
+    // pooled run actually shards, bit-identity gated against sequential.
+    let wl = workloads::latent_analog();
+    let (n, nfe, br_iters) = if quick { (32usize, 12usize, 3usize) } else { (64, 20, 5) };
+    let cfg = SamplerConfig { nfe, tau: 1.0, ..SamplerConfig::sa_default() };
+    let reqs: Vec<SampleRequest> = (0..4u64)
+        .map(|id| SampleRequest {
+            id,
+            workload: wl.name.into(),
+            model: "gmm".into(),
+            cfg: cfg.clone(),
+            n,
+            seed: 21 + id,
+            return_samples: true,
+            want_metrics: false,
+            preset: None,
+        })
+        .collect();
+    let model: Arc<dyn ModelEval> = Arc::new(GmmAnalytic::new(wl.gmm.clone()));
+    let run_with = |exec: &Executor| {
+        let mut br = BatchRun::new(model.clone(), &wl, &cfg, reqs.clone(), exec);
+        while !br.step(exec) {}
+        br.finish()
+    };
+    let want = run_with(&Executor::sequential());
+    let e1 = Executor::new(1);
+    let e4 = Executor::new(4);
+    let same = |got: &[sadiff::coordinator::SampleResponse]| {
+        want.len() == got.len()
+            && want.iter().zip(got).all(|(a, b)| a.samples == b.samples && a.nfe == b.nfe)
+    };
+    let identical = same(&run_with(&e1)) && same(&run_with(&e4));
+    let (_, t1_min) = time_it(br_iters, || {
+        std::hint::black_box(run_with(&e1));
+    });
+    let (_, t4_min) = time_it(br_iters, || {
+        std::hint::black_box(run_with(&e4));
+    });
+    let steps = cfg.steps_for_nfe() as f64;
+    println!(
+        "exec BatchRun (4 reqs, n={n}, NFE={nfe}): threads=1 {:.0} steps/s, threads=4 {:.0} \
+         steps/s (identical: {identical})",
+        steps / t1_min,
+        steps / t4_min
+    );
+    if !identical {
+        eprintln!("FAIL: pooled BatchRun is not bit-identical to the sequential path");
+        std::process::exit(1);
+    }
+
+    Value::obj(vec![
+        ("dispatch", Value::Array(rows)),
+        ("pool_dispatch_us_at_4", Value::Num(pool_us_at_4)),
+        ("spawn_dispatch_us_at_4", Value::Num(spawn_us_at_4)),
+        ("batchrun_requests", Value::Num(4.0)),
+        ("batchrun_lanes", Value::Num(n as f64)),
+        ("batchrun_nfe", Value::Num(nfe as f64)),
+        ("batchrun_steps_per_sec_t1", Value::Num(steps / t1_min)),
+        ("batchrun_steps_per_sec_t4", Value::Num(steps / t4_min)),
+        ("identical", Value::Bool(identical)),
+    ])
+}
+
 /// Steps/sec + allocations-per-step: the seed-era monolithic loop (the
 /// pre-change baseline, retained verbatim as `run_reference`) against the
 /// allocation-free stepper driver, on a free model so solver overhead —
 /// coefficients, fused updates, RNG, allocator traffic — is the whole
 /// measurement. Both numbers land in `BENCH_perf.json` so the perf
 /// trajectory records before AND after in the same run, alongside the
-/// `kernels` roofline section from [`kernel_section`].
-fn perf_section(quick: bool, out_path: &str, kernels: Value, tracing: Value) {
+/// `kernels` roofline section from [`kernel_section`] and the `exec`
+/// dispatch section from [`exec_section`].
+fn perf_section(quick: bool, out_path: &str, kernels: Value, tracing: Value, exec: Value) {
     let sch = NoiseSchedule::vp_linear();
     let (n, dim, nfe, iters) =
         if quick { (64usize, 16usize, 16usize, 3usize) } else { (256, 32, 32, 6) };
@@ -710,6 +851,7 @@ fn perf_section(quick: bool, out_path: &str, kernels: Value, tracing: Value) {
         ("identical", Value::Bool(identical)),
         ("kernels", kernels),
         ("tracing", tracing),
+        ("exec", exec),
     ]);
     if let Err(e) = std::fs::write(out_path, format!("{}\n", to_string(&report))) {
         eprintln!("cannot write {out_path}: {e}");

@@ -316,9 +316,14 @@ pub struct ServerConfig {
     /// Lane-parallel executor threads *within* one batch's solver loop
     /// (`exec::Executor`); `0` = auto (one per available core). Output is
     /// bit-identical for any value. Distinct from `workers`, which
-    /// parallelizes across independent batches — the default stays `1`
-    /// (sequential per batch) so `workers × threads` cannot oversubscribe
-    /// the host unless explicitly requested.
+    /// parallelizes across independent batches. The default is `0`
+    /// (auto): the server owns one persistent parked pool shared by all
+    /// workers, and the pool serializes concurrent dispatches, so the
+    /// active thread count is bounded by the pool width — `workers ×
+    /// threads` oversubscription cannot happen, which is what used to
+    /// force the sequential default back when executors scoped-spawned
+    /// fresh threads per call (see `exec` and the `exec` section of
+    /// `BENCH_perf.json` for the per-dispatch numbers behind the flip).
     pub threads: usize,
     /// Lane groups a worker may hold in flight at once. The step-
     /// synchronous scheduler interleaves steps across its in-flight groups
@@ -361,7 +366,7 @@ impl Default for ServerConfig {
             batch_deadline_ms: 5,
             workers: 2,
             queue_cap: 256,
-            threads: 1,
+            threads: 0,
             max_inflight: 4,
             presets_path: None,
             checkpoint_path: None,
@@ -497,7 +502,7 @@ mod tests {
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.workers, 1); // clamped
         assert_eq!(c.addr, ServerConfig::default().addr);
-        assert_eq!(c.threads, 1); // default: sequential within a batch
+        assert_eq!(c.threads, 0); // default: auto — the shared server pool sizes to the host
 
         let v = jsonlite::parse(r#"{"threads": 3}"#).unwrap();
         assert_eq!(ServerConfig::from_json(&v).unwrap().threads, 3);

@@ -579,8 +579,10 @@ impl BatchRun {
         })
     }
 
-    /// Advance every lane by one grid step (shards run on `exec`'s
-    /// workers). Returns `true` once the run is finished.
+    /// Advance every lane by one grid step. Shards dispatch onto `exec`'s
+    /// persistent parked pool workers (`exec_shard` spans on stable
+    /// `sadiff-exec-N` trace lanes); a step costs one pool round-trip,
+    /// never a thread spawn/join. Returns `true` once the run is finished.
     pub fn step(&mut self, exec: &Executor) -> bool {
         if self.is_done() {
             return true;

@@ -90,7 +90,12 @@ struct Shared {
     /// Bound address, for self-pokes that unblock the accept loop.
     addr: SocketAddr,
     /// Lane-parallel executor used inside each batch's solver loop
-    /// (`cfg.threads`; bit-identical output for any thread count).
+    /// (`cfg.threads`; bit-identical output for any thread count). Built
+    /// once at bind time, this owns the server's one persistent parked
+    /// worker pool — every engine worker dispatches through it for the
+    /// process lifetime (the pool serializes dispatches, so `workers`
+    /// concurrent solver loops never stack their thread counts), and its
+    /// `sadiff-exec-N` threads give traces stable per-worker lanes.
     exec: Executor,
     /// Tuner preset registry serving the request `"preset"` field.
     presets: Option<PresetRegistry>,

@@ -1,7 +1,19 @@
-//! Deterministic lane-parallel executor: a std-thread chunked worker pool
-//! (tokio/rayon are not in the offline vendor set — see
-//! `coordinator::server`) that splits the `n` independent lanes of a solve
-//! into per-thread contiguous chunks.
+//! Deterministic lane-parallel executor: a **persistent parked worker
+//! pool** (tokio/rayon are not in the offline vendor set — see
+//! `coordinator::server`) that splits the `n` independent lanes of a
+//! solve into per-thread contiguous chunks.
+//!
+//! Threads are created once per [`Executor`] (named `sadiff-exec-N`,
+//! stable for the pool's lifetime) and parked on a condvar between
+//! dispatches; each `run_chunks`/`for_each_mut`/`map` call publishes a
+//! borrowed closure through an epoch barrier, workers claim their
+//! statically assigned chunk and the caller blocks on a completion
+//! latch. The per-call cost is one mutex/condvar round-trip instead of a
+//! thread spawn/join cycle per chunk — the difference is measured in the
+//! `exec` section of `BENCH_perf.json` (`bench_perf`). `threads == 1`
+//! keeps the zero-cost inline path (no pool is created at all), and
+//! dispatching allocates nothing, so the stepper's zero-allocs/step
+//! contract holds with the pool active (`integration_alloc`).
 //!
 //! Determinism contract: every per-lane computation in this codebase is
 //! keyed by the lane's *global* index — Philox noise streams use
@@ -10,24 +22,41 @@
 //! source produces bit-identical results to the same lanes inside a
 //! sequential full-batch run. `solvers::run_chunked` relies on exactly
 //! this invariant (asserted for every `SolverKind` in `solvers::tests`),
-//! which is the same invariant `coordinator::engine` already maintains for
-//! request batching.
+//! which is the same invariant `coordinator::engine` already maintains
+//! for request batching.
 //!
-//! Scheduling is static (equal-size contiguous chunks) rather than
-//! work-stealing: lanes of one solve are homogeneous, so static chunks
-//! avoid any cross-thread queue traffic on the hot path.
+//! Scheduling is static (equal-size contiguous chunks, same [`chunks`]
+//! math as ever) rather than work-stealing: lanes of one solve are
+//! homogeneous, so static chunks avoid any cross-thread queue traffic on
+//! the hot path — and which chunk runs where is a pure function of
+//! `(n, parts)`, so the pool preserves every bit-identity contract the
+//! scoped-spawn executor satisfied.
+
+mod pool;
+
+pub use pool::live_pool_workers;
 
 use std::num::NonZeroUsize;
 use std::ops::Range;
+use std::sync::Arc;
+
+use pool::Pool;
 
 /// Number of worker threads the `0 = auto` knob resolves to: the
 /// `SADIFF_THREADS` env var when set to a positive integer (global
 /// override for benches/experiments without a CLI knob), else one per
-/// available core.
+/// available core. A set-but-unusable value (unparsable, or zero) is
+/// rejected with a logged warning naming it, then falls through to the
+/// core count.
 pub fn auto_threads() -> usize {
-    if let Some(n) = std::env::var("SADIFF_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
-        if n > 0 {
-            return n;
+    if let Ok(v) = std::env::var("SADIFF_THREADS") {
+        match v.parse::<usize>() {
+            Ok(n) if n > 0 => return n,
+            _ => crate::log_warn!(
+                "exec",
+                "ignoring SADIFF_THREADS={v:?}: expected a positive integer; \
+                 falling back to the available-core count"
+            ),
         }
     }
     std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
@@ -40,31 +69,62 @@ pub fn chunks(n: usize, parts: usize) -> Vec<Range<usize>> {
         return Vec::new();
     }
     let parts = parts.clamp(1, n);
-    let base = n / parts;
-    let rem = n % parts;
     let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
     for i in 0..parts {
-        let len = base + usize::from(i < rem);
-        out.push(start..start + len);
-        start += len;
+        out.push(chunk_of(n, parts, i));
     }
-    debug_assert_eq!(start, n);
+    debug_assert_eq!(out.last().map(|r| r.end), Some(n));
     out
 }
 
-/// A fixed-width worker pool. Threads are scoped per call (no idle pool to
-/// manage or shut down); the thread count is the only state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Chunk `i` of [`chunks`]`(n, parts)` without materializing the table —
+/// the same balanced-contiguous math, O(1) and allocation-free. The
+/// pool's `for_each_mut` dispatch path uses this so a warm dispatch
+/// touches no heap. `parts` must already be clamped to `1..=n`.
+fn chunk_of(n: usize, parts: usize, i: usize) -> Range<usize> {
+    debug_assert!(parts >= 1 && parts <= n && i < parts);
+    let base = n / parts;
+    let rem = n % parts;
+    let start = i * base + i.min(rem);
+    start..start + base + usize::from(i < rem)
+}
+
+/// Raw-pointer wrapper the dispatch closures use to hand workers
+/// exclusive access to disjoint regions of a caller-owned buffer. Each
+/// use site carries its own disjointness argument; the pointer is only
+/// live for the duration of the (blocking) dispatch.
+#[derive(Clone, Copy)]
+struct SharedPtr<T>(*mut T);
+
+// SAFETY: `SharedPtr` is a capability to reach `T`s across the dispatch
+// threads; the per-site disjointness invariants make the accesses
+// exclusive, so `T: Send` is the only requirement.
+unsafe impl<T: Send> Send for SharedPtr<T> {}
+unsafe impl<T: Send> Sync for SharedPtr<T> {}
+
+/// A fixed-width executor over a persistent parked worker pool. The pool
+/// (`threads - 1` OS threads; the dispatching caller always runs chunk 0
+/// itself) is spawned once in [`Executor::new`] and joined when the last
+/// clone drops; `threads == 1` creates no pool and runs everything
+/// inline. Clones share the same pool, so a server hands every engine
+/// worker one long-lived pool instead of re-deriving executors;
+/// concurrent dispatches from independent callers are serialized, which
+/// also bounds the active thread count at the pool width no matter how
+/// many callers share it.
+#[derive(Clone)]
 pub struct Executor {
     threads: usize,
+    pool: Option<Arc<Pool>>,
 }
 
 impl Executor {
-    /// `threads = 0` means auto (one per available core).
+    /// `threads = 0` means auto (one per available core, see
+    /// [`auto_threads`]). Spawns the `threads - 1` pool workers eagerly so
+    /// the first dispatch pays no setup.
     pub fn new(threads: usize) -> Executor {
         let threads = if threads == 0 { auto_threads() } else { threads };
-        Executor { threads }
+        let pool = if threads > 1 { Some(Arc::new(Pool::new(threads - 1))) } else { None };
+        Executor { threads, pool }
     }
 
     /// One worker per available core.
@@ -72,9 +132,10 @@ impl Executor {
         Executor::new(0)
     }
 
-    /// Single-threaded executor (runs everything inline on the caller).
+    /// Single-threaded executor (runs everything inline on the caller;
+    /// never spawns a pool).
     pub fn sequential() -> Executor {
-        Executor { threads: 1 }
+        Executor { threads: 1, pool: None }
     }
 
     /// Resolved worker count (≥ 1).
@@ -83,67 +144,70 @@ impl Executor {
     }
 
     /// Run `f` once per chunk of `0..n` (at most [`Self::threads`] chunks,
-    /// one scoped thread each) and return the per-chunk results in chunk
-    /// order. With one chunk, `f` runs inline on the caller thread.
+    /// statically assigned to pool workers) and return the per-chunk
+    /// results in chunk order. With one chunk, `f` runs inline on the
+    /// caller thread.
     pub fn run_chunks<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(Range<usize>) -> T + Sync,
     {
         let ranges = chunks(n, self.threads);
-        if ranges.len() <= 1 {
-            return ranges.into_iter().map(f).collect();
-        }
+        let (pool, parts) = match (&self.pool, ranges.len()) {
+            (Some(pool), parts) if parts > 1 => (pool, parts),
+            _ => return ranges.into_iter().map(f).collect(),
+        };
+        let mut slots: Vec<Option<T>> = (0..parts).map(|_| None).collect();
+        let slots_ptr = SharedPtr(slots.as_mut_ptr());
+        let ranges = &ranges;
         let f = &f;
-        std::thread::scope(|s| {
-            let handles: Vec<_> = ranges
-                .into_iter()
-                .map(|r| {
-                    std::thread::Builder::new()
-                        .name(format!("sadiff-exec-{}", r.start))
-                        .spawn_scoped(s, move || {
-                            let _span = crate::obs::trace::span("exec_chunk", "exec");
-                            f(r)
-                        })
-                        .expect("spawn exec worker")
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("exec worker panicked")).collect()
-        })
+        pool.dispatch(parts, "exec_chunk", &move |part| {
+            let value = f(ranges[part].clone());
+            // SAFETY: part indices are distinct within a dispatch and
+            // `slots` has exactly `parts` elements, so each part writes
+            // its own slot exclusively; the caller blocks until all
+            // parts finish before touching `slots` again.
+            unsafe { *slots_ptr.0.add(part) = Some(value) };
+        });
+        slots.into_iter().map(|s| s.expect("exec pool part did not run")).collect()
     }
 
-    /// Run `f` once per item with exclusive access, one scoped thread per
-    /// item (callers pass at most [`Self::threads`] items — the step-level
-    /// scheduler's lane shards). With one thread (or ≤ 1 item) everything
-    /// runs inline on the caller.
+    /// Run `f` once per item with exclusive access, items statically
+    /// chunked over the pool (callers typically pass at most
+    /// [`Self::threads`] items — the step-level scheduler's lane shards —
+    /// giving one item per part). With one thread (or ≤ 1 item)
+    /// everything runs inline on the caller.
     ///
-    /// Threads are spawned per call, so a step-level driver pays one
-    /// spawn/join cycle per shard per step when `threads > 1`. That
-    /// overhead is measured by `bench_perf`'s stepper section
-    /// (`per_step_overhead_us` in `BENCH_stepper.json`); the serving
-    /// default (`ServerConfig.threads = 1`) takes the inline path and
-    /// pays nothing.
+    /// The dispatch reuses parked pool workers and allocates nothing, so
+    /// a step-level driver pays one condvar round-trip per step instead
+    /// of the scoped-spawn era's spawn/join cycle per shard per step
+    /// (before/after numbers: `per_step_overhead_us` in
+    /// `BENCH_stepper.json` and the `exec` section of `BENCH_perf.json`).
+    /// Shard dispatches record `exec_shard` spans, distinct from
+    /// `run_chunks`'s `exec_chunk` spans.
     pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
     where
         T: Send,
         F: Fn(usize, &mut T) + Sync,
     {
-        if self.threads <= 1 || items.len() <= 1 {
-            for (i, item) in items.iter_mut().enumerate() {
-                f(i, item);
+        let n = items.len();
+        let (pool, parts) = match (&self.pool, n.min(self.threads)) {
+            (Some(pool), parts) if parts > 1 => (pool, parts),
+            _ => {
+                for (i, item) in items.iter_mut().enumerate() {
+                    f(i, item);
+                }
+                return;
             }
-            return;
-        }
+        };
+        let items_ptr = SharedPtr(items.as_mut_ptr());
         let f = &f;
-        std::thread::scope(|s| {
-            for (i, item) in items.iter_mut().enumerate() {
-                std::thread::Builder::new()
-                    .name(format!("sadiff-step-{i}"))
-                    .spawn_scoped(s, move || {
-                        let _span = crate::obs::trace::span("exec_chunk", "exec");
-                        f(i, item)
-                    })
-                    .expect("spawn step worker");
+        pool.dispatch(parts, "exec_shard", &move |part| {
+            // SAFETY: `chunk_of` ranges partition `0..n`, so parts touch
+            // disjoint items; the caller blocks until every part
+            // finishes before reusing the borrow.
+            for i in chunk_of(n, parts, part) {
+                f(i, unsafe { &mut *items_ptr.0.add(i) });
             }
         });
     }
@@ -160,6 +224,15 @@ impl Executor {
             .into_iter()
             .flatten()
             .collect()
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("threads", &self.threads)
+            .field("pooled", &self.pool.is_some())
+            .finish()
     }
 }
 
@@ -187,6 +260,20 @@ mod tests {
         assert!(chunks(0, 4).is_empty());
         // Exact division.
         assert_eq!(chunks(8, 4), vec![0..2, 2..4, 4..6, 6..8]);
+    }
+
+    #[test]
+    fn chunk_of_matches_chunk_table() {
+        // The O(1) per-part math the pool dispatch path uses must agree
+        // with the materialized table for every (n, parts, i).
+        for n in 1usize..40 {
+            for parts in 1..=n {
+                let table = chunks(n, parts);
+                for (i, want) in table.iter().enumerate() {
+                    assert_eq!(chunk_of(n, parts, i), *want, "n={n} parts={parts} i={i}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -221,6 +308,10 @@ mod tests {
             });
             assert_eq!(items, vec![100, 101, 102, 103, 104]);
         }
+        // More items than threads: parts chunk the item list.
+        let mut items: Vec<u64> = (0..37).collect();
+        Executor::new(4).for_each_mut(&mut items, |i, v| *v = v.wrapping_add(i as u64));
+        assert!(items.iter().enumerate().all(|(i, v)| *v == 2 * i as u64));
         let mut empty: Vec<u64> = Vec::new();
         Executor::new(4).for_each_mut(&mut empty, |_, _| panic!("no items"));
     }
@@ -247,5 +338,16 @@ mod tests {
             .into_iter()
             .sum();
         assert_eq!(seq.into_iter().sum::<u64>(), par);
+    }
+
+    #[test]
+    fn clones_share_one_pool_and_dispatch_repeatedly() {
+        let exec = Executor::new(4);
+        let clone = exec.clone();
+        for round in 0..200u64 {
+            let sums = exec.run_chunks(64, |r| r.map(|i| i as u64 + round).sum::<u64>());
+            let sums2 = clone.run_chunks(64, |r| r.map(|i| i as u64 + round).sum::<u64>());
+            assert_eq!(sums, sums2);
+        }
     }
 }

@@ -1,0 +1,272 @@
+//! The persistent parked worker pool behind [`Executor`](super::Executor).
+//!
+//! Lifecycle: `Pool::new(workers)` spawns `workers` OS threads once, each
+//! named `sadiff-exec-{index}` for the lifetime of the pool (so trace
+//! lanes and `ps -T` output are stable — one Perfetto lane per pool
+//! worker, not one per dispatch). Between dispatches every worker is
+//! parked on a condvar; nothing spins.
+//!
+//! Dispatch protocol (an epoch barrier plus a completion latch):
+//!
+//! 1. The dispatching caller serializes on `dispatch_lock` (two engine
+//!    workers sharing one server pool never interleave epochs, and the
+//!    active thread count stays bounded by the pool width no matter how
+//!    many callers share it), then publishes under the state mutex: a
+//!    type-erased pointer to its borrowed chunk task, the participating
+//!    part count, and a bumped `epoch`.
+//! 2. Workers wake on the epoch change. Worker `w` runs part `w + 1` iff
+//!    `w < parts - 1` — the caller itself runs part `0` inline, so a
+//!    pool of `threads - 1` workers serves `threads`-wide dispatches.
+//!    Parts are *statically assigned* — no queue, no stealing — so which
+//!    thread computes which chunk is a pure function of the dispatch
+//!    shape, and the determinism argument of the scoped-spawn era
+//!    carries over unchanged.
+//! 3. Each participating worker decrements `remaining`; the last one
+//!    signals the completion latch the caller is blocked on. The caller
+//!    clears the task pointer before returning, so the erased borrow
+//!    never outlives the dispatch.
+//!
+//! Panic safety: the caller's part and every worker part run under
+//! `catch_unwind`. A panicking part still decrements the latch (no
+//! deadlocked caller); the caller re-raises — its own payload, or a
+//! summary panic for worker failures — and every lock acquisition
+//! shrugs off poisoning, so the pool remains usable for subsequent
+//! dispatches. Teardown on `Drop` flips `shutdown`, wakes everyone and
+//! joins all handles; [`live_pool_workers`] exposes a process-wide count
+//! so tests can prove no thread leaks across create/drop cycles.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::obs::trace;
+
+/// Process-wide count of live pool worker threads (incremented at spawn,
+/// decremented as each worker exits). Test hook for the no-leak
+/// contract: repeated `Executor` create/drop cycles must return this to
+/// its baseline.
+pub fn live_pool_workers() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Poison-tolerant lock: a panicking chunk task must leave the pool
+/// usable, not wedge every later dispatch on a poisoned mutex. The
+/// guarded state is plain bookkeeping (epoch/counters), valid at every
+/// instruction boundary, so recovering the guard is sound.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Type-erased pointer to the caller's borrowed chunk task: a thin data
+/// pointer plus a monomorphized call shim. The erasure drops the borrow
+/// lifetime, but the pointer is published under the state mutex,
+/// dereferenced only by workers participating in the current epoch, and
+/// cleared before `dispatch` returns — and `dispatch` blocks on the
+/// completion latch, so the borrow it erases is live for every
+/// dereference.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: `data` points at a `Sync` closure (shared `&`-calls from many
+// threads are fine) and `Task` is only a capability to make such calls;
+// handing it to pool workers is the scoped-spawn pattern without the
+// scope, with the latch standing in for the join.
+unsafe impl Send for Task {}
+
+/// The `call` shim instantiated per concrete closure type by
+/// [`Pool::dispatch`].
+///
+/// # Safety
+/// `data` must point to a live `F` (guaranteed by the dispatch latch).
+unsafe fn call_erased<F: Fn(usize)>(data: *const (), part: usize) {
+    (*data.cast::<F>())(part)
+}
+
+/// Barrier state shared between the dispatcher and the parked workers.
+struct State {
+    /// Bumped once per dispatch; workers wake when it passes their view.
+    epoch: u64,
+    /// Pool is tearing down — workers exit instead of parking.
+    shutdown: bool,
+    /// The current dispatch's chunk task (`None` between dispatches).
+    task: Option<Task>,
+    /// Trace-span name for the current dispatch's worker parts.
+    span_name: &'static str,
+    /// Number of *worker* parts in the current dispatch (the caller's
+    /// part 0 excluded). Worker `w` participates iff `w < parts`.
+    parts: usize,
+    /// Completion latch: worker parts not yet finished this epoch.
+    remaining: usize,
+    /// Worker parts that panicked this epoch.
+    panicked: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between dispatches.
+    work_cv: Condvar,
+    /// The dispatching caller parks here until `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// A fixed set of parked worker threads; see the module docs for the
+/// dispatch protocol.
+pub(super) struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes concurrent dispatches from independent callers (e.g.
+    /// several server engine workers sharing the one server pool).
+    dispatch_lock: Mutex<()>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `workers` parked threads. The pool serves dispatches up to
+    /// `workers + 1` parts wide — the caller runs part 0 itself.
+    pub(super) fn new(workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                shutdown: false,
+                task: None,
+                span_name: "exec_chunk",
+                parts: 0,
+                remaining: 0,
+                panicked: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
+                std::thread::Builder::new()
+                    .name(format!("sadiff-exec-{w}"))
+                    .spawn(move || worker_main(&shared, w))
+                    .expect("spawn exec pool worker")
+            })
+            .collect();
+        Pool { shared, dispatch_lock: Mutex::new(()), workers, handles }
+    }
+
+    /// Maximum dispatch width this pool serves (worker count plus the
+    /// caller's own part).
+    pub(super) fn width(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Run `task(part)` for every `part in 0..parts`: part 0 inline on
+    /// the caller, parts `1..parts` on pool workers, blocking until all
+    /// parts complete. Panics (after the latch opens) if any part
+    /// panicked.
+    pub(super) fn dispatch<F>(&self, parts: usize, span_name: &'static str, task: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        debug_assert!(parts >= 1 && parts <= self.width(), "dispatch wider than the pool");
+        if parts == 1 {
+            let _span = trace::span(span_name, "exec");
+            task(0);
+            return;
+        }
+        let _serialize = lock(&self.dispatch_lock);
+        let worker_parts = parts - 1;
+        let data = (task as *const F).cast::<()>();
+        {
+            let mut st = lock(&self.shared.state);
+            st.epoch += 1;
+            st.task = Some(Task { data, call: call_erased::<F> });
+            st.span_name = span_name;
+            st.parts = worker_parts;
+            st.remaining = worker_parts;
+            st.panicked = 0;
+        }
+        self.shared.work_cv.notify_all();
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            let _span = trace::span(span_name, "exec");
+            task(0);
+        }));
+        // Always wait out the latch — even when part 0 panicked — so no
+        // worker can still hold the erased pointer once we unwind.
+        let worker_panics = {
+            let mut st = lock(&self.shared.state);
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.task = None;
+            st.panicked
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panics > 0 {
+            panic!("exec pool: {worker_panics} worker chunk task(s) panicked (pool still usable)");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        lock(&self.shared.state).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            // A worker's task panic is caught inside `worker_main`; join
+            // only fails if the thread died outside it, which teardown
+            // doesn't amplify.
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: &Shared, index: usize) {
+    struct Live;
+    impl Drop for Live {
+        fn drop(&mut self) {
+            LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _live = Live;
+    let mut seen = 0u64;
+    loop {
+        let (task, span_name) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    seen = st.epoch;
+                    if index < st.parts {
+                        break (st.task.expect("dispatch published no task"), st.span_name);
+                    }
+                    // Not assigned a part this epoch; park again. The
+                    // dispatcher cannot start the next epoch before this
+                    // one's latch opens, so skipping is race-free.
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            let _span = trace::span(span_name, "exec");
+            // SAFETY: the dispatcher blocks on the completion latch we
+            // have not yet decremented, so the erased borrow is live.
+            unsafe { (task.call)(task.data, index + 1) }
+        }))
+        .is_err();
+        let mut st = lock(&shared.state);
+        if panicked {
+            st.panicked += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}

@@ -106,12 +106,15 @@ impl Table {
 /// are deterministic per item, so the parallel table equals the sequential
 /// one cell for cell. Sizes to the cores; set `SADIFF_THREADS=1` (or use
 /// [`par_rows_with`]) to force sequential rows for clean measurements.
+/// Every table in the process shares one lazily created executor, so the
+/// persistent pool behind it is spawned once, not per table.
 pub fn par_rows<I, F>(items: &[I], f: F) -> Vec<Vec<String>>
 where
     I: Sync,
     F: Fn(&I) -> Vec<String> + Sync,
 {
-    par_rows_with(&Executor::auto(), items, f)
+    static EXEC: std::sync::OnceLock<Executor> = std::sync::OnceLock::new();
+    par_rows_with(EXEC.get_or_init(Executor::auto), items, f)
 }
 
 /// [`par_rows`] on an explicit executor.

@@ -106,7 +106,9 @@ pub struct ThreadLane {
     /// Stable per-process thread id (registration order, starting at 1).
     pub tid: u64,
     /// The OS thread name at registration (`"sadiff-worker-0"`,
-    /// `"sadiff-accept"`, `"sadiff-step-1"`, ...) or `"thread-{tid}"`.
+    /// `"sadiff-accept"`, `"sadiff-exec-0"`, ...) or `"thread-{tid}"`.
+    /// Exec pool workers live for their pool's lifetime, so each one
+    /// registers a single lane that all of its dispatches share.
     pub label: String,
     /// Captured events, oldest first.
     pub events: Vec<Event>,

@@ -156,7 +156,10 @@ pub fn run_parallel(
 /// chunk with a lane-offset slice of `noise`'s Philox streams, each chunk
 /// writing its slice of one shared output buffer. The per-lane stream
 /// keying makes the result bit-identical to the sequential run regardless
-/// of thread count (asserted in tests for every [`SolverKind`]).
+/// of thread count (asserted in tests for every [`SolverKind`]). The
+/// chunk dispatch reuses `exec`'s persistent parked pool — repeated
+/// `run_chunked` calls on one executor pay a condvar round-trip each, not
+/// a thread spawn/join cycle per chunk.
 pub fn run_chunked(
     model: &dyn ModelEval,
     sch: &NoiseSchedule,

@@ -5,8 +5,11 @@
 //! item order and each candidate is scored with a sequential inner
 //! executor), so tuning throughput scales with threads while the selected
 //! winner — and the emitted registry — is bit-identical for any thread
-//! count and a fixed seed. Ranking is a total order (NaN-hostile score,
-//! then the canonical config JSON) so ties cannot flap between runs.
+//! count and a fixed seed. Every scoring batch across the whole sweep +
+//! refinement loop dispatches onto the caller's one persistent executor
+//! pool; no threads are created or torn down between batches. Ranking is
+//! a total order (NaN-hostile score, then the canonical config JSON) so
+//! ties cannot flap between runs.
 
 use super::registry::{Preset, PresetRegistry, Provenance, SCHEMA_VERSION};
 use super::space::{cfg_key, SearchSpace};

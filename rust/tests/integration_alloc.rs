@@ -14,6 +14,7 @@
 //! no allocations.
 
 use sadiff::config::{Prediction, SamplerConfig, SolverKind, TauKind};
+use sadiff::exec::Executor;
 use sadiff::linalg::simd::{self, Dispatch};
 use sadiff::models::{EvalCtx, ModelEval};
 use sadiff::rng::normal::PhiloxNormal;
@@ -93,6 +94,64 @@ fn kernels_allocate_nothing_on_any_tier() {
     }
 }
 
+/// The pool half of the contract: with a `threads > 1` executor warm
+/// (pool workers spawned at `Executor::new`, first dispatch done),
+/// further dispatches allocate nothing — publishing the epoch, waking the
+/// parked workers, running the statically assigned chunks and waiting out
+/// the completion latch are all heap-free (std's mutex/condvar are
+/// futex-based on Linux), and `for_each_mut` computes chunk bounds
+/// arithmetically instead of materializing a range table. Proven both on
+/// bare dispatches and across a real two-shard solver step loop driven
+/// through the pool, the same shape `coordinator::engine` dispatches per
+/// step. The counter is process-wide, so worker-side allocations would be
+/// caught too.
+fn pooled_dispatch_allocates_nothing() {
+    let exec = Executor::new(4);
+    let mut items = [0u64; 4];
+    exec.for_each_mut(&mut items, |i, v| *v = i as u64); // warm: pool + first epoch
+    let before = alloc_count();
+    for round in 0..200u64 {
+        exec.for_each_mut(&mut items, |i, v| *v = v.wrapping_add(round ^ i as u64));
+    }
+    let allocs = alloc_count() - before;
+    assert_eq!(allocs, 0, "pool dispatch: {allocs} heap allocations across 200 warm dispatches");
+
+    // A pooled step loop, shaped like `BatchRun::step`: one stepper shard
+    // per pool part, each advanced inside a `for_each_mut` dispatch.
+    struct ShardState {
+        st: Box<dyn Stepper>,
+        x: Vec<f64>,
+        noise: PhiloxNormal,
+    }
+    let sch = NoiseSchedule::vp_linear();
+    let (n, dim) = (3usize, 4usize);
+    let model = CopyModel { dim };
+    let cfg = SamplerConfig::sa_default();
+    let m = cfg.steps_for_nfe();
+    let grid = Grid::new(&sch, timesteps(&sch, cfg.selector, m));
+    let mut shards: Vec<ShardState> = (0..2)
+        .map(|lane0| {
+            let mut noise = PhiloxNormal::new(7 + lane0 as u64);
+            let mut x = prior_sample(&grid, dim, n, &mut noise);
+            let mut st = make_stepper(&cfg, &sch);
+            st.init(&model, &grid, &mut x, n, &mut noise);
+            ShardState { st, x, noise }
+        })
+        .collect();
+    let before = alloc_count();
+    for i in 0..m {
+        exec.for_each_mut(&mut shards, |_, sh| {
+            let _span = sadiff::obs::trace::span("shard_step", "test");
+            sh.st.step(&model, &grid, i, &mut sh.x, n, &mut sh.noise);
+        });
+    }
+    let allocs = alloc_count() - before;
+    assert_eq!(allocs, 0, "pooled step loop: {allocs} heap allocations across {m} steps");
+    for sh in &shards {
+        assert!(sh.x.iter().all(|v| v.is_finite()), "non-finite pooled-step output");
+    }
+}
+
 /// The "free when off" half of the observability contract in isolation:
 /// with the recorder disabled, opening spans and recording cross-thread
 /// intervals must never touch the heap.
@@ -117,6 +176,10 @@ fn stepper_step_allocates_nothing_after_init_for_every_solver() {
     // regressed, this localizes whether the kernels themselves leaked an
     // allocation or the driver did.
     kernels_allocate_nothing_on_any_tier();
+
+    // The persistent executor pool: warm dispatches (bare and driving a
+    // real step loop) are allocation-free with threads > 1.
+    pooled_dispatch_allocates_nothing();
 
     // Per-solver defaults first: all nine SolverKinds.
     for kind in SolverKind::all() {

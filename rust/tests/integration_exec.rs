@@ -1,0 +1,171 @@
+//! Persistent exec-pool contracts, end to end: a long-lived pool shared
+//! by interleaved `BatchRun`s stays bit-identical to sequential across
+//! hundreds of steps; a panicking chunk task fails the dispatching caller
+//! without deadlocking or wedging the pool; `Drop` joins every worker (no
+//! thread leak across create/drop cycles); and concurrent dispatches from
+//! independent threads serialize correctly.
+//!
+//! Everything lives in ONE `#[test]`: the worker-liveness assertions read
+//! the process-wide `live_pool_workers` counter, which a concurrently
+//! running pool test would pollute (same policy as `integration_alloc`).
+
+use sadiff::config::SamplerConfig;
+use sadiff::coordinator::engine::{run_batch, BatchRun};
+use sadiff::coordinator::SampleRequest;
+use sadiff::exec::{live_pool_workers, Executor};
+use sadiff::models::ModelEval;
+use sadiff::workloads;
+use std::sync::Arc;
+
+fn req(id: u64, n: usize, seed: u64, nfe: usize) -> SampleRequest {
+    SampleRequest {
+        id,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: SamplerConfig { nfe, ..SamplerConfig::sa_default() },
+        n,
+        seed,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+    }
+}
+
+/// Two `BatchRun`s stepped alternately through ONE shared pool, hundreds
+/// of scheduler steps total, must finish bit-identical to their sequential
+/// `run_batch` references — the serving scheduler's shape (a server worker
+/// interleaves its in-flight groups on the one server executor).
+fn interleaved_batch_runs_stay_bit_identical() {
+    let wl = workloads::latent_analog();
+    let cfg_a = SamplerConfig { nfe: 96, ..SamplerConfig::sa_default() };
+    let cfg_b = SamplerConfig { nfe: 120, ..SamplerConfig::sa_default() };
+    let reqs_a = [req(0, 5, 999, 96), req(1, 3, 111, 96)];
+    let reqs_b = [req(2, 2, 222, 120), req(3, 4, 333, 120)];
+    let model = wl.model();
+    let want_a = run_batch(&*model, &wl, &cfg_a, &reqs_a);
+    let want_b = run_batch(&*model, &wl, &cfg_b, &reqs_b);
+
+    let exec = Executor::new(3);
+    let model_a: Arc<dyn ModelEval> = Arc::from(wl.model());
+    let model_b: Arc<dyn ModelEval> = Arc::from(wl.model());
+    let mut run_a = BatchRun::new(model_a, &wl, &cfg_a, reqs_a.to_vec(), &exec);
+    let mut run_b = BatchRun::new(model_b, &wl, &cfg_b, reqs_b.to_vec(), &exec);
+    let mut steps = 0usize;
+    loop {
+        let done_a = run_a.step(&exec);
+        let done_b = run_b.step(&exec);
+        steps += 1;
+        assert!(steps < 10_000, "runs failed to finish");
+        if done_a && done_b {
+            break;
+        }
+    }
+    assert!(steps >= 100, "expected hundreds of interleaved steps, got {steps}");
+    for (want, got) in [(want_a, run_a.finish()), (want_b, run_b.finish())] {
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.samples, b.samples, "id={}: pooled != sequential", a.id);
+            assert_eq!(a.nfe, b.nfe, "id={}", a.id);
+        }
+    }
+}
+
+/// A panicking chunk task must panic the dispatching caller (not hang it
+/// on the completion latch), and the pool must keep serving correct
+/// dispatches afterwards — the poisoned-dispatch error path.
+fn pool_survives_chunk_panics() {
+    let exec = Executor::new(4);
+    let expect: Vec<u64> = (0..64u64).map(|v| v * 3).collect();
+
+    // Worker-part panic (item 2 lands on a pool worker at 4 parts).
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut items = [0u64; 4];
+        exec.for_each_mut(&mut items, |i, _| {
+            if i == 2 {
+                panic!("injected worker-part failure");
+            }
+        });
+    }));
+    assert!(r.is_err(), "a panicking worker part must fail the dispatch");
+
+    // Caller-part panic (part 0 runs inline on the dispatching thread).
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut items = [0u64; 4];
+        exec.for_each_mut(&mut items, |i, _| {
+            if i == 0 {
+                panic!("injected caller-part failure");
+            }
+        });
+    }));
+    assert!(r.is_err(), "a panicking caller part must fail the dispatch");
+
+    // Every part panics at once: the latch must still open.
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut items = [0u64; 4];
+        exec.for_each_mut(&mut items, |_, _| panic!("injected all-part failure"));
+    }));
+    assert!(r.is_err());
+
+    // The pool is still fully usable and correct after all of the above.
+    for _ in 0..50 {
+        let got: Vec<u64> =
+            exec.run_chunks(64, |r| r.map(|i| i as u64 * 3).collect::<Vec<_>>()).concat();
+        assert_eq!(got, expect, "pool must keep working after caught panics");
+    }
+}
+
+/// `Executor::new` spawns `threads - 1` workers; dropping the last clone
+/// joins them all. Repeated create/dispatch/drop cycles must return the
+/// process-wide live-worker count to its baseline every time.
+fn drop_joins_all_workers() {
+    let baseline = live_pool_workers();
+    for cycle in 0..25usize {
+        let exec = Executor::new(5);
+        assert_eq!(live_pool_workers(), baseline + 4, "cycle {cycle}: 4 workers live");
+        let sums = exec.run_chunks(40, |r| r.sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), (0..40).sum::<usize>());
+        let clone = exec.clone();
+        drop(exec);
+        // A live clone keeps the shared pool alive...
+        assert_eq!(live_pool_workers(), baseline + 4, "cycle {cycle}: clone holds the pool");
+        drop(clone);
+        // ...and dropping the last handle joins every worker before
+        // returning, so the count is back to baseline immediately.
+        assert_eq!(live_pool_workers(), baseline, "cycle {cycle}: workers leaked");
+    }
+    // Sequential executors never spawn a pool at all.
+    let exec = Executor::sequential();
+    assert_eq!(live_pool_workers(), baseline);
+    drop(exec);
+}
+
+/// Concurrent dispatches from independent caller threads (the server's
+/// `workers > 1` shape — several engine workers sharing one pool) must
+/// serialize without deadlock and produce sequential results. A generous
+/// stress: 4 callers × 100 dispatches each.
+fn concurrent_callers_serialize_correctly() {
+    let exec = Executor::new(3);
+    let want: u64 = (0..512u64).map(|i| i * i).sum();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let exec = &exec;
+            s.spawn(move || {
+                for _ in 0..100 {
+                    let got: u64 = exec
+                        .run_chunks(512, |r| r.map(|i| (i as u64) * (i as u64)).sum::<u64>())
+                        .into_iter()
+                        .sum();
+                    assert_eq!(got, want);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn persistent_pool_contracts() {
+    // Liveness bookkeeping first, while no other pool exists in-process.
+    drop_joins_all_workers();
+    pool_survives_chunk_panics();
+    concurrent_callers_serialize_correctly();
+    interleaved_batch_runs_stay_bit_identical();
+}
