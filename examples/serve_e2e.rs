@@ -88,6 +88,8 @@ fn main() {
                     return_samples: samples_done < 512,
                     want_metrics: false,
                     preset: None,
+                    deadline_ms: None,
+                    priority: 0,
                 };
                 let sw_req = Stopwatch::start();
                 let resp = client.request(&req).expect("request");
@@ -130,6 +132,8 @@ fn main() {
         return_samples: true,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     };
     let resp = client.request(&req).unwrap();
     let samples = resp.samples.expect("samples");

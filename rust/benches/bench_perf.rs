@@ -194,6 +194,8 @@ fn l3_sections(sch: &NoiseSchedule) {
         return_samples: false,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     };
     let (mean, _) = time_it(5, || {
         let mut b = Batcher::new();
@@ -242,6 +244,8 @@ fn stepper_section(quick: bool, out_path: &str) {
         return_samples: true,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     };
 
     // Bit-identity gate across the three paths.
@@ -581,6 +585,8 @@ fn tracing_section(quick: bool) -> Value {
         return_samples: false,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     };
     let (_, off_min) = time_it(iters, || {
         let mut br = BatchRun::new(bmodel.clone(), &wl, &cfg, vec![mk_req(1)], &exec);
@@ -709,6 +715,8 @@ fn exec_section(quick: bool) -> Value {
             return_samples: true,
             want_metrics: false,
             preset: None,
+            deadline_ms: None,
+            priority: 0,
         })
         .collect();
     let model: Arc<dyn ModelEval> = Arc::new(GmmAnalytic::new(wl.gmm.clone()));

@@ -356,6 +356,23 @@ pub struct ServerConfig {
     /// Per-thread trace ring capacity, in events (`obs::trace`). Applied
     /// at bind time; the recorder clamps it to ≥ 16.
     pub trace_capacity: usize,
+    /// Queued-lane shed cap: a request is shed when admitting it would push
+    /// the batcher past this many queued *lanes* (samples), in addition to
+    /// the `queue_cap` request-count check. `0` derives the cap as
+    /// `queue_cap × max_batch` — without it a single `n=100000` request
+    /// occupies one queue slot while swamping the lane budget. An empty
+    /// queue always admits, so one oversized request stays servable.
+    pub queue_lane_cap: usize,
+    /// How long a connection waits for its reply before giving up, in
+    /// milliseconds. On expiry the ticket is cancelled through the normal
+    /// cancel path (queued: removed; in flight: lanes freed at the owning
+    /// worker's next step boundary) so abandoned work stops burning NFEs.
+    pub reply_timeout_ms: u64,
+    /// Per-worker budget of in-flight lanes: a worker admits a fresh group
+    /// only while its active lanes plus the group's seed request stay
+    /// within the budget (a group is always admitted when the worker is
+    /// idle, so one oversized request cannot starve). `0` = unlimited.
+    pub max_step_lanes: usize,
 }
 
 impl Default for ServerConfig {
@@ -373,6 +390,9 @@ impl Default for ServerConfig {
             checkpoint_every: 16,
             trace_path: None,
             trace_capacity: crate::obs::trace::DEFAULT_CAPACITY,
+            queue_lane_cap: 0,
+            reply_timeout_ms: 120_000,
+            max_step_lanes: 0,
         }
     }
 }
@@ -396,7 +416,22 @@ impl ServerConfig {
                 .max(1) as u64,
             trace_path: v.get("trace").and_then(Value::as_str).map(String::from),
             trace_capacity: v.opt_usize("trace_capacity", d.trace_capacity),
+            queue_lane_cap: v.opt_usize("queue_lane_cap", d.queue_lane_cap),
+            reply_timeout_ms: v
+                .opt_usize("reply_timeout_ms", d.reply_timeout_ms as usize)
+                .max(1) as u64,
+            max_step_lanes: v.opt_usize("max_step_lanes", d.max_step_lanes),
         })
+    }
+
+    /// The effective queued-lane shed cap: `queue_lane_cap`, or the derived
+    /// default `queue_cap × max_batch` when unset (0).
+    pub fn effective_queue_lane_cap(&self) -> usize {
+        if self.queue_lane_cap > 0 {
+            self.queue_lane_cap
+        } else {
+            self.queue_cap.saturating_mul(self.max_batch.max(1))
+        }
     }
 }
 
@@ -526,5 +561,30 @@ mod tests {
         let c = ServerConfig::from_json(&v).unwrap();
         assert_eq!(c.checkpoint_path, Some("ck.json".to_string()));
         assert_eq!(c.checkpoint_every, 1); // clamped
+    }
+
+    #[test]
+    fn server_config_slo_fields() {
+        let d = ServerConfig::default();
+        assert_eq!(d.queue_lane_cap, 0);
+        assert_eq!(d.reply_timeout_ms, 120_000);
+        assert_eq!(d.max_step_lanes, 0);
+        // Derived lane cap: queue_cap × max_batch when unset.
+        assert_eq!(d.effective_queue_lane_cap(), d.queue_cap * d.max_batch);
+
+        let v = jsonlite::parse(
+            r#"{"queue_lane_cap": 512, "reply_timeout_ms": 250, "max_step_lanes": 64}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.queue_lane_cap, 512);
+        assert_eq!(c.effective_queue_lane_cap(), 512);
+        assert_eq!(c.reply_timeout_ms, 250);
+        assert_eq!(c.max_step_lanes, 64);
+
+        // reply_timeout_ms 0 would make every request time out instantly —
+        // clamped to 1.
+        let v = jsonlite::parse(r#"{"reply_timeout_ms": 0}"#).unwrap();
+        assert_eq!(ServerConfig::from_json(&v).unwrap().reply_timeout_ms, 1);
     }
 }

@@ -8,8 +8,9 @@
 
 use crate::coordinator::request::SampleRequest;
 use crate::jsonlite::to_string;
+use std::cmp::Ordering;
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Batch compatibility key.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -42,7 +43,27 @@ pub struct Pending {
     pub request: SampleRequest,
     /// When it was enqueued (drives the batching deadline).
     pub arrived: Instant,
+    /// Absolute deadline (`arrived + request.deadline_ms`), precomputed at
+    /// push so scheduling comparisons are a plain `Instant` compare.
+    pub deadline: Option<Instant>,
     key: BatchKey,
+}
+
+/// Scheduling order between two queued requests: higher priority first,
+/// then earlier deadline (EDF; no deadline sorts last), ties broken by the
+/// caller's scan order (arrival / FIFO). With default priorities and no
+/// deadlines this is `Equal` everywhere, so extraction degenerates to the
+/// original FIFO behavior.
+fn sched_cmp(a: &Pending, b: &Pending) -> Ordering {
+    b.request
+        .priority
+        .cmp(&a.request.priority)
+        .then_with(|| match (a.deadline, b.deadline) {
+            (Some(x), Some(y)) => x.cmp(&y),
+            (Some(_), None) => Ordering::Less,
+            (None, Some(_)) => Ordering::Greater,
+            (None, None) => Ordering::Equal,
+        })
 }
 
 /// FIFO queue with compatibility-grouped extraction.
@@ -78,7 +99,29 @@ impl Batcher {
     pub fn push(&mut self, request: SampleRequest) {
         self.queued_samples += request.n;
         let key = BatchKey::of(&request);
-        self.queue.push_back(Pending { request, arrived: Instant::now(), key });
+        let arrived = Instant::now();
+        let deadline = request
+            .deadline_ms
+            .and_then(|ms| arrived.checked_add(Duration::from_millis(ms)));
+        self.queue.push_back(Pending { request, arrived, deadline, key });
+    }
+
+    /// Index of the best-scheduled request: highest priority, then
+    /// earliest deadline, then arrival order. This is the seed the next
+    /// popped group forms around.
+    fn best_index(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.queue.len() {
+            match best {
+                None => best = Some(i),
+                // Strict `Less` keeps the earliest index on ties (FIFO).
+                Some(b) if sched_cmp(&self.queue[i], &self.queue[b]) == Ordering::Less => {
+                    best = Some(i)
+                }
+                _ => {}
+            }
+        }
+        best
     }
 
     /// Age of the oldest pending request.
@@ -104,34 +147,93 @@ impl Batcher {
         removed
     }
 
-    /// Pop the oldest request plus up to `max_batch − 1` *compatible*
-    /// requests (FIFO order preserved within the group; incompatible
-    /// requests keep their positions).
+    /// Number of requests compatible with the next group's seed (the
+    /// best-scheduled queued request) — the size the next popped group
+    /// *could* reach, uncapped. The server's full-batch admission trigger
+    /// compares this, not total queue length: a queue full of mutually
+    /// incompatible requests must not force-admit an undersized group
+    /// before its batching deadline.
+    pub fn head_group_len(&self) -> usize {
+        let Some(i) = self.best_index() else {
+            return 0;
+        };
+        let key = &self.queue[i].key;
+        self.queue.iter().filter(|p| &p.key == key).count()
+    }
+
+    /// Lane count (`n`) of the next group's seed request, for per-step
+    /// lane-budget admission checks.
+    pub fn head_lanes(&self) -> Option<usize> {
+        self.best_index().map(|i| self.queue[i].request.n)
+    }
+
+    /// Pop the best-scheduled request plus up to `max_batch − 1`
+    /// *compatible* requests (incompatible requests keep their queue
+    /// positions). With default priorities and no deadlines this pops the
+    /// oldest request's group in FIFO order, exactly as before.
     pub fn pop_group(&mut self, max_batch: usize) -> Vec<SampleRequest> {
-        self.pop_group_pending(max_batch).into_iter().map(|p| p.request).collect()
+        self.pop_group_pending(max_batch, usize::MAX)
+            .into_iter()
+            .map(|p| p.request)
+            .collect()
     }
 
     /// [`Batcher::pop_group`] keeping each request's queue metadata
-    /// (arrival time), so the server can attribute queue-wait latency at
-    /// admission.
-    pub fn pop_group_pending(&mut self, max_batch: usize) -> Vec<Pending> {
-        let Some(first) = self.queue.pop_front() else {
+    /// (arrival time, deadline), so the server can attribute queue-wait
+    /// latency and expire deadlines at admission.
+    ///
+    /// Group extraction is scheduling-aware: the *seed* is the
+    /// best-scheduled queued request (highest priority, then earliest
+    /// deadline, then arrival), and compatible members join in that same
+    /// order — so when a compatibility group is oversubscribed, its most
+    /// urgent members ride the first batch. `max_lanes` bounds the group's
+    /// total lanes (`Σ n`); the seed is always included even when it alone
+    /// exceeds the budget, so an oversized request can still make progress
+    /// on an otherwise idle worker. Reordering is bit-identity-safe:
+    /// every lane draws from its own request-seeded Philox stream, so a
+    /// request's samples do not depend on when or with whom it ran.
+    pub fn pop_group_pending(&mut self, max_batch: usize, max_lanes: usize) -> Vec<Pending> {
+        let Some(seed_idx) = self.best_index() else {
             return Vec::new();
         };
-        self.queued_samples -= first.request.n;
-        let key = first.key.clone();
-        let mut group = vec![first];
+        let key = self.queue[seed_idx].key.clone();
+        // Compatible candidates in scheduling order (stable on ties →
+        // arrival order).
+        let mut cand: Vec<usize> =
+            (0..self.queue.len()).filter(|&i| self.queue[i].key == key).collect();
+        cand.sort_by(|&a, &b| sched_cmp(&self.queue[a], &self.queue[b]).then(a.cmp(&b)));
+        let mut selected: Vec<usize> = Vec::new();
+        let mut lanes = 0usize;
+        for &i in &cand {
+            if selected.len() >= max_batch {
+                break;
+            }
+            let n = self.queue[i].request.n;
+            if !selected.is_empty() && lanes.saturating_add(n) > max_lanes {
+                continue; // over budget; a smaller member may still fit
+            }
+            lanes = lanes.saturating_add(n);
+            selected.push(i);
+        }
+        // Extract the selected set in scheduling order; everyone else keeps
+        // their queue position.
+        let mut slot_of = std::collections::HashMap::with_capacity(selected.len());
+        for (slot, &i) in selected.iter().enumerate() {
+            slot_of.insert(i, slot);
+        }
+        let mut group: Vec<Option<Pending>> = (0..selected.len()).map(|_| None).collect();
         let mut kept = VecDeque::with_capacity(self.queue.len());
-        while let Some(p) = self.queue.pop_front() {
-            if group.len() < max_batch && p.key == key {
-                self.queued_samples -= p.request.n;
-                group.push(p);
-            } else {
-                kept.push_back(p);
+        for (i, p) in std::mem::take(&mut self.queue).into_iter().enumerate() {
+            match slot_of.get(&i) {
+                Some(&slot) => {
+                    self.queued_samples -= p.request.n;
+                    group[slot] = Some(p);
+                }
+                None => kept.push_back(p),
             }
         }
         self.queue = kept;
-        group
+        group.into_iter().map(|p| p.expect("selected index extracted")).collect()
     }
 }
 
@@ -151,6 +253,8 @@ mod tests {
             return_samples: false,
             want_metrics: false,
             preset: None,
+            deadline_ms: None,
+            priority: 0,
         }
     }
 
@@ -274,6 +378,112 @@ mod tests {
         b.push(manual);
         b.push(via_preset);
         assert_eq!(b.pop_group(8).len(), 2);
+    }
+
+    #[test]
+    fn head_group_len_counts_only_the_compatible_head_group() {
+        // Regression (premature admission): the old full-batch trigger
+        // compared *total* queue length against max_batch, so a queue of
+        // mutually incompatible requests force-admitted an undersized head
+        // group before its deadline. head_group_len must count only the
+        // seed-compatible requests.
+        let mut b = Batcher::new();
+        b.push(req(1, 20, "latent_analog"));
+        b.push(req(2, 20, "cifar_analog")); // incompatible
+        b.push(req(3, 40, "latent_analog")); // incompatible (nfe)
+        b.push(req(4, 20, "latent_analog")); // compatible with 1
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.head_group_len(), 2, "only ids 1 and 4 share the head key");
+        assert_eq!(b.head_lanes(), Some(2));
+        // The old failure shape: len() >= max_batch=4 says "full batch",
+        // but the group that would actually pop has just 2 members.
+        assert!(b.len() >= 4 && b.head_group_len() < 4);
+        let g = b.pop_group(8);
+        assert_eq!(g.len(), 2);
+        assert!(b.head_group_len() >= 1);
+        assert_eq!(Batcher::new().head_group_len(), 0);
+        assert_eq!(Batcher::new().head_lanes(), None);
+    }
+
+    #[test]
+    fn priority_orders_group_extraction() {
+        // Three compatible requests, the last one high-priority, max_batch
+        // 2: the high-priority request must ride the first batch (seed),
+        // joined by the oldest default-priority one.
+        let mut b = Batcher::new();
+        b.push(req(1, 20, "latent_analog"));
+        b.push(req(2, 20, "latent_analog"));
+        b.push(SampleRequest { priority: 5, ..req(3, 20, "latent_analog") });
+        let g = b.pop_group(2);
+        assert_eq!(g.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 1]);
+        let g2 = b.pop_group(2);
+        assert_eq!(g2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn priority_selects_the_seed_across_incompatible_groups() {
+        // A high-priority request in a *different* compatibility group
+        // becomes the seed: its group pops first even though it arrived
+        // last.
+        let mut b = Batcher::new();
+        b.push(req(1, 20, "latent_analog"));
+        b.push(SampleRequest { priority: 9, ..req(2, 20, "cifar_analog") });
+        assert_eq!(b.head_group_len(), 1);
+        let g = b.pop_group(8);
+        assert_eq!(g.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.pop_group(8)[0].id, 1);
+    }
+
+    #[test]
+    fn earliest_deadline_first_within_priority() {
+        // Equal priority: the tighter deadline wins the seed slot; a
+        // request with no deadline sorts after any deadlined one.
+        let mut b = Batcher::new();
+        b.push(req(1, 20, "latent_analog")); // no deadline
+        b.push(SampleRequest { deadline_ms: Some(5_000), ..req(2, 20, "latent_analog") });
+        b.push(SampleRequest { deadline_ms: Some(100), ..req(3, 20, "latent_analog") });
+        let g = b.pop_group(8);
+        assert_eq!(g.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 2, 1]);
+        // Priority dominates deadline.
+        let mut b = Batcher::new();
+        b.push(SampleRequest { deadline_ms: Some(1), ..req(1, 20, "latent_analog") });
+        b.push(SampleRequest { priority: 1, ..req(2, 20, "latent_analog") });
+        assert_eq!(b.pop_group(8).iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1]);
+    }
+
+    #[test]
+    fn lane_budget_bounds_group_width() {
+        // req() pushes n=2 lanes each; budget 5 fits the seed plus one
+        // member (4 lanes) but not a third (6 > 5).
+        let mut b = Batcher::new();
+        for id in 0..4 {
+            b.push(req(id, 10, "latent_analog"));
+        }
+        let g = b.pop_group_pending(8, 5);
+        assert_eq!(g.len(), 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.queued_samples(), 4);
+        // The seed is always admitted, even alone over budget — otherwise
+        // an oversized request would starve forever.
+        let g = b.pop_group_pending(8, 1);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].request.id, 2);
+    }
+
+    #[test]
+    fn default_requests_preserve_fifo_extraction() {
+        // No priorities, no deadlines: extraction must be byte-for-byte
+        // the old FIFO behavior (seed = front, members in arrival order).
+        let mut b = Batcher::new();
+        for id in 0..5 {
+            b.push(req(id, 10, "latent_analog"));
+        }
+        let g = b.pop_group_pending(3, usize::MAX);
+        assert_eq!(g.iter().map(|p| p.request.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(
+            b.pop_group(8).iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![3, 4]
+        );
     }
 
     #[test]

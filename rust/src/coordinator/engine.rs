@@ -245,6 +245,8 @@ pub fn run_batch_with(
             id: req.id,
             ok: true,
             error: None,
+            kind: None,
+            retry_after_ms: None,
             n: req.n,
             dim,
             nfe: out.nfe,
@@ -657,7 +659,7 @@ impl BatchRun {
         // surviving shards all hold the full eval history, so NFE
         // accounting still reads any remaining shard.
         self.shards.retain(|s| !s.lanes.is_empty());
-        Some(SampleResponse::err(req.id, "cancelled"))
+        Some(SampleResponse::typed_err(req.id, "cancelled", "cancelled"))
     }
 
     /// Collect responses for the surviving requests. Call after `step`
@@ -697,6 +699,8 @@ impl BatchRun {
                 id: req.id,
                 ok: true,
                 error: None,
+                kind: None,
+                retry_after_ms: None,
                 n: req.n,
                 dim,
                 nfe,
@@ -726,6 +730,8 @@ mod tests {
             return_samples: true,
             want_metrics: false,
             preset: None,
+            deadline_ms: None,
+            priority: 0,
         }
     }
 

@@ -78,15 +78,23 @@ impl Stage {
 }
 
 /// Lock-free log-bucketed latency histogram over [`BUCKET_BOUNDS_MS`]
-/// with an overflow bucket.
+/// with an overflow bucket. Public so out-of-band consumers (the loadgen
+/// reporter) aggregate client-side latencies with the exact same buckets
+/// and interpolation the server's `stats` snapshot uses.
 #[derive(Debug, Default)]
-struct Histogram {
+pub struct Histogram {
     buckets: [AtomicU64; BUCKETS],
     sum_us: AtomicU64,
 }
 
 impl Histogram {
-    fn observe_ms(&self, ms: f64) {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation, in milliseconds.
+    pub fn observe_ms(&self, ms: f64) {
         let mut idx = BUCKET_BOUNDS_MS.len();
         for (i, ub) in BUCKET_BOUNDS_MS.iter().enumerate() {
             if ms <= *ub {
@@ -99,15 +107,18 @@ impl Histogram {
         self.sum_us.fetch_add((ms * 1000.0) as u64, Ordering::Relaxed);
     }
 
-    fn count(&self) -> u64 {
+    /// Total observations recorded (overflow included).
+    pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
-    fn overflow(&self) -> u64 {
+    /// Observations above the top bucket bound.
+    pub fn overflow(&self) -> u64 {
         self.buckets[BUCKET_BOUNDS_MS.len()].load(Ordering::Relaxed)
     }
 
-    fn mean_ms(&self) -> f64 {
+    /// Mean of the recorded observations, in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
@@ -120,7 +131,7 @@ impl Histogram {
     /// fraction of the bucket's mass below the target rank). Returns 0
     /// for an empty histogram and `f64::INFINITY` when the quantile
     /// falls in the overflow bucket.
-    fn percentile_ms(&self, q: f64) -> f64 {
+    pub fn percentile_ms(&self, q: f64) -> f64 {
         let counts: [u64; BUCKETS] =
             std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
         let total: u64 = counts.iter().sum();
@@ -145,7 +156,10 @@ impl Histogram {
         f64::INFINITY
     }
 
-    fn snapshot(&self) -> Value {
+    /// JSON snapshot: count, overflow, mean and interpolated p50/p90/p99
+    /// (an overflow-bucket percentile is `Infinity`, serialized as JSON
+    /// `null` by `jsonlite`).
+    pub fn snapshot(&self) -> Value {
         Value::obj(vec![
             ("count", Value::Num(self.count() as f64)),
             ("overflow", Value::Num(self.overflow() as f64)),
@@ -166,8 +180,17 @@ pub struct ServingMetrics {
     pub responses_ok: AtomicU64,
     /// Counter: error responses routed back.
     pub responses_err: AtomicU64,
-    /// Counter: requests shed because the queue was full.
+    /// Counter: requests shed because the queue was full (request count or
+    /// queued-lane cap).
     pub shed: AtomicU64,
+    /// Counter: connections that gave up waiting for their reply
+    /// (`ServerConfig.reply_timeout_ms`); each one also counts in
+    /// `responses_err`, and its ticket is cancelled so the lanes stop.
+    pub timeouts: AtomicU64,
+    /// Counter: requests answered with a typed `deadline` error because
+    /// their latency budget expired before admission; written via
+    /// [`Self::observe_deadline_miss`].
+    deadline_miss: AtomicU64,
     /// Counter: sample lanes produced.
     pub samples: AtomicU64,
     /// Counter: model evaluations spent (batched calls).
@@ -260,6 +283,12 @@ impl ServingMetrics {
         self.groups_recovered.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `n` requests expired (deadline passed before admission) and were
+    /// answered with typed `deadline` errors.
+    pub fn observe_deadline_miss(&self, n: usize) {
+        self.deadline_miss.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     /// Record a finished batch: its request count, total lanes and NFE.
     pub fn observe_batch(&self, group_size: usize, total_samples: usize, nfe: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -300,6 +329,8 @@ impl ServingMetrics {
             ("responses_ok", load(&self.responses_ok)),
             ("responses_err", load(&self.responses_err)),
             ("shed", load(&self.shed)),
+            ("timeouts", load(&self.timeouts)),
+            ("deadline_miss", load(&self.deadline_miss)),
             ("samples", load(&self.samples)),
             ("model_evals", load(&self.model_evals)),
             ("batches", load(&self.batches)),
@@ -389,6 +420,19 @@ mod tests {
         assert_eq!(s.req_f64("cancelled").unwrap(), 1.0);
         assert_eq!(s.req_f64("inflight_groups").unwrap(), 0.0);
         assert_eq!(s.req_f64("inflight_lanes").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn timeout_and_deadline_counters() {
+        let m = ServingMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("timeouts").unwrap(), 0.0);
+        assert_eq!(s.req_f64("deadline_miss").unwrap(), 0.0);
+        m.timeouts.fetch_add(1, Ordering::Relaxed);
+        m.observe_deadline_miss(3);
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("timeouts").unwrap(), 1.0);
+        assert_eq!(s.req_f64("deadline_miss").unwrap(), 3.0);
     }
 
     #[test]

@@ -30,6 +30,17 @@ pub struct SampleRequest {
     /// ingress against the loaded registry — the resolved concrete config
     /// replaces `cfg`, so preset and manual requests batch together.
     pub preset: Option<String>,
+    /// Latency budget in milliseconds, measured from enqueue. A request
+    /// still queued when its budget expires is answered with a typed
+    /// `deadline` error at the next admission boundary instead of running.
+    /// `None` means no deadline.
+    pub deadline_ms: Option<u64>,
+    /// Scheduling priority (higher is more urgent; default 0). The batcher
+    /// seeds group extraction with the best (priority, deadline, arrival)
+    /// request and orders members of an oversubscribed compatibility group
+    /// the same way, so priority never affects *which* samples a request
+    /// gets — only when it runs.
+    pub priority: i64,
 }
 
 impl SampleRequest {
@@ -53,6 +64,8 @@ impl SampleRequest {
             return_samples: v.opt_bool("return_samples", false),
             want_metrics: v.opt_bool("metrics", false),
             preset: v.get("preset").and_then(Value::as_str).map(String::from),
+            deadline_ms: v.get("deadline_ms").and_then(Value::as_u64),
+            priority: v.get("priority").and_then(Value::as_f64).map_or(0, |p| p as i64),
         })
     }
 
@@ -70,6 +83,12 @@ impl SampleRequest {
         ];
         if let Some(p) = &self.preset {
             fields.push(("preset", Value::Str(p.clone())));
+        }
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Value::Num(d as f64)));
+        }
+        if self.priority != 0 {
+            fields.push(("priority", Value::Num(self.priority as f64)));
         }
         Value::obj(fields)
     }
@@ -97,6 +116,14 @@ pub struct SampleResponse {
     pub ok: bool,
     /// Error message when `ok` is false.
     pub error: Option<String>,
+    /// Typed error kind when the failure is one the protocol classifies
+    /// (`shed` / `deadline` / `timeout` / `cancelled`); `None` for untyped
+    /// errors. On the wire a typed error serializes as an object
+    /// (`{"error":{"kind":...,"message":...}}`), an untyped one as the
+    /// legacy plain string.
+    pub kind: Option<String>,
+    /// Backoff hint carried by `shed` replies, in milliseconds.
+    pub retry_after_ms: Option<u64>,
     /// Lanes produced.
     pub n: usize,
     /// Data dimension per lane.
@@ -120,6 +147,8 @@ impl SampleResponse {
             id,
             ok: false,
             error: Some(msg.into()),
+            kind: None,
+            retry_after_ms: None,
             n: 0,
             dim: 0,
             nfe: 0,
@@ -127,6 +156,21 @@ impl SampleResponse {
             sim_fid: None,
             sliced_w2: None,
             samples: None,
+        }
+    }
+
+    /// A typed error response: `kind` is one of the protocol's classified
+    /// failure kinds (`shed` / `deadline` / `timeout` / `cancelled`).
+    pub fn typed_err(id: u64, kind: &str, msg: impl Into<String>) -> SampleResponse {
+        SampleResponse { kind: Some(kind.to_string()), ..SampleResponse::err(id, msg) }
+    }
+
+    /// A `shed` reply with its backoff hint: the server is over capacity
+    /// and the client should retry after roughly `retry_after_ms`.
+    pub fn shed(id: u64, retry_after_ms: u64) -> SampleResponse {
+        SampleResponse {
+            retry_after_ms: Some(retry_after_ms),
+            ..SampleResponse::typed_err(id, "shed", "overloaded: queue full")
         }
     }
 
@@ -140,7 +184,16 @@ impl SampleResponse {
             ("nfe", Value::Num(self.nfe as f64)),
             ("wall_ms", Value::Num(self.wall_ms)),
         ];
-        if let Some(e) = &self.error {
+        if let Some(k) = &self.kind {
+            let mut e = vec![("kind", Value::Str(k.clone()))];
+            if let Some(m) = &self.error {
+                e.push(("message", Value::Str(m.clone())));
+            }
+            if let Some(r) = self.retry_after_ms {
+                e.push(("retry_after_ms", Value::Num(r as f64)));
+            }
+            fields.push(("error", Value::obj(e)));
+        } else if let Some(e) = &self.error {
             fields.push(("error", Value::Str(e.clone())));
         }
         if let Some(f) = self.sim_fid {
@@ -155,12 +208,25 @@ impl SampleResponse {
         Value::obj(fields)
     }
 
-    /// Parse a protocol response object.
+    /// Parse a protocol response object. Accepts both error wire forms:
+    /// the legacy plain string and the typed object
+    /// (`{"kind":...,"message":...,"retry_after_ms":...}`).
     pub fn from_json(v: &Value) -> Result<SampleResponse> {
+        let (error, kind, retry_after_ms) = match v.get("error") {
+            Some(Value::Str(s)) => (Some(s.clone()), None, None),
+            Some(e @ Value::Object(_)) => (
+                e.get("message").and_then(Value::as_str).map(String::from),
+                e.get("kind").and_then(Value::as_str).map(String::from),
+                e.get("retry_after_ms").and_then(Value::as_u64),
+            ),
+            _ => (None, None, None),
+        };
         Ok(SampleResponse {
             id: v.opt_usize("id", 0) as u64,
             ok: v.opt_bool("ok", false),
-            error: v.get("error").and_then(Value::as_str).map(String::from),
+            error,
+            kind,
+            retry_after_ms,
             n: v.opt_usize("n", 0),
             dim: v.opt_usize("dim", 0),
             nfe: v.opt_usize("nfe", 0),
@@ -196,9 +262,25 @@ mod tests {
             return_samples: true,
             want_metrics: true,
             preset: None,
+            deadline_ms: None,
+            priority: 0,
         };
         let parsed = SampleRequest::from_json(&jsonlite::parse(&r.to_line()).unwrap()).unwrap();
         assert_eq!(r, parsed);
+    }
+
+    #[test]
+    fn request_deadline_priority_roundtrip() {
+        let v = jsonlite::parse(r#"{"n": 4, "deadline_ms": 250, "priority": -3}"#).unwrap();
+        let r = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        assert_eq!(r.priority, -3);
+        let reparsed = SampleRequest::from_json(&jsonlite::parse(&r.to_line()).unwrap()).unwrap();
+        assert_eq!(r, reparsed);
+        // Defaults stay off the wire.
+        let plain = SampleRequest { deadline_ms: None, priority: 0, ..r };
+        assert!(!plain.to_line().contains("deadline_ms"));
+        assert!(!plain.to_line().contains("priority"));
     }
 
     #[test]
@@ -221,6 +303,8 @@ mod tests {
         assert_eq!(r.model, "gmm");
         assert!(!r.return_samples);
         assert_eq!(r.preset, None);
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.priority, 0);
     }
 
     #[test]
@@ -244,6 +328,8 @@ mod tests {
             id: 3,
             ok: true,
             error: None,
+            kind: None,
+            retry_after_ms: None,
             n: 2,
             dim: 2,
             nfe: 20,
@@ -261,5 +347,35 @@ mod tests {
         let r = SampleResponse::err(9, "boom");
         assert!(!r.ok);
         assert!(r.to_line().contains("boom"));
+        // Untyped errors keep the legacy string wire form.
+        assert!(r.to_line().contains(r#""error":"boom""#));
+    }
+
+    #[test]
+    fn typed_error_roundtrip() {
+        let r = SampleResponse::shed(4, 37);
+        let line = r.to_line();
+        assert!(line.contains(r#""kind":"shed""#), "{line}");
+        assert!(line.contains(r#""retry_after_ms":37"#), "{line}");
+        let parsed = SampleResponse::from_json(&jsonlite::parse(&line).unwrap()).unwrap();
+        assert_eq!(r, parsed);
+        assert_eq!(parsed.kind.as_deref(), Some("shed"));
+        assert_eq!(parsed.retry_after_ms, Some(37));
+        // The message stays accessible the old way.
+        assert_eq!(parsed.error.as_deref(), Some("overloaded: queue full"));
+
+        let d = SampleResponse::typed_err(5, "deadline", "deadline exceeded before admission");
+        let parsed = SampleResponse::from_json(&jsonlite::parse(&d.to_line()).unwrap()).unwrap();
+        assert_eq!(d, parsed);
+        assert_eq!(parsed.retry_after_ms, None);
+    }
+
+    #[test]
+    fn legacy_string_error_still_parses() {
+        let v = jsonlite::parse(r#"{"id": 7, "ok": false, "error": "cancelled"}"#).unwrap();
+        let r = SampleResponse::from_json(&v).unwrap();
+        assert_eq!(r.error.as_deref(), Some("cancelled"));
+        assert_eq!(r.kind, None);
+        assert_eq!(r.retry_after_ms, None);
     }
 }

@@ -15,16 +15,25 @@
 //! * sampling request — see [`SampleRequest::from_json`]; an optional
 //!   `"preset"` field (`"auto"` or a preset name) resolves against the
 //!   loaded tuner registry *at ingress*, so preset and manual requests
-//!   with the same concrete config share a batch;
+//!   with the same concrete config share a batch. Requests may carry
+//!   `deadline_ms` (still-queued past the budget → typed `deadline` error
+//!   at the admission boundary) and `priority` (group extraction is
+//!   priority-then-EDF; reorder-safe by per-lane Philox keys). Admission
+//!   sheds — typed `shed` error with a `retry_after_ms` hint — when the
+//!   queue is full by request count (`queue_cap`) or by queued lanes
+//!   (`queue_lane_cap`; an empty queue always admits), and a connection
+//!   waiting longer than `reply_timeout_ms` gets a typed `timeout` error
+//!   with its ticket cancelled so the lanes free;
 //! * `{"cmd": "stats"}` → serving-metrics snapshot (includes the
 //!   `queued_samples` gauge plus the per-step scheduler fields `steps`,
-//!   `step_lanes`, `cancelled`, `inflight_groups`, `inflight_lanes`);
+//!   `step_lanes`, `cancelled`, `inflight_groups`, `inflight_lanes`, and
+//!   the SLO counters `timeouts` / `deadline_miss`);
 //! * `{"cmd": "cancel", "id": N}` → cancels every queued or in-flight
 //!   request whose client-visible id is `N`: queued requests are removed
 //!   immediately, in-flight ones are dropped at the owning worker's next
 //!   step boundary (their lanes are freed; co-batched requests are
-//!   unaffected). Each cancelled request's waiting connection receives an
-//!   `{"error":"cancelled"}` reply;
+//!   unaffected). Each cancelled request's waiting connection receives a
+//!   typed `cancelled` error reply;
 //! * `{"cmd": "presets"}` → summary of the loaded preset registry;
 //! * `{"cmd": "recover"}` → ids of checkpoint-recovered results ready to
 //!   fetch (plus the count still resuming); `{"cmd": "recover", "id": N}`
@@ -451,15 +460,30 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
         }
     }
     shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-    // Shed load if the queue is over capacity.
+    // Shed load if the queue is over capacity — by request count OR by
+    // queued lanes. The lane check is what makes shedding width-aware: a
+    // single n=100000 request occupies one queue slot but would otherwise
+    // swamp every step budget behind it.
     let (tx, rx) = std::sync::mpsc::channel();
+    let ticket;
     {
         let mut q = shared.queue.lock().expect("queue lock");
-        if q.batcher.len() >= shared.cfg.queue_cap {
+        let lane_cap = shared.cfg.effective_queue_lane_cap();
+        let queued_lanes = q.batcher.queued_samples();
+        // An empty queue always admits — like the worker's idle-admission
+        // rule, an oversized single request must still run rather than be
+        // unservable at any load.
+        if q.batcher.len() >= shared.cfg.queue_cap
+            || (queued_lanes > 0 && queued_lanes.saturating_add(request.n) > lane_cap)
+        {
             shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
-            return SampleResponse::err(request.id, "overloaded: queue full").to_line();
+            // Backoff hint: roughly how long the present backlog needs to
+            // drain, in batching-deadline units per max_batch-sized group.
+            let groups = (q.batcher.len() / shared.cfg.max_batch.max(1)) as u64;
+            let retry = shared.cfg.batch_deadline_ms.max(1).saturating_mul(1 + groups);
+            return SampleResponse::shed(request.id, retry).to_line();
         }
-        let ticket = q.next_ticket;
+        ticket = q.next_ticket;
         q.next_ticket += 1;
         // The ticket rides in the request id slot internally; the original
         // id is restored when the response is routed back.
@@ -471,7 +495,7 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
         shared.metrics.set_queued_samples(q.batcher.queued_samples());
     }
     shared.cond.notify_one();
-    let timeout = Duration::from_secs(120);
+    let timeout = Duration::from_millis(shared.cfg.reply_timeout_ms.max(1));
     match rx.recv_timeout(timeout) {
         Ok(mut resp) => {
             resp.id = request.id;
@@ -483,7 +507,47 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
             shared.metrics.observe_latency_ms(resp.wall_ms);
             resp.to_line()
         }
-        Err(_) => SampleResponse::err(request.id, "timeout").to_line(),
+        Err(_) => {
+            // This connection is giving up: reclaim the ticket so its
+            // lanes stop burning NFEs for a receiver that is gone. Queued →
+            // remove outright; in flight → flag for the owning worker's
+            // next step boundary (the existing cancel path).
+            let mut q = shared.queue.lock().expect("queue lock");
+            // The reply may have raced in between the timeout firing and
+            // taking the lock — deliver it instead of cancelling.
+            if let Ok(mut resp) = rx.try_recv() {
+                drop(q);
+                resp.id = request.id;
+                if resp.ok {
+                    shared.metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    shared.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+                }
+                shared.metrics.observe_latency_ms(resp.wall_ms);
+                return resp.to_line();
+            }
+            q.replies.remove(&ticket);
+            q.client_of.remove(&ticket);
+            let removed = q.batcher.remove_where(|r| r.id == ticket);
+            shared.metrics.set_queued_samples(q.batcher.queued_samples());
+            if removed.is_empty() {
+                // Not queued → in flight somewhere; the owning worker frees
+                // the lanes at its next boundary (route_reply then finds no
+                // receiver and drops the response).
+                q.cancel_flags.insert(ticket);
+            }
+            drop(q);
+            shared.cond.notify_all();
+            shared.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.observe_latency_ms(timeout.as_secs_f64() * 1e3);
+            SampleResponse::typed_err(
+                request.id,
+                "timeout",
+                format!("timeout after {} ms waiting for reply", timeout.as_millis()),
+            )
+            .to_line()
+        }
     }
 }
 
@@ -561,7 +625,7 @@ fn handle_cancel(shared: &Arc<Shared>, target: u64) -> String {
         let removed_tickets: HashSet<u64> = removed.iter().map(|r| r.id).collect();
         for r in removed {
             shared.metrics.observe_cancel(0);
-            route_reply(&mut q, SampleResponse::err(r.id, "cancelled"));
+            route_reply(&mut q, SampleResponse::typed_err(r.id, "cancelled", "cancelled"));
         }
         let mut pending = 0usize;
         for t in &tickets {
@@ -640,12 +704,38 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
                 let slots =
                     active.len() + admitted.len() + usize::from(restored_take.is_some());
                 if slots < max_inflight && !q.batcher.is_empty() {
+                    // Per-step lane budget: this worker's lanes already in
+                    // flight (or admitted this boundary) plus the next
+                    // group's seed must fit max_step_lanes. An idle worker
+                    // always admits — an oversized request must still run.
+                    let budget = if shared.cfg.max_step_lanes == 0 {
+                        usize::MAX
+                    } else {
+                        shared.cfg.max_step_lanes
+                    };
+                    let active_lanes: usize = active.iter().map(|r| r.lanes()).sum::<usize>()
+                        + admitted
+                            .iter()
+                            .flat_map(|g| g.iter())
+                            .map(|p| p.request.n)
+                            .sum::<usize>();
+                    let lane_room = active_lanes == 0
+                        || q
+                            .batcher
+                            .head_lanes()
+                            .is_some_and(|n| active_lanes.saturating_add(n) <= budget);
                     let deadline = Duration::from_millis(shared.cfg.batch_deadline_ms);
                     let age = q.batcher.oldest_age().unwrap_or_default();
-                    let ready =
-                        q.batcher.len() >= shared.cfg.max_batch || age >= deadline || draining;
-                    if ready {
-                        let g = q.batcher.pop_group_pending(shared.cfg.max_batch);
+                    // Full-batch trigger on the *compatible head group*,
+                    // not total queue length — a queue of mutually
+                    // incompatible requests must not force-admit an
+                    // undersized group before its deadline.
+                    let ready = q.batcher.head_group_len() >= shared.cfg.max_batch
+                        || age >= deadline
+                        || draining;
+                    if lane_room && ready {
+                        let remaining = budget.saturating_sub(active_lanes);
+                        let g = q.batcher.pop_group_pending(shared.cfg.max_batch, remaining);
                         if !g.is_empty() {
                             admitted.push(g);
                         }
@@ -726,8 +816,17 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
         for g in admitted {
             let _span = trace::span("batch_merge", "server");
             let merge_t0 = Instant::now();
+            let now = Instant::now();
             let mut group = Vec::with_capacity(g.len());
+            let mut expired: Vec<u64> = Vec::new();
             for p in g {
+                // Deadline-expired skip-and-reply: a request whose latency
+                // budget already lapsed gets a typed `deadline` error
+                // instead of burning NFEs on an answer nobody can use.
+                if p.deadline.is_some_and(|d| now >= d) {
+                    expired.push(p.request.id);
+                    continue;
+                }
                 let wait_ms = p.arrived.elapsed().as_secs_f64() * 1e3;
                 shared.metrics.observe_stage(Stage::QueueWait, wait_ms);
                 if trace::is_enabled() {
@@ -735,6 +834,23 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
                     trace::record_since("queue_wait", "server", start);
                 }
                 group.push(p.request);
+            }
+            if !expired.is_empty() {
+                shared.metrics.observe_deadline_miss(expired.len());
+                let mut q = shared.queue.lock().expect("queue lock");
+                for t in expired {
+                    route_reply(
+                        &mut q,
+                        SampleResponse::typed_err(
+                            t,
+                            "deadline",
+                            "deadline exceeded before admission",
+                        ),
+                    );
+                }
+            }
+            if group.is_empty() {
+                continue;
             }
             match admit_group(&shared, group) {
                 Ok(run) => {

@@ -42,7 +42,8 @@
     clippy::uninlined_format_args
 )]
 // Rustdoc gate: every public item in the documented core — `linalg`,
-// `solvers` (the stepper/snapshot layer), `coordinator`, `exec`, `obs` —
+// `solvers` (the stepper/snapshot layer), `coordinator`, `exec`, `obs`,
+// `loadgen` —
 // carries a doc comment; CI enforces it via `RUSTDOCFLAGS="-D warnings" cargo doc
 // --no-deps`. Modules still outside the documented core opt out
 // explicitly below so the warning stays meaningful where it is on.
@@ -63,6 +64,7 @@ pub mod jsonlite;
 #[allow(missing_docs)]
 pub mod lagrange;
 pub mod linalg;
+pub mod loadgen;
 #[allow(missing_docs)]
 pub mod metrics;
 #[allow(missing_docs)]

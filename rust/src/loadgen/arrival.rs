@@ -1,0 +1,293 @@
+//! Arrival processes for the load generator.
+//!
+//! Open-loop processes (Poisson, bursty on/off, diurnal replay) precompute
+//! a deterministic schedule of arrival offsets from a seed — offered load
+//! is independent of how the server responds, which is what makes latency
+//! under overload measurable. The closed-loop process has no schedule: a
+//! fixed pool of clients issues the next request as soon as the previous
+//! reply lands, so offered load tracks service capacity.
+
+use crate::rng::Xoshiro256pp;
+use crate::util::error::{Error, Result};
+
+/// An arrival process driving one loadgen run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Open loop: Poisson arrivals at a constant rate (requests/second).
+    Poisson {
+        /// Mean arrival rate, requests per second.
+        rate_rps: f64,
+    },
+    /// Open loop: alternating on/off windows — `burst_rps` during an
+    /// on-window of `on_s` seconds, `base_rps` during an off-window of
+    /// `off_s` seconds, starting with an on-window.
+    Bursty {
+        /// Arrival rate inside off-windows, requests per second.
+        base_rps: f64,
+        /// Arrival rate inside on-windows, requests per second.
+        burst_rps: f64,
+        /// On-window length, seconds.
+        on_s: f64,
+        /// Off-window length, seconds.
+        off_s: f64,
+    },
+    /// Open loop: diurnal replay of a rate trace — piecewise-constant
+    /// Poisson rates, one per `bin_s`-second bin, cycled over the run.
+    Replay {
+        /// Per-bin arrival rates, requests per second.
+        rates_rps: Vec<f64>,
+        /// Bin length, seconds.
+        bin_s: f64,
+    },
+    /// Closed loop: `concurrency` clients, each issuing its next request
+    /// the moment the previous reply (or error) lands.
+    Closed {
+        /// Number of concurrent clients.
+        concurrency: usize,
+    },
+}
+
+impl Arrival {
+    /// Parse a CLI arrival spec:
+    /// `poisson:<rps>` | `closed:<concurrency>` |
+    /// `bursty:<base_rps>,<burst_rps>,<on_s>,<off_s>` |
+    /// `replay:<r1>,<r2>,...[@<bin_s>]` (bin length defaults to 1 s).
+    pub fn parse(spec: &str) -> Result<Arrival> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| Error::config(format!("arrival '{spec}': expected <kind>:<params>")))?;
+        let f = |s: &str| -> Result<f64> {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| Error::config(format!("arrival '{spec}': bad number '{s}'")))
+        };
+        match kind {
+            "poisson" => {
+                let rate_rps = f(rest)?;
+                if rate_rps <= 0.0 {
+                    return Err(Error::config(format!("arrival '{spec}': rate must be > 0")));
+                }
+                Ok(Arrival::Poisson { rate_rps })
+            }
+            "closed" => {
+                let concurrency = rest.trim().parse::<usize>().map_err(|_| {
+                    Error::config(format!("arrival '{spec}': bad concurrency '{rest}'"))
+                })?;
+                if concurrency == 0 {
+                    return Err(Error::config(format!(
+                        "arrival '{spec}': concurrency must be > 0"
+                    )));
+                }
+                Ok(Arrival::Closed { concurrency })
+            }
+            "bursty" => {
+                let parts: Vec<&str> = rest.split(',').collect();
+                if parts.len() != 4 {
+                    return Err(Error::config(format!(
+                        "arrival '{spec}': bursty needs base_rps,burst_rps,on_s,off_s"
+                    )));
+                }
+                let (base_rps, burst_rps) = (f(parts[0])?, f(parts[1])?);
+                let (on_s, off_s) = (f(parts[2])?, f(parts[3])?);
+                if burst_rps <= 0.0 || base_rps < 0.0 || on_s <= 0.0 || off_s < 0.0 {
+                    return Err(Error::config(format!("arrival '{spec}': bad bursty window")));
+                }
+                Ok(Arrival::Bursty { base_rps, burst_rps, on_s, off_s })
+            }
+            "replay" => {
+                let (rates, bin_s) = match rest.split_once('@') {
+                    Some((r, b)) => (r, f(b)?),
+                    None => (rest, 1.0),
+                };
+                if bin_s <= 0.0 {
+                    return Err(Error::config(format!("arrival '{spec}': bin must be > 0")));
+                }
+                let rates_rps = rates.split(',').map(f).collect::<Result<Vec<f64>>>()?;
+                if rates_rps.is_empty() || rates_rps.iter().any(|r| *r < 0.0) {
+                    return Err(Error::config(format!("arrival '{spec}': bad rate trace")));
+                }
+                Ok(Arrival::Replay { rates_rps, bin_s })
+            }
+            other => Err(Error::config(format!(
+                "arrival '{spec}': unknown kind '{other}' (poisson|bursty|replay|closed)"
+            ))),
+        }
+    }
+
+    /// Short mode name for reports.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            Arrival::Poisson { .. } => "poisson",
+            Arrival::Bursty { .. } => "bursty",
+            Arrival::Replay { .. } => "replay",
+            Arrival::Closed { .. } => "closed",
+        }
+    }
+
+    /// Deterministic open-loop schedule: arrival offsets (seconds from run
+    /// start, strictly increasing) over `duration_s`, generated from
+    /// `seed`. `None` for the closed-loop process (it has no schedule).
+    pub fn schedule(&self, duration_s: f64, seed: u64) -> Option<Vec<f64>> {
+        let mut rng = Xoshiro256pp::new(seed ^ 0x10adc0de);
+        match self {
+            Arrival::Closed { .. } => None,
+            Arrival::Poisson { rate_rps } => {
+                Some(piecewise(&mut rng, duration_s, |_| (duration_s, *rate_rps)))
+            }
+            Arrival::Bursty { base_rps, burst_rps, on_s, off_s } => {
+                let (on, off) = (*on_s, (*off_s).max(1e-9));
+                let (hi, lo) = (*burst_rps, *base_rps);
+                Some(piecewise(&mut rng, duration_s, move |i| {
+                    if i % 2 == 0 {
+                        (on, hi)
+                    } else {
+                        (off, lo)
+                    }
+                }))
+            }
+            Arrival::Replay { rates_rps, bin_s } => {
+                let rates = rates_rps.clone();
+                let bin = *bin_s;
+                Some(piecewise(&mut rng, duration_s, move |i| {
+                    (bin, rates[i % rates.len()])
+                }))
+            }
+        }
+    }
+
+    /// Planned offered load in requests/second over `duration_s`: the
+    /// time-weighted mean rate for open-loop processes, `None` for closed
+    /// loop (offered load is whatever the server sustains).
+    pub fn offered_rps(&self, duration_s: f64) -> Option<f64> {
+        match self {
+            Arrival::Closed { .. } => None,
+            Arrival::Poisson { rate_rps } => Some(*rate_rps),
+            Arrival::Bursty { base_rps, burst_rps, on_s, off_s } => {
+                let period = on_s + off_s;
+                if period <= 0.0 {
+                    return Some(*burst_rps);
+                }
+                Some((burst_rps * on_s + base_rps * off_s) / period)
+            }
+            Arrival::Replay { rates_rps, bin_s } => {
+                let mut mass = 0.0;
+                let mut t = 0.0;
+                let mut i = 0usize;
+                while t < duration_s {
+                    let len = bin_s.min(duration_s - t);
+                    mass += rates_rps[i % rates_rps.len()] * len;
+                    t += bin_s;
+                    i += 1;
+                }
+                Some(mass / duration_s.max(1e-9))
+            }
+        }
+    }
+}
+
+/// Generate Poisson arrivals over piecewise-constant rate segments:
+/// `segment(i)` yields the i-th segment's `(length_s, rate_rps)`; the walk
+/// stops at `duration_s`. Exponential inter-arrival gaps within a segment,
+/// zero-rate segments produce no arrivals.
+fn piecewise(
+    rng: &mut Xoshiro256pp,
+    duration_s: f64,
+    segment: impl Fn(usize) -> (f64, f64),
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut seg_start = 0.0f64;
+    let mut i = 0usize;
+    while seg_start < duration_s {
+        let (len, rate) = segment(i);
+        let len = len.max(1e-9);
+        let seg_end = (seg_start + len).min(duration_s);
+        if rate > 0.0 {
+            let mut t = seg_start + rng.exponential(rate);
+            while t < seg_end {
+                out.push(t);
+                t += rng.exponential(rate);
+            }
+        }
+        seg_start += len;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Arrival::parse("poisson:80").unwrap(), Arrival::Poisson { rate_rps: 80.0 });
+        assert_eq!(Arrival::parse("closed:8").unwrap(), Arrival::Closed { concurrency: 8 });
+        assert_eq!(
+            Arrival::parse("bursty:10,200,0.5,1.5").unwrap(),
+            Arrival::Bursty { base_rps: 10.0, burst_rps: 200.0, on_s: 0.5, off_s: 1.5 }
+        );
+        assert_eq!(
+            Arrival::parse("replay:1,5,20@0.5").unwrap(),
+            Arrival::Replay { rates_rps: vec![1.0, 5.0, 20.0], bin_s: 0.5 }
+        );
+        assert_eq!(
+            Arrival::parse("replay:2,4").unwrap(),
+            Arrival::Replay { rates_rps: vec![2.0, 4.0], bin_s: 1.0 }
+        );
+        for bad in [
+            "poisson", "poisson:0", "poisson:x", "closed:0", "bursty:1,2,3", "replay:@1",
+            "replay:-1,2", "warp:9",
+        ] {
+            assert!(Arrival::parse(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_ordered() {
+        for spec in ["poisson:200", "bursty:20,400,0.25,0.25", "replay:50,300@0.5"] {
+            let a = Arrival::parse(spec).unwrap();
+            let s1 = a.schedule(2.0, 7).unwrap();
+            let s2 = a.schedule(2.0, 7).unwrap();
+            assert_eq!(s1, s2, "{spec}: same seed must give the same schedule");
+            let s3 = a.schedule(2.0, 8).unwrap();
+            assert_ne!(s1, s3, "{spec}: different seed must differ");
+            assert!(s1.windows(2).all(|w| w[0] <= w[1]), "{spec}: offsets sorted");
+            assert!(s1.iter().all(|t| (0.0..2.0).contains(t)), "{spec}: within horizon");
+        }
+        assert!(Arrival::parse("closed:4").unwrap().schedule(2.0, 7).is_none());
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_met() {
+        let a = Arrival::Poisson { rate_rps: 500.0 };
+        let n = a.schedule(4.0, 42).unwrap().len() as f64;
+        // Poisson(2000): ±5σ ≈ ±224.
+        assert!((n - 2000.0).abs() < 250.0, "got {n} arrivals for mean 2000");
+        assert_eq!(a.offered_rps(4.0), Some(500.0));
+    }
+
+    #[test]
+    fn bursty_on_windows_carry_the_mass() {
+        let a = Arrival::Bursty { base_rps: 5.0, burst_rps: 500.0, on_s: 0.5, off_s: 0.5 };
+        let sched = a.schedule(2.0, 9).unwrap();
+        // On-windows are [0,0.5) and [1.0,1.5).
+        let on = sched
+            .iter()
+            .filter(|t| (t.rem_euclid(1.0)) < 0.5)
+            .count();
+        let off = sched.len() - on;
+        assert!(on > 10 * off.max(1), "bursts must dominate: on={on} off={off}");
+        let offered = a.offered_rps(2.0).unwrap();
+        assert!((offered - 252.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replay_follows_the_trace() {
+        let a = Arrival::Replay { rates_rps: vec![0.0, 400.0], bin_s: 0.5 };
+        let sched = a.schedule(2.0, 3).unwrap();
+        assert!(!sched.is_empty());
+        // Zero-rate bins ([0,0.5) and [1.0,1.5)) produce no arrivals.
+        assert!(sched.iter().all(|t| t.rem_euclid(1.0) >= 0.5));
+        assert_eq!(a.offered_rps(2.0), Some(200.0));
+    }
+}

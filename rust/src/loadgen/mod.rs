@@ -1,0 +1,341 @@
+//! Load generator for the serving path: drives a `sadiff serve` endpoint
+//! with open-loop (Poisson, bursty, diurnal replay) or closed-loop
+//! (fixed-concurrency) traffic over the newline-delimited line protocol,
+//! classifies every reply against the typed error taxonomy
+//! (`shed`/`deadline`/`timeout`), and reports latency percentiles,
+//! goodput vs. offered load and per-step lane utilization.
+//!
+//! Open loop measures *latency under offered load* — arrivals do not slow
+//! down when the server does, so queueing and shedding become visible.
+//! Closed loop measures *capacity* — each of `concurrency` clients keeps
+//! exactly one request in flight.
+
+pub mod arrival;
+pub mod report;
+
+pub use arrival::Arrival;
+pub use report::{bench_json, write_bench, LaneUtil, RunReport};
+
+use crate::config::SamplerConfig;
+use crate::coordinator::server::Client;
+use crate::coordinator::{SampleRequest, SampleResponse};
+use crate::util::error::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// How one loadgen request ended, classified from the wire reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Successful sample response.
+    Ok,
+    /// Typed `shed` reply: admission backpressure, retry later.
+    Shed,
+    /// Typed `deadline` reply: latency budget expired before admission.
+    DeadlineMiss,
+    /// Typed `timeout` reply from the server, or a transport failure.
+    Timeout,
+    /// Any other error reply.
+    OtherError,
+}
+
+/// Classify a wire reply against the typed error taxonomy.
+pub fn classify(resp: &SampleResponse) -> Outcome {
+    if resp.ok {
+        return Outcome::Ok;
+    }
+    match resp.kind.as_deref() {
+        Some("shed") => Outcome::Shed,
+        Some("deadline") => Outcome::DeadlineMiss,
+        Some("timeout") => Outcome::Timeout,
+        _ => Outcome::OtherError,
+    }
+}
+
+/// One loadgen run's knobs.
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Arrival process driving the run.
+    pub arrival: Arrival,
+    /// Run length in seconds (open loop: schedule horizon; closed loop:
+    /// wall-clock stop condition, ignored when ≤ 0 and `max_requests` set).
+    pub duration_s: f64,
+    /// Hard cap on requests issued (0 = no cap; closed loop requires a cap
+    /// or a positive duration).
+    pub max_requests: usize,
+    /// Workload name for every request.
+    pub workload: String,
+    /// Model name for every request.
+    pub model: String,
+    /// Solver NFE per request.
+    pub nfe: usize,
+    /// Lanes (samples) per request.
+    pub n: usize,
+    /// Optional per-request latency budget, milliseconds.
+    pub deadline_ms: Option<u64>,
+    /// When > 1, request `i` gets priority `i % priority_span` so the run
+    /// exercises priority-aware admission; 1 leaves every request at the
+    /// default priority 0.
+    pub priority_span: i64,
+    /// Base seed: request `i` samples with `seed + i`, and the same seed
+    /// drives the arrival schedule.
+    pub seed: u64,
+}
+
+impl LoadgenOptions {
+    /// Sensible defaults around an arrival process: 2 s horizon, GMM
+    /// workload, NFE 8, 4 lanes, no deadline, flat priority, seed 0.
+    pub fn new(arrival: Arrival) -> LoadgenOptions {
+        LoadgenOptions {
+            arrival,
+            duration_s: 2.0,
+            max_requests: 0,
+            workload: "latent_analog".into(),
+            model: "gmm".into(),
+            nfe: 8,
+            n: 4,
+            deadline_ms: None,
+            priority_span: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// Build request `i` of a run. Lane-keyed Philox noise makes the returned
+/// samples bit-identical for a given `(seed, n, cfg)` regardless of how
+/// the scheduler batches or reorders requests, so loadgen runs can double
+/// as reproducibility checks.
+pub fn make_request(opts: &LoadgenOptions, i: u64) -> SampleRequest {
+    SampleRequest {
+        id: i + 1,
+        workload: opts.workload.clone(),
+        model: opts.model.clone(),
+        cfg: SamplerConfig { nfe: opts.nfe, ..SamplerConfig::sa_default() },
+        n: opts.n,
+        seed: opts.seed.wrapping_add(i),
+        return_samples: false,
+        want_metrics: false,
+        preset: None,
+        deadline_ms: opts.deadline_ms,
+        priority: if opts.priority_span > 1 { (i as i64) % opts.priority_span } else { 0 },
+    }
+}
+
+/// Pull `(steps, step_lanes)` counters from a `stats` snapshot; zeros on
+/// any shape mismatch so a stats hiccup never fails a run.
+fn lane_counters(client: &mut Client) -> (u64, u64) {
+    match client.stats() {
+        Ok(v) => (v.opt_f64("steps", 0.0) as u64, v.opt_f64("step_lanes", 0.0) as u64),
+        Err(_) => (0, 0),
+    }
+}
+
+/// Drive `addr` with `opts` and return the aggregated report. Blocks
+/// until every issued request has a reply (or transport error).
+pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<RunReport> {
+    let before = match Client::connect(addr) {
+        Ok(mut c) => lane_counters(&mut c),
+        Err(e) => return Err(Error::runtime(format!("loadgen: cannot reach {addr}: {e}"))),
+    };
+
+    let mut report = RunReport::new(opts.arrival.mode(), opts.arrival.offered_rps(opts.duration_s));
+    let start = Instant::now();
+    let outcomes = match opts.arrival.schedule(opts.duration_s, opts.seed) {
+        Some(offsets) => run_open(addr, opts, start, offsets),
+        None => run_closed(addr, opts, start)?,
+    };
+    report.duration_s = start.elapsed().as_secs_f64().max(1e-9);
+
+    for (outcome, latency_ms) in outcomes {
+        report.sent += 1;
+        match outcome {
+            Outcome::Ok => {
+                report.ok += 1;
+                report.latency.observe_ms(latency_ms);
+            }
+            Outcome::Shed => report.shed += 1,
+            Outcome::DeadlineMiss => report.deadline_miss += 1,
+            Outcome::Timeout => report.timeout += 1,
+            Outcome::OtherError => report.other_error += 1,
+        }
+    }
+
+    if let Ok(mut c) = Client::connect(addr) {
+        let after = lane_counters(&mut c);
+        report.lane_util = LaneUtil {
+            steps: after.0.saturating_sub(before.0),
+            step_lanes: after.1.saturating_sub(before.1),
+        };
+    }
+    Ok(report)
+}
+
+/// Issue one request over a fresh connection and classify the reply; a
+/// transport failure counts as a timeout (the server may still be working
+/// the request, exactly like a real client that gave up).
+fn fire_once(addr: &str, req: &SampleRequest) -> (Outcome, f64) {
+    let t0 = Instant::now();
+    let outcome = match Client::connect(addr).and_then(|mut c| c.request(req)) {
+        Ok(resp) => classify(&resp),
+        Err(_) => Outcome::Timeout,
+    };
+    (outcome, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Open loop: one sender thread per scheduled arrival, each sleeping
+/// until its offset so offered load is independent of server behavior.
+fn run_open(
+    addr: &str,
+    opts: &LoadgenOptions,
+    start: Instant,
+    offsets: Vec<f64>,
+) -> Vec<(Outcome, f64)> {
+    let cap = if opts.max_requests > 0 { opts.max_requests } else { usize::MAX };
+    let (tx, rx) = mpsc::channel();
+    let mut handles = Vec::new();
+    for (i, off) in offsets.into_iter().take(cap).enumerate() {
+        let tx = tx.clone();
+        let addr = addr.to_string();
+        let req = make_request(opts, i as u64);
+        handles.push(std::thread::spawn(move || {
+            let target = Duration::from_secs_f64(off.max(0.0));
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            let _ = tx.send(fire_once(&addr, &req));
+        }));
+    }
+    drop(tx);
+    let out: Vec<(Outcome, f64)> = rx.into_iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    out
+}
+
+/// Closed loop: `concurrency` persistent clients pulling request indices
+/// off a shared counter, stopping on the request cap or the wall clock.
+fn run_closed(addr: &str, opts: &LoadgenOptions, start: Instant) -> Result<Vec<(Outcome, f64)>> {
+    let Arrival::Closed { concurrency } = opts.arrival else {
+        return Err(Error::runtime("loadgen: run_closed needs a closed arrival"));
+    };
+    let total = if opts.max_requests > 0 {
+        opts.max_requests
+    } else if opts.duration_s > 0.0 {
+        usize::MAX
+    } else {
+        return Err(Error::config(
+            "loadgen: closed loop needs --requests or a positive --duration",
+        ));
+    };
+    let stop_at = (opts.duration_s > 0.0).then(|| start + Duration::from_secs_f64(opts.duration_s));
+    let counter = Arc::new(AtomicUsize::new(0));
+    let shared = Arc::new(opts.clone());
+    let (tx, rx) = mpsc::channel();
+    let mut handles = Vec::new();
+    for _ in 0..concurrency {
+        let tx = tx.clone();
+        let addr = addr.to_string();
+        let counter = counter.clone();
+        let shared = shared.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = match Client::connect(&addr) {
+                Ok(c) => c,
+                Err(_) => return,
+            };
+            loop {
+                if stop_at.is_some_and(|d| Instant::now() >= d) {
+                    break;
+                }
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let req = make_request(&shared, i as u64);
+                let t0 = Instant::now();
+                let result = client.request(&req);
+                let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let outcome = match result {
+                    Ok(resp) => classify(&resp),
+                    Err(_) => {
+                        // The connection is poisoned after a transport
+                        // error; reconnect or retire this worker.
+                        match Client::connect(&addr) {
+                            Ok(c) => client = c,
+                            Err(_) => {
+                                let _ = tx.send((Outcome::Timeout, latency_ms));
+                                break;
+                            }
+                        }
+                        Outcome::Timeout
+                    }
+                };
+                let _ = tx.send((outcome, latency_ms));
+            }
+        }));
+    }
+    drop(tx);
+    let out: Vec<(Outcome, f64)> = rx.into_iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_follows_the_typed_taxonomy() {
+        let mut ok = SampleResponse::err(1, "x");
+        ok.ok = true;
+        ok.error = None;
+        assert_eq!(classify(&ok), Outcome::Ok);
+        assert_eq!(classify(&SampleResponse::shed(1, 25)), Outcome::Shed);
+        assert_eq!(
+            classify(&SampleResponse::typed_err(1, "deadline", "late")),
+            Outcome::DeadlineMiss
+        );
+        assert_eq!(
+            classify(&SampleResponse::typed_err(1, "timeout", "gone")),
+            Outcome::Timeout
+        );
+        assert_eq!(classify(&SampleResponse::err(1, "boom")), Outcome::OtherError);
+        assert_eq!(
+            classify(&SampleResponse::typed_err(1, "cancelled", "cancelled")),
+            Outcome::OtherError
+        );
+    }
+
+    #[test]
+    fn make_request_spreads_priorities_and_seeds() {
+        let mut opts = LoadgenOptions::new(Arrival::Closed { concurrency: 2 });
+        opts.priority_span = 3;
+        opts.seed = 100;
+        opts.deadline_ms = Some(250);
+        let reqs: Vec<SampleRequest> = (0..6).map(|i| make_request(&opts, i)).collect();
+        assert_eq!(
+            reqs.iter().map(|r| r.priority).collect::<Vec<i64>>(),
+            vec![0, 1, 2, 0, 1, 2]
+        );
+        assert_eq!(reqs[4].seed, 104);
+        assert_eq!(reqs[4].deadline_ms, Some(250));
+        assert_eq!(reqs[0].id, 1);
+
+        opts.priority_span = 1;
+        assert!((0..6).all(|i| make_request(&opts, i).priority == 0));
+    }
+
+    #[test]
+    fn closed_loop_without_stop_condition_is_rejected() {
+        let mut opts = LoadgenOptions::new(Arrival::Closed { concurrency: 1 });
+        opts.duration_s = 0.0;
+        opts.max_requests = 0;
+        // Fails fast on option validation before touching the network —
+        // 127.0.0.1:1 is only reached when validation passes.
+        let err = run_closed("127.0.0.1:1", &opts, Instant::now()).unwrap_err();
+        assert!(format!("{err}").contains("closed loop"), "{err}");
+    }
+}

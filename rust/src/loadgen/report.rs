@@ -1,0 +1,206 @@
+//! Loadgen run reports and the `BENCH_loadgen.json` artifact.
+
+use crate::coordinator::metrics::Histogram;
+use crate::jsonlite::{to_string, Value};
+use crate::util::error::{Error, Result};
+
+/// Per-step lane utilization pulled from the server's `stats` snapshot
+/// after a run: total solver steps, total lane·steps, and their ratio
+/// (mean lanes per scheduler step — how wide the step-synchronous
+/// scheduler actually ran).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneUtil {
+    /// Solver steps executed during the run.
+    pub steps: u64,
+    /// Lane·steps executed (steps weighted by group width).
+    pub step_lanes: u64,
+}
+
+impl LaneUtil {
+    /// Mean lanes per scheduler step (0 when no steps ran).
+    pub fn mean_lanes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.step_lanes as f64 / self.steps as f64
+        }
+    }
+
+    /// JSON form for the bench artifact.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("steps", Value::Num(self.steps as f64)),
+            ("step_lanes", Value::Num(self.step_lanes as f64)),
+            ("mean_lanes_per_step", Value::Num(self.mean_lanes_per_step())),
+        ])
+    }
+}
+
+/// Outcome-by-outcome tally plus latency for one loadgen point (one
+/// arrival process at one offered load).
+#[derive(Debug)]
+pub struct RunReport {
+    /// Arrival mode (`poisson`/`bursty`/`replay`/`closed`).
+    pub mode: String,
+    /// Planned offered load, requests/second (`None` for closed loop).
+    pub offered_rps: Option<f64>,
+    /// Wall-clock run length, seconds.
+    pub duration_s: f64,
+    /// Requests sent.
+    pub sent: u64,
+    /// Successful sample responses.
+    pub ok: u64,
+    /// Typed `shed` replies (admission backpressure).
+    pub shed: u64,
+    /// Typed `deadline` replies (latency budget expired pre-admission).
+    pub deadline_miss: u64,
+    /// Typed `timeout` replies (server reply-wait expired) plus client-side
+    /// transport failures.
+    pub timeout: u64,
+    /// Any other error reply.
+    pub other_error: u64,
+    /// End-to-end latency of **successful** requests.
+    pub latency: Histogram,
+    /// Scheduler width observed server-side over the run.
+    pub lane_util: LaneUtil,
+}
+
+impl RunReport {
+    /// Fresh all-zero report for one point.
+    pub fn new(mode: &str, offered_rps: Option<f64>) -> RunReport {
+        RunReport {
+            mode: mode.to_string(),
+            offered_rps,
+            duration_s: 0.0,
+            sent: 0,
+            ok: 0,
+            shed: 0,
+            deadline_miss: 0,
+            timeout: 0,
+            other_error: 0,
+            latency: Histogram::new(),
+            lane_util: LaneUtil::default(),
+        }
+    }
+
+    /// Completed requests per second, all outcomes included.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            0.0
+        } else {
+            self.sent as f64 / self.duration_s
+        }
+    }
+
+    /// Successful responses per second — throughput that met the contract.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            0.0
+        } else {
+            self.ok as f64 / self.duration_s
+        }
+    }
+
+    /// One point of the bench artifact (`loadgen.points[i]`).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("mode", Value::Str(self.mode.clone())),
+            ("offered_rps", self.offered_rps.map_or(Value::Null, Value::Num)),
+            ("achieved_rps", Value::Num(self.achieved_rps())),
+            ("goodput_rps", Value::Num(self.goodput_rps())),
+            ("duration_s", Value::Num(self.duration_s)),
+            ("sent", Value::Num(self.sent as f64)),
+            ("ok", Value::Num(self.ok as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("deadline_miss", Value::Num(self.deadline_miss as f64)),
+            ("timeout", Value::Num(self.timeout as f64)),
+            ("other_error", Value::Num(self.other_error as f64)),
+            ("latency", self.latency.snapshot()),
+            ("lane_util", self.lane_util.to_json()),
+        ])
+    }
+
+    /// One human-readable summary line for the console.
+    pub fn summary_line(&self) -> String {
+        let offered = self.offered_rps.map_or("closed".to_string(), |r| format!("{r:.1} rps"));
+        format!(
+            "{:<8} offered {:<10} achieved {:>7.1} rps  goodput {:>7.1} rps  \
+             p50 {:>8.2} ms  p99 {:>8.2} ms  ok {}  shed {}  deadline {}  timeout {}  err {}",
+            self.mode,
+            offered,
+            self.achieved_rps(),
+            self.goodput_rps(),
+            self.latency.percentile_ms(0.50),
+            self.latency.percentile_ms(0.99),
+            self.ok,
+            self.shed,
+            self.deadline_miss,
+            self.timeout,
+            self.other_error,
+        )
+    }
+}
+
+/// Assemble the full `BENCH_loadgen.json` document from a sweep of points.
+pub fn bench_json(points: &[RunReport]) -> Value {
+    Value::obj(vec![
+        ("schema_version", Value::Num(1.0)),
+        (
+            "loadgen",
+            Value::obj(vec![(
+                "points",
+                Value::Array(points.iter().map(RunReport::to_json).collect()),
+            )]),
+        ),
+    ])
+}
+
+/// Write the bench artifact to `path`.
+pub fn write_bench(path: &str, points: &[RunReport]) -> Result<()> {
+    std::fs::write(path, format!("{}\n", to_string(&bench_json(points))))
+        .map_err(|e| Error::runtime(format!("cannot write {path}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_rates_and_json_shape() {
+        let mut r = RunReport::new("poisson", Some(40.0));
+        r.duration_s = 2.0;
+        r.sent = 80;
+        r.ok = 60;
+        r.shed = 15;
+        r.deadline_miss = 3;
+        r.timeout = 1;
+        r.other_error = 1;
+        r.latency.observe_ms(4.0);
+        r.lane_util = LaneUtil { steps: 10, step_lanes: 40 };
+        assert!((r.achieved_rps() - 40.0).abs() < 1e-9);
+        assert!((r.goodput_rps() - 30.0).abs() < 1e-9);
+        assert!((r.lane_util.mean_lanes_per_step() - 4.0).abs() < 1e-9);
+
+        let doc = bench_json(&[r]);
+        assert_eq!(doc.req_f64("schema_version").unwrap(), 1.0);
+        let points = doc.get("loadgen").unwrap().get("points").unwrap();
+        let Value::Array(points) = points else { panic!("points must be an array") };
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!(p.req_f64("shed").unwrap(), 15.0);
+        assert_eq!(p.req_f64("deadline_miss").unwrap(), 3.0);
+        let lat = p.get("latency").unwrap();
+        assert_eq!(lat.req_f64("count").unwrap(), 1.0);
+        assert!(lat.req_f64("p99_ms").unwrap() > 0.0);
+        let text = to_string(&doc);
+        assert!(text.contains("\"loadgen\""), "{text}");
+    }
+
+    #[test]
+    fn closed_loop_offered_is_null() {
+        let r = RunReport::new("closed", None);
+        let j = r.to_json();
+        assert!(matches!(j.get("offered_rps"), Some(Value::Null)));
+        assert!(r.summary_line().contains("closed"));
+    }
+}

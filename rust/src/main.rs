@@ -9,6 +9,10 @@
 //!                queries checkpoint-recovered results; `--stats` prints a
 //!                human-readable metrics table; `--trace start|stop|dump`
 //!                drives the server's span recorder)
+//!   loadgen      drive a server with open-loop (Poisson/bursty/replay) or
+//!                closed-loop traffic and report latency percentiles,
+//!                goodput vs offered load and shed/deadline-miss counts
+//!                (spawns an in-process server unless `--addr` is given)
 //!   checkpoint   inspect a serving checkpoint file
 //!   trace        inspect a Chrome Trace Event dump written by the server
 //!   tune         search solver configs per (workload, NFE budget) and
@@ -99,6 +103,51 @@ fn flag_spec() -> Vec<FlagSpec> {
             help: "print a human-readable server metrics table (client)",
             takes_value: false,
         },
+        FlagSpec {
+            name: "queue-lane-cap",
+            help: "shed when queued lanes exceed this, 0 = queue-cap x max-batch (serve/loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "reply-timeout",
+            help: "ms a connection waits for its reply before the ticket is cancelled (serve/loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "max-step-lanes",
+            help: "per-step lane admission budget per worker, 0 = unlimited (serve/loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "arrival",
+            help: "poisson:<rps> | bursty:<base,burst,on_s,off_s> | replay:<r,..[@bin_s]> | closed:<c> (loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "rates",
+            help: "extra poisson sweep rates, e.g. 20,60,120 (loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "duration",
+            help: "run length per point, seconds (loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "requests",
+            help: "cap on requests per point, 0 = uncapped (loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "deadline",
+            help: "per-request deadline in ms, 0 = none (loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "priorities",
+            help: "spread request priorities over 0..span-1, 1 = flat (loadgen)",
+            takes_value: true,
+        },
     ]
 }
 
@@ -121,7 +170,7 @@ fn main() {
             render_help("sadiff", "SA-Solver diffusion sampling framework", &spec)
         );
         println!(
-            "\nSubcommands: serve | sample | client | checkpoint <path> | trace <path> | tune | exp <id|list> | artifacts | info"
+            "\nSubcommands: serve | sample | client | loadgen | checkpoint <path> | trace <path> | tune | exp <id|list> | artifacts | info"
         );
         return;
     }
@@ -130,6 +179,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
+        "loadgen" => cmd_loadgen(&args),
         "checkpoint" => cmd_checkpoint(&args),
         "trace" => cmd_trace(&args),
         "tune" => cmd_tune(&args),
@@ -175,6 +225,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?.max(1);
+    cfg.queue_lane_cap = args.get_usize("queue-lane-cap", cfg.queue_lane_cap)?;
+    cfg.reply_timeout_ms = args.get_u64("reply-timeout", cfg.reply_timeout_ms)?.max(1);
+    cfg.max_step_lanes = args.get_usize("max-step-lanes", cfg.max_step_lanes)?;
     if let Some(path) = args.get("presets") {
         cfg.presets_path = Some(path.to_string());
     }
@@ -261,11 +314,82 @@ fn cmd_client(args: &Args) -> Result<()> {
         return_samples: false,
         want_metrics: true,
         preset: args.get("preset").map(String::from),
+        deadline_ms: None,
+        priority: 0,
     };
     let resp = client.request(&req)?;
     println!("{}", resp.to_line());
     let stats = client.stats()?;
     println!("stats: {}", jsonlite::to_string(&stats));
+    Ok(())
+}
+
+/// `sadiff loadgen`: spin an in-process server (or target `--addr`), run
+/// one point per arrival spec, print a summary line per point and write
+/// the `BENCH_loadgen.json` artifact.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use sadiff::loadgen::{self, Arrival, LoadgenOptions};
+    let quick = args.has("quick");
+
+    // External server via --addr, otherwise in-process on an ephemeral
+    // port so the run is hermetic (SLO knobs apply to the spawned server).
+    let (handle, addr) = match args.get("addr") {
+        Some(a) => (None, a.to_string()),
+        None => {
+            let mut cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() };
+            cfg.workers = args.get_usize("workers", cfg.workers)?;
+            cfg.threads = args.get_usize("threads", cfg.threads)?;
+            cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+            cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?.max(1);
+            cfg.queue_lane_cap = args.get_usize("queue-lane-cap", cfg.queue_lane_cap)?;
+            cfg.reply_timeout_ms = args.get_u64("reply-timeout", cfg.reply_timeout_ms)?.max(1);
+            cfg.max_step_lanes = args.get_usize("max-step-lanes", cfg.max_step_lanes)?;
+            let handle = Server::bind(cfg)?.spawn()?;
+            let addr = handle.addr.to_string();
+            (Some(handle), addr)
+        }
+    };
+
+    let mut base = LoadgenOptions::new(Arrival::Closed { concurrency: 4 });
+    base.workload = args.get_str("workload", "latent_analog").to_string();
+    base.model = args.get_str("model", "gmm").to_string();
+    base.nfe = args.get_usize("nfe", if quick { 8 } else { 16 })?;
+    base.n = args.get_usize("n", 4)?;
+    base.seed = args.get_u64("seed", 0)?;
+    base.duration_s = args.get_f64("duration", if quick { 1.5 } else { 5.0 })?;
+    base.max_requests = args.get_usize("requests", if quick { 60 } else { 0 })?;
+    let deadline = args.get_u64("deadline", 0)?;
+    base.deadline_ms = if deadline > 0 { Some(deadline) } else { None };
+    base.priority_span = args.get_u64("priorities", 1)?.max(1) as i64;
+
+    // Point list: the primary --arrival point, then a poisson sweep from
+    // --rates. --quick defaults to closed:4 plus one modest poisson point.
+    let mut points: Vec<LoadgenOptions> = Vec::new();
+    let mut first = base.clone();
+    first.arrival = Arrival::parse(args.get_str("arrival", "closed:4"))?;
+    points.push(first);
+    let default_rates: &[f64] = if quick && args.get("arrival").is_none() { &[40.0] } else { &[] };
+    for rate_rps in args.get_f64_list("rates", default_rates)? {
+        if rate_rps <= 0.0 {
+            return Err(Error::config(format!("--rates: rate {rate_rps} must be > 0")));
+        }
+        let mut p = base.clone();
+        p.arrival = Arrival::Poisson { rate_rps };
+        points.push(p);
+    }
+
+    let out_path = args.get_str("out", "BENCH_loadgen.json");
+    let mut reports = Vec::new();
+    for opts in &points {
+        let report = loadgen::run(&addr, opts)?;
+        println!("{}", report.summary_line());
+        reports.push(report);
+    }
+    loadgen::write_bench(out_path, &reports)?;
+    println!("wrote {out_path}");
+    if let Some(h) = handle {
+        h.shutdown();
+    }
     Ok(())
 }
 
@@ -312,6 +436,7 @@ fn print_stats_table(stats: &Value) {
         num("responses_err"),
         num("shed")
     );
+    println!("  timeout / deadline  {} / {}", num("timeouts"), num("deadline_miss"));
     println!("  cancelled           {}", num("cancelled"));
     println!("queued samples        {}", num("queued_samples"));
     println!("inflight groups/lanes {} / {}", num("inflight_groups"), num("inflight_lanes"));

@@ -28,6 +28,8 @@ fn req(id: u64, n: usize, seed: u64, nfe: usize) -> SampleRequest {
         return_samples: true,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     }
 }
 

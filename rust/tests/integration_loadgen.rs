@@ -1,0 +1,327 @@
+//! Loadgen end-to-end: closed- and open-loop traffic against a live
+//! server — typed deadline/shed classification, priority ordering within
+//! a compatibility group, the bench artifact shape, and bit-identity of
+//! samples under loadgen pressure.
+
+use sadiff::config::{SamplerConfig, ServerConfig};
+use sadiff::coordinator::server::{Client, Server};
+use sadiff::coordinator::SampleRequest;
+use sadiff::jsonlite::{self, Value};
+use sadiff::loadgen::{self, Arrival, LoadgenOptions};
+use std::time::{Duration, Instant};
+
+fn request(n: usize, seed: u64, nfe: usize) -> SampleRequest {
+    SampleRequest {
+        id: seed,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: SamplerConfig { nfe, ..SamplerConfig::sa_default() },
+        n,
+        seed,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+        deadline_ms: None,
+        priority: 0,
+    }
+}
+
+/// Poll-cancel `id` until the server reports it cancelled (queued or in
+/// flight); panics if it never shows up.
+fn cancel_until_hit(addr: &str, id: u64) {
+    let mut client = Client::connect(addr).unwrap();
+    for _ in 0..500 {
+        let v = client.cancel(id).unwrap();
+        if v.req_f64("cancelled_queued").unwrap() + v.req_f64("cancel_pending").unwrap() >= 1.0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("could not cancel request {id}");
+}
+
+#[test]
+fn closed_loop_reports_goodput_latency_and_lane_util() {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        batch_deadline_ms: 3,
+        workers: 2,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 4,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut opts = LoadgenOptions::new(Arrival::Closed { concurrency: 3 });
+    opts.max_requests = 18;
+    opts.duration_s = 30.0;
+    opts.nfe = 8;
+    opts.n = 2;
+    opts.seed = 1;
+    let report = loadgen::run(&addr, &opts).unwrap();
+
+    assert_eq!(report.sent, 18, "closed loop must honor the request cap");
+    assert_eq!(report.ok, 18, "an unloaded server must answer everything");
+    assert_eq!(report.latency.count(), 18);
+    assert!(report.achieved_rps() > 0.0);
+    assert!(report.goodput_rps() > 0.0);
+    assert!(report.lane_util.steps > 0, "lane utilization must come from server stats");
+    assert!(report.lane_util.mean_lanes_per_step() >= 1.0);
+
+    // The bench artifact round-trips with non-null percentiles.
+    let path = std::env::temp_dir().join(format!("sadiff_loadgen_{}.json", std::process::id()));
+    let path_str = path.to_str().unwrap().to_string();
+    loadgen::write_bench(&path_str, &[report]).unwrap();
+    let doc = jsonlite::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+    assert_eq!(doc.req_f64("schema_version").unwrap(), 1.0);
+    let points = doc.get("loadgen").unwrap().get("points").unwrap();
+    let Value::Array(points) = points else { panic!("points must be an array") };
+    let p = &points[0];
+    assert_eq!(p.req_str("mode").unwrap(), "closed");
+    assert!(matches!(p.get("offered_rps"), Some(Value::Null)), "closed loop has no offered rate");
+    assert_eq!(p.req_f64("shed").unwrap(), 0.0);
+    assert_eq!(p.req_f64("deadline_miss").unwrap(), 0.0);
+    let p99 = p.get("latency").unwrap().get("p99_ms").unwrap().as_f64();
+    assert!(p99.is_some_and(|v| v > 0.0), "p99 must be a finite number at smoke load");
+    std::fs::remove_file(&path).ok();
+    handle.shutdown();
+}
+
+#[test]
+fn saturated_server_answers_with_typed_deadline_misses() {
+    // One worker, one in-flight slot, held by a wide blocker: closed-loop
+    // requests with a 100 ms budget queue behind it far past their
+    // deadlines. When the blocker is cancelled, the scheduler must answer
+    // the expired ones with typed `deadline` replies instead of burning
+    // NFEs on them, and serve the rest normally.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        batch_deadline_ms: 1,
+        workers: 1,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 1,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let blocker_addr = addr.clone();
+    let blocker = std::thread::spawn(move || {
+        let mut client = Client::connect(&blocker_addr).unwrap();
+        client.request(&request(1024, 900, 10_000)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(150));
+    let cancel_addr = addr.clone();
+    let canceller = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(400));
+        cancel_until_hit(&cancel_addr, 900);
+    });
+
+    let mut opts = LoadgenOptions::new(Arrival::Closed { concurrency: 2 });
+    opts.max_requests = 8;
+    opts.duration_s = 20.0;
+    opts.nfe = 8;
+    opts.n = 2;
+    opts.deadline_ms = Some(100);
+    opts.seed = 3;
+    let report = loadgen::run(&addr, &opts).unwrap();
+
+    assert_eq!(report.sent, 8);
+    assert!(report.deadline_miss >= 1, "queued-past-deadline requests must be typed misses");
+    assert!(report.ok >= 1, "post-blocker requests must be served");
+    assert_eq!(
+        report.other_error + report.timeout + report.shed,
+        8 - report.ok - report.deadline_miss
+    );
+
+    let mut stats_client = Client::connect(&addr).unwrap();
+    let stats = stats_client.stats().unwrap();
+    assert!(stats.req_f64("deadline_miss").unwrap() >= 1.0);
+
+    canceller.join().unwrap();
+    assert!(!blocker.join().unwrap().ok, "the blocker must end cancelled");
+    handle.shutdown();
+}
+
+#[test]
+fn open_loop_overload_is_shed_not_hung() {
+    // queue_cap 2 with the only worker blocked: a Poisson burst must be
+    // answered promptly with typed `shed` replies (classified by the
+    // loadgen), and the two requests that did get queue slots become
+    // deadline misses once the blocker is cancelled — nothing hangs, every
+    // arrival gets a definite outcome.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        batch_deadline_ms: 1,
+        workers: 1,
+        queue_cap: 2,
+        queue_lane_cap: 1_000_000,
+        threads: 1,
+        max_inflight: 1,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let blocker_addr = addr.clone();
+    let blocker = std::thread::spawn(move || {
+        let mut client = Client::connect(&blocker_addr).unwrap();
+        client.request(&request(1024, 900, 10_000)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(150));
+    let cancel_addr = addr.clone();
+    let canceller = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(700));
+        cancel_until_hit(&cancel_addr, 900);
+    });
+
+    let mut opts = LoadgenOptions::new(Arrival::Poisson { rate_rps: 200.0 });
+    opts.duration_s = 0.4;
+    opts.nfe = 8;
+    opts.n = 2;
+    opts.deadline_ms = Some(300);
+    opts.seed = 9;
+    let report = loadgen::run(&addr, &opts).unwrap();
+
+    assert_eq!(report.offered_rps, Some(200.0));
+    assert!(report.sent >= 35, "Poisson(80) schedule came out far too short: {}", report.sent);
+    assert!(report.shed >= 5, "overload must shed: {}", report.shed);
+    assert_eq!(
+        report.sent,
+        report.ok + report.shed + report.deadline_miss + report.timeout + report.other_error,
+        "every arrival needs a definite outcome"
+    );
+
+    canceller.join().unwrap();
+    assert!(!blocker.join().unwrap().ok);
+    handle.shutdown();
+}
+
+#[test]
+fn high_priority_request_overtakes_earlier_low_priority_peers() {
+    // Three compatible requests queue behind a blocker in arrival order
+    // L1, L2, H(priority 5) with max_batch 2: the scheduler must seed the
+    // group with H (plus L1 as FIFO tie-break), leaving L2 for the next
+    // group — so H completes strictly before L2. Pre-fix FIFO extraction
+    // admitted [L1, L2] first and H last.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 2,
+        batch_deadline_ms: 200,
+        workers: 1,
+        queue_cap: 64,
+        threads: 1,
+        max_inflight: 1,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let blocker_addr = addr.clone();
+    let blocker = std::thread::spawn(move || {
+        let mut client = Client::connect(&blocker_addr).unwrap();
+        client.request(&request(1024, 900, 10_000)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(150));
+
+    let fire = |id: u64, priority: i64| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut req = request(2, id, 8);
+            req.priority = priority;
+            let mut client = Client::connect(&addr).unwrap();
+            let resp = client.request(&req).unwrap();
+            (resp, Instant::now())
+        })
+    };
+    let l1 = fire(1, 0);
+    std::thread::sleep(Duration::from_millis(40));
+    let l2 = fire(2, 0);
+    std::thread::sleep(Duration::from_millis(40));
+    let h = fire(3, 5);
+    std::thread::sleep(Duration::from_millis(100));
+    cancel_until_hit(&addr, 900);
+
+    let (l1_resp, _t_l1) = l1.join().unwrap();
+    let (l2_resp, t_l2) = l2.join().unwrap();
+    let (h_resp, t_h) = h.join().unwrap();
+    assert!(l1_resp.ok && l2_resp.ok && h_resp.ok);
+    assert!(
+        t_h < t_l2,
+        "priority inversion: high-priority request finished after the earlier low-priority one"
+    );
+    assert!(!blocker.join().unwrap().ok);
+    handle.shutdown();
+}
+
+#[test]
+fn samples_stay_bit_identical_under_loadgen_pressure() {
+    // Per-lane Philox noise keys make a request's samples independent of
+    // whatever the scheduler co-batches it with. Re-issue the same seeded
+    // request while a closed-loop loadgen floods the server with
+    // *compatible* traffic (same BatchKey, so they really do merge) and
+    // demand bitwise equality with the idle-server reference.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        batch_deadline_ms: 3,
+        workers: 2,
+        queue_cap: 64,
+        threads: 2,
+        max_inflight: 4,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let solo = client.request(&request(4, 4242, 12)).unwrap();
+    assert!(solo.ok);
+    assert!(solo.samples.is_some());
+
+    let gen_addr = addr.clone();
+    let generator = std::thread::spawn(move || {
+        let mut opts = LoadgenOptions::new(Arrival::Closed { concurrency: 4 });
+        opts.max_requests = 80;
+        opts.duration_s = 30.0;
+        opts.nfe = 12; // same cfg as the probe → same compatibility group
+        opts.n = 4;
+        opts.seed = 7000;
+        loadgen::run(&gen_addr, &opts).unwrap()
+    });
+
+    for round in 0..5 {
+        let probe = client.request(&request(4, 4242, 12)).unwrap();
+        assert!(probe.ok, "round {round}: {:?}", probe.error);
+        assert_eq!(
+            probe.samples, solo.samples,
+            "round {round}: loadgen pressure changed the probe's samples"
+        );
+    }
+
+    let report = generator.join().unwrap();
+    assert_eq!(report.sent, 80);
+    assert_eq!(report.ok, 80, "compatible loadgen traffic must all succeed");
+    handle.shutdown();
+}

@@ -23,6 +23,8 @@ fn request(id: u64, n: usize, nfe: usize) -> SampleRequest {
         return_samples: false,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     }
 }
 

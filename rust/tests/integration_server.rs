@@ -43,6 +43,8 @@ fn request(n: usize, seed: u64, nfe: usize) -> SampleRequest {
         return_samples: true,
         want_metrics: true,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     }
 }
 
@@ -224,6 +226,9 @@ fn cancel_frees_lanes_without_corrupting_cobatched_requests() {
         batch_deadline_ms: 150,
         workers: 1,
         queue_cap: 64,
+        // The 2-lane survivor queues behind 4000 lanes inside the batching
+        // window; keep lane-aware shedding out of this test's way.
+        queue_lane_cap: 8192,
         threads: 1,
         max_inflight: 2,
         presets_path: None,
@@ -455,6 +460,149 @@ fn load_shedding_under_queue_cap() {
     let mut client = Client::connect(&addr).unwrap();
     let stats = client.stats().unwrap();
     assert_eq!(stats.req_f64("shed").unwrap() as usize, shed);
+    handle.shutdown();
+}
+
+#[test]
+fn lane_aware_shedding_sheds_on_queued_lanes_not_just_request_count() {
+    // Regression (lane-blind shedding): queue_cap is generous (64
+    // requests) but the queued-lane cap is 100, so a second wide request
+    // must be shed by lane pressure even though the request-count check
+    // alone would admit it. Pre-fix, only `batcher.len() >= queue_cap`
+    // shed, so a handful of wide requests could swamp every step budget.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        batch_deadline_ms: 1,
+        workers: 1,
+        queue_cap: 64,
+        queue_lane_cap: 100,
+        threads: 1,
+        max_inflight: 1,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    // Blocker: wider than the lane cap, admitted anyway (an empty queue
+    // always admits), and holds the single in-flight slot for the test.
+    let blocker_addr = addr.clone();
+    let blocker = std::thread::spawn(move || {
+        let mut client = Client::connect(&blocker_addr).unwrap();
+        client.request(&request(1024, 900, 10_000)).unwrap()
+    });
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // 64 queued lanes: under the cap, accepted and queued (the worker's
+    // in-flight slot is taken).
+    let filler_addr = addr.clone();
+    let filler = std::thread::spawn(move || {
+        let mut client = Client::connect(&filler_addr).unwrap();
+        client.request(&request(64, 901, 10_000)).unwrap()
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    // 64 more lanes would make 128 > 100 queued lanes, with only ONE
+    // queued request (far under queue_cap): must shed — typed, with a
+    // backoff hint.
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client.request(&request(64, 902, 8)).unwrap();
+    assert!(!resp.ok, "lane-blind admission: wide request was accepted");
+    assert_eq!(resp.kind.as_deref(), Some("shed"));
+    assert!(resp.retry_after_ms.is_some(), "shed reply must carry retry_after_ms");
+    assert!(resp.error.as_deref().unwrap_or("").contains("overloaded"), "{:?}", resp.error);
+    let stats = client.stats().unwrap();
+    assert!(stats.req_f64("shed").unwrap() >= 1.0);
+    assert!(stats.req_f64("queued_samples").unwrap() <= 100.0);
+
+    // Unblock: cancel the blocker and the queued filler, then drain.
+    for id in [900u64, 901] {
+        let mut hit = false;
+        for _ in 0..200 {
+            let v = client.cancel(id).unwrap();
+            if v.req_f64("cancelled_queued").unwrap() + v.req_f64("cancel_pending").unwrap()
+                >= 1.0
+            {
+                hit = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(hit, "could not cancel request {id}");
+    }
+    assert!(!blocker.join().unwrap().ok);
+    assert!(!filler.join().unwrap().ok);
+    handle.shutdown();
+}
+
+#[test]
+fn client_timeout_cancels_the_ticket_and_frees_lanes() {
+    // Regression (orphaned-reply leak): a connection that gives up
+    // waiting must (a) get a typed `timeout` reply after
+    // `reply_timeout_ms`, (b) have its ticket cancelled through the
+    // normal cancel path so the in-flight lanes drain, and (c) be counted
+    // in `timeouts`, `responses_err` and the latency histogram. Pre-fix,
+    // the reply sender leaked in `replies` and the abandoned solve kept
+    // burning NFEs to the very end.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 1,
+        batch_deadline_ms: 1,
+        workers: 1,
+        queue_cap: 64,
+        reply_timeout_ms: 300,
+        threads: 1,
+        max_inflight: 2,
+        presets_path: None,
+        checkpoint_path: None,
+        checkpoint_every: 16,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let t0 = std::time::Instant::now();
+    // 40M lane-steps: far beyond what 300 ms can finish (the cancel tests
+    // rely on 20M still being mid-flight after the same wait).
+    let resp = client.request(&request(4000, 31, 10_000)).unwrap();
+    let waited = t0.elapsed();
+    assert!(!resp.ok);
+    assert_eq!(resp.kind.as_deref(), Some("timeout"));
+    assert!(resp.error.as_deref().unwrap_or("").contains("timeout"), "{:?}", resp.error);
+    assert!(
+        waited >= std::time::Duration::from_millis(280),
+        "replied before the timeout: {waited:?}"
+    );
+
+    // The cancel path frees the lanes at the owning worker's next step
+    // boundary; poll the gauges until they drain.
+    let mut stats = client.stats().unwrap();
+    let mut drained = false;
+    for _ in 0..1000 {
+        if stats.req_f64("inflight_lanes").unwrap() == 0.0
+            && stats.req_f64("inflight_groups").unwrap() == 0.0
+        {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        stats = client.stats().unwrap();
+    }
+    assert!(drained, "timed-out request still holds lanes: {}", jsonlite::to_string(&stats));
+    // Stats account for the timeout (undercount regression): the counter,
+    // the error tally and the latency histogram all see it.
+    assert_eq!(stats.req_f64("timeouts").unwrap(), 1.0);
+    assert!(stats.req_f64("responses_err").unwrap() >= 1.0);
+    assert!(stats.req_f64("cancelled").unwrap() >= 1.0);
+    assert!(stats.req_f64("latency_p50_ms").unwrap() > 0.0, "timeout latency not observed");
+
+    // The same connection keeps working afterwards.
+    let after = client.request(&request(2, 32, 6)).unwrap();
+    assert!(after.ok, "{:?}", after.error);
     handle.shutdown();
 }
 

@@ -245,6 +245,8 @@ fn batch_run_cancel_survivors_bit_identical_for_every_solver() {
         return_samples: true,
         want_metrics: false,
         preset: None,
+        deadline_ms: None,
+        priority: 0,
     };
     for kind in SolverKind::all() {
         let mut cfg = SamplerConfig::for_solver(*kind);

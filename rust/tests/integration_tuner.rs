@@ -158,6 +158,8 @@ fn preset_and_manual_requests_share_a_batch() {
                     return_samples: true,
                     want_metrics: false,
                     preset: None,
+                    deadline_ms: None,
+                    priority: 0,
                 }
             } else {
                 preset_request("auto", 5, 3, seed)
