@@ -53,17 +53,25 @@
 //!     `exec` section of `BENCH_perf.json`; CI gates pool < spawn at 4
 //!     shards and the identity flag.
 //!
+//! Router serving tier (always runs):
+//!   * end-to-end request latency through an in-process router vs direct
+//!     against the worker it fronts, plus the client-visible pause of one
+//!     live migration via the `rebalance` verb, both gated on bit-identity
+//!     with the direct run — emitted as the `router` section of
+//!     `BENCH_perf.json` and jq-gated in CI.
+//!
 //! Flags: `--quick` (smaller shapes), `--out <path>` for the stepper
 //! report (default `BENCH_stepper.json`), `--perf-out <path>` for the
 //! steps/sec + allocations report (default `BENCH_perf.json`).
 
-use sadiff::config::{Prediction, SamplerConfig};
+use sadiff::config::{Prediction, SamplerConfig, ServerConfig};
 use sadiff::coordinator::batcher::Batcher;
 use sadiff::coordinator::engine::BatchRun;
-use sadiff::coordinator::SampleRequest;
+use sadiff::coordinator::server::{Client, Server};
+use sadiff::coordinator::{Router, RouterConfig, SampleRequest};
 use sadiff::exec::Executor;
 use sadiff::gmm::Gmm;
-use sadiff::jsonlite::{to_string, Value};
+use sadiff::jsonlite::{parse, to_string, Value};
 use sadiff::linalg::simd::{self, Dispatch};
 use sadiff::models::{EvalCtx, GmmAnalytic, ModelEval};
 use sadiff::rng::normal::PhiloxNormal;
@@ -122,7 +130,8 @@ fn main() {
     let kernels = kernel_section(quick);
     let tracing = tracing_section(quick);
     let exec = exec_section(quick);
-    perf_section(quick, &perf_out_path, kernels, tracing, exec);
+    let router = router_section(quick);
+    perf_section(quick, &perf_out_path, kernels, tracing, exec, router);
 
     // --- 5. Artifact round-trips (skipped without `make artifacts`).
     artifact_section();
@@ -764,6 +773,146 @@ fn exec_section(quick: bool) -> Value {
     ])
 }
 
+/// Router serving tier: end-to-end request latency through the router vs
+/// direct against a worker it fronts, plus the client-visible pause of
+/// one live migration (the router's `rebalance` verb re-homing an
+/// in-flight group at a step boundary). Both paths are gated on
+/// bit-identity — a routed or migrated request must return exactly the
+/// samples a direct run returns — and the numbers land in the `router`
+/// section of `BENCH_perf.json`, jq-gated in CI.
+fn router_section(quick: bool) -> Value {
+    let worker_cfg = || ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_lane_cap: 1_000_000,
+        publish_snapshots: true,
+        checkpoint_every: 8,
+        ..ServerConfig::default()
+    };
+    let w0 = Server::bind(worker_cfg()).unwrap().spawn().unwrap();
+    let w1 = Server::bind(worker_cfg()).unwrap().spawn().unwrap();
+    let worker_addrs = vec![w0.addr.to_string(), w1.addr.to_string()];
+    let mut router = Router::bind(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: worker_addrs.clone(),
+        heartbeat_ms: 25,
+        heartbeat_timeout_ms: 500,
+        ..RouterConfig::default()
+    })
+    .unwrap()
+    .spawn();
+    let router_addr = router.addr().to_string();
+
+    let mk_req = |id: u64, n: usize, nfe: usize| SampleRequest {
+        id,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: SamplerConfig { nfe, tau: 1.0, ..SamplerConfig::sa_default() },
+        n,
+        seed: id,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+        deadline_ms: None,
+        priority: 0,
+    };
+
+    // --- Request latency: the same request stream direct vs routed. The
+    // delta is the router's forwarding cost (re-ticket, placement, one
+    // extra TCP hop each way).
+    let (reqs_n, n, nfe) = if quick { (10usize, 8usize, 8usize) } else { (40, 16, 12) };
+    let run_stream = |addr: &str| -> (f64, f64, Vec<Option<Vec<f64>>>) {
+        let mut lat = Vec::with_capacity(reqs_n);
+        let mut samples = Vec::with_capacity(reqs_n);
+        let mut client = Client::connect(addr).unwrap();
+        for id in 0..reqs_n as u64 {
+            let t0 = std::time::Instant::now();
+            let resp = client.request(&mk_req(id + 1, n, nfe)).unwrap();
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+            assert!(resp.ok, "router bench request failed: {:?}", resp.error);
+            samples.push(resp.samples);
+        }
+        let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+        let min = lat.iter().cloned().fold(f64::INFINITY, f64::min);
+        (mean, min, samples)
+    };
+    let (direct_mean, direct_min, direct_samples) = run_stream(&worker_addrs[0]);
+    let (routed_mean, routed_min, routed_samples) = run_stream(&router_addr);
+    let identical = direct_samples == routed_samples;
+
+    // --- Migration pause: one long solve re-homed mid-flight. The solve
+    // is sized off the measured direct throughput so it stays in flight
+    // long enough to migrate on fast and slow machines alike; the
+    // rebalance reply's pause_ms is the window the group spent detached
+    // between a boundary on the source and resumption on the target.
+    let rate = (reqs_n * n * nfe) as f64 / (direct_mean * reqs_n as f64).max(1.0);
+    let mig_nfe = 100usize;
+    let target_ms = if quick { 600.0 } else { 1_200.0 };
+    let mig_n = ((rate * target_ms / mig_nfe as f64) as usize).clamp(64, 60_000);
+    let mig_req = mk_req(9_001, mig_n, mig_nfe);
+    let want = Client::connect(&worker_addrs[0]).unwrap().request(&mig_req).unwrap();
+    assert!(want.ok, "migration baseline failed: {:?}", want.error);
+    let join = {
+        let addr = router_addr.clone();
+        let req = mig_req.clone();
+        std::thread::spawn(move || Client::connect(&addr).unwrap().request(&req).unwrap())
+    };
+    let mut pause_ms = 0.0;
+    let mut migrated = false;
+    let t0 = std::time::Instant::now();
+    let mut ctl = Client::connect(&router_addr).unwrap();
+    while t0.elapsed() < std::time::Duration::from_secs(10) {
+        let reply = ctl.round_trip(r#"{"cmd":"rebalance"}"#).unwrap();
+        let v = parse(&reply).unwrap();
+        if v.opt_bool("ok", false) {
+            pause_ms = v.req_f64("pause_ms").unwrap_or(0.0);
+            migrated = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let got = join.join().unwrap();
+    let mig_identical = got.ok && got.samples == want.samples;
+
+    println!(
+        "\nrouter (2 workers, {reqs_n} reqs of n={n}, NFE={nfe}): direct {direct_mean:.2} ms \
+         (min {direct_min:.2}), routed {routed_mean:.2} ms (min {routed_min:.2}), overhead \
+         {:+.2} ms; migration of n={mig_n} NFE={mig_nfe}: migrated={migrated}, pause \
+         {pause_ms:.1} ms (identical: {identical}/{mig_identical})",
+        routed_mean - direct_mean
+    );
+    if !identical || !mig_identical {
+        eprintln!("FAIL: routed or migrated samples diverge from the direct run");
+        std::process::exit(1);
+    }
+
+    router.shutdown();
+    w0.shutdown();
+    w1.shutdown();
+
+    Value::obj(vec![
+        ("workers", Value::Num(2.0)),
+        ("requests", Value::Num(reqs_n as f64)),
+        ("lanes", Value::Num(n as f64)),
+        ("nfe", Value::Num(nfe as f64)),
+        ("direct_mean_ms", Value::Num(direct_mean)),
+        ("direct_min_ms", Value::Num(direct_min)),
+        ("routed_mean_ms", Value::Num(routed_mean)),
+        ("routed_min_ms", Value::Num(routed_min)),
+        ("overhead_ms", Value::Num(routed_mean - direct_mean)),
+        (
+            "migration",
+            Value::obj(vec![
+                ("lanes", Value::Num(mig_n as f64)),
+                ("nfe", Value::Num(mig_nfe as f64)),
+                ("migrated", Value::Bool(migrated)),
+                ("pause_ms", Value::Num(pause_ms)),
+                ("identical", Value::Bool(mig_identical)),
+            ]),
+        ),
+        ("identical", Value::Bool(identical)),
+    ])
+}
+
 /// Steps/sec + allocations-per-step: the seed-era monolithic loop (the
 /// pre-change baseline, retained verbatim as `run_reference`) against the
 /// allocation-free stepper driver, on a free model so solver overhead —
@@ -772,7 +921,14 @@ fn exec_section(quick: bool) -> Value {
 /// trajectory records before AND after in the same run, alongside the
 /// `kernels` roofline section from [`kernel_section`] and the `exec`
 /// dispatch section from [`exec_section`].
-fn perf_section(quick: bool, out_path: &str, kernels: Value, tracing: Value, exec: Value) {
+fn perf_section(
+    quick: bool,
+    out_path: &str,
+    kernels: Value,
+    tracing: Value,
+    exec: Value,
+    router: Value,
+) {
     let sch = NoiseSchedule::vp_linear();
     let (n, dim, nfe, iters) =
         if quick { (64usize, 16usize, 16usize, 3usize) } else { (256, 32, 32, 6) };
@@ -860,6 +1016,7 @@ fn perf_section(quick: bool, out_path: &str, kernels: Value, tracing: Value, exe
         ("kernels", kernels),
         ("tracing", tracing),
         ("exec", exec),
+        ("router", router),
     ]);
     if let Err(e) = std::fs::write(out_path, format!("{}\n", to_string(&report))) {
         eprintln!("cannot write {out_path}: {e}");

@@ -373,6 +373,12 @@ pub struct ServerConfig {
     /// within the budget (a group is always admitted when the worker is
     /// idle, so one oversized request cannot starve). `0` = unlimited.
     pub max_step_lanes: usize,
+    /// Keep per-worker in-flight snapshots in memory even without a
+    /// `checkpoint_path`, so the `snapshot` protocol command (the router's
+    /// heartbeat) can report live group checkpoints for failover. Implied
+    /// by `checkpoint_path`; this flag enables the snapshot sink without
+    /// paying for the file writes.
+    pub publish_snapshots: bool,
 }
 
 impl Default for ServerConfig {
@@ -393,6 +399,7 @@ impl Default for ServerConfig {
             queue_lane_cap: 0,
             reply_timeout_ms: 120_000,
             max_step_lanes: 0,
+            publish_snapshots: false,
         }
     }
 }
@@ -421,6 +428,7 @@ impl ServerConfig {
                 .opt_usize("reply_timeout_ms", d.reply_timeout_ms as usize)
                 .max(1) as u64,
             max_step_lanes: v.opt_usize("max_step_lanes", d.max_step_lanes),
+            publish_snapshots: v.opt_bool("publish_snapshots", d.publish_snapshots),
         })
     }
 
@@ -586,5 +594,12 @@ mod tests {
         // clamped to 1.
         let v = jsonlite::parse(r#"{"reply_timeout_ms": 0}"#).unwrap();
         assert_eq!(ServerConfig::from_json(&v).unwrap().reply_timeout_ms, 1);
+    }
+
+    #[test]
+    fn server_config_publish_snapshots() {
+        assert!(!ServerConfig::default().publish_snapshots);
+        let v = jsonlite::parse(r#"{"publish_snapshots": true}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).unwrap().publish_snapshots);
     }
 }

@@ -221,6 +221,14 @@ pub struct ServingMetrics {
     /// Counter: in-flight groups resumed from a checkpoint after a restart;
     /// written via [`Self::observe_recovered`].
     groups_recovered: AtomicU64,
+    /// Counter: in-flight groups handed off to another worker through the
+    /// `migrate_out` protocol command; written via
+    /// [`Self::observe_migrated_out`].
+    migrated_out: AtomicU64,
+    /// Counter: groups accepted from another worker through `migrate_in`
+    /// (they resume through the recovery path); written via
+    /// [`Self::observe_migrated_in`].
+    migrated_in: AtomicU64,
     /// End-to-end request latency.
     latency: Histogram,
     /// Per-stage latency, indexed by [`Stage::index`].
@@ -283,6 +291,16 @@ impl ServingMetrics {
         self.groups_recovered.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One in-flight group migrated away via `migrate_out`.
+    pub fn observe_migrated_out(&self) {
+        self.migrated_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One group accepted from another worker via `migrate_in`.
+    pub fn observe_migrated_in(&self) {
+        self.migrated_in.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// `n` requests expired (deadline passed before admission) and were
     /// answered with typed `deadline` errors.
     pub fn observe_deadline_miss(&self, n: usize) {
@@ -342,6 +360,8 @@ impl ServingMetrics {
             ("inflight_lanes", load(&self.inflight_lanes)),
             ("checkpoints_written", load(&self.checkpoints_written)),
             ("groups_recovered", load(&self.groups_recovered)),
+            ("migrated_out", load(&self.migrated_out)),
+            ("migrated_in", load(&self.migrated_in)),
             ("mean_batch_occupancy", Value::Num(occupancy)),
             ("latency_p50_ms", Value::Num(self.latency_percentile_ms(0.5))),
             ("latency_p95_ms", Value::Num(self.latency_percentile_ms(0.95))),
@@ -447,6 +467,20 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.req_f64("checkpoints_written").unwrap(), 2.0);
         assert_eq!(s.req_f64("groups_recovered").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn migration_counters() {
+        let m = ServingMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("migrated_out").unwrap(), 0.0);
+        assert_eq!(s.req_f64("migrated_in").unwrap(), 0.0);
+        m.observe_migrated_out();
+        m.observe_migrated_in();
+        m.observe_migrated_in();
+        let s = m.snapshot();
+        assert_eq!(s.req_f64("migrated_out").unwrap(), 1.0);
+        assert_eq!(s.req_f64("migrated_in").unwrap(), 2.0);
     }
 
     #[test]

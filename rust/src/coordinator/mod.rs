@@ -17,10 +17,12 @@ pub mod checkpoint;
 pub mod engine;
 pub mod metrics;
 pub mod request;
+pub mod router;
 pub mod server;
 
 pub use batcher::{BatchKey, Batcher};
 pub use checkpoint::{GroupCheckpoint, ServerCheckpoint};
 pub use engine::{sample, BatchRun, EvalRow};
 pub use request::{cancel_line, SampleRequest, SampleResponse};
+pub use router::{ChaosHooks, Placement, Router, RouterConfig, RouterHandle, WorkerView};
 pub use server::{Server, ServerHandle};

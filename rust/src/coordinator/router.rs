@@ -1,0 +1,1470 @@
+//! Multi-worker serving router (Layer 3b): ticket ownership, placement,
+//! live migration and crash failover over the line protocol.
+//!
+//! The router owns client connections and the *client-visible* ticket
+//! space. Each incoming `sample` request is re-ticketed to a globally
+//! unique router ticket, assigned to a worker by a pluggable
+//! [`Placement`] policy, and forwarded over the same newline-delimited
+//! JSON protocol the workers already speak. Workers are today's
+//! [`super::server::Server`]; they register with
+//! `{"cmd":"register","addr":...}` (or are listed statically) and are
+//! polled every heartbeat with the `snapshot` verb, which doubles as a
+//! liveness probe and as the fetch of their latest in-flight group
+//! checkpoints.
+//!
+//! Exactly-once replies by construction: one forwarding thread owns each
+//! client request and is the only code path that ever writes that
+//! client's reply. Migration and failover never write to clients; they
+//! relocate state, and the forwarding thread *chases* the relocation —
+//! polling `recover` with `take:true` on the new owner — so the reply is
+//! delivered exactly once, bit-identical to an uninterrupted run (the
+//! per-lane counter-keyed noise streams make samples independent of
+//! where and in how many pieces a group executes).
+//!
+//! Failover: a worker that misses heartbeats past
+//! [`RouterConfig::heartbeat_timeout_ms`] is declared dead; the group
+//! checkpoints cached from its last heartbeat are re-assigned to
+//! survivors via `migrate_in`. A request whose worker died before any
+//! checkpoint was published is re-submitted from scratch — the seeded
+//! noise streams make the re-run bitwise equal, so the client cannot
+//! tell the difference.
+//!
+//! Chaos hooks ([`ChaosHooks`]) let tests deterministically drop or
+//! delay heartbeats and sever migrations mid-flight; see
+//! `testsupport::fleet`.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::checkpoint::GroupCheckpoint;
+use crate::coordinator::metrics::Histogram;
+use crate::coordinator::request::{cancel_line, SampleRequest, SampleResponse};
+use crate::jsonlite::{parse, to_string, Value};
+use crate::util::error::{Error, Result};
+
+/// Router configuration. Mirrors `ServerConfig`'s style: a flat struct
+/// with JSON override parsing and CLI-friendly defaults.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Listen address for client connections, e.g. `127.0.0.1:7700`.
+    pub addr: String,
+    /// Static worker addresses known at startup. Workers may also join
+    /// later via the `register` verb.
+    pub workers: Vec<String>,
+    /// Placement policy name: `least_loaded` (default), `round_robin`
+    /// or `sticky`.
+    pub placement: String,
+    /// Heartbeat poll interval in milliseconds.
+    pub heartbeat_ms: u64,
+    /// A worker silent for this long is declared dead and failed over.
+    pub heartbeat_timeout_ms: u64,
+    /// End-to-end reply deadline per client request in milliseconds.
+    pub reply_timeout_ms: u64,
+    /// TCP connect timeout towards workers in milliseconds.
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            addr: "127.0.0.1:7700".to_string(),
+            workers: Vec::new(),
+            placement: "least_loaded".to_string(),
+            heartbeat_ms: 500,
+            heartbeat_timeout_ms: 2500,
+            reply_timeout_ms: 120_000,
+            connect_timeout_ms: 1_000,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Parse overrides from a JSON object onto the defaults.
+    pub fn from_json(v: &Value) -> Result<RouterConfig> {
+        let d = RouterConfig::default();
+        let workers = match v.get("workers") {
+            Some(Value::Array(items)) => items
+                .iter()
+                .filter_map(|w| w.as_str().map(str::to_string))
+                .collect(),
+            _ => d.workers.clone(),
+        };
+        Ok(RouterConfig {
+            addr: v.opt_str("addr", &d.addr).to_string(),
+            workers,
+            placement: v.opt_str("placement", &d.placement).to_string(),
+            heartbeat_ms: v.opt_usize("heartbeat_ms", d.heartbeat_ms as usize) as u64,
+            heartbeat_timeout_ms: v
+                .opt_usize("heartbeat_timeout_ms", d.heartbeat_timeout_ms as usize)
+                as u64,
+            reply_timeout_ms: v.opt_usize("reply_timeout_ms", d.reply_timeout_ms as usize) as u64,
+            connect_timeout_ms: v.opt_usize("connect_timeout_ms", d.connect_timeout_ms as usize)
+                as u64,
+        })
+    }
+}
+
+/// A worker as seen by a [`Placement`] policy: load gauges from the most
+/// recent heartbeat plus the router's own outstanding-work bookkeeping.
+#[derive(Debug, Clone)]
+pub struct WorkerView {
+    /// Stable index into the router's worker registry.
+    pub index: usize,
+    /// Whether the worker answered its most recent heartbeat window.
+    pub alive: bool,
+    /// Lanes queued but not yet admitted, from the worker's gauges.
+    pub queued_lanes: usize,
+    /// Lanes currently in flight on the worker.
+    pub inflight_lanes: usize,
+    /// Router-side estimate of un-acked work: the sum of `n × NFE`
+    /// lane-steps forwarded to this worker and not yet replied.
+    pub outstanding_lane_steps: u64,
+}
+
+/// Pluggable placement policy (spada-sim `assign_jobs` shape): given a
+/// request and the current worker views, pick a worker index or `None`
+/// to shed. Implementations must only return indices of alive workers.
+pub trait Placement: Send + Sync {
+    /// Stable policy name, echoed in `stats`.
+    fn name(&self) -> &'static str;
+    /// Pick a worker for `req`, or `None` if no alive worker exists.
+    fn assign(&self, req: &SampleRequest, workers: &[WorkerView]) -> Option<usize>;
+}
+
+/// Cost-model placement: pick the worker minimising
+/// `outstanding_lane_steps + (queued_lanes + inflight_lanes) × NFE`,
+/// i.e. the estimated lane-steps of work ahead of this request.
+pub struct LeastLoaded;
+
+impl Placement for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+    fn assign(&self, req: &SampleRequest, workers: &[WorkerView]) -> Option<usize> {
+        workers
+            .iter()
+            .filter(|w| w.alive)
+            .min_by_key(|w| {
+                let lanes = (w.queued_lanes + w.inflight_lanes) as u64;
+                let cost = w
+                    .outstanding_lane_steps
+                    .saturating_add(lanes.saturating_mul(req.cfg.nfe as u64));
+                (cost, w.index)
+            })
+            .map(|w| w.index)
+    }
+}
+
+/// Round-robin placement over alive workers, ignoring load.
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    /// New round-robin policy starting at the first alive worker.
+    pub fn new() -> RoundRobin {
+        RoundRobin {
+            next: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+    fn assign(&self, _req: &SampleRequest, workers: &[WorkerView]) -> Option<usize> {
+        let alive: Vec<usize> = workers.iter().filter(|w| w.alive).map(|w| w.index).collect();
+        if alive.is_empty() {
+            return None;
+        }
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % alive.len();
+        Some(alive[i])
+    }
+}
+
+/// Sticky placement: hash `(workload, seed)` onto the alive workers, so
+/// repeated submissions of the same request land on the same worker
+/// (maximising batcher merges) as long as the fleet is stable.
+pub struct Sticky;
+
+impl Placement for Sticky {
+    fn name(&self) -> &'static str {
+        "sticky"
+    }
+    fn assign(&self, req: &SampleRequest, workers: &[WorkerView]) -> Option<usize> {
+        let alive: Vec<usize> = workers.iter().filter(|w| w.alive).map(|w| w.index).collect();
+        if alive.is_empty() {
+            return None;
+        }
+        // FNV-1a over the workload name then the seed bytes.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in req.workload.bytes().chain(req.seed.to_le_bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Some(alive[(h % alive.len() as u64) as usize])
+    }
+}
+
+/// Resolve a placement policy by name.
+pub fn placement_by_name(name: &str) -> Option<Box<dyn Placement>> {
+    match name {
+        "least_loaded" => Some(Box::new(LeastLoaded)),
+        "round_robin" => Some(Box::new(RoundRobin::new())),
+        "sticky" => Some(Box::new(Sticky)),
+        _ => None,
+    }
+}
+
+/// Deterministic fault-injection hooks shared between the router and a
+/// test harness. All hooks are no-ops until armed; production routers
+/// hold a default (inert) instance.
+#[derive(Default)]
+pub struct ChaosHooks {
+    dropped: Mutex<HashSet<usize>>,
+    delay_ms: AtomicU64,
+    sever_migrations: AtomicUsize,
+}
+
+impl ChaosHooks {
+    /// New inert hook set.
+    pub fn new() -> Arc<ChaosHooks> {
+        Arc::new(ChaosHooks::default())
+    }
+    /// Start (or stop) swallowing heartbeat polls to `worker`, so the
+    /// router sees it as silent even though it is healthy.
+    pub fn drop_heartbeats(&self, worker: usize, on: bool) {
+        let mut d = self.dropped.lock().unwrap();
+        if on {
+            d.insert(worker);
+        } else {
+            d.remove(&worker);
+        }
+    }
+    /// Whether heartbeats to `worker` are currently dropped.
+    pub fn is_dropped(&self, worker: usize) -> bool {
+        self.dropped.lock().unwrap().contains(&worker)
+    }
+    /// Delay every heartbeat sweep by `ms` (0 disables).
+    pub fn delay_heartbeats(&self, ms: u64) {
+        self.delay_ms.store(ms, Ordering::Relaxed);
+    }
+    /// Current heartbeat delay in milliseconds.
+    pub fn heartbeat_delay_ms(&self) -> u64 {
+        self.delay_ms.load(Ordering::Relaxed)
+    }
+    /// Arm one severed migration: the next `migrate_in` attempt is
+    /// dropped as if the connection died mid-handoff (the router keeps
+    /// the checkpoint and retries).
+    pub fn sever_next_migration(&self) {
+        self.sever_migrations.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Consume one armed sever, if any.
+    pub fn take_sever(&self) -> bool {
+        self.sever_migrations
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+            .is_ok()
+    }
+}
+
+/// Router-side serving counters and stage histograms.
+pub struct RouterMetrics {
+    /// Client requests accepted (any line that parses as a sample).
+    pub requests: AtomicU64,
+    /// Successful sample replies delivered to clients.
+    pub responses_ok: AtomicU64,
+    /// Error replies delivered to clients.
+    pub responses_err: AtomicU64,
+    /// Requests shed because no alive worker could take them.
+    pub shed: AtomicU64,
+    /// Planned migrations completed via the `rebalance` verb.
+    pub migrations: AtomicU64,
+    /// Dead workers failed over.
+    pub failovers: AtomicU64,
+    /// Cached groups successfully re-assigned during failovers.
+    pub groups_failed_over: AtomicU64,
+    /// Requests re-submitted from scratch after a failover found no
+    /// checkpoint for them (bit-identical by seeding).
+    pub requeued: AtomicU64,
+    /// Placement decision latency.
+    pub route: Histogram,
+    /// Single forward attempt latency (connect + solve + reply).
+    pub forward: Histogram,
+    /// Migration pause: snapshot-off to restored-on wall time.
+    pub migrate: Histogram,
+    /// End-to-end client latency through the router.
+    pub latency: Histogram,
+}
+
+impl RouterMetrics {
+    /// Fresh zeroed metrics.
+    pub fn new() -> RouterMetrics {
+        RouterMetrics {
+            requests: AtomicU64::new(0),
+            responses_ok: AtomicU64::new(0),
+            responses_err: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            groups_failed_over: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            route: Histogram::new(),
+            forward: Histogram::new(),
+            migrate: Histogram::new(),
+            latency: Histogram::new(),
+        }
+    }
+
+    /// Counters + stage histograms as a JSON object.
+    pub fn snapshot(&self) -> Value {
+        let load = |c: &AtomicU64| Value::Num(c.load(Ordering::Relaxed) as f64);
+        Value::obj(vec![
+            ("requests", load(&self.requests)),
+            ("responses_ok", load(&self.responses_ok)),
+            ("responses_err", load(&self.responses_err)),
+            ("shed", load(&self.shed)),
+            ("migrations", load(&self.migrations)),
+            ("failovers", load(&self.failovers)),
+            ("groups_failed_over", load(&self.groups_failed_over)),
+            ("requeued", load(&self.requeued)),
+            ("route", self.route.snapshot()),
+            ("forward", self.forward.snapshot()),
+            ("migrate", self.migrate.snapshot()),
+            ("latency", self.latency.snapshot()),
+        ])
+    }
+}
+
+impl Default for RouterMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-worker registry entry.
+struct WorkerState {
+    /// Worker line-protocol address.
+    addr: String,
+    /// Answered its most recent heartbeat window.
+    alive: bool,
+    /// Failover for this worker has completed: every cached group was
+    /// offered to survivors and all relocations are published. Gate for
+    /// the forwarding thread's give-up-and-requeue decision.
+    failed_over: bool,
+    /// Last successful heartbeat.
+    last_seen: Instant,
+    /// Gauges from the last heartbeat snapshot.
+    queued_lanes: usize,
+    queued_requests: usize,
+    inflight_lanes: usize,
+    inflight_groups: usize,
+    /// Worker publishes in-flight snapshots (checkpointing on).
+    publishing: bool,
+    /// Group checkpoints from the last heartbeat, plus groups moved
+    /// here by migration/failover (so a second failure can re-offer
+    /// them before this worker's own heartbeat refreshes the cache).
+    cached: Vec<GroupCheckpoint>,
+    /// Un-acked forwarded work in lane-steps (placement cost input).
+    outstanding: u64,
+    /// Optional capabilities blob from the `register` handshake.
+    capabilities: Option<Value>,
+}
+
+impl WorkerState {
+    fn new(addr: String) -> WorkerState {
+        WorkerState {
+            addr,
+            alive: true,
+            failed_over: false,
+            last_seen: Instant::now(),
+            queued_lanes: 0,
+            queued_requests: 0,
+            inflight_lanes: 0,
+            inflight_groups: 0,
+            publishing: false,
+            cached: Vec::new(),
+            outstanding: 0,
+            capabilities: None,
+        }
+    }
+
+    fn view(&self, index: usize) -> WorkerView {
+        WorkerView {
+            index,
+            alive: self.alive,
+            queued_lanes: self.queued_lanes,
+            inflight_lanes: self.inflight_lanes,
+            outstanding_lane_steps: self.outstanding,
+        }
+    }
+}
+
+/// Shared router state across accept / forwarding / heartbeat threads.
+struct RouterShared {
+    cfg: RouterConfig,
+    placement: Box<dyn Placement>,
+    workers: Mutex<Vec<WorkerState>>,
+    /// Router ticket → current owner worker index, updated on every
+    /// migration/failover hand-off. Forwarding threads poll this to
+    /// chase their request across workers.
+    relocated: Mutex<HashMap<u64, usize>>,
+    /// Router ticket → original client id, for cancel fan-out.
+    forwards: Mutex<HashMap<u64, u64>>,
+    next_ticket: AtomicU64,
+    shutdown: AtomicBool,
+    metrics: RouterMetrics,
+    chaos: Arc<ChaosHooks>,
+}
+
+/// The router front-end process. Construct with [`Router::bind`], then
+/// [`Router::spawn`] to serve.
+pub struct Router {
+    listener: TcpListener,
+    shared: Arc<RouterShared>,
+    addr: SocketAddr,
+}
+
+impl Router {
+    /// Bind the router with inert chaos hooks.
+    pub fn bind(cfg: RouterConfig) -> Result<Router> {
+        Router::bind_with_chaos(cfg, ChaosHooks::new())
+    }
+
+    /// Bind the router with caller-armed [`ChaosHooks`] (test harness).
+    pub fn bind_with_chaos(cfg: RouterConfig, chaos: Arc<ChaosHooks>) -> Result<Router> {
+        let placement = placement_by_name(&cfg.placement)
+            .ok_or_else(|| Error::config(format!("unknown placement policy: {}", cfg.placement)))?;
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let workers = cfg
+            .workers
+            .iter()
+            .map(|a| WorkerState::new(a.clone()))
+            .collect();
+        let shared = Arc::new(RouterShared {
+            cfg,
+            placement,
+            workers: Mutex::new(workers),
+            relocated: Mutex::new(HashMap::new()),
+            forwards: Mutex::new(HashMap::new()),
+            next_ticket: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            metrics: RouterMetrics::new(),
+            chaos,
+        });
+        Ok(Router {
+            listener,
+            shared,
+            addr,
+        })
+    }
+
+    /// The bound listen address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Start the accept loop and heartbeat thread; returns a handle the
+    /// caller uses to stop the router.
+    pub fn spawn(self) -> RouterHandle {
+        let shared = Arc::clone(&self.shared);
+        let listener = self.listener;
+        crate::log_info!("router", "listening on {}", self.addr);
+        let accept_shared = Arc::clone(&shared);
+        let accept = thread::spawn(move || accept_loop(listener, accept_shared));
+        let hb_shared = Arc::clone(&shared);
+        let heartbeat = thread::spawn(move || heartbeat_loop(hb_shared));
+        RouterHandle {
+            addr: self.addr,
+            shared,
+            accept: Some(accept),
+            heartbeat: Some(heartbeat),
+        }
+    }
+}
+
+/// Handle to a running router; dropping it shuts the router down.
+pub struct RouterHandle {
+    addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    accept: Option<JoinHandle<()>>,
+    heartbeat: Option<JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    /// The router's listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Chaos hooks shared with this router (test harness access).
+    pub fn chaos(&self) -> Arc<ChaosHooks> {
+        Arc::clone(&self.shared.chaos)
+    }
+
+    /// Counters + histograms snapshot (same data as the `stats` verb,
+    /// without the per-worker array).
+    pub fn metrics_snapshot(&self) -> Value {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stop accepting, stop the heartbeat thread, and join both.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Poke the blocking accept loop awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<RouterShared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let s = Arc::clone(&shared);
+                thread::spawn(move || connection_loop(stream, s));
+            }
+            Err(e) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                crate::log_warn!("router", "accept error: {e}");
+            }
+        }
+    }
+}
+
+fn connection_loop(stream: TcpStream, shared: Arc<RouterShared>) {
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(_) => return,
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = handle_line(&shared, trimmed);
+        if writer
+            .write_all(format!("{reply}\n").as_bytes())
+            .is_err()
+        {
+            return;
+        }
+        let _ = writer.flush();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+fn handle_line(shared: &Arc<RouterShared>, line: &str) -> String {
+    let v = match parse(line) {
+        Ok(v) => v,
+        Err(e) => return SampleResponse::err(0, format!("bad json: {e}")).to_line(),
+    };
+    match v.get("cmd").and_then(Value::as_str) {
+        Some("ping") => to_string(&Value::obj(vec![("ok", Value::Bool(true))])),
+        Some("stats") => to_string(&handle_stats(shared)),
+        Some("register") => to_string(&handle_register(shared, &v)),
+        Some("rebalance") => to_string(&handle_rebalance(shared, &v)),
+        Some("cancel") => to_string(&handle_cancel(shared, &v)),
+        Some("shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            to_string(&Value::obj(vec![("ok", Value::Bool(true))]))
+        }
+        Some(other) => SampleResponse::err(0, format!("unknown command: {other}")).to_line(),
+        None => handle_request(shared, &v).to_line(),
+    }
+}
+
+fn handle_stats(shared: &Arc<RouterShared>) -> Value {
+    let workers: Vec<Value> = {
+        let ws = shared.workers.lock().unwrap();
+        ws.iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut fields = vec![
+                    ("index", Value::Num(i as f64)),
+                    ("addr", Value::Str(w.addr.clone())),
+                    ("alive", Value::Bool(w.alive)),
+                    ("failed_over", Value::Bool(w.failed_over)),
+                    ("publishing", Value::Bool(w.publishing)),
+                    ("queued_lanes", Value::Num(w.queued_lanes as f64)),
+                    ("queued_requests", Value::Num(w.queued_requests as f64)),
+                    ("inflight_lanes", Value::Num(w.inflight_lanes as f64)),
+                    ("inflight_groups", Value::Num(w.inflight_groups as f64)),
+                    ("cached_groups", Value::Num(w.cached.len() as f64)),
+                    ("outstanding_lane_steps", Value::Num(w.outstanding as f64)),
+                ];
+                if let Some(c) = &w.capabilities {
+                    fields.push(("capabilities", c.clone()));
+                }
+                Value::obj(fields)
+            })
+            .collect()
+    };
+    let mut out: Vec<(String, Value)> = vec![
+        ("ok".to_string(), Value::Bool(true)),
+        (
+            "placement".to_string(),
+            Value::Str(shared.placement.name().to_string()),
+        ),
+        ("workers".to_string(), Value::Array(workers)),
+    ];
+    if let Value::Object(fields) = shared.metrics.snapshot() {
+        out.extend(fields);
+    }
+    Value::Object(out)
+}
+
+fn handle_register(shared: &Arc<RouterShared>, v: &Value) -> Value {
+    let Some(addr) = v.get("addr").and_then(Value::as_str) else {
+        return Value::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", Value::Str("register requires addr".to_string())),
+        ]);
+    };
+    let caps = v.get("capabilities").cloned();
+    let mut ws = shared.workers.lock().unwrap();
+    let (index, fresh) = match ws.iter().position(|w| w.addr == addr) {
+        Some(i) => {
+            // Idempotent re-register: a restarted worker comes back
+            // clean, but keeps its registry slot.
+            ws[i].alive = true;
+            ws[i].failed_over = false;
+            ws[i].last_seen = Instant::now();
+            if caps.is_some() {
+                ws[i].capabilities = caps;
+            }
+            (i, false)
+        }
+        None => {
+            let mut st = WorkerState::new(addr.to_string());
+            st.capabilities = caps;
+            ws.push(st);
+            (ws.len() - 1, true)
+        }
+    };
+    if fresh {
+        crate::log_info!("router", "worker {index} registered at {addr}");
+    }
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("index", Value::Num(index as f64)),
+        ("workers", Value::Num(ws.len() as f64)),
+    ])
+}
+
+fn handle_cancel(shared: &Arc<RouterShared>, v: &Value) -> Value {
+    let Some(id) = v.get("id").and_then(Value::as_u64) else {
+        return Value::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", Value::Str("cancel requires id".to_string())),
+        ]);
+    };
+    // Translate the client id to every router ticket it maps to, then
+    // broadcast: the request may have moved since it was forwarded.
+    let tickets: Vec<u64> = {
+        let fw = shared.forwards.lock().unwrap();
+        fw.iter()
+            .filter(|(_, c)| **c == id)
+            .map(|(t, _)| *t)
+            .collect()
+    };
+    let addrs: Vec<String> = {
+        let ws = shared.workers.lock().unwrap();
+        ws.iter()
+            .filter(|w| w.alive)
+            .map(|w| w.addr.clone())
+            .collect()
+    };
+    let mut cancelled = 0u64;
+    for t in &tickets {
+        let line = cancel_line(*t);
+        for addr in &addrs {
+            if let Ok(r) = round_trip_addr(shared, addr, &line, Duration::from_millis(2_000)) {
+                cancelled += r.get("cancelled_queued").and_then(Value::as_u64).unwrap_or(0);
+                cancelled += r.get("cancel_pending").and_then(Value::as_u64).unwrap_or(0);
+            }
+        }
+    }
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("tickets", Value::Num(tickets.len() as f64)),
+        ("cancelled", Value::Num(cancelled as f64)),
+    ])
+}
+
+fn handle_rebalance(shared: &Arc<RouterShared>, v: &Value) -> Value {
+    let t0 = Instant::now();
+    let err = |msg: String| {
+        Value::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", Value::Str(msg)),
+        ])
+    };
+    let (from, to_pref) = {
+        let ws = shared.workers.lock().unwrap();
+        let from = match v.get("from").and_then(Value::as_u64) {
+            Some(i) => i as usize,
+            None => {
+                // Hottest alive worker with anything in flight.
+                match ws
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| w.alive && w.inflight_lanes > 0)
+                    .max_by_key(|(_, w)| w.inflight_lanes)
+                    .map(|(i, _)| i)
+                {
+                    Some(i) => i,
+                    None => return err("no worker has in-flight work".to_string()),
+                }
+            }
+        };
+        if from >= ws.len() {
+            return err(format!("no such worker: {from}"));
+        }
+        let to_pref = v
+            .get("to")
+            .and_then(Value::as_u64)
+            .map(|i| i as usize)
+            .or_else(|| {
+                // Idlest alive worker other than the source.
+                ws.iter()
+                    .enumerate()
+                    .filter(|(i, w)| *i != from && w.alive)
+                    .min_by_key(|(i, w)| (w.outstanding as u128 + w.inflight_lanes as u128, *i))
+                    .map(|(i, _)| i)
+            });
+        (from, to_pref)
+    };
+    let timeout_ms = v.opt_usize("timeout_ms", 3_000) as u64;
+    let out_line = to_string(&Value::obj(vec![
+        ("cmd", Value::Str("migrate_out".to_string())),
+        ("timeout_ms", Value::Num(timeout_ms as f64)),
+    ]));
+    let reply = match round_trip_worker(
+        shared,
+        from,
+        &out_line,
+        Duration::from_millis(timeout_ms + 2_000),
+    ) {
+        Ok(r) => r,
+        Err(e) => return err(format!("migrate_out on worker {from} failed: {e}")),
+    };
+    if !reply.opt_bool("ok", false) {
+        let msg = match reply.get("error") {
+            Some(Value::Str(s)) => s.clone(),
+            Some(e @ Value::Object(_)) => e
+                .get("message")
+                .and_then(Value::as_str)
+                .unwrap_or("migrate_out refused")
+                .to_string(),
+            _ => "migrate_out refused".to_string(),
+        };
+        return err(msg);
+    }
+    let gck = match reply.get("group") {
+        Some(g) => match GroupCheckpoint::from_json(g) {
+            Ok(gck) => gck,
+            Err(e) => return err(format!("bad group checkpoint from worker {from}: {e}")),
+        },
+        None => return err("migrate_out reply missing group".to_string()),
+    };
+    let lanes = reply.get("lanes").and_then(Value::as_u64).unwrap_or(0);
+    match place_group(shared, &gck, to_pref, None) {
+        Some(dst) => {
+            remove_cached(shared, from, &gck);
+            shared.metrics.migrations.fetch_add(1, Ordering::Relaxed);
+            let pause = t0.elapsed().as_secs_f64() * 1e3;
+            shared.metrics.migrate.observe_ms(pause);
+            crate::log_info!(
+                "router",
+                "rebalanced {lanes} lane(s) from worker {from} to worker {dst} in {pause:.1} ms"
+            );
+            Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("from", Value::Num(from as f64)),
+                ("to", Value::Num(dst as f64)),
+                ("requests", Value::Num(gck.clients.len() as f64)),
+                ("lanes", Value::Num(lanes as f64)),
+                ("pause_ms", Value::Num(pause)),
+            ])
+        }
+        None => err(format!(
+            "no worker accepted the group migrated off worker {from}"
+        )),
+    }
+}
+
+/// One client `sample` request, owned end-to-end by this thread: assign,
+/// forward, chase relocations, reply exactly once.
+fn handle_request(shared: &Arc<RouterShared>, v: &Value) -> SampleResponse {
+    let t_start = Instant::now();
+    let req = match SampleRequest::from_json(v) {
+        Ok(r) => r,
+        Err(e) => {
+            let id = v.opt_usize("id", 0) as u64;
+            shared.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+            return SampleResponse::err(id, e.to_string());
+        }
+    };
+    shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let client_id = req.id;
+    let budget = match req.deadline_ms {
+        Some(ms) if ms > 0 => ms.min(shared.cfg.reply_timeout_ms),
+        _ => shared.cfg.reply_timeout_ms,
+    };
+    let deadline = t_start + Duration::from_millis(budget);
+    let cost = (req.n as u64).saturating_mul(req.cfg.nfe as u64);
+
+    let mut resp = loop {
+        // Re-ticket: each (re)submission gets a fresh router ticket so a
+        // late reply for an abandoned attempt can never be confused with
+        // the live one.
+        let ticket = shared.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let mut fwd_req = req.clone();
+        fwd_req.id = ticket;
+        shared.forwards.lock().unwrap().insert(ticket, client_id);
+
+        let t_route = Instant::now();
+        let assigned = {
+            let ws = shared.workers.lock().unwrap();
+            let views: Vec<WorkerView> = ws.iter().enumerate().map(|(i, w)| w.view(i)).collect();
+            shared.placement.assign(&fwd_req, &views)
+        };
+        shared
+            .metrics
+            .route
+            .observe_ms(t_route.elapsed().as_secs_f64() * 1e3);
+        let Some(w) = assigned else {
+            shared.forwards.lock().unwrap().remove(&ticket);
+            shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            break SampleResponse::shed(client_id, (shared.cfg.heartbeat_ms * 2).max(50));
+        };
+        {
+            let mut ws = shared.workers.lock().unwrap();
+            ws[w].outstanding = ws[w].outstanding.saturating_add(cost);
+        }
+
+        let t_fwd = Instant::now();
+        let outcome = forward_once(shared, w, &fwd_req, deadline);
+        shared
+            .metrics
+            .forward
+            .observe_ms(t_fwd.elapsed().as_secs_f64() * 1e3);
+        {
+            let mut ws = shared.workers.lock().unwrap();
+            ws[w].outstanding = ws[w].outstanding.saturating_sub(cost);
+        }
+
+        let settled = match outcome {
+            ForwardOutcome::Reply(r) if r.kind.as_deref() != Some("migrated") => Some(r),
+            ForwardOutcome::Timeout => Some(SampleResponse::typed_err(
+                client_id,
+                "timeout",
+                "router reply deadline exceeded",
+            )),
+            // Migrated away, worker died, or a relocation was published
+            // while we were blocked: chase the request's new home.
+            ForwardOutcome::Reply(_) | ForwardOutcome::Dead | ForwardOutcome::Relocated => None,
+        };
+        if let Some(r) = settled {
+            shared.forwards.lock().unwrap().remove(&ticket);
+            shared.relocated.lock().unwrap().remove(&ticket);
+            break r;
+        }
+
+        match await_relocation(shared, ticket, w, deadline) {
+            ChaseOutcome::Recovered(r) => {
+                shared.forwards.lock().unwrap().remove(&ticket);
+                shared.relocated.lock().unwrap().remove(&ticket);
+                break r;
+            }
+            ChaseOutcome::Timeout => {
+                shared.forwards.lock().unwrap().remove(&ticket);
+                shared.relocated.lock().unwrap().remove(&ticket);
+                break SampleResponse::typed_err(
+                    client_id,
+                    "timeout",
+                    "router reply deadline exceeded while chasing relocation",
+                );
+            }
+            ChaseOutcome::NotRelocated => {
+                // Worker died before any checkpoint covered this request:
+                // re-submit from scratch. Per-lane seeded noise makes the
+                // re-run bitwise equal to what the dead worker would have
+                // produced, so exactly-once still holds at the client.
+                shared.forwards.lock().unwrap().remove(&ticket);
+                shared.metrics.requeued.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "router",
+                    "no checkpoint for ticket {ticket} after worker {w} failover; re-queueing"
+                );
+                continue;
+            }
+        }
+    };
+
+    // Restore the client's own id on the reply.
+    resp.id = client_id;
+    if resp.ok {
+        shared.metrics.responses_ok.fetch_add(1, Ordering::Relaxed);
+    } else {
+        shared.metrics.responses_err.fetch_add(1, Ordering::Relaxed);
+    }
+    shared
+        .metrics
+        .latency
+        .observe_ms(t_start.elapsed().as_secs_f64() * 1e3);
+    resp
+}
+
+enum ForwardOutcome {
+    /// Worker replied (may be a typed `migrated` error).
+    Reply(SampleResponse),
+    /// Connection refused/dropped, or the heartbeat declared the worker
+    /// dead while we were waiting.
+    Dead,
+    /// A relocation for this ticket appeared while waiting.
+    Relocated,
+    /// Client deadline exceeded.
+    Timeout,
+}
+
+/// Forward a request to worker `w` and wait for its reply, watching for
+/// death/relocation. Reads with a short poll timeout so an in-process
+/// `kill()`ed worker (whose sockets never EOF) cannot wedge us.
+fn forward_once(
+    shared: &Arc<RouterShared>,
+    w: usize,
+    req: &SampleRequest,
+    deadline: Instant,
+) -> ForwardOutcome {
+    let ticket = req.id;
+    let addr = { shared.workers.lock().unwrap()[w].addr.clone() };
+    let Some(sock) = resolve(&addr) else {
+        return ForwardOutcome::Dead;
+    };
+    let mut stream = match TcpStream::connect_timeout(
+        &sock,
+        Duration::from_millis(shared.cfg.connect_timeout_ms),
+    ) {
+        Ok(s) => s,
+        Err(_) => return ForwardOutcome::Dead,
+    };
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(100)))
+        .is_err()
+    {
+        return ForwardOutcome::Dead;
+    }
+    let line = format!("{}\n", req.to_line());
+    if stream.write_all(line.as_bytes()).is_err() {
+        return ForwardOutcome::Dead;
+    }
+    // Accumulate raw bytes until a newline: BufReader::read_line drops
+    // partial data when the poll timeout fires mid-line, so we read
+    // manually and keep everything.
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return ForwardOutcome::Dead,
+            Ok(n) => {
+                acc.extend_from_slice(&chunk[..n]);
+                if acc.contains(&b'\n') {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= deadline || shared.shutdown.load(Ordering::SeqCst) {
+                    return ForwardOutcome::Timeout;
+                }
+                if shared.relocated.lock().unwrap().contains_key(&ticket) {
+                    return ForwardOutcome::Relocated;
+                }
+                if !shared.workers.lock().unwrap()[w].alive {
+                    return ForwardOutcome::Dead;
+                }
+            }
+            Err(_) => return ForwardOutcome::Dead,
+        }
+    }
+    let end = acc.iter().position(|b| *b == b'\n').unwrap_or(acc.len());
+    let text = String::from_utf8_lossy(&acc[..end]);
+    match parse(text.trim()) {
+        Ok(v) => match SampleResponse::from_json(&v) {
+            Ok(r) => ForwardOutcome::Reply(r),
+            Err(_) => ForwardOutcome::Dead,
+        },
+        Err(_) => ForwardOutcome::Dead,
+    }
+}
+
+enum ChaseOutcome {
+    Recovered(SampleResponse),
+    /// Failover completed and published no relocation for this ticket —
+    /// the group was never checkpointed; caller re-submits from scratch.
+    NotRelocated,
+    Timeout,
+}
+
+/// The request left worker `orig` (migration or failover). Poll the
+/// relocation map and the new owner's recovered-result store until the
+/// reply is ready, the failover declares no checkpoint existed, or the
+/// deadline passes.
+fn await_relocation(
+    shared: &Arc<RouterShared>,
+    ticket: u64,
+    orig: usize,
+    deadline: Instant,
+) -> ChaseOutcome {
+    loop {
+        if Instant::now() >= deadline || shared.shutdown.load(Ordering::SeqCst) {
+            return ChaseOutcome::Timeout;
+        }
+        let owner = shared.relocated.lock().unwrap().get(&ticket).copied();
+        match owner {
+            Some(w) => match recover_poll(shared, w, ticket) {
+                Ok(Some(resp)) => return ChaseOutcome::Recovered(resp),
+                Ok(None) => {} // still solving (or moving again)
+                Err(()) => {}  // owner unreachable; failover will re-relocate
+            },
+            None => {
+                let failed_over = {
+                    let ws = shared.workers.lock().unwrap();
+                    !ws[orig].alive && ws[orig].failed_over
+                };
+                // Re-check after observing failed_over: relocations are
+                // published before the flag flips, so a miss here is
+                // authoritative.
+                if failed_over && !shared.relocated.lock().unwrap().contains_key(&ticket) {
+                    return ChaseOutcome::NotRelocated;
+                }
+            }
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// One `recover take:true` poll against worker `w`. `Ok(None)` means the
+/// result is not ready yet (still solving, or mid-move); `Err(())` means
+/// the worker was unreachable.
+fn recover_poll(
+    shared: &Arc<RouterShared>,
+    w: usize,
+    ticket: u64,
+) -> std::result::Result<Option<SampleResponse>, ()> {
+    let addr = { shared.workers.lock().unwrap()[w].addr.clone() };
+    let line = to_string(&Value::obj(vec![
+        ("cmd", Value::Str("recover".to_string())),
+        ("id", Value::Num(ticket as f64)),
+        ("take", Value::Bool(true)),
+    ]));
+    let v = round_trip_addr(shared, &addr, &line, Duration::from_millis(2_000)).map_err(|_| ())?;
+    let resp = SampleResponse::from_json(&v).map_err(|_| ())?;
+    if resp.ok {
+        return Ok(Some(resp));
+    }
+    let msg = resp.error.as_deref().unwrap_or("");
+    if msg.contains("recovery pending") || msg.contains("no recovered result") {
+        // Still in flight — or the group moved again and the relocation
+        // map will shortly point somewhere new. Keep polling.
+        return Ok(None);
+    }
+    // A terminal per-request error (e.g. restore failure) is a real
+    // reply; deliver it.
+    Ok(Some(resp))
+}
+
+/// Offer `gck` to workers until one accepts it via `migrate_in`, then
+/// publish the relocations and cache the checkpoint under the acceptor.
+/// `preferred` is tried first; `exclude` (the dead worker) never.
+fn place_group(
+    shared: &Arc<RouterShared>,
+    gck: &GroupCheckpoint,
+    preferred: Option<usize>,
+    exclude: Option<usize>,
+) -> Option<usize> {
+    let mut queue: VecDeque<usize> = {
+        let ws = shared.workers.lock().unwrap();
+        let mut order: Vec<usize> = Vec::new();
+        if let Some(p) = preferred {
+            if p < ws.len() && ws[p].alive && Some(p) != exclude {
+                order.push(p);
+            }
+        }
+        let mut rest: Vec<usize> = (0..ws.len())
+            .filter(|i| ws[*i].alive && Some(*i) != exclude && !order.contains(i))
+            .collect();
+        rest.sort_by_key(|i| (ws[*i].outstanding as u128 + ws[*i].inflight_lanes as u128, *i));
+        order.extend(rest);
+        order.into()
+    };
+    let line = to_string(&Value::obj(vec![
+        ("cmd", Value::Str("migrate_in".to_string())),
+        ("group", gck.to_json()),
+    ]));
+    let mut severed = 0usize;
+    while let Some(dst) = queue.pop_front() {
+        if shared.chaos.take_sever() && severed < 4 {
+            severed += 1;
+            crate::log_warn!(
+                "router",
+                "chaos: severed migrate_in attempt to worker {dst}; retrying"
+            );
+            queue.push_back(dst);
+            continue;
+        }
+        match round_trip_worker(shared, dst, &line, Duration::from_millis(5_000)) {
+            Ok(r) if r.opt_bool("ok", false) => {
+                {
+                    let mut rel = shared.relocated.lock().unwrap();
+                    for (_, client) in &gck.clients {
+                        rel.insert(*client, dst);
+                    }
+                }
+                shared.workers.lock().unwrap()[dst].cached.push(gck.clone());
+                return Some(dst);
+            }
+            _ => continue,
+        }
+    }
+    None
+}
+
+/// Drop a just-migrated group from `from`'s cache so a failover of the
+/// (still alive) source cannot re-offer a group it no longer owns.
+fn remove_cached(shared: &Arc<RouterShared>, from: usize, gck: &GroupCheckpoint) {
+    let mut ws = shared.workers.lock().unwrap();
+    if from < ws.len() {
+        ws[from].cached.retain(|g| g.clients != gck.clients);
+    }
+}
+
+fn heartbeat_loop(shared: Arc<RouterShared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        thread::sleep(Duration::from_millis(shared.cfg.heartbeat_ms));
+        let delay = shared.chaos.heartbeat_delay_ms();
+        if delay > 0 {
+            thread::sleep(Duration::from_millis(delay));
+        }
+        let n = { shared.workers.lock().unwrap().len() };
+        for w in 0..n {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if shared.chaos.is_dropped(w) {
+                missed_heartbeat(&shared, w);
+                continue;
+            }
+            match poll_snapshot(&shared, w) {
+                Ok(snap) => apply_snapshot(&shared, w, &snap),
+                Err(_) => missed_heartbeat(&shared, w),
+            }
+        }
+    }
+}
+
+fn poll_snapshot(shared: &Arc<RouterShared>, w: usize) -> Result<Value> {
+    let addr = { shared.workers.lock().unwrap()[w].addr.clone() };
+    let line = to_string(&Value::obj(vec![(
+        "cmd",
+        Value::Str("snapshot".to_string()),
+    )]));
+    let v = round_trip_addr(shared, &addr, &line, Duration::from_millis(2_000))?;
+    if !v.opt_bool("ok", false) {
+        return Err(Error::protocol("snapshot poll refused"));
+    }
+    Ok(v)
+}
+
+fn apply_snapshot(shared: &Arc<RouterShared>, w: usize, snap: &Value) {
+    let groups: Vec<GroupCheckpoint> = match snap.get("groups") {
+        Some(Value::Array(items)) => items
+            .iter()
+            .filter_map(|g| GroupCheckpoint::from_json(g).ok())
+            .collect(),
+        _ => Vec::new(),
+    };
+    let mut ws = shared.workers.lock().unwrap();
+    let st = &mut ws[w];
+    let was_dead = !st.alive;
+    st.alive = true;
+    st.last_seen = Instant::now();
+    st.queued_lanes = snap.opt_usize("queued_lanes", st.queued_lanes);
+    st.queued_requests = snap.opt_usize("queued_requests", st.queued_requests);
+    st.inflight_lanes = snap.opt_usize("inflight_lanes", st.inflight_lanes);
+    st.inflight_groups = snap.opt_usize("inflight_groups", st.inflight_groups);
+    st.publishing = snap.opt_bool("publishing", st.publishing);
+    if st.publishing {
+        st.cached = groups;
+    }
+    if was_dead {
+        crate::log_info!("router", "worker {w} ({}) is back", st.addr);
+    }
+}
+
+fn missed_heartbeat(shared: &Arc<RouterShared>, w: usize) {
+    let overdue = {
+        let ws = shared.workers.lock().unwrap();
+        let st = &ws[w];
+        st.alive
+            && st.last_seen.elapsed() >= Duration::from_millis(shared.cfg.heartbeat_timeout_ms)
+    };
+    if overdue {
+        failover(shared, w);
+    }
+}
+
+/// A worker is dead: mark it, then offer every group checkpoint cached
+/// from its last heartbeat to survivors. Relocations are published per
+/// group as hand-offs succeed; `failed_over` flips last, so a forwarding
+/// thread that sees `failed_over` with no relocation for its ticket
+/// knows, authoritatively, that no checkpoint covered its request.
+fn failover(shared: &Arc<RouterShared>, w: usize) {
+    let t0 = Instant::now();
+    let (addr, groups) = {
+        let mut ws = shared.workers.lock().unwrap();
+        if !ws[w].alive {
+            return;
+        }
+        ws[w].alive = false;
+        (ws[w].addr.clone(), std::mem::take(&mut ws[w].cached))
+    };
+    crate::log_warn!(
+        "router",
+        "worker {w} ({addr}) missed heartbeats; failing over {} cached group(s)",
+        groups.len()
+    );
+    for gck in groups {
+        match place_group(shared, &gck, None, Some(w)) {
+            Some(dst) => {
+                shared
+                    .metrics
+                    .groups_failed_over
+                    .fetch_add(1, Ordering::Relaxed);
+                crate::log_info!(
+                    "router",
+                    "failover: group with {} request(s) moved from worker {w} to worker {dst}",
+                    gck.clients.len()
+                );
+            }
+            None => crate::log_warn!(
+                "router",
+                "failover: no survivor accepted a group from worker {w}; its clients will re-queue or time out"
+            ),
+        }
+    }
+    shared.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+    shared
+        .metrics
+        .migrate
+        .observe_ms(t0.elapsed().as_secs_f64() * 1e3);
+    shared.workers.lock().unwrap()[w].failed_over = true;
+}
+
+fn resolve(addr: &str) -> Option<SocketAddr> {
+    addr.to_socket_addrs().ok().and_then(|mut it| it.next())
+}
+
+fn round_trip_worker(
+    shared: &Arc<RouterShared>,
+    w: usize,
+    line: &str,
+    timeout: Duration,
+) -> Result<Value> {
+    let addr = {
+        let ws = shared.workers.lock().unwrap();
+        if w >= ws.len() {
+            return Err(Error::protocol(format!("no such worker: {w}")));
+        }
+        ws[w].addr.clone()
+    };
+    round_trip_addr(shared, &addr, line, timeout)
+}
+
+/// One connect → one line out → one line back, bounded by `timeout`.
+fn round_trip_addr(
+    shared: &Arc<RouterShared>,
+    addr: &str,
+    line: &str,
+    timeout: Duration,
+) -> Result<Value> {
+    let sock = resolve(addr).ok_or_else(|| Error::protocol(format!("cannot resolve {addr}")))?;
+    let stream = TcpStream::connect_timeout(
+        &sock,
+        Duration::from_millis(shared.cfg.connect_timeout_ms),
+    )?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(format!("{line}\n").as_bytes())?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    let n = reader.read_line(&mut reply)?;
+    if n == 0 {
+        return Err(Error::protocol(format!("{addr} closed the connection")));
+    }
+    parse(reply.trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplerConfig;
+
+    fn view(index: usize, alive: bool, queued: usize, inflight: usize, out: u64) -> WorkerView {
+        WorkerView {
+            index,
+            alive,
+            queued_lanes: queued,
+            inflight_lanes: inflight,
+            outstanding_lane_steps: out,
+        }
+    }
+
+    fn req(workload: &str, seed: u64, nfe: usize) -> SampleRequest {
+        SampleRequest {
+            id: 1,
+            workload: workload.to_string(),
+            model: "gmm".to_string(),
+            cfg: SamplerConfig {
+                nfe,
+                ..SamplerConfig::sa_default()
+            },
+            n: 8,
+            seed,
+            return_samples: false,
+            want_metrics: false,
+            preset: None,
+            deadline_ms: None,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_cheapest_worker() {
+        let p = LeastLoaded;
+        let r = req("gmm", 1, 100);
+        let ws = vec![
+            view(0, true, 4, 4, 0),   // (4+4)*100 = 800
+            view(1, true, 0, 0, 100), // 100
+            view(2, false, 0, 0, 0),  // dead
+        ];
+        assert_eq!(p.assign(&r, &ws), Some(1));
+        assert_eq!(p.assign(&r, &[view(0, false, 0, 0, 0)]), None);
+    }
+
+    #[test]
+    fn round_robin_cycles_alive_workers() {
+        let p = RoundRobin::new();
+        let r = req("gmm", 1, 10);
+        let ws = vec![
+            view(0, true, 0, 0, 0),
+            view(1, false, 0, 0, 0),
+            view(2, true, 0, 0, 0),
+        ];
+        let picks: Vec<Option<usize>> = (0..4).map(|_| p.assign(&r, &ws)).collect();
+        assert_eq!(picks, vec![Some(0), Some(2), Some(0), Some(2)]);
+    }
+
+    #[test]
+    fn sticky_is_stable_and_spreads() {
+        let p = Sticky;
+        let ws = vec![view(0, true, 0, 0, 0), view(1, true, 0, 0, 0)];
+        let a1 = p.assign(&req("gmm", 7, 10), &ws);
+        let a2 = p.assign(&req("gmm", 7, 10), &ws);
+        assert_eq!(a1, a2, "same request must stick to the same worker");
+        let spread: HashSet<usize> = (0..64)
+            .filter_map(|s| p.assign(&req("gmm", s, 10), &ws))
+            .collect();
+        assert_eq!(spread.len(), 2, "seeds should spread over both workers");
+    }
+
+    #[test]
+    fn placement_by_name_resolves_all_policies() {
+        for name in ["least_loaded", "round_robin", "sticky"] {
+            assert_eq!(placement_by_name(name).unwrap().name(), name);
+        }
+        assert!(placement_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn chaos_hooks_arm_and_consume() {
+        let c = ChaosHooks::new();
+        assert!(!c.is_dropped(0));
+        c.drop_heartbeats(0, true);
+        assert!(c.is_dropped(0));
+        c.drop_heartbeats(0, false);
+        assert!(!c.is_dropped(0));
+        assert!(!c.take_sever());
+        c.sever_next_migration();
+        assert!(c.take_sever());
+        assert!(!c.take_sever());
+        c.delay_heartbeats(5);
+        assert_eq!(c.heartbeat_delay_ms(), 5);
+    }
+
+    #[test]
+    fn router_config_from_json_overrides() {
+        let v = parse(
+            r#"{"addr":"127.0.0.1:0","workers":["a:1","b:2"],"placement":"sticky","heartbeat_ms":25}"#,
+        )
+        .unwrap();
+        let cfg = RouterConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:0");
+        assert_eq!(cfg.workers, vec!["a:1".to_string(), "b:2".to_string()]);
+        assert_eq!(cfg.placement, "sticky");
+        assert_eq!(cfg.heartbeat_ms, 25);
+        assert_eq!(
+            cfg.heartbeat_timeout_ms,
+            RouterConfig::default().heartbeat_timeout_ms
+        );
+    }
+}

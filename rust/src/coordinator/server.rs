@@ -37,10 +37,26 @@
 //! * `{"cmd": "presets"}` → summary of the loaded preset registry;
 //! * `{"cmd": "recover"}` → ids of checkpoint-recovered results ready to
 //!   fetch (plus the count still resuming); `{"cmd": "recover", "id": N}`
-//!   returns the recovered response for client id `N`. Recovered results
-//!   exist because a restarted server resumes checkpointed groups whose
-//!   original connections died with the previous process;
+//!   returns the recovered response for client id `N`, and with
+//!   `"take": true` also removes it from the store (the router's
+//!   exactly-once fetch). Recovered results exist because a restarted
+//!   server resumes checkpointed groups whose original connections died
+//!   with the previous process — or because a group was `migrate_in`-ed
+//!   from another worker;
 //! * `{"cmd": "ping"}` → `{"ok": true}`;
+//! * `{"cmd": "snapshot"}` → load gauges plus (when snapshotting is on —
+//!   `checkpoint_path` or `publish_snapshots`) the current in-flight
+//!   group checkpoints. This is the router's heartbeat: the groups it
+//!   returns are exactly what a failover would re-assign;
+//! * `{"cmd": "migrate_out"}` (optional `"client": N`, `"timeout_ms"`) →
+//!   hand one in-flight group over: the owning worker detaches it at its
+//!   next step boundary and the reply carries its [`GroupCheckpoint`].
+//!   Remaining waiting connections for the migrated requests get typed
+//!   `migrated` errors (the router follows the group to its new home);
+//! * `{"cmd": "migrate_in", "group": {…}}` → accept a migrated group:
+//!   its requests are re-ticketed into this server's ticket space and it
+//!   resumes through the checkpoint-recovery path, results landing in
+//!   the `recover` store keyed by the ids the checkpoint carried;
 //! * `{"cmd": "trace", "action": "start"|"stop"|"dump"}` → controls the
 //!   process-wide span recorder ([`crate::obs`]). `dump` writes a Chrome
 //!   Trace Event file to the command's `"path"` (falling back to
@@ -140,6 +156,25 @@ struct QueueState {
     recovered_results: HashMap<u64, SampleResponse>,
     /// Monotone internal ticket for reply routing (client ids may collide).
     next_ticket: u64,
+    /// Pending `migrate_out` requests parked by connection threads; a
+    /// worker claims one at a step boundary when it owns a matching group.
+    migrate_outs: Vec<MigrateOut>,
+}
+
+/// A parked `migrate_out`: the connection thread waits on `tx`'s receiver
+/// until a worker detaches a matching group (or the wait times out and the
+/// entry is withdrawn under the queue lock).
+struct MigrateOut {
+    /// Identity for withdrawal on timeout (drawn from the ticket counter).
+    id: u64,
+    /// Restrict the pick to the group owning this client-visible id;
+    /// `None` migrates the widest in-flight group.
+    client: Option<u64>,
+    /// Reply channel back to the connection thread. The claiming worker
+    /// sends while still holding the queue lock, so a withdrawn entry
+    /// (timeout) and a sent checkpoint cannot race: whoever takes the
+    /// lock first wins, and the loser observes it.
+    tx: Sender<std::result::Result<GroupCheckpoint, String>>,
 }
 
 /// Route one response to its waiting connection and drop its bookkeeping.
@@ -279,6 +314,7 @@ impl Server {
                 recovered_clients,
                 recovered_results: HashMap::new(),
                 next_ticket,
+                migrate_outs: Vec::new(),
             }),
             cond: Condvar::new(),
             metrics: ServingMetrics::new(),
@@ -397,17 +433,24 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
                 None => r#"{"ok":false,"error":"no preset registry loaded"}"#.to_string(),
             },
             "recover" => {
-                let q = shared.queue.lock().expect("queue lock");
+                let take = v.opt_bool("take", false);
+                let mut q = shared.queue.lock().expect("queue lock");
                 match v.get("id").and_then(Value::as_u64) {
-                    Some(id) => match q.recovered_results.get(&id) {
-                        Some(resp) => resp.to_line(),
-                        None if q.recovered_clients.values().any(|c| *c == id) => {
-                            format!(r#"{{"ok":false,"id":{id},"error":"recovery pending"}}"#)
+                    Some(id) => {
+                        let hit = if take {
+                            q.recovered_results.remove(&id)
+                        } else {
+                            q.recovered_results.get(&id).cloned()
+                        };
+                        match hit {
+                            Some(resp) => resp.to_line(),
+                            None if q.recovered_clients.values().any(|c| *c == id) => {
+                                format!(r#"{{"ok":false,"id":{id},"error":"recovery pending"}}"#)
+                            }
+                            None => SampleResponse::err(id, "no recovered result for this id")
+                                .to_line(),
                         }
-                        None => {
-                            SampleResponse::err(id, "no recovered result for this id").to_line()
-                        }
-                    },
+                    }
                     None => {
                         let mut ready: Vec<u64> = q.recovered_results.keys().copied().collect();
                         ready.sort_unstable();
@@ -425,6 +468,9 @@ fn handle_line(line: &str, shared: &Arc<Shared>) -> String {
                 }
             }
             "ping" => r#"{"ok":true}"#.to_string(),
+            "snapshot" => handle_snapshot(shared),
+            "migrate_out" => handle_migrate_out(shared, &v),
+            "migrate_in" => handle_migrate_in(shared, &v),
             "trace" => handle_trace(shared, &v),
             "shutdown" => {
                 shared.shutdown.store(true, Ordering::SeqCst);
@@ -639,6 +685,176 @@ fn handle_cancel(shared: &Arc<Shared>, target: u64) -> String {
     format!(r#"{{"ok":true,"cancelled_queued":{queued},"cancel_pending":{pending}}}"#)
 }
 
+/// The `snapshot` protocol command: a heartbeat carrying load gauges plus
+/// — when snapshotting is on (`checkpoint_path` or `publish_snapshots`) —
+/// the current in-flight group checkpoints. The router polls this to
+/// track worker load AND to hold each worker's last atomic checkpoint,
+/// which is exactly what a crash failover re-assigns to a survivor.
+fn handle_snapshot(shared: &Arc<Shared>) -> String {
+    let publishing = shared.cfg.publish_snapshots || shared.cfg.checkpoint_path.is_some();
+    // Lock order queue → sink, matching the checkpoint write path. The
+    // reported set merges every worker's sink slice with the groups still
+    // waiting to be (re)materialized, same as a checkpoint file write.
+    let (queued_requests, queued_lanes, waiting) = {
+        let q = shared.queue.lock().expect("queue lock");
+        let waiting: Vec<GroupCheckpoint> =
+            q.restored.iter().cloned().chain(q.restoring.values().cloned()).collect();
+        (q.batcher.len(), q.batcher.queued_samples(), waiting)
+    };
+    let groups: Vec<Value> = if publishing {
+        let sink = shared.checkpoint_sink.lock().expect("checkpoint sink lock");
+        sink.values().flatten().cloned().chain(waiting).map(|g| g.to_json()).collect()
+    } else {
+        Vec::new()
+    };
+    let m = shared.metrics.snapshot();
+    let gauge = |key: &str| Value::Num(m.req_f64(key).unwrap_or(0.0));
+    to_string(&Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("publishing", Value::Bool(publishing)),
+        ("queued_requests", Value::Num(queued_requests as f64)),
+        ("queued_lanes", Value::Num(queued_lanes as f64)),
+        ("inflight_groups", gauge("inflight_groups")),
+        ("inflight_lanes", gauge("inflight_lanes")),
+        ("steps", gauge("steps")),
+        ("groups", Value::Array(groups)),
+    ]))
+}
+
+/// The `migrate_out` protocol command: park a hand-over request for the
+/// worker pool and wait until a worker detaches a matching in-flight
+/// group at one of its step boundaries. The reply carries the detached
+/// group's [`GroupCheckpoint`]; connections still waiting on the migrated
+/// requests get typed `migrated` errors (the caller — normally the router
+/// — owns delivering their results from the group's new home). A
+/// `"client"` field restricts the pick to the group owning that
+/// client-visible id; otherwise the widest group moves. Times out with a
+/// typed `timeout` error when no worker claims the request.
+fn handle_migrate_out(shared: &Arc<Shared>, v: &Value) -> String {
+    let client = v.get("client").and_then(Value::as_u64);
+    let timeout = Duration::from_millis(v.opt_usize("timeout_ms", 2000).max(1) as u64);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let id = {
+        let mut q = shared.queue.lock().expect("queue lock");
+        let id = q.next_ticket;
+        q.next_ticket += 1;
+        q.migrate_outs.push(MigrateOut { id, client, tx });
+        id
+    };
+    shared.cond.notify_all();
+    let outcome = match rx.recv_timeout(timeout) {
+        Ok(r) => Some(r),
+        Err(_) => {
+            // Withdraw under the queue lock. If the entry is already gone,
+            // a worker claimed it — and because claimants send the result
+            // while still holding this lock, it is in the channel by now.
+            let mut q = shared.queue.lock().expect("queue lock");
+            let before = q.migrate_outs.len();
+            q.migrate_outs.retain(|m| m.id != id);
+            let withdrawn = q.migrate_outs.len() < before;
+            drop(q);
+            if withdrawn {
+                None
+            } else {
+                rx.try_recv().ok()
+            }
+        }
+    };
+    match outcome {
+        Some(Ok(g)) => {
+            let lanes: usize = g
+                .group
+                .get("requests")
+                .and_then(Value::as_array)
+                .map(|a| a.iter().map(|r| r.opt_usize("n", 1)).sum())
+                .unwrap_or(0);
+            to_string(&Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("requests", Value::Num(g.clients.len() as f64)),
+                ("lanes", Value::Num(lanes as f64)),
+                ("group", g.to_json()),
+            ]))
+        }
+        Some(Err(msg)) => SampleResponse::err(0, msg).to_line(),
+        None => SampleResponse::typed_err(
+            0,
+            "timeout",
+            format!("no in-flight group matched within {} ms", timeout.as_millis()),
+        )
+        .to_line(),
+    }
+}
+
+/// The `migrate_in` protocol command: accept a group another worker
+/// detached. Its requests are re-ticketed into this server's ticket space
+/// (the tickets inside the checkpoint belong to the source process and
+/// could collide here), the original client-visible ids ride along in
+/// `recovered_clients`, and the group resumes through the normal
+/// checkpoint-recovery path — results land in the `recover` store under
+/// those client ids, bit-identical to an uninterrupted run.
+fn handle_migrate_in(shared: &Arc<Shared>, v: &Value) -> String {
+    let Some(gv) = v.get("group") else {
+        return SampleResponse::err(0, "migrate_in needs a \"group\" checkpoint").to_line();
+    };
+    let gck = match GroupCheckpoint::from_json(gv) {
+        Ok(g) => g,
+        Err(e) => return SampleResponse::err(0, format!("bad group checkpoint: {e}")).to_line(),
+    };
+    // Parse the checkpointed requests up front, outside the lock, so a
+    // malformed group is rejected before any ticket state changes. The
+    // snapshot's `requests` entries are plain request JSON, so a
+    // parse → re-id → serialize round trip is lossless.
+    let req_vals = match gck.group.get("requests").and_then(Value::as_array) {
+        Some(a) if a.len() == gck.clients.len() && !a.is_empty() => a.clone(),
+        Some(_) => return SampleResponse::err(0, "group requests/clients mismatch").to_line(),
+        None => return SampleResponse::err(0, "group checkpoint has no requests").to_line(),
+    };
+    let mut requests = Vec::with_capacity(req_vals.len());
+    for rv in &req_vals {
+        match SampleRequest::from_json(rv) {
+            Ok(r) => requests.push(r),
+            Err(e) => {
+                return SampleResponse::err(0, format!("bad request in group: {e}")).to_line()
+            }
+        }
+    }
+    let lanes: usize = requests.iter().map(|r| r.n).sum();
+    let accepted = gck.clients.len();
+    {
+        let mut q = shared.queue.lock().expect("queue lock");
+        let mut new_clients = Vec::with_capacity(requests.len());
+        let mut new_req_json = Vec::with_capacity(requests.len());
+        for (i, mut r) in requests.into_iter().enumerate() {
+            let t = q.next_ticket;
+            q.next_ticket += 1;
+            r.id = t;
+            let client = gck.clients[i].1;
+            q.recovered_clients.insert(t, client);
+            new_clients.push((t, client));
+            new_req_json.push(r.to_json());
+        }
+        let mut group = gck.group.clone();
+        set_field(&mut group, "requests", Value::Array(new_req_json));
+        q.restored.push(GroupCheckpoint { group, clients: new_clients });
+    }
+    shared.cond.notify_all();
+    shared.metrics.observe_migrated_in();
+    format!(r#"{{"ok":true,"requests":{accepted},"lanes":{lanes}}}"#)
+}
+
+/// Replace (or insert) one field of a JSON object in place.
+fn set_field(v: &mut Value, key: &str, val: Value) {
+    if let Value::Object(fields) = v {
+        for (k, slot) in fields.iter_mut() {
+            if k == key {
+                *slot = val;
+                return;
+            }
+        }
+        fields.push((key.to_string(), val));
+    }
+}
+
 /// Worker: a step-synchronous scheduler over up to `max_inflight` lane
 /// groups. Each loop iteration is one step boundary: admit newly queued
 /// groups whose batching deadline has passed (or whose batch is full),
@@ -655,6 +871,10 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
     // admit nothing and hang shutdown on a non-empty queue.
     let max_inflight = shared.cfg.max_inflight.max(1);
     let checkpointing = shared.cfg.checkpoint_path.is_some();
+    // Snapshotting keeps the in-memory checkpoint sink fresh (what the
+    // `snapshot` heartbeat reports); checkpointing additionally persists
+    // it to the file.
+    let snapshotting = checkpointing || shared.cfg.publish_snapshots;
     // Scheduler steps since this worker last wrote a checkpoint.
     let mut ckpt_steps = 0u64;
     loop {
@@ -775,8 +995,8 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
         if drained {
             // Graceful drain with nothing in flight: leave an empty
             // checkpoint so a restart does not resurrect finished work.
-            if checkpointing {
-                write_checkpoint(&shared, worker, &active);
+            if snapshotting {
+                checkpoint_boundary(&shared, worker, &active);
             }
             return;
         }
@@ -883,10 +1103,16 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
                 }
             }
         }
+        // --- Serve a pending migrate-out at this step boundary. This runs
+        // after the cancel block so a fresh cancel cannot slip between the
+        // claim and the snapshot; the claim itself re-checks the flags.
+        if !active.is_empty() {
+            set_changed |= serve_migrate_out(&shared, &mut active);
+        }
         // --- Advance one group by one solver step (round-robin).
         if active.is_empty() {
-            if checkpointing && set_changed {
-                write_checkpoint(&shared, worker, &active);
+            if snapshotting && set_changed {
+                checkpoint_boundary(&shared, worker, &active);
                 ckpt_steps = 0;
             }
             continue;
@@ -927,21 +1153,128 @@ fn worker_loop(shared: Arc<Shared>, worker: usize) {
         } else {
             rr += 1;
         }
-        if checkpointing && (set_changed || ckpt_steps >= shared.cfg.checkpoint_every) {
-            write_checkpoint(&shared, worker, &active);
+        if snapshotting && (set_changed || ckpt_steps >= shared.cfg.checkpoint_every) {
+            checkpoint_boundary(&shared, worker, &active);
             ckpt_steps = 0;
         }
     }
 }
 
-/// Rewrite this worker's slice of the checkpoint file: snapshot every
-/// in-flight group at the current step boundary, merge with the other
-/// workers' slices, and atomically replace the file. Lock order is queue →
-/// sink; nothing takes them in the other order.
-fn write_checkpoint(shared: &Arc<Shared>, worker: usize, active: &[BatchRun]) {
-    let Some(path) = shared.cfg.checkpoint_path.as_deref() else {
-        return;
+/// Serve one pending `migrate_out` request from this worker's in-flight
+/// set, if any matches. Everything happens under one queue-lock hold so
+/// the hand-over is atomic with respect to cancels, replies, and the
+/// requesting connection's timeout withdrawal:
+///
+/// 1. pick the first claimable request (its `client` owned by one of our
+///    groups, or unrestricted — then the widest group moves);
+/// 2. apply any pending cancel flags for the chosen group FIRST, so the
+///    snapshot never carries a cancelled-elsewhere lane (and the lane
+///    cannot be dropped a second time at the destination);
+/// 3. snapshot and send the checkpoint while still holding the lock — on
+///    send failure (requester gone) the group simply stays here;
+/// 4. on success, detach the group: typed `migrated` errors to waiting
+///    connections, and every routing-map entry for its tickets purged —
+///    including `recovered_results`, so a later `recover` poll on this
+///    worker cannot serve a stale entry for a group that lives elsewhere.
+///
+/// Returns whether the in-flight set changed (forces a sink rewrite).
+fn serve_migrate_out(shared: &Arc<Shared>, active: &mut Vec<BatchRun>) -> bool {
+    let mut q = shared.queue.lock().expect("queue lock");
+    if q.migrate_outs.is_empty() {
+        return false;
+    }
+    let mut claim: Option<(usize, usize)> = None;
+    for (mi, m) in q.migrate_outs.iter().enumerate() {
+        let run_idx = match m.client {
+            None => active
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| !r.is_done())
+                .max_by_key(|(_, r)| r.lanes())
+                .map(|(i, _)| i),
+            Some(c) => active.iter().position(|r| {
+                !r.is_done()
+                    && r.tickets().iter().any(|t| {
+                        q.client_of.get(t).or_else(|| q.recovered_clients.get(t)) == Some(&c)
+                    })
+            }),
+        };
+        if let Some(ri) = run_idx {
+            claim = Some((mi, ri));
+            break;
+        }
+    }
+    let Some((mi, ri)) = claim else {
+        return false;
     };
+    let m = q.migrate_outs.remove(mi);
+    // Cancel-before-snapshot: flags racing this boundary are applied to
+    // the chosen group now, exactly as the worker's cancel block would.
+    let mut changed = false;
+    for t in active[ri].tickets() {
+        if q.cancel_flags.remove(&t) {
+            let before = active[ri].lanes();
+            if let Some(resp) = active[ri].cancel(t) {
+                shared.metrics.observe_cancel(before - active[ri].lanes());
+                route_reply(&mut q, resp);
+                changed = true;
+            }
+        }
+    }
+    let tickets = active[ri].tickets();
+    if tickets.is_empty() {
+        // Every request was cancelled at this boundary; retire the group
+        // instead of shipping an empty checkpoint.
+        let run = active.swap_remove(ri);
+        shared.metrics.group_retired(run.lanes());
+        let _ = m.tx.send(Err("group emptied by cancellation at the boundary".into()));
+        return true;
+    }
+    let clients: Vec<(u64, u64)> = tickets
+        .iter()
+        .map(|t| {
+            let client = q
+                .client_of
+                .get(t)
+                .or_else(|| q.recovered_clients.get(t))
+                .copied()
+                .unwrap_or(*t);
+            (*t, client)
+        })
+        .collect();
+    let gck = GroupCheckpoint { group: active[ri].snapshot(), clients };
+    if m.tx.send(Ok(gck)).is_err() {
+        // The requesting connection withdrew (timeout) or died before we
+        // committed; the group keeps running here, nothing was detached.
+        return changed;
+    }
+    let run = active.swap_remove(ri);
+    shared.metrics.group_retired(run.lanes());
+    shared.metrics.observe_migrated_out();
+    for t in run.tickets() {
+        q.client_of.remove(&t);
+        q.cancel_flags.remove(&t);
+        if let Some(tx) = q.replies.remove(&t) {
+            let _ = tx.send(SampleResponse::typed_err(
+                t,
+                "migrated",
+                "request migrated to another worker",
+            ));
+        }
+        if let Some(client) = q.recovered_clients.remove(&t) {
+            q.recovered_results.remove(&client);
+        }
+    }
+    true
+}
+
+/// Rewrite this worker's slice of the in-memory checkpoint sink —
+/// snapshotting every in-flight group at the current step boundary — and,
+/// when `checkpoint_path` is set, merge all slices and atomically replace
+/// the checkpoint file. With `publish_snapshots` but no path, the sink
+/// alone stays fresh for the `snapshot` heartbeat. Lock order is queue →
+/// sink; nothing takes them in the other order.
+fn checkpoint_boundary(shared: &Arc<Shared>, worker: usize, active: &[BatchRun]) {
     let live: Vec<&BatchRun> = active.iter().filter(|r| !r.is_done()).collect();
     // Ticket → client-id maps under the queue lock; the (pure CPU) state
     // snapshots and the file write happen outside it. The same lock visit
@@ -980,6 +1313,9 @@ fn write_checkpoint(shared: &Arc<Shared>, worker: usize, active: &[BatchRun]) {
         .collect();
     let mut sink = shared.checkpoint_sink.lock().expect("checkpoint sink lock");
     sink.insert(worker, groups);
+    let Some(path) = shared.cfg.checkpoint_path.as_deref() else {
+        return; // snapshot-publishing only: the sink is the product
+    };
     let merged = ServerCheckpoint {
         groups: sink.values().flatten().cloned().chain(waiting).collect(),
     };
@@ -1126,6 +1462,48 @@ impl Client {
             Some(id) => format!(r#"{{"cmd":"recover","id":{id}}}"#),
             None => r#"{"cmd":"recover"}"#.to_string(),
         };
+        let reply = self.round_trip(&line)?;
+        parse(&reply)
+    }
+
+    /// Fetch AND remove one recovered response (`recover` with
+    /// `"take": true`) — the router's exactly-once result fetch.
+    pub fn recover_take(&mut self, id: u64) -> Result<Value> {
+        let reply = self.round_trip(&format!(r#"{{"cmd":"recover","id":{id},"take":true}}"#))?;
+        parse(&reply)
+    }
+
+    /// Fetch the `snapshot` heartbeat: load gauges plus the in-flight
+    /// group checkpoints (when the server publishes snapshots).
+    pub fn snapshot(&mut self) -> Result<Value> {
+        let line = self.round_trip(r#"{"cmd":"snapshot"}"#)?;
+        parse(&line)
+    }
+
+    /// Ask the server to detach one in-flight group at a step boundary
+    /// (`client` restricts the pick to the group owning that id). Returns
+    /// the raw reply; on success its `"group"` field is the checkpoint to
+    /// hand to [`Client::migrate_in`] on another server.
+    pub fn migrate_out(&mut self, client: Option<u64>, timeout_ms: u64) -> Result<Value> {
+        let mut fields = vec![
+            ("cmd", Value::Str("migrate_out".into())),
+            ("timeout_ms", Value::Num(timeout_ms as f64)),
+        ];
+        if let Some(c) = client {
+            fields.push(("client", Value::Num(c as f64)));
+        }
+        let line = self.round_trip(&to_string(&Value::obj(fields)))?;
+        parse(&line)
+    }
+
+    /// Hand a migrated group checkpoint to this server; it resumes through
+    /// the recovery path and its results become `recover`-able under the
+    /// client ids the checkpoint carries.
+    pub fn migrate_in(&mut self, group: &GroupCheckpoint) -> Result<Value> {
+        let line = to_string(&Value::obj(vec![
+            ("cmd", Value::Str("migrate_in".into())),
+            ("group", group.to_json()),
+        ]));
         let reply = self.round_trip(&line)?;
         parse(&reply)
     }

@@ -3,7 +3,13 @@
 //! Subcommands:
 //!   serve        start the sampling server (`--presets` loads a registry;
 //!                `--checkpoint-path`/`--checkpoint-every` enable crash-safe
-//!                in-flight checkpointing and resume-on-start)
+//!                in-flight checkpointing and resume-on-start; `--register`
+//!                joins a router fleet, `--publish-snapshots` exposes live
+//!                group checkpoints for router failover)
+//!   router       start the multi-worker front-end: owns tickets and client
+//!                connections, fans requests over `--worker-addrs` by a
+//!                `--placement` policy, heartbeats the fleet, live-migrates
+//!                groups on `rebalance` and fails over dead workers
 //!   sample       run one sampling job locally and report metrics
 //!   client       send a request to a running server (`--resume <id|all>`
 //!                queries checkpoint-recovered results; `--stats` prints a
@@ -148,6 +154,41 @@ fn flag_spec() -> Vec<FlagSpec> {
             help: "spread request priorities over 0..span-1, 1 = flat (loadgen)",
             takes_value: true,
         },
+        FlagSpec {
+            name: "worker-addrs",
+            help: "comma-separated worker addresses (router)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "placement",
+            help: "placement policy: least_loaded | round_robin | sticky (router/loadgen)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "heartbeat",
+            help: "worker heartbeat poll interval, ms (router)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "heartbeat-timeout",
+            help: "declare a worker dead after this silence, ms (router)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "register",
+            help: "router address to register this worker with (serve)",
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "publish-snapshots",
+            help: "publish in-flight group snapshots for router failover without a checkpoint file (serve)",
+            takes_value: false,
+        },
+        FlagSpec {
+            name: "router",
+            help: "spawn an in-process router over this many workers (loadgen)",
+            takes_value: true,
+        },
     ]
 }
 
@@ -170,13 +211,14 @@ fn main() {
             render_help("sadiff", "SA-Solver diffusion sampling framework", &spec)
         );
         println!(
-            "\nSubcommands: serve | sample | client | loadgen | checkpoint <path> | trace <path> | tune | exp <id|list> | artifacts | info"
+            "\nSubcommands: serve | router | sample | client | loadgen | checkpoint <path> | trace <path> | tune | exp <id|list> | artifacts | info"
         );
         return;
     }
     let cmd = args.positionals[0].clone();
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "router" => cmd_router(&args),
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
         "loadgen" => cmd_loadgen(&args),
@@ -240,9 +282,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.trace_path = Some(path.to_string());
     }
     cfg.trace_capacity = args.get_usize("trace-capacity", cfg.trace_capacity)?;
+    if args.has("publish-snapshots") {
+        cfg.publish_snapshots = true;
+    }
+    let caps = Value::obj(vec![
+        ("workers", Value::Num(cfg.workers as f64)),
+        ("max_batch", Value::Num(cfg.max_batch as f64)),
+        ("max_inflight", Value::Num(cfg.max_inflight as f64)),
+        (
+            "publishing",
+            Value::Bool(cfg.publish_snapshots || cfg.checkpoint_path.is_some()),
+        ),
+    ]);
     let handle = Server::bind(cfg)?.spawn()?;
     println!("sadiff server on {} — Ctrl-C to stop", handle.addr);
+    if let Some(router_addr) = args.get("register") {
+        let line = jsonlite::to_string(&Value::obj(vec![
+            ("cmd", Value::Str("register".to_string())),
+            ("addr", Value::Str(handle.addr.to_string())),
+            ("capabilities", caps),
+        ]));
+        let mut c = Client::connect(router_addr)?;
+        let reply = c.round_trip(&line)?;
+        println!("registered with router {router_addr}: {}", reply.trim());
+    }
     // Block forever; the handle's workers do the serving.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_router(args: &Args) -> Result<()> {
+    use sadiff::coordinator::router::{Router, RouterConfig};
+    let mut cfg = if let Some(path) = args.get("config") {
+        RouterConfig::from_json(&sadiff::config::load_json_file(path)?)?
+    } else {
+        RouterConfig::default()
+    };
+    if let Some(addr) = args.get("addr") {
+        cfg.addr = addr.to_string();
+    }
+    if let Some(list) = args.get("worker-addrs") {
+        cfg.workers = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(p) = args.get("placement") {
+        cfg.placement = p.to_string();
+    }
+    cfg.heartbeat_ms = args.get_u64("heartbeat", cfg.heartbeat_ms)?.max(1);
+    cfg.heartbeat_timeout_ms = args
+        .get_u64("heartbeat-timeout", cfg.heartbeat_timeout_ms)?
+        .max(1);
+    cfg.reply_timeout_ms = args.get_u64("reply-timeout", cfg.reply_timeout_ms)?.max(1);
+    let handle = Router::bind(cfg)?.spawn();
+    println!(
+        "sadiff router on {} — workers may join via register; Ctrl-C to stop",
+        handle.addr()
+    );
+    // Block forever; the handle's threads do the serving.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -331,22 +431,51 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     use sadiff::loadgen::{self, Arrival, LoadgenOptions};
     let quick = args.has("quick");
 
-    // External server via --addr, otherwise in-process on an ephemeral
-    // port so the run is hermetic (SLO knobs apply to the spawned server).
-    let (handle, addr) = match args.get("addr") {
-        Some(a) => (None, a.to_string()),
+    // External server via --addr; `--router K` spawns an in-process
+    // fleet of K workers behind a router; otherwise one in-process
+    // server on an ephemeral port so the run is hermetic (SLO knobs
+    // apply to the spawned server/workers).
+    let build_cfg = |args: &Args| -> Result<ServerConfig> {
+        let mut cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() };
+        cfg.workers = args.get_usize("workers", cfg.workers)?;
+        cfg.threads = args.get_usize("threads", cfg.threads)?;
+        cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+        cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?.max(1);
+        cfg.queue_lane_cap = args.get_usize("queue-lane-cap", cfg.queue_lane_cap)?;
+        cfg.reply_timeout_ms = args.get_u64("reply-timeout", cfg.reply_timeout_ms)?.max(1);
+        cfg.max_step_lanes = args.get_usize("max-step-lanes", cfg.max_step_lanes)?;
+        Ok(cfg)
+    };
+    let router_k = args.get_usize("router", 0)?;
+    let mut handle = None;
+    let mut fleet_handles = Vec::new();
+    let mut router_handle = None;
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None if router_k > 0 => {
+            use sadiff::coordinator::router::{Router, RouterConfig};
+            for _ in 0..router_k {
+                let mut cfg = build_cfg(args)?;
+                cfg.publish_snapshots = true;
+                fleet_handles.push(Server::bind(cfg)?.spawn()?);
+            }
+            let rcfg = RouterConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: fleet_handles.iter().map(|h| h.addr.to_string()).collect(),
+                placement: args.get_str("placement", "least_loaded").to_string(),
+                ..RouterConfig::default()
+            };
+            let rh = Router::bind(rcfg)?.spawn();
+            let a = rh.addr().to_string();
+            println!("loadgen fleet: router {a} over {router_k} worker(s)");
+            router_handle = Some(rh);
+            a
+        }
         None => {
-            let mut cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() };
-            cfg.workers = args.get_usize("workers", cfg.workers)?;
-            cfg.threads = args.get_usize("threads", cfg.threads)?;
-            cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
-            cfg.max_inflight = args.get_usize("max-inflight", cfg.max_inflight)?.max(1);
-            cfg.queue_lane_cap = args.get_usize("queue-lane-cap", cfg.queue_lane_cap)?;
-            cfg.reply_timeout_ms = args.get_u64("reply-timeout", cfg.reply_timeout_ms)?.max(1);
-            cfg.max_step_lanes = args.get_usize("max-step-lanes", cfg.max_step_lanes)?;
-            let handle = Server::bind(cfg)?.spawn()?;
-            let addr = handle.addr.to_string();
-            (Some(handle), addr)
+            let h = Server::bind(build_cfg(args)?)?.spawn()?;
+            let a = h.addr.to_string();
+            handle = Some(h);
+            a
         }
     };
 
@@ -387,6 +516,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     loadgen::write_bench(out_path, &reports)?;
     println!("wrote {out_path}");
+    if let Some(mut r) = router_handle {
+        r.shutdown();
+    }
+    for h in fleet_handles {
+        h.shutdown();
+    }
     if let Some(h) = handle {
         h.shutdown();
     }

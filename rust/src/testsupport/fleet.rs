@@ -1,0 +1,380 @@
+//! In-process fleet harness: a router plus K workers with deterministic
+//! fault injection, for the chaos/migration integration suite.
+//!
+//! Faults are described by a [`FaultPlan`] — a seeded schedule of
+//! kill/drop/delay/sever events keyed by worker id and a *step index*
+//! trigger (the fleet-wide solver-step counter) — so every chaos test
+//! names its seed and replays exactly. `FaultPlan::generate(seed, ..)`
+//! is a pure function of its arguments; logging the seed is logging the
+//! full schedule.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+use crate::coordinator::router::{ChaosHooks, Router, RouterConfig, RouterHandle};
+use crate::coordinator::server::{Client, Server, ServerHandle};
+use crate::jsonlite::{parse, to_string, Value};
+use crate::rng::Xoshiro256pp;
+
+/// One injectable fault, triggered when the fleet-wide solver-step
+/// counter reaches `at_step`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Crash worker `worker` (no drain, no goodbye — like `kill -9`).
+    KillWorker { worker: usize, at_step: u64 },
+    /// Swallow heartbeat polls to `worker` for `for_ms` milliseconds;
+    /// the worker stays healthy but looks silent to the router.
+    DropHeartbeats { worker: usize, at_step: u64, for_ms: u64 },
+    /// Delay every heartbeat sweep by `ms` for the rest of the run.
+    DelayHeartbeats { at_step: u64, ms: u64 },
+    /// Sever the next `migrate_in` connection mid-handoff; the router
+    /// must keep the checkpoint and retry.
+    SeverMigration { at_step: u64 },
+}
+
+impl FaultEvent {
+    /// The solver-step trigger for this event.
+    pub fn at_step(&self) -> u64 {
+        match self {
+            FaultEvent::KillWorker { at_step, .. }
+            | FaultEvent::DropHeartbeats { at_step, .. }
+            | FaultEvent::DelayHeartbeats { at_step, .. }
+            | FaultEvent::SeverMigration { at_step } => *at_step,
+        }
+    }
+}
+
+/// A seeded, fully deterministic schedule of fault events. Two plans
+/// generated with the same `(seed, workers, max_step)` are identical.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The seed this plan was generated from (the replay key).
+    pub seed: u64,
+    /// Events, sorted by their step trigger.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Generate 1..=3 events from `seed`, with step triggers in
+    /// `0..max_step` and worker ids in `0..workers`.
+    pub fn generate(seed: u64, workers: usize, max_step: u64) -> FaultPlan {
+        let mut rng = Xoshiro256pp::new(seed);
+        let n = 1 + rng.below(3) as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at_step = rng.below(max_step.max(1));
+            let worker = rng.below(workers.max(1) as u64) as usize;
+            let ev = match rng.below(4) {
+                0 => FaultEvent::KillWorker { worker, at_step },
+                1 => FaultEvent::DropHeartbeats {
+                    worker,
+                    at_step,
+                    for_ms: 20 + rng.below(80),
+                },
+                2 => FaultEvent::DelayHeartbeats {
+                    at_step,
+                    ms: 1 + rng.below(20),
+                },
+                _ => FaultEvent::SeverMigration { at_step },
+            };
+            events.push(ev);
+        }
+        events.sort_by_key(|e| e.at_step());
+        FaultPlan { seed, events }
+    }
+
+    /// One-line description for seed logs and failure messages.
+    pub fn describe(&self) -> String {
+        format!("FaultPlan seed={} events={:?}", self.seed, self.events)
+    }
+}
+
+/// Fleet shape: worker count, placement policy, heartbeat cadence and
+/// the per-worker server template (address is always overridden to an
+/// ephemeral port and snapshot publishing is forced on).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of worker processes (in-process servers).
+    pub workers: usize,
+    /// Placement policy name handed to the router.
+    pub placement: String,
+    /// Router heartbeat poll interval (fast, for tests).
+    pub heartbeat_ms: u64,
+    /// Dead-worker declaration threshold.
+    pub heartbeat_timeout_ms: u64,
+    /// Worker config template.
+    pub server: ServerConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            workers: 2,
+            placement: "least_loaded".to_string(),
+            heartbeat_ms: 25,
+            heartbeat_timeout_ms: 150,
+            server: ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                publish_snapshots: true,
+                checkpoint_every: 8,
+                ..ServerConfig::default()
+            },
+        }
+    }
+}
+
+/// A running router + K workers, all in-process.
+pub struct Fleet {
+    router: Option<RouterHandle>,
+    workers: Vec<Option<ServerHandle>>,
+    /// Worker line-protocol addresses, indexed like the router registry.
+    pub worker_addrs: Vec<String>,
+    /// Chaos hooks shared with the router.
+    pub chaos: Arc<ChaosHooks>,
+}
+
+impl Fleet {
+    /// Spawn the workers and the router, and wait until the router's
+    /// first heartbeat has marked every worker alive.
+    pub fn spawn(cfg: FleetConfig) -> Fleet {
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut worker_addrs = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let scfg = ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                publish_snapshots: true,
+                ..cfg.server.clone()
+            };
+            let h = Server::bind(scfg)
+                .expect("fleet: worker bind")
+                .spawn()
+                .expect("fleet: worker spawn");
+            worker_addrs.push(h.addr.to_string());
+            workers.push(Some(h));
+        }
+        let chaos = ChaosHooks::new();
+        let rcfg = RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: worker_addrs.clone(),
+            placement: cfg.placement.clone(),
+            heartbeat_ms: cfg.heartbeat_ms,
+            heartbeat_timeout_ms: cfg.heartbeat_timeout_ms,
+            ..RouterConfig::default()
+        };
+        let router = Router::bind_with_chaos(rcfg, Arc::clone(&chaos))
+            .expect("fleet: router bind")
+            .spawn();
+        let fleet = Fleet {
+            router: Some(router),
+            workers,
+            worker_addrs,
+            chaos,
+        };
+        fleet.wait_alive(Duration::from_secs(10));
+        fleet
+    }
+
+    /// The router's client-facing address.
+    pub fn router_addr(&self) -> String {
+        self.router
+            .as_ref()
+            .expect("fleet: router already shut down")
+            .addr()
+            .to_string()
+    }
+
+    /// A fresh client connected to the router.
+    pub fn client(&self) -> Client {
+        Client::connect(&self.router_addr()).expect("fleet: client connect")
+    }
+
+    /// A fresh client connected directly to worker `i`.
+    pub fn worker_client(&self, i: usize) -> Client {
+        Client::connect(&self.worker_addrs[i]).expect("fleet: worker client connect")
+    }
+
+    /// Router `stats` verb as JSON.
+    pub fn router_stats(&self) -> Value {
+        self.client().stats().expect("fleet: router stats")
+    }
+
+    /// Worker `i`'s cumulative solver-step count, `None` if unreachable
+    /// (e.g. killed).
+    pub fn worker_steps(&self, i: usize) -> Option<u64> {
+        let mut c = Client::connect(&self.worker_addrs[i]).ok()?;
+        let v = c.stats().ok()?;
+        v.get("steps").and_then(Value::as_f64).map(|f| f as u64)
+    }
+
+    /// Sum of solver steps across all reachable workers.
+    pub fn fleet_steps(&self) -> u64 {
+        (0..self.worker_addrs.len())
+            .filter_map(|i| self.worker_steps(i))
+            .sum()
+    }
+
+    /// Crash worker `i` without draining (idempotent).
+    pub fn kill_worker(&mut self, i: usize) {
+        if let Some(h) = self.workers[i].take() {
+            h.kill();
+        }
+    }
+
+    /// Gracefully stop worker `i` (idempotent).
+    pub fn shutdown_worker(&mut self, i: usize) {
+        if let Some(h) = self.workers[i].take() {
+            h.shutdown();
+        }
+    }
+
+    /// Ask the router to migrate one in-flight group off the hottest
+    /// worker; returns the rebalance reply.
+    pub fn rebalance(&self) -> Value {
+        let line = to_string(&Value::obj(vec![(
+            "cmd",
+            Value::Str("rebalance".to_string()),
+        )]));
+        let mut c = self.client();
+        let reply = c.round_trip(&line).expect("fleet: rebalance round trip");
+        parse(reply.trim()).expect("fleet: rebalance reply parse")
+    }
+
+    /// Block until the router reports every spawned-and-not-killed
+    /// worker alive; panics on timeout.
+    pub fn wait_alive(&self, timeout: Duration) {
+        let t0 = Instant::now();
+        loop {
+            let stats = self.router_stats();
+            let all_alive = match stats.get("workers") {
+                Some(Value::Array(ws)) => {
+                    ws.len() == self.worker_addrs.len()
+                        && ws
+                            .iter()
+                            .enumerate()
+                            .all(|(i, w)| {
+                                self.workers[i].is_none() || w.opt_bool("alive", false)
+                            })
+                }
+                _ => false,
+            };
+            if all_alive {
+                return;
+            }
+            assert!(
+                t0.elapsed() < timeout,
+                "fleet: workers not alive after {timeout:?}: {}",
+                to_string(&stats)
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Block until the router has cached at least `min_groups` group
+    /// checkpoints for worker `i`; panics on timeout.
+    pub fn wait_cached_groups(&self, i: usize, min_groups: usize, timeout: Duration) {
+        let t0 = Instant::now();
+        loop {
+            let stats = self.router_stats();
+            let cached = stats
+                .get("workers")
+                .and_then(|ws| match ws {
+                    Value::Array(items) => items.get(i),
+                    _ => None,
+                })
+                .map(|w| w.opt_usize("cached_groups", 0))
+                .unwrap_or(0);
+            if cached >= min_groups {
+                return;
+            }
+            assert!(
+                t0.elapsed() < timeout,
+                "fleet: worker {i} never cached {min_groups} group(s): {}",
+                to_string(&stats)
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Block until the fleet-wide step counter reaches `target`. Returns
+    /// `true` if reached, `false` if `timeout` passed first (callers
+    /// fire their fault anyway — the trigger is best-effort by design,
+    /// determinism comes from the plan, not the wall clock).
+    pub fn wait_fleet_steps(&self, target: u64, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if self.fleet_steps() >= target {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        false
+    }
+
+    /// Fire every event in `plan`, each once its step trigger is
+    /// reached (bounded wait per event, then fire regardless so a plan
+    /// can never hang a test).
+    pub fn run_plan(&mut self, plan: &FaultPlan) {
+        for ev in &plan.events {
+            self.wait_fleet_steps(ev.at_step(), Duration::from_secs(5));
+            match ev {
+                FaultEvent::KillWorker { worker, .. } => self.kill_worker(*worker),
+                FaultEvent::DropHeartbeats { worker, for_ms, .. } => {
+                    self.chaos.drop_heartbeats(*worker, true);
+                    std::thread::sleep(Duration::from_millis(*for_ms));
+                    self.chaos.drop_heartbeats(*worker, false);
+                }
+                FaultEvent::DelayHeartbeats { ms, .. } => self.chaos.delay_heartbeats(*ms),
+                FaultEvent::SeverMigration { .. } => self.chaos.sever_next_migration(),
+            }
+        }
+    }
+
+    /// Stop the router first (so it stops forwarding), then the workers.
+    pub fn shutdown(&mut self) {
+        if let Some(mut r) = self.router.take() {
+            r.shutdown();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.take() {
+                h.shutdown();
+            }
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_is_deterministic_per_seed() {
+        let a = FaultPlan::generate(42, 3, 100);
+        let b = FaultPlan::generate(42, 3, 100);
+        assert_eq!(a, b, "same seed must give the same plan");
+        assert!(!a.events.is_empty() && a.events.len() <= 3);
+        for ev in &a.events {
+            assert!(ev.at_step() < 100);
+        }
+        let distinct: std::collections::HashSet<String> =
+            (0..32).map(|s| format!("{:?}", FaultPlan::generate(s, 3, 100).events)).collect();
+        assert!(distinct.len() > 1, "seeds should produce distinct plans");
+        assert!(a.describe().contains("seed=42"));
+    }
+
+    #[test]
+    fn fault_plan_events_are_sorted_by_trigger() {
+        for seed in 0..32u64 {
+            let p = FaultPlan::generate(seed, 4, 1000);
+            for w in p.events.windows(2) {
+                assert!(w[0].at_step() <= w[1].at_step(), "{}", p.describe());
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! allocation-budget assertions.
 
 pub mod alloc;
+pub mod fleet;
 
 use crate::config::{SamplerConfig, SolverKind};
 use crate::rng::Xoshiro256pp;

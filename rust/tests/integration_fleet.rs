@@ -1,0 +1,614 @@
+//! Multi-worker fleet integration: a router plus in-process workers,
+//! exercised through migrations, crash failovers and seeded chaos.
+//!
+//! Every test's oracle is the same serving invariant the single-server
+//! suite proves: per-lane counter-keyed noise streams make a request's
+//! samples a pure function of its own (seed, config), so a run that was
+//! migrated, killed-and-failed-over, or requeued from scratch must be
+//! bit-identical to an uninterrupted solo run on one server.
+//!
+//! The chaos sweep logs every case seed to `target/fleet_seeds.log`
+//! (uploaded as a CI artifact on failure); the logged seed regenerates
+//! the whole `FaultPlan`, so a failure reproduces from the log alone.
+//!
+//! The CI lane runs this file with `--test-threads=1`; the tests are
+//! written to tolerate (but not require) that.
+
+use std::time::{Duration, Instant};
+
+use sadiff::config::{SamplerConfig, ServerConfig, SolverKind};
+use sadiff::coordinator::server::{Client, Server, ServerHandle};
+use sadiff::coordinator::{GroupCheckpoint, SampleRequest, SampleResponse};
+use sadiff::jsonlite::{parse, to_string, Value};
+use sadiff::prop_assert;
+use sadiff::testsupport::fleet::{FaultPlan, Fleet, FleetConfig};
+use sadiff::testsupport::{check_logged, PropConfig};
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+/// A direct (router-less) server used for solo reference runs and for
+/// throughput calibration. The lane cap is effectively disabled so big
+/// calibrated requests are never shed.
+fn spawn_solo() -> (ServerHandle, String) {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_lane_cap: 1_000_000,
+        ..ServerConfig::default()
+    };
+    let handle = Server::bind(cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr.to_string();
+    (handle, addr)
+}
+
+fn request(n: usize, seed: u64, nfe: usize) -> SampleRequest {
+    SampleRequest {
+        id: seed,
+        workload: "latent_analog".into(),
+        model: "gmm".into(),
+        cfg: SamplerConfig { nfe, ..SamplerConfig::sa_default() },
+        n,
+        seed,
+        return_samples: true,
+        want_metrics: false,
+        preset: None,
+        deadline_ms: None,
+        priority: 0,
+    }
+}
+
+fn run_on(addr: &str, req: &SampleRequest) -> SampleResponse {
+    let mut client = Client::connect(addr).unwrap();
+    client.request(req).unwrap()
+}
+
+/// Measured serving throughput in lane-steps per millisecond. Tests size
+/// their long-running requests from this instead of fixed lane counts, so
+/// "long enough to kill mid-solve" holds on fast and slow machines alike.
+fn calibrate(addr: &str) -> f64 {
+    let probe = request(512, 0xCA11B, 50);
+    let t0 = Instant::now();
+    let resp = run_on(addr, &probe);
+    assert!(resp.ok, "calibration probe failed: {:?}", resp.error);
+    let elapsed_ms = (t0.elapsed().as_secs_f64() * 1e3).max(1.0);
+    (probe.n * probe.cfg.nfe) as f64 / elapsed_ms
+}
+
+/// Lane count that keeps a request of `nfe` steps in flight for roughly
+/// `target_ms` at the calibrated rate, clamped to a sane range.
+fn slow_n(rate: f64, target_ms: f64, nfe: usize, max_n: usize) -> usize {
+    ((rate * target_ms / nfe.max(1) as f64) as usize).clamp(64, max_n)
+}
+
+/// Fleet config for this suite: workers with the lane cap disabled (the
+/// sweeps fire several calibrated requests concurrently) and frequent
+/// checkpoints so failover always has a recent boundary to resume from.
+fn fleet_cfg(workers: usize) -> FleetConfig {
+    let base = FleetConfig::default();
+    let server = ServerConfig { queue_lane_cap: 1_000_000, ..base.server.clone() };
+    FleetConfig { workers, server, ..base }
+}
+
+/// Index of the first alive worker the router holds a cached group
+/// checkpoint for — the group's current owner; panics on timeout.
+fn cached_owner(fleet: &Fleet, timeout: Duration) -> usize {
+    let t0 = Instant::now();
+    loop {
+        let stats = fleet.router_stats();
+        if let Some(Value::Array(ws)) = stats.get("workers") {
+            for (i, w) in ws.iter().enumerate() {
+                if w.opt_bool("alive", false) && w.opt_usize("cached_groups", 0) > 0 {
+                    return i;
+                }
+            }
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "no worker cached a group checkpoint within {timeout:?}: {}",
+            to_string(&stats)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Block until the router has declared worker `i` dead.
+fn wait_router_sees_dead(fleet: &Fleet, i: usize, timeout: Duration) {
+    let t0 = Instant::now();
+    loop {
+        let stats = fleet.router_stats();
+        let dead = matches!(
+            stats.get("workers"),
+            Some(Value::Array(ws)) if ws.get(i).is_some_and(|w| !w.opt_bool("alive", true))
+        );
+        if dead {
+            return;
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "router never declared worker {i} dead: {}",
+            to_string(&stats)
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Block until a direct worker stat reaches `min`.
+fn wait_worker_stat(addr: &str, key: &str, min: f64, timeout: Duration) {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(mut c) = Client::connect(addr) {
+            if let Ok(stats) = c.stats() {
+                if stats.req_f64(key).unwrap_or(0.0) >= min {
+                    return;
+                }
+            }
+        }
+        assert!(t0.elapsed() < timeout, "worker {addr} never reached {key} >= {min}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Poll a worker's recover store until client id `id` is ready, then
+/// return the response — without removing it when `take` is false.
+fn poll_recover(addr: &str, id: u64, take: bool, timeout: Duration) -> SampleResponse {
+    let t0 = Instant::now();
+    loop {
+        let mut c = Client::connect(addr).unwrap();
+        let v = if take { c.recover_take(id).unwrap() } else { c.recover(Some(id)).unwrap() };
+        if v.opt_bool("ok", false) {
+            return SampleResponse::from_json(&v).unwrap();
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "recover({id}) never became ready on {addr}: {}",
+            to_string(&v)
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn router_counter(fleet: &Fleet, key: &str) -> f64 {
+    fleet.router_stats().req_f64(key).unwrap_or(0.0)
+}
+
+// ---------------------------------------------------------------------------
+// Router basics: round-trip, bit-identity, live registration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_roundtrip_register_and_bit_identity() {
+    let (solo, solo_addr) = spawn_solo();
+    let fleet = Fleet::spawn(fleet_cfg(2));
+
+    let mut client = fleet.client();
+    assert_eq!(client.round_trip(r#"{"cmd":"ping"}"#).unwrap(), r#"{"ok":true}"#);
+
+    // A routed request must be bit-identical to the solo run: the router
+    // re-tickets internally but the reply carries the client id back.
+    let req = request(6, 4242, 10);
+    let want = run_on(&solo_addr, &req);
+    let got = client.request(&req).unwrap();
+    assert!(got.ok, "{:?}", got.error);
+    assert_eq!(got.id, req.id);
+    assert_eq!(got.samples, want.samples, "routed samples differ from solo");
+
+    // Live registration: a worker that dials in mid-flight joins the
+    // registry and serves traffic without a router restart.
+    let (extra, extra_addr) = spawn_solo();
+    let reg = to_string(&Value::obj(vec![
+        ("cmd", Value::Str("register".into())),
+        ("addr", Value::Str(extra_addr.clone())),
+        ("capabilities", Value::obj(vec![("max_batch", Value::Num(8.0))])),
+    ]));
+    let reply = parse(&client.round_trip(&reg).unwrap()).unwrap();
+    assert!(reply.opt_bool("ok", false), "{}", to_string(&reply));
+    assert_eq!(reply.req_f64("workers").unwrap(), 3.0);
+    let stats = fleet.router_stats();
+    let Some(Value::Array(ws)) = stats.get("workers") else { panic!("no workers array") };
+    assert_eq!(ws.len(), 3);
+
+    let req2 = request(5, 777, 8);
+    let want2 = run_on(&solo_addr, &req2);
+    let got2 = client.request(&req2).unwrap();
+    assert!(got2.ok, "{:?}", got2.error);
+    assert_eq!(got2.samples, want2.samples);
+
+    assert_eq!(router_counter(&fleet, "requests"), 2.0);
+    assert_eq!(router_counter(&fleet, "responses_ok"), 2.0);
+
+    extra.shutdown();
+    solo.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Property sweep: solver × NFE × lane layout × migrations × kill × chaos
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migration_and_kill_property_sweep_stays_bit_identical() {
+    let (solo, solo_addr) = spawn_solo();
+    let rate = calibrate(&solo_addr);
+
+    check_logged(PropConfig { cases: 3, seed: 0xF1EE7 }, "target/fleet_seeds.log", |g| {
+        // -- Sample the whole case up front (determinism: the generator
+        //    must never be consulted after wall-clock-dependent work).
+        let solver = *g.choice(SolverKind::all());
+        let nfe = g.usize_in(6, 14);
+        let cfg = SamplerConfig { nfe, ..SamplerConfig::for_solver(solver) };
+        let steps = cfg.steps_for_nfe().max(1) as u64;
+        let n_requests = g.usize_in(1, 3);
+        let base_n = slow_n(rate, 350.0, nfe, 20_000);
+        let reqs: Vec<SampleRequest> = (0..n_requests)
+            .map(|i| {
+                let factor = g.usize_in(1, 4);
+                let n = (base_n * factor / 4).clamp(64, 20_000);
+                let seed = g.usize_in(1, 1_000_000) as u64;
+                SampleRequest {
+                    id: 1_000 + i as u64,
+                    n,
+                    seed,
+                    cfg: cfg.clone(),
+                    ..request(n, seed, nfe)
+                }
+            })
+            .collect();
+        let rebalances = g.usize_in(0, 2);
+        let reb_triggers: Vec<u64> =
+            (0..rebalances).map(|_| g.usize_in(1, steps as usize) as u64).collect();
+        // Chaos plan over workers {0, 1} only; worker 2 always survives so
+        // the fleet can never go fully dark mid-case.
+        let plan_seed = g.usize_in(0, u32::MAX as usize) as u64;
+        let plan = FaultPlan::generate(plan_seed, 2, steps);
+        let kill = g.bool();
+        let kill_worker = g.usize_in(0, 1);
+        let kill_trigger = g.usize_in(1, steps as usize) as u64;
+
+        // -- Solo references first (sequential, uncontended).
+        let refs: Vec<SampleResponse> = reqs.iter().map(|r| run_on(&solo_addr, r)).collect();
+        for (r, req) in refs.iter().zip(&reqs) {
+            prop_assert!(r.ok, "solo reference failed for seed {}: {:?}", req.seed, r.error);
+        }
+
+        // -- The same requests through a fleet under chaos.
+        let mut fleet = Fleet::spawn(fleet_cfg(3));
+        let addr = fleet.router_addr();
+        let joins: Vec<_> = reqs
+            .iter()
+            .cloned()
+            .map(|r| {
+                let addr = addr.clone();
+                std::thread::spawn(move || Client::connect(&addr).unwrap().request(&r).unwrap())
+            })
+            .collect();
+
+        fleet.run_plan(&plan);
+        for t in &reb_triggers {
+            fleet.wait_fleet_steps(*t, Duration::from_secs(2));
+            // "no worker has in-flight work" is a legal no-op: the case's
+            // work may already have drained past this trigger.
+            let _ = fleet.rebalance();
+        }
+        if kill {
+            fleet.wait_fleet_steps(kill_trigger, Duration::from_secs(2));
+            fleet.kill_worker(kill_worker);
+        }
+
+        let got: Vec<SampleResponse> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let ctx = format!(
+            "solver={} nfe={} lanes={:?} rebalances={rebalances} kill={} {}",
+            solver.name(),
+            nfe,
+            reqs.iter().map(|r| r.n).collect::<Vec<_>>(),
+            if kill { format!("worker {kill_worker} at step {kill_trigger}") } else { "no".into() },
+            plan.describe()
+        );
+        for (resp, want) in got.iter().zip(&refs) {
+            prop_assert!(resp.ok, "routed request {} failed ({:?}) [{ctx}]", resp.id, resp.error);
+            prop_assert!(
+                resp.samples == want.samples,
+                "request {} samples differ from solo run [{ctx}]",
+                resp.id
+            );
+        }
+        fleet.shutdown();
+        Ok(())
+    });
+    solo.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Failover e2e: kill the owner mid-solve, survivor resumes the checkpoint
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failover_replays_checkpoint_bit_identically_exactly_once() {
+    let (solo, solo_addr) = spawn_solo();
+    let rate = calibrate(&solo_addr);
+    let nfe = 200;
+    let req = request(slow_n(rate, 1_500.0, nfe, 60_000), 90_001, nfe);
+    let want = run_on(&solo_addr, &req);
+    assert!(want.ok, "{:?}", want.error);
+
+    let mut fleet = Fleet::spawn(fleet_cfg(2));
+    let addr = fleet.router_addr();
+    let join = {
+        let (addr, req) = (addr.clone(), req.clone());
+        std::thread::spawn(move || Client::connect(&addr).unwrap().request(&req).unwrap())
+    };
+
+    // Wait for the first published checkpoint to reach the router's cache
+    // (that checkpoint is what failover re-assigns), then crash the owner.
+    let owner = cached_owner(&fleet, Duration::from_secs(10));
+    fleet.kill_worker(owner);
+
+    let resp = join.join().unwrap();
+    assert!(resp.ok, "failover reply not ok: {:?} kind {:?}", resp.error, resp.kind);
+    assert_eq!(resp.id, req.id);
+    assert_eq!(
+        resp.samples, want.samples,
+        "failed-over run is not bit-identical to the solo run"
+    );
+
+    // Exactly one client-visible reply, through exactly one failover.
+    assert!(router_counter(&fleet, "failovers") >= 1.0);
+    assert!(router_counter(&fleet, "groups_failed_over") >= 1.0);
+    assert_eq!(router_counter(&fleet, "requests"), 1.0);
+    assert_eq!(router_counter(&fleet, "responses_ok"), 1.0);
+    assert_eq!(router_counter(&fleet, "responses_err"), 0.0);
+
+    fleet.shutdown();
+    solo.shutdown();
+}
+
+#[test]
+fn double_failure_relocates_twice_and_still_lands_once() {
+    let (solo, solo_addr) = spawn_solo();
+    let rate = calibrate(&solo_addr);
+    let nfe = 300;
+    let req = request(slow_n(rate, 2_000.0, nfe, 60_000), 90_002, nfe);
+    let want = run_on(&solo_addr, &req);
+    assert!(want.ok, "{:?}", want.error);
+
+    let mut fleet = Fleet::spawn(fleet_cfg(3));
+    let addr = fleet.router_addr();
+    let join = {
+        let (addr, req) = (addr.clone(), req.clone());
+        std::thread::spawn(move || Client::connect(&addr).unwrap().request(&req).unwrap())
+    };
+
+    // First crash: the checkpoint moves to a survivor (the router parks a
+    // copy under the new owner the moment the hand-off is accepted).
+    let owner = cached_owner(&fleet, Duration::from_secs(10));
+    fleet.kill_worker(owner);
+    // Second crash: the replacement dies too; the third worker finishes.
+    let second = cached_owner(&fleet, Duration::from_secs(10));
+    assert_ne!(second, owner, "cached group still attributed to the dead owner");
+    fleet.kill_worker(second);
+
+    let resp = join.join().unwrap();
+    assert!(resp.ok, "double-failover reply not ok: {:?}", resp.error);
+    assert_eq!(resp.samples, want.samples, "double failover broke bit-identity");
+    assert!(router_counter(&fleet, "failovers") >= 2.0);
+    assert_eq!(router_counter(&fleet, "responses_ok"), 1.0);
+
+    fleet.shutdown();
+    solo.shutdown();
+}
+
+#[test]
+fn severed_migration_is_retried_and_stays_bit_identical() {
+    let (solo, solo_addr) = spawn_solo();
+    let rate = calibrate(&solo_addr);
+    let nfe = 200;
+    let req = request(slow_n(rate, 1_200.0, nfe, 60_000), 90_003, nfe);
+    let want = run_on(&solo_addr, &req);
+
+    let mut fleet = Fleet::spawn(fleet_cfg(2));
+    let addr = fleet.router_addr();
+    let join = {
+        let (addr, req) = (addr.clone(), req.clone());
+        std::thread::spawn(move || Client::connect(&addr).unwrap().request(&req).unwrap())
+    };
+
+    let owner = cached_owner(&fleet, Duration::from_secs(10));
+    // Sever the next migrate_in hand-off: the failover's first placement
+    // attempt dies mid-transfer and the router must retry from its cache.
+    fleet.chaos.sever_next_migration();
+    fleet.kill_worker(owner);
+
+    let resp = join.join().unwrap();
+    assert!(resp.ok, "severed failover reply not ok: {:?}", resp.error);
+    assert_eq!(resp.samples, want.samples, "severed+retried failover broke bit-identity");
+    assert!(router_counter(&fleet, "failovers") >= 1.0);
+    assert!(router_counter(&fleet, "groups_failed_over") >= 1.0);
+
+    fleet.shutdown();
+    solo.shutdown();
+}
+
+#[test]
+fn all_workers_dead_sheds_with_typed_retry_hint() {
+    let mut fleet = Fleet::spawn(fleet_cfg(1));
+    let mut client = fleet.client();
+    let warm = client.request(&request(4, 5, 6)).unwrap();
+    assert!(warm.ok, "{:?}", warm.error);
+
+    fleet.kill_worker(0);
+    wait_router_sees_dead(&fleet, 0, Duration::from_secs(5));
+
+    let resp = client.request(&request(4, 6, 6)).unwrap();
+    assert!(!resp.ok);
+    assert_eq!(resp.kind.as_deref(), Some("shed"), "{:?}", resp.error);
+    let hint = resp.retry_after_ms.expect("shed reply must carry retry_after_ms");
+    assert!(hint >= 50, "retry hint too small: {hint}");
+    assert!(router_counter(&fleet, "shed") >= 1.0);
+
+    fleet.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Regression: stale recover-store entries across repeated migrations
+// ---------------------------------------------------------------------------
+
+/// Seed-era gap (a): a result left in a worker's recover store must not
+/// be served for a client id whose *current* run was migrated away. The
+/// migrate-out commit purges the store entry along with the ticket maps;
+/// the new owner's store is the only exactly-once source.
+#[test]
+fn recover_after_migrate_away_does_not_serve_stale_results() {
+    fn spawn_direct() -> (ServerHandle, String) {
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            queue_lane_cap: 1_000_000,
+            publish_snapshots: true,
+            checkpoint_every: 8,
+            ..ServerConfig::default()
+        };
+        let h = Server::bind(cfg).unwrap().spawn().unwrap();
+        let addr = h.addr.to_string();
+        (h, addr)
+    }
+    let (solo, solo_addr) = spawn_solo();
+    let rate = calibrate(&solo_addr);
+    let (home, home_addr) = spawn_direct();
+    let (a, a_addr) = spawn_direct();
+    let (b, b_addr) = spawn_direct();
+    let nfe = 120;
+    let n = slow_n(rate, 900.0, nfe, 60_000);
+
+    let migrate_to = |from: &str, to: &str, client: u64| -> GroupCheckpoint {
+        let reply = Client::connect(from).unwrap().migrate_out(Some(client), 8_000).unwrap();
+        assert!(reply.opt_bool("ok", false), "migrate_out: {}", to_string(&reply));
+        let gck = GroupCheckpoint::from_json(reply.get("group").unwrap()).unwrap();
+        let acc = Client::connect(to).unwrap().migrate_in(&gck).unwrap();
+        assert!(acc.opt_bool("ok", false), "migrate_in: {}", to_string(&acc));
+        gck
+    };
+    let submit = |addr: &str, req: SampleRequest| {
+        let addr = addr.to_string();
+        std::thread::spawn(move || Client::connect(&addr).unwrap().request(&req).unwrap())
+    };
+
+    // Run 1: client id 77 starts on `home`, finishes on `a`, and its
+    // result is *peeked* (no take) — deliberately left in a's store.
+    let run1 = SampleRequest { id: 77, ..request(n, 111_111, nfe) };
+    let join1 = submit(&home_addr, run1);
+    wait_worker_stat(&home_addr, "inflight_lanes", 1.0, Duration::from_secs(5));
+    migrate_to(&home_addr, &a_addr, 77);
+    let r1 = join1.join().unwrap();
+    assert_eq!(r1.kind.as_deref(), Some("migrated"), "{:?}", r1.error);
+    let stale = poll_recover(&a_addr, 77, false, Duration::from_secs(10));
+    assert!(stale.ok);
+
+    // Run 2: the SAME client id, a different seed. home → a → (away) → b.
+    let run2 = SampleRequest { id: 77, ..request(n, 222_222, nfe) };
+    let want2 = run_on(&solo_addr, &run2);
+    let join2 = submit(&home_addr, run2);
+    wait_worker_stat(&home_addr, "inflight_lanes", 1.0, Duration::from_secs(5));
+    migrate_to(&home_addr, &a_addr, 77);
+    // Move run 2 off `a` while it is in flight there. This commit must
+    // purge a's store entry for client 77 — the stale run-1 result.
+    let reply = Client::connect(&a_addr).unwrap().migrate_out(Some(77), 8_000).unwrap();
+    assert!(reply.opt_bool("ok", false), "migrate_out from a: {}", to_string(&reply));
+    let gck = GroupCheckpoint::from_json(reply.get("group").unwrap()).unwrap();
+
+    let after = Client::connect(&a_addr).unwrap().recover(Some(77)).unwrap();
+    assert!(!after.opt_bool("ok", true), "stale recover entry survived: {}", to_string(&after));
+    let msg = match after.get("error") {
+        Some(Value::Str(s)) => s.clone(),
+        other => format!("{other:?}"),
+    };
+    assert!(msg.contains("no recovered result"), "unexpected recover reply: {msg}");
+
+    // The migrated run finishes on `b`; its take is the one true result.
+    let acc = Client::connect(&b_addr).unwrap().migrate_in(&gck).unwrap();
+    assert!(acc.opt_bool("ok", false), "migrate_in to b: {}", to_string(&acc));
+    let r2 = join2.join().unwrap();
+    assert_eq!(r2.kind.as_deref(), Some("migrated"), "{:?}", r2.error);
+    let got2 = poll_recover(&b_addr, 77, true, Duration::from_secs(10));
+    assert!(got2.ok);
+    assert_eq!(got2.samples, want2.samples, "migrated twice, samples differ from solo");
+    let gone = Client::connect(&b_addr).unwrap().recover_take(77).unwrap();
+    assert!(!gone.opt_bool("ok", true), "second take must fail: {}", to_string(&gone));
+
+    home.shutdown();
+    a.shutdown();
+    b.shutdown();
+    solo.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Regression: cancel racing a migrate-out at the same step boundary
+// ---------------------------------------------------------------------------
+
+/// Seed-era gap (b): a lane cancelled at the same boundary a migrate-out
+/// claims its group must be dropped exactly once — the cancel reply goes
+/// to its waiting client, and the detached checkpoint must not carry the
+/// cancelled request (which would resurrect it on the destination).
+#[test]
+fn cancel_racing_migrate_out_drops_the_lane_exactly_once() {
+    let (solo, solo_addr) = spawn_solo();
+    let rate = calibrate(&solo_addr);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 2,
+        batch_deadline_ms: 50,
+        workers: 1,
+        threads: 1,
+        queue_lane_cap: 1_000_000,
+        publish_snapshots: true,
+        checkpoint_every: 8,
+        ..ServerConfig::default()
+    };
+    let home = Server::bind(cfg).unwrap().spawn().unwrap();
+    let home_addr = home.addr.to_string();
+    let (dest, dest_addr) = spawn_solo();
+
+    let nfe = 120;
+    let n = slow_n(rate, 500.0, nfe, 30_000);
+    let survivor = SampleRequest { id: 201, ..request(n, 333_333, nfe) };
+    let victim = SampleRequest { id: 202, ..request(n, 444_444, nfe) };
+    let want = run_on(&solo_addr, &survivor);
+
+    let submit = |req: SampleRequest| {
+        let addr = home_addr.clone();
+        std::thread::spawn(move || Client::connect(&addr).unwrap().request(&req).unwrap())
+    };
+    let j_survivor = submit(survivor);
+    let j_victim = submit(victim);
+
+    // Both requests must be co-batched into ONE in-flight group, so the
+    // cancel and the migrate-out contend for the same step boundary.
+    wait_worker_stat(&home_addr, "inflight_lanes", 2.0 * n as f64, Duration::from_secs(5));
+    let mut c = Client::connect(&home_addr).unwrap();
+    assert_eq!(c.stats().unwrap().req_f64("inflight_groups").unwrap(), 1.0, "not co-batched");
+
+    let cancel = c.cancel(202).unwrap();
+    assert!(cancel.opt_bool("ok", false), "{}", to_string(&cancel));
+    assert!(cancel.req_f64("cancel_pending").unwrap() >= 1.0, "{}", to_string(&cancel));
+    let reply = c.migrate_out(Some(201), 8_000).unwrap();
+    assert!(reply.opt_bool("ok", false), "migrate_out: {}", to_string(&reply));
+    let gck = GroupCheckpoint::from_json(reply.get("group").unwrap()).unwrap();
+
+    // The cancelled request must NOT ride along in the checkpoint.
+    assert_eq!(gck.clients.len(), 1, "checkpoint clients: {:?}", gck.clients);
+    assert_eq!(gck.clients[0].1, 201);
+
+    // Exactly one reply each: the victim's is `cancelled`, the survivor's
+    // is `migrated` (its result lands on the destination worker).
+    let rv = j_victim.join().unwrap();
+    assert_eq!(rv.kind.as_deref(), Some("cancelled"), "{:?}", rv.error);
+    let rs = j_survivor.join().unwrap();
+    assert_eq!(rs.kind.as_deref(), Some("migrated"), "{:?}", rs.error);
+
+    let acc = Client::connect(&dest_addr).unwrap().migrate_in(&gck).unwrap();
+    assert!(acc.opt_bool("ok", false), "migrate_in: {}", to_string(&acc));
+    let got = poll_recover(&dest_addr, 201, true, Duration::from_secs(10));
+    assert!(got.ok);
+    assert_eq!(got.samples, want.samples, "survivor of the cancel race lost bit-identity");
+
+    home.shutdown();
+    dest.shutdown();
+    solo.shutdown();
+}
